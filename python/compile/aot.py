@@ -1,0 +1,142 @@
+"""AOT driver: lower the L2 train step to HLO *text* artifacts.
+
+Emits, per model preset:
+
+  artifacts/<preset>/step_b{B}.hlo.txt       fused fwd+bwd+update (single rank)
+  artifacts/<preset>/grad_b{B}.hlo.txt       fwd+bwd, raw grads (multi rank)
+  artifacts/<preset>/apply_update.hlo.txt    optimizer step on reduced grads
+  artifacts/<preset>/params_init.bin         flat f32 little-endian init params
+  artifacts/<preset>/meta.json               shapes / ABI / flops — read by rust
+
+One executable per micro-batch-size variant: Poplar assigns each rank its
+own batch size, and PJRT executables are shape-specialized, so the rust
+runtime keeps a {batch_size -> executable} cache (rust/src/runtime).
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    ``return_tuple=True`` (the shipped artifacts) gives a single tuple
+    output that rust unpacks from one literal. ``return_tuple=False``
+    was explored for a device-resident pipeline but PJRT 0.5.1 via the
+    xla crate returns one buffer either way (no output untupling) — see
+    EXPERIMENTS.md §Perf.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def emit_preset(preset: str, out_dir: str, batch_variants, use_pallas: bool) -> dict:
+    cfg = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    specs = M.param_specs(cfg)
+    p_abs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    written = {}
+
+    for b in batch_variants:
+        tok = jax.ShapeDtypeStruct((b, cfg.seq + 1), jnp.int32)
+
+        step = M.make_train_step(cfg, use_pallas=use_pallas)
+        lowered = jax.jit(lambda p, m, t: step(p, m, t)).lower(p_abs, p_abs, tok)
+        path = os.path.join(out_dir, f"step_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        written[f"step_b{b}"] = path
+
+        grad = M.make_grad_step(cfg, use_pallas=use_pallas)
+        lowered = jax.jit(lambda p, t: grad(p, t)).lower(p_abs, tok)
+        path = os.path.join(out_dir, f"grad_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        written[f"grad_b{b}"] = path
+
+        print(f"[aot] {preset}: batch {b} done")
+
+    apply_u = M.make_apply_update(cfg)
+    lowered = jax.jit(lambda p, m, g: apply_u(p, m, g)).lower(p_abs, p_abs, p_abs)
+    path = os.path.join(out_dir, "apply_update.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    written["apply_update"] = path
+
+    # Initial parameters: raw little-endian f32, concatenated in spec order.
+    params = M.init_params(cfg, seed=0)
+    with open(os.path.join(out_dir, "params_init.bin"), "wb") as f:
+        for arr in params:
+            f.write(np.asarray(arr, dtype="<f4").tobytes())
+
+    meta = {
+        "preset": preset,
+        "arch": cfg.arch,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq": cfg.seq,
+        "lr": cfg.lr,
+        "momentum": cfg.momentum,
+        "param_count": int(cfg.param_count()),
+        "flops_per_token": float(cfg.flops_per_token()),
+        "batch_variants": list(batch_variants),
+        "use_pallas": use_pallas,
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        # step_b{B}:  inputs [*params, *momenta, tokens[B,seq+1]] -> (*params, *momenta, loss)
+        # grad_b{B}:  inputs [*params, tokens] -> (*grads, loss)
+        # apply_update: [*params, *momenta, *grads] -> (*params, *momenta)
+        "abi": "flat-f32-params-v1",
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    # Flat-text twin of meta.json for the rust loader (the offline image
+    # has no JSON crate; see rust/src/runtime/meta.rs).
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        for k in ("preset", "arch", "vocab", "d_model", "n_layers", "n_heads",
+                  "d_ff", "seq", "lr", "momentum", "param_count",
+                  "flops_per_token", "abi"):
+            f.write(f"{k} {meta[k]}\n")
+        f.write("use_pallas {}\n".format(1 if use_pallas else 0))
+        f.write("batch_variants {}\n".format(",".join(str(b) for b in batch_variants)))
+        for n, s in specs:
+            f.write("param {} {}\n".format(n, ",".join(str(x) for x in s)))
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--batches", default="1,2,4,8",
+                    help="comma-separated micro-batch-size variants")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the pure-jnp reference instead of Pallas kernels")
+    args = ap.parse_args()
+    batches = [int(b) for b in args.batches.split(",") if b]
+    out_dir = os.path.join(args.out, args.preset)
+    emit_preset(args.preset, out_dir, batches, use_pallas=not args.no_pallas)
+    print(f"[aot] wrote artifacts for '{args.preset}' to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

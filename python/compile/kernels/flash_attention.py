@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: flash-style causal attention (online softmax).
+
+The attention score matrix is never materialized in HBM: the grid walks
+(head, query-block) pairs and each kernel instance streams key/value
+blocks through VMEM, maintaining the numerically-stable online-softmax
+running state (m, l, acc) exactly as FlashAttention does with CUDA shared
+memory — here the HBM->VMEM schedule is expressed with BlockSpec + an
+in-kernel fori_loop over key blocks (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` is mandatory on this CPU-only image (Mosaic custom-call
+otherwise).
+
+VMEM per grid step (fp32 words): q tile bq*hd, k/v tiles 2*bk*hd,
+acc bq*hd, scores bq*bk  ->  ``4*(2*bq*hd + 2*bk*hd + bq*bk)`` bytes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, causal: bool, sm_scale: float):
+    """One (head, query-block) grid step: online softmax over key blocks."""
+    bq, hd = q_ref.shape
+    t = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    qi = pl.program_id(1)
+    q_offs = qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * bk, bk), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(kb * bk, bk), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [bq, bk]
+        if causal:
+            k_offs = kb * bk + jax.lax.iota(jnp.int32, bk)
+            mask = q_offs[:, None] >= k_offs[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, hd), dtype=jnp.float32)
+
+    if causal:
+        # keys strictly after this query block never contribute
+        n_kb = (qi + 1) * bq // bk
+    else:
+        n_kb = t // bk
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal"))
+def flash_attention(q, k, v, *, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    causal: bool = True):
+    """Flash attention via Pallas.
+
+    q, k, v: [H, T, hd]  ->  [H, T, hd].  Requires T divisible by bq and bk.
+    """
+    h, t, hd = q.shape
+    bq = min(bq, t)
+    bk = min(bk, t)
+    assert t % bq == 0 and t % bk == 0, f"seq {t} not divisible by tiles ({bq},{bk})"
+    if causal:
+        assert bq % bk == 0, "causal pruning requires bq % bk == 0"
+    sm_scale = 1.0 / (hd ** 0.5)
+    grid = (h, t // bq)
+    kernel = functools.partial(_flash_kernel, bk=bk, causal=causal, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda hh, i: (hh, i, 0)),  # q tile
+            pl.BlockSpec((None, t, hd), lambda hh, i: (hh, 0, 0)),   # full k for the head
+            pl.BlockSpec((None, t, hd), lambda hh, i: (hh, 0, 0)),   # full v for the head
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# Autodiff wrapper: Pallas forward, ref-VJP backward (see swiglu.py).
+# --------------------------------------------------------------------------
+
+def make_flash_attention_ad(causal: bool = True):
+    """Build a differentiable flash attention with fixed causality."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return flash_attention(q, k, v, causal=causal)
+
+    def fwd(q, k, v):
+        return flash_attention(q, k, v, causal=causal), (q, k, v)
+
+    def bwd(res, g):
+        from compile.kernels import ref as kref
+
+        _, vjp = jax.vjp(lambda q, k, v: kref.attention_ref(q, k, v, causal=causal), *res)
+        return vjp(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+flash_attention_ad_causal = make_flash_attention_ad(causal=True)
+flash_attention_ad_full = make_flash_attention_ad(causal=False)
+
+
+def vmem_footprint_bytes(t: int, hd: int, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         bytes_per_el: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (see module doc)."""
+    bq, bk = min(bq, t), min(bk, t)
+    return bytes_per_el * (2 * bq * hd + 2 * bk * hd + bq * bk)

@@ -1,0 +1,70 @@
+"""L1 kernel performance report (§Perf): VMEM footprint + MXU-utilization
+estimates per BlockSpec candidate.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+structural metrics below are what we optimize (DESIGN.md
+§Hardware-Adaptation): keep the working set under the ~16 MiB VMEM
+budget, keep every matmul tile a multiple of the 128x128 MXU.
+
+Usage: python -m compile.kernels.perf_report [d_model] [d_ff]
+"""
+
+import sys
+
+from compile.kernels import flash_attention as kflash
+from compile.kernels import swiglu as kswiglu
+
+VMEM_BUDGET = 16 * 1024 * 1024  # ~16 MiB usable VMEM per TensorCore
+
+
+def swiglu_table(d: int, f: int):
+    print(f"\nfused SwiGLU FFN, d_model={d}, d_ff={f}")
+    print(f"{'bm':>5} {'bf':>5} {'vmem_KiB':>9} {'fits':>5} {'mxu_util':>8}")
+    rows = []
+    for bm in (64, 128, 256, 512):
+        for bf in (128, 256, 512, 1024):
+            if bf > f:
+                continue
+            vmem = kswiglu.vmem_footprint_bytes(d, f, bm=bm, bf=bf)
+            util = kswiglu.mxu_utilization_estimate(d, f, bm=bm, bf=bf)
+            fits = vmem <= VMEM_BUDGET
+            rows.append((bm, bf, vmem, fits, util))
+            print(f"{bm:>5} {bf:>5} {vmem // 1024:>9} {str(fits):>5} {util:>8.3f}")
+    # Selection: highest MXU utilization, then largest bm (the x tile is
+    # reused across the f loop, so total HBM weight traffic is
+    # (T/bm)·3·d·f — bigger row tiles stream the weights fewer times),
+    # under half the VMEM budget to leave room for double buffering.
+    ok = [r for r in rows if r[2] <= VMEM_BUDGET // 2]
+    best = max(ok, key=lambda r: (r[4], r[0], r[1]))
+    traffic = lambda bm: 3 * d * f / bm  # weight words per token row
+    print(f"-> selected BlockSpec: bm={best[0]} bf={best[1]} "
+          f"(vmem {best[2] // 1024} KiB of {VMEM_BUDGET // 2048} KiB budget/2, "
+          f"mxu {best[4]:.3f}, weight traffic {traffic(best[0]):.0f} words/row "
+          f"vs {traffic(64):.0f} at bm=64)")
+    return best
+
+
+def flash_table(t: int, hd: int):
+    print(f"\nflash attention, seq={t}, head_dim={hd}")
+    print(f"{'bq':>5} {'bk':>5} {'vmem_KiB':>9} {'fits':>5}")
+    for bq in (64, 128, 256):
+        for bk in (64, 128, 256):
+            if bq > t or bk > t:
+                continue
+            vmem = kflash.vmem_footprint_bytes(t, hd, bq=bq, bk=bk)
+            print(f"{bq:>5} {bk:>5} {vmem // 1024:>9} {str(vmem <= VMEM_BUDGET):>5}")
+
+
+def main():
+    d = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    f = int(sys.argv[2]) if len(sys.argv) > 2 else 1024
+    swiglu_table(d, f)
+    # paper-scale shapes too
+    swiglu_table(1024, 4096)
+    swiglu_table(2048, 5632)
+    flash_table(256, 64)
+    flash_table(1024, 64)
+
+
+if __name__ == "__main__":
+    main()

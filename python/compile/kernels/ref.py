@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations the L1 kernels are validated
+against in pytest (assert_allclose). They are also used directly by the
+L2 model when ``use_pallas=False`` so the two model variants can be
+cross-checked end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward: ``(silu(x @ w1) * (x @ w3)) @ w2``.
+
+    x: [T, d]; w1, w3: [d, f]; w2: [f, d]  ->  [T, d]
+    """
+    gate = jax.nn.silu(x @ w1)
+    up = x @ w3
+    return (gate * up) @ w2
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention oracle.
+
+    q, k, v: [H, T, hd]  ->  [H, T, hd]
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,hsd->htd", probs, v)
+
+
+def rmsnorm_ref(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm oracle: ``x / rms(x) * g`` over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g

@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: fused SwiGLU feed-forward block.
+
+The transformer FFN is the compute hot spot the paper's batch-size /
+throughput curves (Fig. 6) are shaped by: cuBLAS tile quantization on GPU,
+MXU 128x128 systolic tiles on TPU.  This kernel is the TPU re-think of
+that hot spot (DESIGN.md §Hardware-Adaptation):
+
+  * the token dimension ``T = batch x seq`` is tiled into ``bm`` rows —
+    the analogue of the CUDA threadblock M-tile;
+  * the FFN hidden dimension ``f`` is tiled into ``bf`` columns so the
+    three weight matrices stream HBM->VMEM block by block (BlockSpec
+    index maps play the role of the CUDA grid schedule);
+  * partial products accumulate into the output block, which stays
+    resident in VMEM across the ``f`` loop (revision dimension last in
+    the grid, so the output BlockSpec ignores it).
+
+``interpret=True`` is mandatory on this CPU-only image: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+VMEM footprint per grid step (fp32 words):
+    x tile        bm*d
+    w1,w3 tiles   2*d*bf
+    w2 tile       bf*d
+    out tile      bm*d
+so ``vmem_bytes = 4*(2*bm*d + 3*d*bf)`` — reported by
+``vmem_footprint_bytes`` and recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 128-lane MXU dimension. Chosen by
+# the §Perf sweep (kernels/perf_report.py): full MXU utilization, and the
+# largest row tile under half the VMEM budget — the x tile is reused
+# across the f loop, so HBM weight traffic scales as 1/bm (bm clamps to
+# the token count at call time, so small models are unaffected).
+DEFAULT_BM = 512
+DEFAULT_BF = 256
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One (row-block, ffn-block) grid step.
+
+    Computes ``(silu(x @ w1_blk) * (x @ w3_blk)) @ w2_blk`` and
+    accumulates into the output row block.  SwiGLU's elementwise gate
+    commutes with the f-dimension split, so block-wise accumulation is
+    exact (unlike e.g. softmax, which needs the online trick — see
+    flash_attention.py).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    gate = jax.nn.silu(jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32))
+    up = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    h = (gate * up).astype(x.dtype)
+    o_ref[...] += jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf"))
+def swiglu_ffn(x, w1, w3, w2, *, bm: int = DEFAULT_BM, bf: int = DEFAULT_BF):
+    """Fused SwiGLU FFN via Pallas.
+
+    x: [T, d]; w1, w3: [d, f]; w2: [f, d]  ->  [T, d]
+
+    Requires ``T % bm == 0`` and ``f % bf == 0``; the L2 model pads the
+    token dimension to a multiple of ``bm`` before calling.
+    """
+    t, d = x.shape
+    f = w1.shape[1]
+    bm = min(bm, t)
+    bf = min(bf, f)
+    assert t % bm == 0, f"token dim {t} not divisible by row tile {bm}"
+    assert f % bf == 0, f"ffn dim {f} not divisible by col tile {bf}"
+    grid = (t // bm, f // bf)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),   # x row tile, reused across j
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),   # w1 column tile
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),   # w3 column tile
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),   # w2 row tile
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+# --------------------------------------------------------------------------
+# Autodiff wrapper: Pallas forward, ref-VJP backward.  pallas_call has no
+# automatic transpose rule, so the train step differentiates through the
+# pure-jnp oracle (numerically identical — pytest asserts so) while the
+# forward runs the fused kernel.
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def swiglu_ffn_ad(x, w1, w3, w2):
+    return swiglu_ffn(x, w1, w3, w2)
+
+
+def _swiglu_fwd(x, w1, w3, w2):
+    return swiglu_ffn(x, w1, w3, w2), (x, w1, w3, w2)
+
+
+def _swiglu_bwd(res, g):
+    from compile.kernels import ref as kref
+
+    _, vjp = jax.vjp(kref.swiglu_ffn_ref, *res)
+    return vjp(g)
+
+
+swiglu_ffn_ad.defvjp(_swiglu_fwd, _swiglu_bwd)
+
+
+def vmem_footprint_bytes(d: int, f: int, bm: int = DEFAULT_BM, bf: int = DEFAULT_BF,
+                         bytes_per_el: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (see module doc)."""
+    bf = min(bf, f)
+    return bytes_per_el * (2 * bm * d + 3 * d * bf)
+
+
+def mxu_utilization_estimate(d: int, f: int, bm: int = DEFAULT_BM, bf: int = DEFAULT_BF) -> float:
+    """Fraction of MXU-issue slots doing useful work for one grid step.
+
+    The MXU is a 128x128 systolic array; a matmul tile of shape
+    [bm, d] @ [d, bf] keeps it busy for ceil(bm/128)*ceil(bf/128)*ceil(d/128)
+    passes, each fully utilized only when the dims are multiples of 128.
+    """
+    import math
+
+    def eff(m, k, n):
+        passes = math.ceil(m / 128) * math.ceil(k / 128) * math.ceil(n / 128)
+        return (m * k * n) / (passes * 128 ** 3)
+
+    bf = min(bf, f)
+    # three matmuls per grid step: x@w1, x@w3 ([bm,d]@[d,bf]), h@w2 ([bm,bf]@[bf,d])
+    flops = 2 * bm * d * bf * 2 + 2 * bm * bf * d
+    util = (eff(bm, d, bf) * 2 * (2 * bm * d * bf) + eff(bm, bf, d) * (2 * bm * bf * d)) / flops
+    return util

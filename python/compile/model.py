@@ -1,0 +1,254 @@
+"""L2: JAX model definitions and the AOT-compiled train step.
+
+Two architectures mirroring the paper's evaluation models:
+
+  * ``llama`` — decoder-only: RMSNorm, rotary attention, SwiGLU FFN
+    (the 0.5B / 1.1B Llama configs of Figs. 3-5, scaled down for the
+    CPU-only end-to-end run);
+  * ``bert``  — encoder-only: bidirectional attention, masked-LM-style
+    loss over all positions (Fig. 4c).
+
+The hot paths call the L1 Pallas kernels (``kernels.swiglu``,
+``kernels.flash_attention``) when ``use_pallas=True``; the pure-jnp
+oracles in ``kernels.ref`` otherwise.  pytest cross-checks the two.
+
+``train_step`` = forward + backward + SGD-with-momentum update, jitted
+and lowered per micro-batch-size variant by ``aot.py``.  Parameters are a
+*flat list* of arrays (deterministic order via ``param_specs``) so the
+rust runtime can thread them through PJRT without pytree knowledge.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels import swiglu as kswiglu
+from compile.kernels import flash_attention as kflash
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (defaults: the e2e validation model)."""
+
+    arch: str = "llama"          # "llama" | "bert"
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024             # intermediate size
+    seq: int = 256
+    lr: float = 3e-3
+    momentum: float = 0.9
+    tie_embeddings: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape in param_specs(self):
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    def flops_per_token(self) -> float:
+        """Approximate fwd+bwd FLOPs per token (the 6N rule, attention-aware).
+
+        Matches rust/src/metrics/flops.rs — keep in sync.
+        """
+        n = self.param_count()
+        attn = 12 * self.n_layers * self.d_model * self.seq  # score+value matmuls, fwd+bwd
+        return 6.0 * n + attn
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the ABI between python and rust."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w1", (d, f)),
+            (p + "w3", (d, f)),
+            (p + "w2", (f, d)),
+        ]
+    specs.append(("final_norm", (d,)))
+    if not cfg.tie_embeddings:
+        specs.append(("lm_head", (d, v)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-normal init, flat list in ``param_specs`` order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = (1.0 / shape[0]) ** 0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def _as_dict(cfg: ModelConfig, flat: List[jax.Array]):
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _rope(x: jax.Array, base: float = 10000.0) -> jax.Array:
+    """Rotary embedding over [H, T, hd]."""
+    h, t, hd = x.shape
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_block(x, p, prefix, cfg: ModelConfig, use_pallas: bool, causal: bool):
+    """x: [T, d] -> [T, d] (single sequence; vmapped over batch)."""
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    t = x.shape[0]
+
+    def split(y):  # [T, d] -> [H, T, hd]
+        return y.reshape(t, nh, hd).transpose(1, 0, 2)
+
+    q = split(x @ p[prefix + "wq"])
+    k = split(x @ p[prefix + "wk"])
+    v = split(x @ p[prefix + "wv"])
+    if causal:  # rotary only for the decoder
+        q, k = _rope(q), _rope(k)
+    if use_pallas:
+        attn = kflash.flash_attention_ad_causal if causal else kflash.flash_attention_ad_full
+        o = attn(q, k, v)
+    else:
+        o = kref.attention_ref(q, k, v, causal=causal)
+    o = o.transpose(1, 0, 2).reshape(t, d)
+    return o @ p[prefix + "wo"]
+
+
+def _ffn_block(x, p, prefix, cfg: ModelConfig, use_pallas: bool):
+    if use_pallas:
+        return kswiglu.swiglu_ffn_ad(x, p[prefix + "w1"], p[prefix + "w3"], p[prefix + "w2"])
+    return kref.swiglu_ffn_ref(x, p[prefix + "w1"], p[prefix + "w3"], p[prefix + "w2"])
+
+
+def forward(cfg: ModelConfig, flat_params: List[jax.Array], tokens: jax.Array,
+            use_pallas: bool = False) -> jax.Array:
+    """tokens: [B, T] int32 -> logits [B, T, vocab]."""
+    p = _as_dict(cfg, flat_params)
+    causal = cfg.arch == "llama"
+
+    def one_seq(tok):
+        x = p["embed"][tok]  # [T, d]
+        for i in range(cfg.n_layers):
+            pre = f"layer{i}."
+            h = kref.rmsnorm_ref(x, p[pre + "attn_norm"])
+            x = x + _attention_block(h, p, pre, cfg, use_pallas, causal)
+            h = kref.rmsnorm_ref(x, p[pre + "ffn_norm"])
+            x = x + _ffn_block(h, p, pre, cfg, use_pallas)
+        x = kref.rmsnorm_ref(x, p["final_norm"])
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        return x @ head
+
+    return jax.vmap(one_seq)(tokens)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: List[jax.Array], tokens: jax.Array,
+            use_pallas: bool = False) -> jax.Array:
+    """Next-token cross-entropy. tokens: [B, T+1] int32."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat_params, inputs, use_pallas)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# Train step (the AOT unit)
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, use_pallas: bool = False):
+    """``step(params, momenta, tokens) -> (*new_params, *new_momenta, loss)``.
+
+    Single-rank path: forward + backward + SGD-momentum update fused in
+    one executable.
+    """
+
+    def step(params, momenta, tokens):
+        loss, grads = jax.value_and_grad(lambda fp: loss_fn(cfg, fp, tokens, use_pallas))(params)
+        new_m = [cfg.momentum * m + g for m, g in zip(momenta, grads)]
+        new_p = [p - cfg.lr * m for p, m in zip(params, new_m)]
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return step
+
+
+def make_grad_step(cfg: ModelConfig, use_pallas: bool = False):
+    """``grad_step(params, tokens) -> (*grads, loss)`` (no update).
+
+    Multi-rank path: gradients are returned raw so the rust coordinator
+    can perform the heterogeneous weighted averaging across ranks (each
+    rank contributes grad * b_i / gbs) before the shared optimizer step.
+    """
+
+    def grad_step(params, tokens):
+        loss, grads = jax.value_and_grad(lambda fp: loss_fn(cfg, fp, tokens, use_pallas))(params)
+        return tuple(grads) + (loss,)
+
+    return grad_step
+
+
+def make_apply_update(cfg: ModelConfig):
+    """``apply(params, momenta, grads) -> (*new_params, *new_momenta)``.
+
+    The ZeRO optimizer step, applied to the *reduced* gradient after the
+    collective.
+    """
+
+    def apply(params, momenta, grads):
+        new_m = [cfg.momentum * m + g for m, g in zip(momenta, grads)]
+        new_p = [p - cfg.lr * m for p, m in zip(params, new_m)]
+        return tuple(new_p) + tuple(new_m)
+
+    return apply
+
+
+# --------------------------------------------------------------------------
+# Paper model presets (used by the analytic simulator and aot.py --preset)
+# --------------------------------------------------------------------------
+
+PRESETS = {
+    # e2e validation models (really trained on CPU)
+    "tiny": ModelConfig(vocab=2048, d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq=256),
+    "e2e-28m": ModelConfig(vocab=8192, d_model=512, n_layers=6, n_heads=8, d_ff=1536, seq=256),
+    "e2e-110m": ModelConfig(vocab=16384, d_model=768, n_layers=12, n_heads=12, d_ff=2304, seq=256),
+    # paper evaluation models (analytic simulation only — see DESIGN.md §2)
+    "llama-0.5b": ModelConfig(vocab=32000, d_model=1024, n_layers=24, n_heads=16, d_ff=4096, seq=1024),
+    "llama-1.1b": ModelConfig(vocab=32000, d_model=2048, n_layers=22, n_heads=32, d_ff=5632, seq=1024),
+    "bert-1.1b": ModelConfig(arch="bert", vocab=30522, d_model=1792, n_layers=24, n_heads=28,
+                             d_ff=7168, seq=512),
+}

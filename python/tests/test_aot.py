@@ -1,0 +1,78 @@
+"""AOT pipeline tests: HLO text emission, meta ABI, params binary layout."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = M.ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq=64)
+
+
+@pytest.fixture(scope="module")
+def small_preset(tmp_path_factory):
+    """Register a throwaway preset and emit its artifacts once."""
+    M.PRESETS["_test_small"] = SMALL
+    out = str(tmp_path_factory.mktemp("artifacts") / "_test_small")
+    aot.emit_preset("_test_small", out, [1, 2], use_pallas=False)
+    yield out
+    del M.PRESETS["_test_small"]
+
+
+def test_hlo_text_is_parseable_hlo(small_preset):
+    text = open(os.path.join(small_preset, "step_b1.hlo.txt")).read()
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+
+
+def test_emits_all_artifacts(small_preset):
+    names = set(os.listdir(small_preset))
+    expected = {"step_b1.hlo.txt", "step_b2.hlo.txt", "grad_b1.hlo.txt",
+                "grad_b2.hlo.txt", "apply_update.hlo.txt", "params_init.bin",
+                "meta.json"}
+    assert expected <= names
+
+
+def test_meta_abi(small_preset):
+    meta = json.load(open(os.path.join(small_preset, "meta.json")))
+    assert meta["abi"] == "flat-f32-params-v1"
+    assert meta["batch_variants"] == [1, 2]
+    assert meta["param_count"] == SMALL.param_count()
+    shapes = [tuple(p["shape"]) for p in meta["params"]]
+    assert shapes == [s for _, s in M.param_specs(SMALL)]
+
+
+def test_params_bin_size_and_roundtrip(small_preset):
+    raw = open(os.path.join(small_preset, "params_init.bin"), "rb").read()
+    assert len(raw) == 4 * SMALL.param_count()
+    flat = np.frombuffer(raw, dtype="<f4")
+    # reconstruct and compare against init_params
+    expected = M.init_params(SMALL, seed=0)
+    off = 0
+    for arr in expected:
+        n = int(np.prod(arr.shape))
+        np.testing.assert_allclose(flat[off:off + n].reshape(arr.shape), arr, rtol=1e-6)
+        off += n
+    assert off == len(flat)
+
+
+def test_hlo_batch_variants_differ(small_preset):
+    b1 = open(os.path.join(small_preset, "grad_b1.hlo.txt")).read()
+    b2 = open(os.path.join(small_preset, "grad_b2.hlo.txt")).read()
+    assert "64" in b1  # seq dim present
+    assert b1 != b2
+
+
+def test_to_hlo_text_roundtrip_simple_fn():
+    """Any jitted fn must lower to HLO text with ENTRY + tuple root."""
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the
+core correctness signal for everything that ends up in the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention as kflash
+from compile.kernels import ref as kref
+from compile.kernels import swiglu as kswiglu
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU FFN
+# --------------------------------------------------------------------------
+
+class TestSwiglu:
+    def test_matches_ref_default_tiles(self):
+        x = _rand(0, (256, 64))
+        w1, w3 = _rand(1, (64, 256), scale=0.1), _rand(2, (64, 256), scale=0.1)
+        w2 = _rand(3, (256, 64), scale=0.1)
+        out = kswiglu.swiglu_ffn(x, w1, w3, w2)
+        ref = kref.swiglu_ffn_ref(x, w1, w3, w2)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @settings(deadline=None, max_examples=12)
+    @given(
+        t=st.sampled_from([64, 128, 256]),
+        d=st.sampled_from([32, 64]),
+        f=st.sampled_from([128, 256]),
+        bm=st.sampled_from([32, 64, 128]),
+        bf=st.sampled_from([64, 128]),
+    )
+    def test_matches_ref_tile_sweep(self, t, d, f, bm, bf):
+        if t % min(bm, t) or f % min(bf, f):
+            return
+        x = _rand(10, (t, d))
+        w1, w3 = _rand(11, (d, f), scale=0.1), _rand(12, (d, f), scale=0.1)
+        w2 = _rand(13, (f, d), scale=0.1)
+        out = kswiglu.swiglu_ffn(x, w1, w3, w2, bm=bm, bf=bf)
+        ref = kref.swiglu_ffn_ref(x, w1, w3, w2)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    def test_single_f_block_equals_multi_block(self):
+        """f-dimension accumulation must be exact (gate commutes with split)."""
+        x = _rand(20, (128, 32))
+        w1, w3 = _rand(21, (32, 256), scale=0.1), _rand(22, (32, 256), scale=0.1)
+        w2 = _rand(23, (256, 32), scale=0.1)
+        one = kswiglu.swiglu_ffn(x, w1, w3, w2, bf=256)
+        many = kswiglu.swiglu_ffn(x, w1, w3, w2, bf=64)
+        np.testing.assert_allclose(one, many, rtol=2e-5, atol=2e-5)
+
+    def test_indivisible_token_dim_raises(self):
+        x = _rand(30, (100, 32))
+        w = _rand(31, (32, 128), scale=0.1)
+        w2 = _rand(32, (128, 32), scale=0.1)
+        with pytest.raises(AssertionError):
+            kswiglu.swiglu_ffn(x, w, w, w2, bm=64)
+
+    def test_ad_wrapper_forward_matches(self):
+        x = _rand(40, (128, 32))
+        w1, w3 = _rand(41, (32, 128), scale=0.1), _rand(42, (32, 128), scale=0.1)
+        w2 = _rand(43, (128, 32), scale=0.1)
+        np.testing.assert_allclose(
+            kswiglu.swiglu_ffn_ad(x, w1, w3, w2),
+            kref.swiglu_ffn_ref(x, w1, w3, w2),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_ad_wrapper_grad_matches_ref_grad(self):
+        x = _rand(50, (128, 32))
+        w1, w3 = _rand(51, (32, 128), scale=0.1), _rand(52, (32, 128), scale=0.1)
+        w2 = _rand(53, (128, 32), scale=0.1)
+        g_pallas = jax.grad(lambda *a: kswiglu.swiglu_ffn_ad(*a).sum(), argnums=(0, 1, 2, 3))(
+            x, w1, w3, w2)
+        g_ref = jax.grad(lambda *a: kref.swiglu_ffn_ref(*a).sum(), argnums=(0, 1, 2, 3))(
+            x, w1, w3, w2)
+        for gp, gr in zip(g_pallas, g_ref):
+            np.testing.assert_allclose(gp, gr, rtol=2e-5, atol=2e-5)
+
+    def test_vmem_footprint_monotone_in_tiles(self):
+        small = kswiglu.vmem_footprint_bytes(64, 256, bm=32, bf=64)
+        big = kswiglu.vmem_footprint_bytes(64, 256, bm=128, bf=256)
+        assert small < big
+
+    def test_mxu_utilization_peaks_at_multiple_of_128(self):
+        aligned = kswiglu.mxu_utilization_estimate(128, 256, bm=128, bf=128)
+        ragged = kswiglu.mxu_utilization_estimate(100, 256, bm=96, bf=128)
+        assert aligned > ragged
+        assert aligned == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+class TestFlashAttention:
+    def test_matches_ref_causal(self):
+        q, k, v = (_rand(i, (2, 256, 32)) for i in (60, 61, 62))
+        out = kflash.flash_attention(q, k, v, causal=True)
+        ref = kref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_matches_ref_noncausal(self):
+        q, k, v = (_rand(i, (2, 128, 32)) for i in (63, 64, 65))
+        out = kflash.flash_attention(q, k, v, causal=False)
+        ref = kref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        t=st.sampled_from([128, 256]),
+        hd=st.sampled_from([16, 32, 64]),
+        bq=st.sampled_from([64, 128]),
+        bk=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+    )
+    def test_matches_ref_shape_sweep(self, h, t, hd, bq, bk, causal):
+        q, k, v = (_rand(70 + i, (h, t, hd)) for i in range(3))
+        out = kflash.flash_attention(q, k, v, bq=bq, bk=bk, causal=causal)
+        ref = kref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    def test_causal_first_row_attends_only_self(self):
+        """Row 0 of causal attention must equal v[0] exactly (softmax of 1)."""
+        q, k, v = (_rand(80 + i, (1, 128, 16)) for i in range(3))
+        out = kflash.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-6, atol=1e-6)
+
+    def test_numerical_stability_large_logits(self):
+        """Online softmax must not overflow with large score magnitudes."""
+        q = _rand(90, (1, 128, 16), scale=30.0)
+        k = _rand(91, (1, 128, 16), scale=30.0)
+        v = _rand(92, (1, 128, 16))
+        out = kflash.flash_attention(q, k, v, causal=True)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_ad_wrapper_grad_matches_ref_grad(self):
+        q, k, v = (_rand(95 + i, (2, 128, 16)) for i in range(3))
+        gp = jax.grad(lambda *a: kflash.flash_attention_ad_causal(*a).sum(), argnums=(0, 1, 2))(
+            q, k, v)
+        gr = jax.grad(lambda *a: kref.attention_ref(*a, causal=True).sum(), argnums=(0, 1, 2))(
+            q, k, v)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_indivisible_seq_raises(self):
+        q, k, v = (_rand(99, (1, 100, 16)) for _ in range(3))
+        with pytest.raises(AssertionError):
+            kflash.flash_attention(q, k, v, bq=64, bk=64)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm oracle sanity
+# --------------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    x = _rand(100, (64, 32))
+    g = jnp.ones((32,))
+    out = kref.rmsnorm_ref(x, g)
+    rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones_like(rms), rtol=1e-3, atol=1e-3)

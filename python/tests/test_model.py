@@ -1,0 +1,138 @@
+"""L2 model correctness: pallas-vs-ref cross-check, training dynamics, ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=2, d_ff=128, seq=128)
+BERT_CFG = M.ModelConfig(arch="bert", vocab=128, d_model=64, n_layers=2, n_heads=2,
+                         d_ff=128, seq=128)
+
+
+def _tokens(key, b, cfg=CFG):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, cfg.seq + 1), 0, cfg.vocab)
+
+
+class TestForward:
+    def test_logits_shape(self):
+        params = M.init_params(CFG)
+        logits = M.forward(CFG, params, _tokens(0, 2)[:, :-1])
+        assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+    def test_pallas_matches_ref_forward(self):
+        params = M.init_params(CFG)
+        tok = _tokens(1, 2)[:, :-1]
+        ref = M.forward(CFG, params, tok, use_pallas=False)
+        pal = M.forward(CFG, params, tok, use_pallas=True)
+        np.testing.assert_allclose(pal, ref, rtol=5e-5, atol=5e-5)
+
+    def test_pallas_matches_ref_loss_and_grad(self):
+        params = M.init_params(CFG)
+        tok = _tokens(2, 1)
+        lr, gr = jax.value_and_grad(lambda p: M.loss_fn(CFG, p, tok, False))(params)
+        lp, gp = jax.value_and_grad(lambda p: M.loss_fn(CFG, p, tok, True))(params)
+        np.testing.assert_allclose(lp, lr, rtol=5e-5)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_initial_loss_near_uniform(self):
+        """Random init should give CE ~= log(vocab)."""
+        params = M.init_params(CFG)
+        loss = M.loss_fn(CFG, params, _tokens(3, 2))
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+    def test_causal_masking(self):
+        """Changing a future token must not affect earlier logits (llama)."""
+        params = M.init_params(CFG)
+        tok = np.asarray(_tokens(4, 1)[:, :-1])
+        logits1 = M.forward(CFG, params, jnp.asarray(tok))
+        tok2 = tok.copy()
+        tok2[0, -1] = (tok2[0, -1] + 1) % CFG.vocab
+        logits2 = M.forward(CFG, params, jnp.asarray(tok2))
+        np.testing.assert_allclose(logits1[0, :-1], logits2[0, :-1], rtol=1e-5, atol=1e-5)
+
+    def test_bert_is_not_causal(self):
+        """BERT attention is bidirectional: future tokens do affect position 0."""
+        params = M.init_params(BERT_CFG)
+        tok = np.asarray(_tokens(5, 1, BERT_CFG)[:, :-1])
+        logits1 = M.forward(BERT_CFG, params, jnp.asarray(tok))
+        tok2 = tok.copy()
+        tok2[0, -1] = (tok2[0, -1] + 1) % BERT_CFG.vocab
+        logits2 = M.forward(BERT_CFG, params, jnp.asarray(tok2))
+        assert not np.allclose(logits1[0, 0], logits2[0, 0])
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        params = M.init_params(CFG)
+        momenta = [jnp.zeros_like(p) for p in params]
+        step = jax.jit(M.make_train_step(CFG))
+        tok = _tokens(6, 4)
+        losses = []
+        for _ in range(10):
+            out = step(params, momenta, tok)
+            n = len(params)
+            params, momenta, loss = list(out[:n]), list(out[n:2 * n]), out[-1]
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses
+
+    def test_grad_step_plus_apply_equals_train_step(self):
+        """The multi-rank path (grad + apply) must equal the fused step."""
+        params = M.init_params(CFG)
+        momenta = [jnp.zeros_like(p) for p in params]
+        tok = _tokens(7, 2)
+        n = len(params)
+
+        fused = M.make_train_step(CFG)(params, momenta, tok)
+        grads_out = M.make_grad_step(CFG)(params, tok)
+        grads, loss = list(grads_out[:n]), grads_out[-1]
+        applied = M.make_apply_update(CFG)(params, momenta, grads)
+
+        np.testing.assert_allclose(float(loss), float(fused[-1]), rtol=1e-6)
+        for a, b in zip(applied[:n], fused[:n]):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_weighted_grad_average_is_linear(self):
+        """Heterogeneous averaging: grad(b1 ∪ b2) == (b1*g1 + b2*g2)/(b1+b2)."""
+        params = M.init_params(CFG)
+        tok = _tokens(8, 3)
+        n = len(params)
+        g_all = M.make_grad_step(CFG)(params, tok)[:n]
+        g_1 = M.make_grad_step(CFG)(params, tok[:1])[:n]
+        g_2 = M.make_grad_step(CFG)(params, tok[1:])[:n]
+        for ga, g1, g2 in zip(g_all, g_1, g_2):
+            combined = (1 * g1 + 2 * g2) / 3.0
+            np.testing.assert_allclose(ga, combined, rtol=1e-4, atol=1e-5)
+
+
+class TestABI:
+    def test_param_specs_deterministic(self):
+        assert M.param_specs(CFG) == M.param_specs(CFG)
+
+    def test_param_count_matches_arrays(self):
+        params = M.init_params(CFG)
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == CFG.param_count()
+
+    def test_spec_order_embed_first_head_last(self):
+        specs = M.param_specs(CFG)
+        assert specs[0][0] == "embed"
+        assert specs[-1][0] == "lm_head"
+
+    @pytest.mark.parametrize("preset", sorted(M.PRESETS))
+    def test_presets_well_formed(self, preset):
+        cfg = M.PRESETS[preset]
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.param_count() > 0
+        assert cfg.flops_per_token() > 6 * cfg.param_count() - 1
+
+    def test_paper_preset_sizes(self):
+        """The paper-scale presets should land near their nominal sizes."""
+        assert 0.3e9 < M.PRESETS["llama-0.5b"].param_count() < 0.7e9
+        assert 0.9e9 < M.PRESETS["llama-1.1b"].param_count() < 1.4e9
+        assert 0.9e9 < M.PRESETS["bert-1.1b"].param_count() < 1.4e9

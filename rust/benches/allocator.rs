@@ -1,0 +1,95 @@
+//! Benchmarks for the L3 hot paths: Alg. 1 profiling, curve fitting and
+//! Alg. 2 planning — DESIGN.md §Perf targets <10 ms for 8-GPU plans.
+//!
+//! Built with the in-crate harness (no criterion on this offline image);
+//! run with `cargo bench` (all bench targets use `harness = false`).
+
+use poplar::allocator::{self, baselines};
+use poplar::cluster::{self, LinkKind};
+use poplar::config::model::preset;
+use poplar::coordinator::fit_curves;
+use poplar::curves::PerfCurve;
+use poplar::metrics::bench::{bench, section};
+use poplar::netsim::NetSim;
+use poplar::profiler::{profile_cluster, Device, SimDevice};
+
+fn devices(n_a: usize, n_v: usize) -> Vec<Box<dyn Device>> {
+    let model = preset("llama-0.5b").unwrap();
+    let net = NetSim::from_link(n_a + n_v, LinkKind::Ib);
+    let mut out: Vec<Box<dyn Device>> = Vec::new();
+    for r in 0..(n_a + n_v) {
+        let gpu = if r < n_a { "A800-80G" } else { "V100S-32G" };
+        out.push(Box::new(SimDevice::new(
+            cluster::spec_or_panic(gpu),
+            model.clone(),
+            r,
+            n_a + n_v,
+            net.clone(),
+            0.01,
+            9,
+        )));
+    }
+    out
+}
+
+fn curves_for(stage: u8) -> Vec<PerfCurve> {
+    let mut devs = devices(4, 4);
+    let prof = profile_cluster(&mut devs, stage).unwrap();
+    fit_curves(&prof).unwrap()
+}
+
+fn main() {
+    let model = preset("llama-0.5b").unwrap();
+    let psi = model.param_count();
+    let net = NetSim::from_link(8, LinkKind::Ib);
+
+    section("profiler (Algorithm 1)");
+    let r = bench("profile_cluster/8gpu/zero1", 300, || {
+        let mut devs = devices(4, 4);
+        profile_cluster(&mut devs, 1).unwrap()
+    });
+    println!("{}", r.line());
+
+    section("curve fitting");
+    let mut devs = devices(4, 4);
+    let prof = profile_cluster(&mut devs, 1).unwrap();
+    let r = bench("fit_curves/8gpu", 300, || fit_curves(&prof).unwrap());
+    println!("{}", r.line());
+
+    section("allocator (Algorithm 2)");
+    let c1 = curves_for(1);
+    let c3 = curves_for(3);
+    let r = bench("plan_zero01/8gpu/gbs2048", 300, || {
+        allocator::plan_zero01(&c1, 1, 2048).unwrap()
+    });
+    println!("{}", r.line());
+    let r = bench("plan_zero23/8gpu/gbs2048 (t-sweep)", 300, || {
+        allocator::plan_zero23(&c3, 3, 2048, &net, psi).unwrap()
+    });
+    println!("{}", r.line());
+    let r = bench("plan_uniform/8gpu/gbs2048", 300, || {
+        baselines::plan_uniform(&c3, 3, 2048, &net, psi).unwrap()
+    });
+    println!("{}", r.line());
+
+    section("curve queries");
+    let r = bench("find(t) x 1000", 200, || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            acc += c3[i % c3.len()].find(0.001 * (i % 50) as f64);
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    // perf gate (DESIGN.md §Perf): an 8-GPU plan must be < 10 ms
+    let plan_bench = bench("plan_zero23 gate", 200, || {
+        allocator::plan_zero23(&c3, 3, 2048, &net, psi).unwrap()
+    });
+    assert!(
+        plan_bench.mean_ns < 10e6,
+        "plan_zero23 too slow: {:.2} ms",
+        plan_bench.mean_ns / 1e6
+    );
+    println!("\nperf gate OK: 8-GPU ZeRO-3 plan in {:.2} ms", plan_bench.mean_ns / 1e6);
+}

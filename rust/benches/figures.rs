@@ -1,0 +1,39 @@
+//! End-to-end benchmark: regenerate every paper table/figure and time
+//! each (one bench per table/figure, per the deliverables). The tables
+//! themselves are printed so `cargo bench | tee bench_output.txt`
+//! doubles as the experiment record.
+
+use poplar::exp;
+use poplar::metrics::Timer;
+
+fn main() {
+    let runners: Vec<(&str, fn() -> anyhow::Result<poplar::metrics::Table>)> = vec![
+        ("fig1_motivation", exp::fig1::run),
+        ("fig3_main_abc_x_stages_x_systems", exp::fig3::run),
+        ("fig4_models", exp::fig4::run),
+        ("fig5_quantity_scaling", exp::fig5::run),
+        ("fig6_batch_curves", exp::fig6::run),
+        ("fig7_spline_accuracy", exp::fig7::run),
+        ("fig8_capability_measurement", exp::fig8::run),
+        ("table2_overhead", exp::table2::run),
+        ("ablation", exp::ablation::run),
+    ];
+    for (name, f) in runners {
+        let t = Timer::start();
+        match f() {
+            Ok(table) => {
+                println!(
+                    "\n### bench {name}: regenerated in {:.3}s ({} rows)\n",
+                    t.elapsed_s(),
+                    table.len()
+                );
+                println!("{}", table.to_markdown());
+            }
+            Err(e) => {
+                eprintln!("bench {name} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("\nall figure benches complete");
+}

@@ -1,0 +1,102 @@
+//! Benchmarks for the substrates: spline, device model, collectives,
+//! memory model, data loader, ZeRO iteration simulation.
+
+use poplar::allocator;
+use poplar::cluster::{self, LinkKind};
+use poplar::config::model::preset;
+use poplar::coordinator::fit_curves;
+use poplar::data::{DynamicLoader, SyntheticStream};
+use poplar::memmodel;
+use poplar::metrics::bench::{bench, section};
+use poplar::netsim::{Collective, NetSim};
+use poplar::profiler::{profile_cluster, Device, SimDevice};
+use poplar::spline::CubicSpline;
+use poplar::zero::{simulate_iteration, DeviceOracle};
+
+fn main() {
+    section("spline");
+    let xs: Vec<f64> = (1..=64).map(|i| i as f64).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x / (x + 3.0)).collect();
+    let r = bench("fit/64 knots", 200, || CubicSpline::fit(&xs, &ys).unwrap());
+    println!("{}", r.line());
+    let s = CubicSpline::fit(&xs, &ys).unwrap();
+    let r = bench("eval x 1000", 200, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += s.eval(1.0 + (i % 630) as f64 * 0.1);
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    section("device model");
+    let spec = cluster::spec_or_panic("A100-80G");
+    let model = preset("llama-0.5b").unwrap();
+    let fpt = model.flops_per_token();
+    let r = bench("compute_time x 1000", 200, || {
+        let mut acc = 0.0;
+        for b in 1..=1000u64 {
+            acc += spec.compute_time((b * 1024) as f64, fpt, 24);
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    section("netsim collectives");
+    let net = NetSim::from_link(8, LinkKind::Ib);
+    let r = bench("allreduce cost x 1000", 200, || {
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            acc += net.time(Collective::AllReduce, i << 20);
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    section("memory model");
+    let psi = model.param_count();
+    let r = bench("true_mbs x 1000", 200, || {
+        let mut acc = 0usize;
+        for s in 0..4u8 {
+            for _ in 0..250 {
+                acc += memmodel::true_mbs(&model, psi, s, 8, 80 << 30);
+            }
+        }
+        acc
+    });
+    println!("{}", r.line());
+
+    section("data loader");
+    let mut devs: Vec<Box<dyn Device>> = (0..8)
+        .map(|r| {
+            let gpu = if r < 4 { "A800-80G" } else { "V100S-32G" };
+            Box::new(SimDevice::new(
+                cluster::spec_or_panic(gpu),
+                model.clone(),
+                r,
+                8,
+                net.clone(),
+                0.0,
+                1,
+            )) as Box<dyn Device>
+        })
+        .collect();
+    let prof = profile_cluster(&mut devs, 1).unwrap();
+    let curves = fit_curves(&prof).unwrap();
+    let plan = allocator::plan_zero01(&curves, 1, 512).unwrap();
+    let r = bench("iteration batches/512 samples seq64", 300, || {
+        let mut dl = DynamicLoader::new(SyntheticStream::new(3, 1024), 64);
+        dl.iteration(&plan)
+    });
+    println!("{}", r.line());
+
+    section("zero iteration simulation");
+    let specs = (0..8)
+        .map(|r| cluster::spec_or_panic(if r < 4 { "A800-80G" } else { "V100S-32G" }))
+        .collect();
+    let oracle = DeviceOracle { specs, model: &model };
+    let r = bench("simulate_iteration/8gpu", 300, || {
+        simulate_iteration(&plan, &oracle, &net, &model)
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,260 @@
+//! Baseline allocators the paper compares against (Figs. 3-5).
+//!
+//! * [`plan_uniform`] — "DeepSpeed": heterogeneity-unaware uniform
+//!   micro-batches. Every rank gets the same `b`, which therefore cannot
+//!   exceed the weakest rank's `mbs`. Like the paper we are generous and
+//!   "manually tune" the uniform batch: sweep every feasible uniform `b`
+//!   and keep the best (this is what the authors did for baseline 3).
+//! * [`plan_flops_proportional`] — "Whale": hetero-aware, but driven by
+//!   the *FLOPs rating* instead of measured wall time, and blind to
+//!   memory-only heterogeneity (equal-FLOPs ranks get equal batches even
+//!   when their memories differ — the cluster-A failure mode).
+
+use super::{rank_compute_time, schedule, Plan, PlanError, RankPlan};
+use crate::curves::PerfCurve;
+use crate::netsim::NetSim;
+
+/// Uniform (DeepSpeed-like) allocation: same micro-batch everywhere,
+/// swept to the best feasible value.
+pub fn plan_uniform(
+    curves: &[PerfCurve],
+    stage: u8,
+    gbs: usize,
+    net: &NetSim,
+    param_count: u64,
+) -> Result<Plan, PlanError> {
+    if gbs == 0 {
+        return Err(PlanError::EmptyBatch);
+    }
+    let n = curves.len();
+    let min_mbs = curves.iter().map(|c| c.mbs()).min().unwrap_or(0);
+    if min_mbs == 0 {
+        return Err(PlanError::NoCapacity);
+    }
+    let t_comm = net.per_microstep_comm_time(stage, param_count);
+    let t_iter_comm = net.iteration_comm_time(stage, param_count);
+
+    let mut best: Option<(f64, usize)> = None; // (wall, b)
+    for b in 1..=min_mbs {
+        let msum = n * b;
+        let gas = gbs.div_ceil(msum).max(1);
+        // slowest rank bounds every micro-step (BSP)
+        let t_step = curves.iter().map(|c| c.time_at(b as f64)).fold(0.0, f64::max);
+        let wall = match stage {
+            0 | 1 => t_step * gas as f64 + t_iter_comm,
+            _ => (t_step + t_comm) * gas as f64 + t_iter_comm,
+        };
+        if best.map_or(true, |(w, _)| wall < w) {
+            best = Some((wall, b));
+        }
+    }
+    let (wall, b) = best.ok_or(PlanError::NoCapacity)?;
+
+    // uniform share with the tail spread over the first ranks
+    let base = gbs / n;
+    let extra = gbs % n;
+    let ranks: Vec<RankPlan> = (0..n)
+        .map(|i| schedule(i, base + usize::from(i < extra), b))
+        .collect();
+    let plan = Plan { stage, gbs, ranks, predicted_iter_s: wall,
+                      strategy: "uniform".into() };
+    debug_assert_eq!(plan.total_samples(), gbs);
+    Ok(plan)
+}
+
+/// FLOPs-proportional (Whale-like) allocation.
+///
+/// `flops[i]` is the rank's peak-TFLOPs rating. Shares are proportional
+/// to the rating, capped by each rank's `mbs` (Whale knows memory limits
+/// once told, but measures *capability* by FLOPs alone).
+pub fn plan_flops_proportional(
+    curves: &[PerfCurve],
+    flops: &[f64],
+    stage: u8,
+    gbs: usize,
+    net: &NetSim,
+    param_count: u64,
+) -> Result<Plan, PlanError> {
+    if gbs == 0 {
+        return Err(PlanError::EmptyBatch);
+    }
+    let n = curves.len();
+    assert_eq!(flops.len(), n);
+    if curves.iter().all(|c| c.mbs() == 0) {
+        return Err(PlanError::NoCapacity);
+    }
+    let total_flops: f64 = flops.iter().sum();
+
+    // FLOPs-proportional integer shares of gbs, remainder to the
+    // highest-rated ranks
+    let mut shares: Vec<usize> = flops
+        .iter()
+        .map(|f| ((gbs as f64) * f / total_flops).floor() as usize)
+        .collect();
+    let mut rem = gbs - shares.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| flops[b].partial_cmp(&flops[a]).unwrap());
+    let mut k = 0;
+    while rem > 0 {
+        shares[order[k % n]] += 1;
+        rem -= 1;
+        k += 1;
+    }
+
+    // micro batch: FLOPs-proportional too, scaled so every rank fits its
+    // mbs (the "manually configured max batch consistent with its
+    // strategy" of the paper's baseline 4)
+    let scale = curves
+        .iter()
+        .zip(flops)
+        .map(|(c, f)| c.mbs() as f64 / f)
+        .fold(f64::MAX, f64::min);
+    let micro: Vec<usize> = flops
+        .iter()
+        .zip(curves)
+        .map(|(f, c)| (((f * scale).floor() as usize).max(1)).min(c.mbs().max(1)))
+        .collect();
+
+    let (ranks, wall) = match stage {
+        0 | 1 => {
+            let ranks: Vec<RankPlan> = (0..n).map(|i| schedule(i, shares[i], micro[i])).collect();
+            let wall = ranks
+                .iter()
+                .zip(curves)
+                .map(|(r, c)| rank_compute_time(r, c))
+                .fold(0.0, f64::max)
+                + net.iteration_comm_time(stage, param_count);
+            (ranks, wall)
+        }
+        _ => {
+            // shared gas, FLOPs-proportional micro-batches
+            let msum: usize = micro.iter().sum();
+            let gas = gbs.div_ceil(msum).max(1);
+            let t_comm = net.per_microstep_comm_time(stage, param_count);
+            let mut last: Vec<usize> = micro.clone();
+            // shrink the final step so totals match gbs
+            let mut excess = msum * gas - gbs;
+            let mut k = 0;
+            let order: Vec<usize> = (0..n).collect();
+            while excess > 0 {
+                let i = order[k % n];
+                if last[i] > 0 {
+                    let take = excess.min(last[i]).min(1);
+                    last[i] -= take;
+                    excess -= take;
+                }
+                k += 1;
+            }
+            let ranks: Vec<RankPlan> = (0..n)
+                .map(|i| RankPlan {
+                    rank: i,
+                    micro_batch: micro[i],
+                    samples_per_iter: micro[i] * (gas - 1) + last[i],
+                    grad_accum_steps: gas,
+                    last_batch: last[i],
+                })
+                .collect();
+            let t_step = micro
+                .iter()
+                .zip(curves)
+                .map(|(&b, c)| c.time_at(b as f64))
+                .fold(0.0, f64::max);
+            let wall = (t_step + t_comm) * gas as f64
+                + net.iteration_comm_time(stage, param_count);
+            (ranks, wall)
+        }
+    };
+
+    let plan = Plan { stage, gbs, ranks, predicted_iter_s: wall,
+                      strategy: "flops-proportional".into() };
+    debug_assert_eq!(plan.total_samples(), gbs, "flops plan must cover gbs");
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{catalog, LinkKind};
+    use crate::config::model::preset;
+    use crate::curves::ProfiledPoint;
+
+    fn curve(gpu: &str, mbs: usize) -> PerfCurve {
+        let g = catalog::spec_or_panic(gpu);
+        let m = preset("llama-0.5b").unwrap();
+        let pts: Vec<ProfiledPoint> = (1..=mbs)
+            .map(|b| ProfiledPoint {
+                batch: b,
+                step_time_s: g.compute_time(
+                    (b as u64 * m.seq) as f64,
+                    m.flops_per_token(),
+                    m.n_layers as usize,
+                ),
+            })
+            .collect();
+        PerfCurve::fit(pts, mbs).unwrap()
+    }
+
+    fn net(n: usize) -> NetSim {
+        NetSim::from_link(n, LinkKind::Ib)
+    }
+
+    #[test]
+    fn uniform_covers_gbs() {
+        let curves = vec![curve("A800-80G", 48), curve("V100S-32G", 16)];
+        let m = preset("llama-0.5b").unwrap();
+        for stage in 0..4u8 {
+            let p = plan_uniform(&curves, stage, 101, &net(2), m.param_count()).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.total_samples(), 101);
+        }
+    }
+
+    #[test]
+    fn uniform_micro_bounded_by_weakest() {
+        let curves = vec![curve("A800-80G", 48), curve("V100S-32G", 16)];
+        let m = preset("llama-0.5b").unwrap();
+        let p = plan_uniform(&curves, 2, 512, &net(2), m.param_count()).unwrap();
+        for r in &p.ranks {
+            assert!(r.micro_batch <= 16);
+        }
+        // uniform: every rank has the same micro batch
+        assert!(p.ranks.windows(2).all(|w| w[0].micro_batch == w[1].micro_batch));
+    }
+
+    #[test]
+    fn flops_proportional_covers_gbs() {
+        let curves = vec![curve("A800-80G", 48), curve("V100S-32G", 16)];
+        let flops = vec![312.0, 130.0];
+        let m = preset("llama-0.5b").unwrap();
+        for stage in 0..4u8 {
+            let p = plan_flops_proportional(&curves, &flops, stage, 333, &net(2),
+                                            m.param_count()).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.total_samples(), 333, "stage {stage}");
+        }
+    }
+
+    #[test]
+    fn flops_blind_to_memory_only_heterogeneity() {
+        // cluster-A: same FLOPs, different memory -> Whale assigns equal
+        // micro batches (bounded by the smaller mbs): no gain possible.
+        let curves = vec![curve("A100-80G", 48), curve("A100-40G", 20)];
+        let flops = vec![312.0, 312.0];
+        let m = preset("llama-0.5b").unwrap();
+        let p = plan_flops_proportional(&curves, &flops, 1, 256, &net(2),
+                                        m.param_count()).unwrap();
+        assert_eq!(p.ranks[0].samples_per_iter, p.ranks[1].samples_per_iter);
+    }
+
+    #[test]
+    fn uniform_no_capacity_error() {
+        let curves = vec![curve("A800-80G", 48)];
+        // fabricate a zero-mbs curve by fitting then asking for stage
+        // where min_mbs=0 can't happen through fit(); instead check gbs=0
+        let m = preset("llama-0.5b").unwrap();
+        assert_eq!(
+            plan_uniform(&curves, 0, 0, &net(1), m.param_count()).unwrap_err(),
+            PlanError::EmptyBatch
+        );
+    }
+}

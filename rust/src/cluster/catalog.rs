@@ -1,0 +1,161 @@
+//! GPU catalog: the six paper GPUs plus the two consumer cards of Fig. 6.
+//!
+//! Peak TFLOP/s (dense fp16 tensor), memory and bandwidth come from public
+//! spec sheets; `eff_max`, `sat_tokens` and the non-matmul coefficients
+//! are calibrated so that (a) relative *wall-time* speeds match the
+//! paper's observations (e.g. V100 vs T4 gap larger than FLOPs suggests,
+//! A100-40G == A100-80G compute) and (b) mbs gaps match the memory ratios
+//! of Table 1 clusters.
+
+use super::gpu::GpuSpec;
+
+/// All known GPU types.
+pub const NAMES: &[&str] = &[
+    "A100-80G", "A100-40G", "A800-80G", "V100-16G", "V100S-32G", "T4",
+    "RTX4090", "RTX3060",
+];
+
+/// Look up a catalog entry by name. Returns `None` for unknown names.
+pub fn spec(name: &str) -> Option<GpuSpec> {
+    let s = match name {
+        // Ampere data-center. A100 80G and 40G have identical compute —
+        // the cluster-A scenario (same FLOPs, different memory).
+        "A100-80G" => GpuSpec {
+            name: "A100-80G".into(),
+            mem_gib: 80.0,
+            peak_tflops: 312.0,
+            mem_bw_gbs: 2039.0,
+            eff_max: 0.55,
+            sat_tokens: 6000.0,
+            launch_overhead_s: 9e-4,
+            nonmatmul_bytes_per_token_layer: 9000.0,
+        },
+        "A100-40G" => GpuSpec {
+            name: "A100-40G".into(),
+            mem_gib: 40.0,
+            peak_tflops: 312.0,
+            mem_bw_gbs: 1555.0,
+            eff_max: 0.55,
+            sat_tokens: 6000.0,
+            launch_overhead_s: 9e-4,
+            nonmatmul_bytes_per_token_layer: 9000.0,
+        },
+        // A800: export-variant A100 (same compute, capped NVLink).
+        "A800-80G" => GpuSpec {
+            name: "A800-80G".into(),
+            mem_gib: 80.0,
+            peak_tflops: 312.0,
+            mem_bw_gbs: 2039.0,
+            eff_max: 0.55,
+            sat_tokens: 6000.0,
+            launch_overhead_s: 9e-4,
+            nonmatmul_bytes_per_token_layer: 9000.0,
+        },
+        // Volta: lower peak, lower efficiency ceiling, slower non-matmul.
+        "V100-16G" => GpuSpec {
+            name: "V100-16G".into(),
+            mem_gib: 16.0,
+            peak_tflops: 125.0,
+            mem_bw_gbs: 900.0,
+            eff_max: 0.50,
+            sat_tokens: 4500.0,
+            launch_overhead_s: 1.1e-3,
+            nonmatmul_bytes_per_token_layer: 11000.0,
+        },
+        "V100S-32G" => GpuSpec {
+            name: "V100S-32G".into(),
+            mem_gib: 32.0,
+            peak_tflops: 130.0,
+            mem_bw_gbs: 1134.0,
+            eff_max: 0.50,
+            sat_tokens: 4500.0,
+            launch_overhead_s: 1.1e-3,
+            nonmatmul_bytes_per_token_layer: 11000.0,
+        },
+        // Turing inference card: the cluster-B weak partner. Thermally
+        // limited — low eff_max — and bandwidth-starved, so its wall-time
+        // gap vs V100 is larger than the FLOPs ratio (Fig. 8).
+        "T4" => GpuSpec {
+            name: "T4".into(),
+            mem_gib: 16.0,
+            peak_tflops: 65.0,
+            mem_bw_gbs: 300.0,
+            eff_max: 0.35,
+            sat_tokens: 3500.0,
+            launch_overhead_s: 1.3e-3,
+            nonmatmul_bytes_per_token_layer: 13000.0,
+        },
+        // Consumer cards (appendix Fig. 6 sweeps only).
+        "RTX4090" => GpuSpec {
+            name: "RTX4090".into(),
+            mem_gib: 24.0,
+            peak_tflops: 165.0,
+            mem_bw_gbs: 1008.0,
+            eff_max: 0.60,
+            sat_tokens: 5000.0,
+            launch_overhead_s: 8e-4,
+            nonmatmul_bytes_per_token_layer: 9500.0,
+        },
+        "RTX3060" => GpuSpec {
+            name: "RTX3060".into(),
+            mem_gib: 12.0,
+            peak_tflops: 51.0,
+            mem_bw_gbs: 360.0,
+            eff_max: 0.45,
+            sat_tokens: 3500.0,
+            launch_overhead_s: 1.2e-3,
+            nonmatmul_bytes_per_token_layer: 12000.0,
+        },
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// Like [`spec`] but panics with a helpful message (config validation
+/// should have caught unknown names earlier).
+pub fn spec_or_panic(name: &str) -> GpuSpec {
+    spec(name).unwrap_or_else(|| {
+        panic!("unknown GPU type {name:?}; known: {NAMES:?}")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for n in NAMES {
+            let s = spec(n).expect(n);
+            assert_eq!(&s.name, n);
+            assert!(s.peak_tflops > 0.0 && s.mem_gib > 0.0 && s.mem_bw_gbs > 0.0);
+            assert!(s.eff_max > 0.0 && s.eff_max < 1.0);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(spec("H100").is_none());
+    }
+
+    #[test]
+    fn a100_variants_have_equal_compute_different_memory() {
+        let a80 = spec("A100-80G").unwrap();
+        let a40 = spec("A100-40G").unwrap();
+        assert_eq!(a80.peak_tflops, a40.peak_tflops);
+        assert_eq!(a80.eff_max, a40.eff_max);
+        assert!(a80.mem_gib > a40.mem_gib);
+    }
+
+    #[test]
+    fn catalog_ordering_sanity() {
+        // wall-time speed ordering at a realistic load must be
+        // A100 > V100S > V100 > T4
+        let tokens = 4096.0;
+        let fpt = 3e9;
+        let t = |n: &str| spec(n).unwrap().compute_time(tokens, fpt, 24);
+        assert!(t("A100-80G") < t("V100S-32G"));
+        assert!(t("V100S-32G") < t("V100-16G"));
+        assert!(t("V100-16G") < t("T4"));
+    }
+}

@@ -1,0 +1,207 @@
+//! Calibrated GPU device performance model.
+//!
+//! Substitution for the paper's physical GPUs (DESIGN.md §2): Poplar's
+//! algorithms consume only (a) wall time as a function of micro-batch
+//! size and (b) OOM boundaries. This model generates both, including the
+//! two effects the paper leans on:
+//!
+//! * **saturating throughput** (Fig. 6): per-batch speed rises with batch
+//!   size then plateaus — modelled as matmul efficiency
+//!   `eff(tokens) = eff_max * tokens / (tokens + sat_tokens)` with a mild
+//!   tile-quantization staircase;
+//! * **FLOPs ≠ wall time** (Fig. 8): a bandwidth-bound non-matmul term
+//!   `bytes_per_token / mem_bw` plus a fixed launch overhead, both of
+//!   which scale differently across GPU generations than peak FLOPs.
+//!
+//! All randomness is a deterministic LCG so experiments are reproducible.
+
+
+
+/// Static specification of a GPU type (catalog entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name, e.g. `"A100-80G"`.
+    pub name: String,
+    /// Device memory in GiB.
+    pub mem_gib: f64,
+    /// Peak dense fp16/bf16 tensor throughput in TFLOP/s.
+    pub peak_tflops: f64,
+    /// Memory bandwidth in GB/s (drives the non-matmul term).
+    pub mem_bw_gbs: f64,
+    /// Fraction of peak sustained by large matmuls on this part.
+    pub eff_max: f64,
+    /// Tokens at which matmul efficiency reaches half of `eff_max`.
+    pub sat_tokens: f64,
+    /// Fixed per-micro-step launch/dispatch overhead (seconds).
+    pub launch_overhead_s: f64,
+    /// Bytes touched per token by bandwidth-bound (non-matmul) ops,
+    /// per transformer layer.
+    pub nonmatmul_bytes_per_token_layer: f64,
+}
+
+impl GpuSpec {
+    /// Total device memory in bytes.
+    pub fn mem_bytes(&self) -> u64 {
+        (self.mem_gib * (1u64 << 30) as f64) as u64
+    }
+
+    /// The single-number FLOPs rating Whale-style cost models use.
+    pub fn flops_rating(&self) -> f64 {
+        self.peak_tflops
+    }
+
+    /// Matmul efficiency at a given token count (saturating + staircase).
+    pub fn matmul_eff(&self, tokens: f64) -> f64 {
+        let smooth = self.eff_max * tokens / (tokens + self.sat_tokens);
+        // Tile quantization: batches that don't fill the last 128-row tile
+        // waste a fraction of one tile's work.
+        let tile = 128.0;
+        let waste = {
+            let rem = tokens % tile;
+            if rem == 0.0 {
+                0.0
+            } else {
+                (tile - rem) / (tokens + tile) * 0.5
+            }
+        };
+        smooth * (1.0 - waste)
+    }
+
+    /// Pure-compute time (seconds) for `tokens` tokens of a model with
+    /// `flops_per_token` (fwd+bwd) and `n_layers` layers.
+    pub fn compute_time(&self, tokens: f64, flops_per_token: f64, n_layers: usize) -> f64 {
+        if tokens <= 0.0 {
+            return 0.0;
+        }
+        let flops = flops_per_token * tokens;
+        let matmul = flops / (self.peak_tflops * 1e12 * self.matmul_eff(tokens));
+        let bytes = self.nonmatmul_bytes_per_token_layer * tokens * n_layers as f64;
+        let mem = bytes / (self.mem_bw_gbs * 1e9);
+        matmul + mem + self.launch_overhead_s
+    }
+}
+
+/// Deterministic multiplicative measurement noise (LCG-based).
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    state: u64,
+    /// Standard deviation of the multiplicative noise (e.g. 0.015 = 1.5%).
+    pub sigma: f64,
+}
+
+impl NoiseModel {
+    /// Create a noise source with the given seed and sigma.
+    pub fn new(seed: u64, sigma: f64) -> Self {
+        NoiseModel { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1), sigma }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Multiplicative factor `1 + N(0, sigma)` (Box–Muller).
+    pub fn factor(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (1.0 + self.sigma * z).max(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::catalog;
+
+    fn a100() -> GpuSpec {
+        catalog::spec("A100-80G").unwrap()
+    }
+
+    fn t4() -> GpuSpec {
+        catalog::spec("T4").unwrap()
+    }
+
+    #[test]
+    fn efficiency_saturates() {
+        let g = a100();
+        let e_small = g.matmul_eff(128.0);
+        let e_big = g.matmul_eff(128.0 * 2048.0);
+        assert!(e_big > e_small);
+        assert!(e_big <= g.eff_max);
+        // near-plateau: doubling tokens at the top changes eff < 2%
+        let e_big2 = g.matmul_eff(128.0 * 4096.0);
+        assert!((e_big2 - e_big) / e_big < 0.02);
+    }
+
+    #[test]
+    fn tile_quantization_staircase() {
+        let g = a100();
+        // a full tile is more efficient than one extra row
+        assert!(g.matmul_eff(1280.0) > g.matmul_eff(1281.0));
+    }
+
+    #[test]
+    fn compute_time_monotone_in_tokens() {
+        let g = a100();
+        let mut prev = 0.0;
+        for b in 1..64u32 {
+            let t = g.compute_time(b as f64 * 1024.0, 3e9, 24);
+            assert!(t > prev, "time must strictly grow with batch");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn speed_rises_then_plateaus() {
+        // the Fig. 6 shape: tokens/sec increasing, derivative shrinking
+        let g = a100();
+        let speed =
+            |b: f64| b * 1024.0 / g.compute_time(b * 1024.0, 3e9, 24);
+        assert!(speed(4.0) > speed(1.0) * 1.5);
+        let gain_late = speed(48.0) / speed(32.0);
+        assert!(gain_late < 1.08, "late gain {gain_late} should be small");
+    }
+
+    #[test]
+    fn wall_time_ratio_differs_from_flops_ratio() {
+        // The paper's Fig. 8 point: FLOPs ratings mispredict real speed.
+        let (a, t) = (a100(), t4());
+        let flops_ratio = a.peak_tflops / t.peak_tflops;
+        let tokens = 8.0 * 1024.0;
+        let wall_ratio =
+            t.compute_time(tokens, 3e9, 24) / a.compute_time(tokens, 3e9, 24);
+        assert!(
+            (wall_ratio - flops_ratio).abs() / flops_ratio > 0.10,
+            "wall {wall_ratio:.2} vs flops {flops_ratio:.2} should diverge >10%"
+        );
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_bounded() {
+        let mut n1 = NoiseModel::new(7, 0.02);
+        let mut n2 = NoiseModel::new(7, 0.02);
+        for _ in 0..100 {
+            let (a, b) = (n1.factor(), n2.factor());
+            assert_eq!(a, b);
+            assert!(a > 0.5 && a < 1.5);
+        }
+    }
+
+    #[test]
+    fn noise_mean_near_one() {
+        let mut n = NoiseModel::new(42, 0.02);
+        let mean: f64 = (0..5000).map(|_| n.factor()).sum::<f64>() / 5000.0;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Heterogeneous GPU cluster substrate.
+//!
+//! The paper's testbed (Table 1) is replaced by a calibrated device model
+//! (see DESIGN.md §2). Three pieces:
+//!
+//! * [`gpu`] — per-type performance model (saturating throughput,
+//!   non-matmul bandwidth term, deterministic noise);
+//! * [`catalog`] — the six paper GPUs + two consumer cards, calibrated;
+//! * [`topology`] — cluster specs: node groups, links, paper presets A/B/C.
+
+pub mod catalog;
+pub mod gpu;
+pub mod topology;
+
+pub use catalog::{spec, spec_or_panic, NAMES};
+pub use gpu::{GpuSpec, NoiseModel};
+pub use topology::{
+    cluster_a, cluster_b, cluster_c, cluster_c_counts, ClusterSpec, GpuInstance, LinkKind,
+    NodeGroup,
+};

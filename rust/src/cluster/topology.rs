@@ -1,0 +1,248 @@
+//! Cluster topology: GPU instances grouped into nodes joined by links.
+//!
+//! Mirrors the paper's Table 1: each cluster is a set of (GPU type ×
+//! count) groups; GPUs inside a node share an intra-node link (NVLink or
+//! PCIe), nodes are joined by an inter-node link (IB or Socket). The
+//! slowest link on a collective's path bottlenecks the whole ring
+//! (paper appendix, "Analysis of Experiments").
+
+
+
+use super::catalog;
+use super::gpu::GpuSpec;
+
+/// Interconnect type with its effective bandwidth and per-message latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// NVLink 3 (intra-node), ~300 GB/s effective per direction.
+    Nvlink,
+    /// A800's export-capped NVLink, ~200 GB/s.
+    NvlinkCapped,
+    /// PCIe 4.0 x16, ~20 GB/s effective.
+    Pcie,
+    /// InfiniBand HDR, ~20 GB/s effective.
+    Ib,
+    /// TCP sockets over 10-25 GbE, ~2 GB/s effective.
+    Socket,
+}
+
+impl LinkKind {
+    /// Effective unidirectional bandwidth in GB/s.
+    pub fn bandwidth_gbs(self) -> f64 {
+        match self {
+            LinkKind::Nvlink => 300.0,
+            LinkKind::NvlinkCapped => 200.0,
+            LinkKind::Pcie => 20.0,
+            LinkKind::Ib => 20.0,
+            LinkKind::Socket => 2.0,
+        }
+    }
+
+    /// Per-hop message latency (the α in the α-β model), seconds.
+    pub fn latency_s(self) -> f64 {
+        match self {
+            LinkKind::Nvlink | LinkKind::NvlinkCapped => 3e-6,
+            LinkKind::Pcie => 8e-6,
+            LinkKind::Ib => 5e-6,
+            LinkKind::Socket => 5e-5,
+        }
+    }
+}
+
+/// A homogeneous group of GPUs forming one node of the cluster.
+#[derive(Debug, Clone)]
+pub struct NodeGroup {
+    /// Catalog name of the GPU type, e.g. `"A100-80G"`.
+    pub gpu: String,
+    /// Number of GPUs of this type.
+    pub count: usize,
+    /// Intra-node interconnect.
+    pub intra_link: LinkKind,
+}
+
+/// A heterogeneous GPU cluster (the paper's Table 1 rows).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Human-readable name, e.g. `"cluster-A"`.
+    pub name: String,
+    /// Node groups in rank order.
+    pub groups: Vec<NodeGroup>,
+    /// Interconnect between node groups.
+    pub inter_link: LinkKind,
+}
+
+/// One concrete GPU instance with its global rank.
+#[derive(Debug, Clone)]
+pub struct GpuInstance {
+    /// Global rank in the data-parallel group.
+    pub rank: usize,
+    /// Device specification from the catalog.
+    pub spec: GpuSpec,
+    /// Which node group this instance belongs to.
+    pub group: usize,
+}
+
+impl ClusterSpec {
+    /// Build a cluster from `(gpu_name, count, intra_link)` triples.
+    pub fn new(
+        name: &str,
+        groups: &[(&str, usize, LinkKind)],
+        inter_link: LinkKind,
+    ) -> Self {
+        ClusterSpec {
+            name: name.into(),
+            groups: groups
+                .iter()
+                .map(|(g, c, l)| NodeGroup { gpu: (*g).into(), count: *c, intra_link: *l })
+                .collect(),
+            inter_link,
+        }
+    }
+
+    /// Total GPU count.
+    pub fn n_gpus(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Instantiate the GPU list in rank order.
+    pub fn instances(&self) -> Vec<GpuInstance> {
+        let mut out = Vec::with_capacity(self.n_gpus());
+        let mut rank = 0;
+        for (gi, g) in self.groups.iter().enumerate() {
+            let spec = catalog::spec_or_panic(&g.gpu);
+            for _ in 0..g.count {
+                out.push(GpuInstance { rank, spec: spec.clone(), group: gi });
+                rank += 1;
+            }
+        }
+        out
+    }
+
+    /// The slowest link any ring collective over all ranks must cross:
+    /// the inter-node link if there are >= 2 non-empty groups, else the
+    /// single group's intra-node link.
+    pub fn bottleneck_link(&self) -> LinkKind {
+        let non_empty = self.groups.iter().filter(|g| g.count > 0).count();
+        if non_empty >= 2 {
+            self.inter_link
+        } else {
+            self.groups
+                .iter()
+                .find(|g| g.count > 0)
+                .map(|g| g.intra_link)
+                .unwrap_or(self.inter_link)
+        }
+    }
+
+    /// Validate the spec against the catalog.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_gpus() == 0 {
+            return Err(format!("cluster {:?} has no GPUs", self.name));
+        }
+        for g in &self.groups {
+            if catalog::spec(&g.gpu).is_none() {
+                return Err(format!("unknown GPU type {:?} in cluster {:?}", g.gpu, self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's Table 1 cluster A: 4x A100-80G (NVLink) + 4x A100-40G (PCIe).
+pub fn cluster_a() -> ClusterSpec {
+    ClusterSpec::new(
+        "cluster-A",
+        &[("A100-80G", 4, LinkKind::Nvlink), ("A100-40G", 4, LinkKind::Pcie)],
+        LinkKind::Ib,
+    )
+}
+
+/// The paper's Table 1 cluster B: 2x V100-16G + 2x T4, PCIe.
+pub fn cluster_b() -> ClusterSpec {
+    ClusterSpec::new(
+        "cluster-B",
+        &[("V100-16G", 2, LinkKind::Pcie), ("T4", 2, LinkKind::Pcie)],
+        LinkKind::Ib,
+    )
+}
+
+/// The paper's Table 1 cluster C: 4x A800-80G + 4x V100S-32G, PCIe.
+pub fn cluster_c() -> ClusterSpec {
+    ClusterSpec::new(
+        "cluster-C",
+        &[("A800-80G", 4, LinkKind::Pcie), ("V100S-32G", 4, LinkKind::Pcie)],
+        LinkKind::Ib,
+    )
+}
+
+/// Cluster C with arbitrary counts — the Fig. 5 quantity sweep
+/// (`a800 : v100s` of 4:1 … 1:4 plus homogeneous ends).
+pub fn cluster_c_counts(n_a800: usize, n_v100s: usize) -> ClusterSpec {
+    ClusterSpec::new(
+        "cluster-C-var",
+        &[
+            ("A800-80G", n_a800, LinkKind::Pcie),
+            ("V100S-32G", n_v100s, LinkKind::Pcie),
+        ],
+        LinkKind::Ib,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_clusters_validate() {
+        for c in [cluster_a(), cluster_b(), cluster_c()] {
+            c.validate().unwrap();
+            assert!(c.n_gpus() >= 4);
+        }
+    }
+
+    #[test]
+    fn instances_rank_order_and_grouping() {
+        let c = cluster_a();
+        let inst = c.instances();
+        assert_eq!(inst.len(), 8);
+        for (i, g) in inst.iter().enumerate() {
+            assert_eq!(g.rank, i);
+        }
+        assert_eq!(inst[0].spec.name, "A100-80G");
+        assert_eq!(inst[4].spec.name, "A100-40G");
+        assert_eq!(inst[3].group, 0);
+        assert_eq!(inst[4].group, 1);
+    }
+
+    #[test]
+    fn bottleneck_is_inter_link_for_multi_group() {
+        assert_eq!(cluster_a().bottleneck_link(), LinkKind::Ib);
+    }
+
+    #[test]
+    fn bottleneck_is_intra_for_single_group() {
+        let c = cluster_c_counts(4, 0);
+        assert_eq!(c.bottleneck_link(), LinkKind::Pcie);
+        let c = ClusterSpec::new("x", &[("A100-80G", 4, LinkKind::Nvlink)], LinkKind::Ib);
+        assert_eq!(c.bottleneck_link(), LinkKind::Nvlink);
+    }
+
+    #[test]
+    fn empty_cluster_rejected() {
+        let c = cluster_c_counts(0, 0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_gpu_rejected() {
+        let c = ClusterSpec::new("x", &[("H100", 2, LinkKind::Pcie)], LinkKind::Ib);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn link_speeds_ordered() {
+        assert!(LinkKind::Nvlink.bandwidth_gbs() > LinkKind::NvlinkCapped.bandwidth_gbs());
+        assert!(LinkKind::NvlinkCapped.bandwidth_gbs() > LinkKind::Pcie.bandwidth_gbs());
+        assert!(LinkKind::Pcie.bandwidth_gbs() > LinkKind::Socket.bandwidth_gbs());
+    }
+}

@@ -1,0 +1,331 @@
+//! Configuration system: one TOML file describes a training job.
+//!
+//! ```toml
+//! [model]
+//! preset = "llama-0.5b"        # or inline fields (vocab, d_model, ...)
+//!
+//! [cluster]
+//! preset = "cluster-C"         # or explicit [[cluster.groups]]
+//!
+//! [training]
+//! zero_stage = 2
+//! global_batch_tokens = 2097152   # the paper's 2M tokens
+//! iterations = 50
+//! strategy = "poplar"          # poplar | uniform | flops
+//! noise_sigma = 0.015
+//! seed = 42
+//! ```
+//!
+//! Parsed with the in-crate [`toml_mini`] subset parser (offline image —
+//! see Cargo.toml note).
+
+pub mod model;
+pub mod toml_mini;
+
+use crate::cluster::{self, ClusterSpec, LinkKind, NodeGroup};
+use model::ModelSpec;
+use toml_mini::Doc;
+
+/// Allocation strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// The paper's heterogeneity-aware allocator (Alg. 2).
+    Poplar,
+    /// Uniform micro-batches (DeepSpeed-like baseline).
+    Uniform,
+    /// FLOPs-proportional (Whale-like baseline).
+    Flops,
+}
+
+impl Strategy {
+    /// Parse from the config string.
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "poplar" => Some(Strategy::Poplar),
+            "uniform" | "deepspeed" => Some(Strategy::Uniform),
+            "flops" | "whale" => Some(Strategy::Flops),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Poplar => "poplar",
+            Strategy::Uniform => "uniform",
+            Strategy::Flops => "flops",
+        }
+    }
+}
+
+/// Training-run section.
+#[derive(Debug, Clone)]
+pub struct TrainingConfig {
+    /// ZeRO stage to request (may auto-escalate).
+    pub zero_stage: u8,
+    /// Global batch size in tokens (divided by `seq` into samples).
+    pub global_batch_tokens: u64,
+    /// Iterations to run/simulate.
+    pub iterations: usize,
+    /// Allocator to use.
+    pub strategy: Strategy,
+    /// Profiling measurement noise (std-dev, multiplicative).
+    pub noise_sigma: f64,
+    /// RNG seed for noise and data.
+    pub seed: u64,
+}
+
+/// Top-level job configuration.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Resolved model spec.
+    pub model: ModelSpec,
+    /// Resolved cluster spec.
+    pub cluster: ClusterSpec,
+    /// Run parameters.
+    pub training: TrainingConfig,
+}
+
+/// Errors from loading/validating a config.
+#[derive(Debug)]
+pub enum ConfigError {
+    /// I/O failure reading the file.
+    Io(std::io::Error),
+    /// TOML syntax error.
+    Parse(toml_mini::ParseError),
+    /// Semantic validation failure.
+    Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "config io: {e}"),
+            ConfigError::Parse(e) => write!(f, "config parse: {e}"),
+            ConfigError::Invalid(s) => write!(f, "config invalid: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn invalid(msg: impl Into<String>) -> ConfigError {
+    ConfigError::Invalid(msg.into())
+}
+
+fn parse_link(s: &str) -> Result<LinkKind, ConfigError> {
+    match s {
+        "nvlink" => Ok(LinkKind::Nvlink),
+        "nvlink-capped" => Ok(LinkKind::NvlinkCapped),
+        "pcie" => Ok(LinkKind::Pcie),
+        "ib" => Ok(LinkKind::Ib),
+        "socket" => Ok(LinkKind::Socket),
+        _ => Err(invalid(format!("unknown link kind {s:?}"))),
+    }
+}
+
+impl JobConfig {
+    /// Parse and validate a TOML string.
+    pub fn from_toml(s: &str) -> Result<Self, ConfigError> {
+        let d = Doc::parse(s).map_err(ConfigError::Parse)?;
+
+        // ---- model ----
+        let model = if let Some(p) = d.str("model.preset") {
+            model::preset(p).ok_or_else(|| invalid(format!("unknown model preset {p:?}")))?
+        } else if d.has_table("model") {
+            ModelSpec {
+                name: d.str("model.name").unwrap_or("custom").to_string(),
+                arch: d.str("model.arch").unwrap_or("llama").to_string(),
+                vocab: d.int("model.vocab").ok_or_else(|| invalid("model.vocab"))? as u64,
+                d_model: d.int("model.d_model").ok_or_else(|| invalid("model.d_model"))? as u64,
+                n_layers: d.int("model.n_layers").ok_or_else(|| invalid("model.n_layers"))?
+                    as u64,
+                n_heads: d.int("model.n_heads").ok_or_else(|| invalid("model.n_heads"))? as u64,
+                d_ff: d.int("model.d_ff").ok_or_else(|| invalid("model.d_ff"))? as u64,
+                seq: d.int("model.seq").ok_or_else(|| invalid("model.seq"))? as u64,
+            }
+        } else {
+            return Err(invalid("missing [model] section"));
+        };
+        if model.d_model % model.n_heads != 0 {
+            return Err(invalid("d_model must be divisible by n_heads"));
+        }
+
+        // ---- cluster ----
+        let cluster = if let Some(p) = d.str("cluster.preset") {
+            match p {
+                "cluster-A" => cluster::cluster_a(),
+                "cluster-B" => cluster::cluster_b(),
+                "cluster-C" => cluster::cluster_c(),
+                other => return Err(invalid(format!("unknown cluster preset {other:?}"))),
+            }
+        } else {
+            let n = d.array_len("cluster.groups");
+            if n == 0 {
+                return Err(invalid("cluster: need preset or [[cluster.groups]]"));
+            }
+            let mut groups = Vec::with_capacity(n);
+            for i in 0..n {
+                let gpu = d
+                    .str(&format!("cluster.groups.{i}.gpu"))
+                    .ok_or_else(|| invalid(format!("cluster.groups.{i}.gpu")))?;
+                let count = d
+                    .int(&format!("cluster.groups.{i}.count"))
+                    .ok_or_else(|| invalid(format!("cluster.groups.{i}.count")))?;
+                if count < 0 {
+                    return Err(invalid("group count must be >= 0"));
+                }
+                let link = match d.str(&format!("cluster.groups.{i}.intra_link")) {
+                    Some(s) => parse_link(s)?,
+                    None => LinkKind::Pcie,
+                };
+                groups.push(NodeGroup { gpu: gpu.to_string(), count: count as usize,
+                                        intra_link: link });
+            }
+            let inter = match d.str("cluster.inter_link") {
+                Some(s) => parse_link(s)?,
+                None => LinkKind::Ib,
+            };
+            ClusterSpec { name: "custom".into(), groups, inter_link: inter }
+        };
+        cluster.validate().map_err(ConfigError::Invalid)?;
+
+        // ---- training ----
+        let zero_stage = d.int("training.zero_stage").unwrap_or(0);
+        if !(0..=3).contains(&zero_stage) {
+            return Err(invalid(format!("zero_stage must be 0..=3, got {zero_stage}")));
+        }
+        let gbt = d
+            .int("training.global_batch_tokens")
+            .ok_or_else(|| invalid("training.global_batch_tokens required"))?;
+        if gbt <= 0 {
+            return Err(invalid("global_batch_tokens must be positive"));
+        }
+        let strategy = match d.str("training.strategy") {
+            Some(s) => Strategy::parse(s)
+                .ok_or_else(|| invalid(format!("unknown strategy {s:?}")))?,
+            None => Strategy::Poplar,
+        };
+        let noise_sigma = d.float("training.noise_sigma").unwrap_or(0.015);
+        if !(0.0..0.5).contains(&noise_sigma) {
+            return Err(invalid("noise_sigma must be in [0, 0.5)"));
+        }
+        let training = TrainingConfig {
+            zero_stage: zero_stage as u8,
+            global_batch_tokens: gbt as u64,
+            iterations: d.int("training.iterations").unwrap_or(50).max(1) as usize,
+            strategy,
+            noise_sigma,
+            seed: d.int("training.seed").unwrap_or(42) as u64,
+        };
+
+        let cfg = JobConfig { model, cluster, training };
+        if cfg.gbs_samples() == 0 {
+            return Err(invalid("global_batch_tokens smaller than one sequence"));
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let s = std::fs::read_to_string(path).map_err(ConfigError::Io)?;
+        Self::from_toml(&s)
+    }
+
+    /// Global batch size in samples for the resolved model.
+    pub fn gbs_samples(&self) -> usize {
+        (self.training.global_batch_tokens / self.model.seq) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+        [model]
+        preset = "llama-0.5b"
+
+        [cluster]
+        preset = "cluster-C"
+
+        [training]
+        zero_stage = 2
+        global_batch_tokens = 2097152
+    "#;
+
+    #[test]
+    fn parses_preset_config() {
+        let cfg = JobConfig::from_toml(GOOD).unwrap();
+        assert_eq!(cfg.model.name, "llama-0.5b");
+        assert_eq!(cfg.cluster.n_gpus(), 8);
+        assert_eq!(cfg.gbs_samples(), 2048);
+        assert_eq!(cfg.training.strategy, Strategy::Poplar);
+        assert_eq!(cfg.training.iterations, 50);
+    }
+
+    #[test]
+    fn parses_explicit_cluster_and_model() {
+        let cfg = JobConfig::from_toml(
+            r#"
+            [model]
+            name = "custom"
+            vocab = 1000
+            d_model = 128
+            n_layers = 2
+            n_heads = 2
+            d_ff = 512
+            seq = 128
+
+            [cluster]
+            inter_link = "socket"
+            [[cluster.groups]]
+            gpu = "T4"
+            count = 2
+            intra_link = "pcie"
+
+            [training]
+            global_batch_tokens = 131072
+            strategy = "whale"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model.d_model, 128);
+        assert_eq!(cfg.cluster.n_gpus(), 2);
+        assert_eq!(cfg.cluster.inter_link, LinkKind::Socket);
+        assert_eq!(cfg.gbs_samples(), 1024);
+        assert_eq!(cfg.training.strategy, Strategy::Flops);
+    }
+
+    #[test]
+    fn rejects_bad_stage() {
+        let bad = GOOD.replace("zero_stage = 2", "zero_stage = 4");
+        assert!(JobConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_presets() {
+        assert!(JobConfig::from_toml(&GOOD.replace("llama-0.5b", "gpt6")).is_err());
+        assert!(JobConfig::from_toml(&GOOD.replace("cluster-C", "cluster-Z")).is_err());
+    }
+
+    #[test]
+    fn rejects_tiny_gbs() {
+        let bad = GOOD.replace("2097152", "100");
+        assert!(JobConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(JobConfig::from_toml("[model]\npreset = \"tiny\"").is_err());
+        assert!(JobConfig::from_toml("").is_err());
+    }
+
+    #[test]
+    fn strategy_aliases() {
+        assert_eq!(Strategy::parse("deepspeed"), Some(Strategy::Uniform));
+        assert_eq!(Strategy::parse("whale"), Some(Strategy::Flops));
+        assert_eq!(Strategy::parse("x"), None);
+        assert_eq!(Strategy::Poplar.name(), "poplar");
+    }
+}

@@ -1,0 +1,150 @@
+//! Model architecture specification (mirrors `python/compile/model.py`).
+
+
+
+/// Transformer architecture hyper-parameters.
+///
+/// `param_count()` and `flops_per_token()` must stay in sync with
+/// `ModelConfig` in `python/compile/model.py` — the pytest/cargo suites
+/// both pin the paper-preset sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Preset name, e.g. `"llama-0.5b"`.
+    pub name: String,
+    /// `"llama"` (decoder, causal) or `"bert"` (encoder, bidirectional).
+    pub arch: String,
+    /// Vocabulary size.
+    pub vocab: u64,
+    /// Hidden size h.
+    pub d_model: u64,
+    /// Number of transformer layers.
+    pub n_layers: u64,
+    /// Attention heads.
+    pub n_heads: u64,
+    /// FFN intermediate size.
+    pub d_ff: u64,
+    /// Training sequence length.
+    pub seq: u64,
+}
+
+impl ModelSpec {
+    /// Total parameter count (embed + per-layer attn/ffn/norms + head).
+    pub fn param_count(&self) -> u64 {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let per_layer = 2 * d        // two norms
+            + 4 * d * d              // wq wk wv wo
+            + 3 * d * f; // w1 w3 w2
+        v * d + self.n_layers * per_layer + d + d * v
+    }
+
+    /// Approximate fwd+bwd FLOPs per token (6N rule + attention term).
+    /// Mirrors `ModelConfig.flops_per_token` in python.
+    pub fn flops_per_token(&self) -> f64 {
+        let n = self.param_count() as f64;
+        let attn = (12 * self.n_layers * self.d_model * self.seq) as f64;
+        6.0 * n + attn
+    }
+
+    /// FLOPs for one sample (sequence) — fwd+bwd.
+    pub fn flops_per_sample(&self) -> f64 {
+        self.flops_per_token() * self.seq as f64
+    }
+
+    /// Activation memory per sample in bytes, fp16 with no recompute
+    /// (Megatron-style estimate: `s·h·L·(34 + 5·a·s/h)` bytes).
+    pub fn activation_bytes_per_sample(&self) -> u64 {
+        let (s, h, l, a) = (
+            self.seq as f64,
+            self.d_model as f64,
+            self.n_layers as f64,
+            self.n_heads as f64,
+        );
+        (s * h * l * (34.0 + 5.0 * a * s / h)) as u64
+    }
+}
+
+/// Paper model presets (analytic path) + the e2e validation models.
+pub fn preset(name: &str) -> Option<ModelSpec> {
+    let m = match name {
+        "tiny" => ModelSpec {
+            name: "tiny".into(), arch: "llama".into(),
+            vocab: 2048, d_model: 256, n_layers: 4, n_heads: 4, d_ff: 1024, seq: 256,
+        },
+        "e2e-28m" => ModelSpec {
+            name: "e2e-28m".into(), arch: "llama".into(),
+            vocab: 8192, d_model: 512, n_layers: 6, n_heads: 8, d_ff: 1536, seq: 256,
+        },
+        "e2e-110m" => ModelSpec {
+            name: "e2e-110m".into(), arch: "llama".into(),
+            vocab: 16384, d_model: 768, n_layers: 12, n_heads: 12, d_ff: 2304, seq: 256,
+        },
+        "llama-0.5b" => ModelSpec {
+            name: "llama-0.5b".into(), arch: "llama".into(),
+            vocab: 32000, d_model: 1024, n_layers: 24, n_heads: 16, d_ff: 4096, seq: 1024,
+        },
+        "llama-1.1b" => ModelSpec {
+            name: "llama-1.1b".into(), arch: "llama".into(),
+            vocab: 32000, d_model: 2048, n_layers: 22, n_heads: 32, d_ff: 5632, seq: 1024,
+        },
+        "bert-1.1b" => ModelSpec {
+            name: "bert-1.1b".into(), arch: "bert".into(),
+            vocab: 30522, d_model: 1792, n_layers: 24, n_heads: 28, d_ff: 7168, seq: 512,
+        },
+        // appendix Fig. 6 extras
+        "gpt2-345m" => ModelSpec {
+            name: "gpt2-345m".into(), arch: "llama".into(),
+            vocab: 50257, d_model: 1024, n_layers: 24, n_heads: 16, d_ff: 4096, seq: 1024,
+        },
+        "llama-7b" => ModelSpec {
+            name: "llama-7b".into(), arch: "llama".into(),
+            vocab: 32000, d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008, seq: 2048,
+        },
+        _ => return None,
+    };
+    Some(m)
+}
+
+/// All preset names usable with [`preset`].
+pub const PRESET_NAMES: &[&str] = &[
+    "tiny", "e2e-28m", "e2e-110m", "llama-0.5b", "llama-1.1b", "bert-1.1b",
+    "gpt2-345m", "llama-7b",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for n in PRESET_NAMES {
+            let m = preset(n).expect(n);
+            assert!(m.param_count() > 0);
+            assert!(m.flops_per_token() > 6.0 * m.param_count() as f64 - 1.0);
+        }
+    }
+
+    #[test]
+    fn paper_preset_sizes() {
+        let n = |s: &str| preset(s).unwrap().param_count() as f64;
+        assert!(n("llama-0.5b") > 0.3e9 && n("llama-0.5b") < 0.7e9);
+        assert!(n("llama-1.1b") > 0.9e9 && n("llama-1.1b") < 1.4e9);
+        assert!(n("bert-1.1b") > 0.9e9 && n("bert-1.1b") < 1.4e9);
+        assert!(n("llama-7b") > 6.0e9 && n("llama-7b") < 8.0e9);
+    }
+
+    #[test]
+    fn activation_memory_scales_with_seq_squared_term() {
+        let base = preset("llama-0.5b").unwrap();
+        let mut long = base.clone();
+        long.seq *= 2;
+        // attention term grows superlinearly
+        assert!(
+            long.activation_bytes_per_sample() > 2 * base.activation_bytes_per_sample()
+        );
+    }
+
+    #[test]
+    fn unknown_preset_none() {
+        assert!(preset("gpt5").is_none());
+    }
+}

@@ -1,0 +1,282 @@
+//! Minimal TOML-subset parser (offline image has no `toml` crate).
+//!
+//! Supports exactly what Poplar job files need:
+//!
+//! * `[section]` and `[section.sub]` tables;
+//! * `[[section.array]]` arrays of tables;
+//! * `key = value` with strings (`"…"`), integers, floats, booleans;
+//! * `#` comments and blank lines.
+//!
+//! Values are exposed through a flat path map: `training.zero_stage`,
+//! `cluster.groups.0.gpu`, …
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (floats with zero fraction coerce).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As float (ints coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool, if it is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flat `path -> value` map plus array-of-table counts.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+    array_len: BTreeMap<String, usize>,
+}
+
+/// Parse error with a line number.
+#[derive(Debug, PartialEq)]
+pub struct ParseError {
+    /// 1-based line.
+    pub line: usize,
+    /// Description.
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Doc {
+    /// Parse a TOML-subset string.
+    pub fn parse(input: &str) -> Result<Doc, ParseError> {
+        let mut doc = Doc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in input.lines().enumerate() {
+            let line = ln + 1;
+            let s = strip_comment(raw).trim().to_string();
+            if s.is_empty() {
+                continue;
+            }
+            if let Some(name) = s.strip_prefix("[[").and_then(|x| x.strip_suffix("]]")) {
+                let name = name.trim();
+                check_key(name, line)?;
+                let idx = *doc.array_len.entry(name.to_string()).or_insert(0);
+                doc.array_len.insert(name.to_string(), idx + 1);
+                prefix = format!("{name}.{idx}");
+            } else if let Some(name) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+                let name = name.trim();
+                check_key(name, line)?;
+                prefix = name.to_string();
+            } else if let Some(eq) = s.find('=') {
+                let key = s[..eq].trim();
+                check_key(key, line)?;
+                let val = parse_value(s[eq + 1..].trim(), line)?;
+                let path = if prefix.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{prefix}.{key}")
+                };
+                if doc.map.insert(path.clone(), val).is_some() {
+                    return Err(ParseError { line, msg: format!("duplicate key {path:?}") });
+                }
+            } else {
+                return Err(ParseError { line, msg: format!("unparseable line {s:?}") });
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up a value by dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    /// String at path.
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    /// Integer at path.
+    pub fn int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    /// Float at path.
+    pub fn float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    /// Bool at path.
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// Number of `[[path]]` tables seen.
+    pub fn array_len(&self, path: &str) -> usize {
+        self.array_len.get(path).copied().unwrap_or(0)
+    }
+
+    /// True when a key exists under the given table prefix.
+    pub fn has_table(&self, prefix: &str) -> bool {
+        let p = format!("{prefix}.");
+        self.map.keys().any(|k| k.starts_with(&p))
+    }
+}
+
+fn strip_comment(s: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn check_key(k: &str, line: usize) -> Result<(), ParseError> {
+    if k.is_empty()
+        || !k.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+    {
+        return Err(ParseError { line, msg: format!("bad key {k:?}") });
+    }
+    Ok(())
+}
+
+fn parse_value(v: &str, line: usize) -> Result<Value, ParseError> {
+    if let Some(s) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError { line, msg: format!("unparseable value {v:?}") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # a job file
+        title = "demo"
+
+        [model]
+        preset = "llama-0.5b"   # inline comment
+
+        [training]
+        zero_stage = 2
+        global_batch_tokens = 2_097_152
+        noise_sigma = 0.015
+        verbose = true
+
+        [[cluster.groups]]
+        gpu = "A800-80G"
+        count = 4
+
+        [[cluster.groups]]
+        gpu = "V100S-32G"
+        count = 4
+    "#;
+
+    #[test]
+    fn parses_sample() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str("title"), Some("demo"));
+        assert_eq!(d.str("model.preset"), Some("llama-0.5b"));
+        assert_eq!(d.int("training.zero_stage"), Some(2));
+        assert_eq!(d.int("training.global_batch_tokens"), Some(2_097_152));
+        assert_eq!(d.float("training.noise_sigma"), Some(0.015));
+        assert_eq!(d.bool("training.verbose"), Some(true));
+        assert_eq!(d.array_len("cluster.groups"), 2);
+        assert_eq!(d.str("cluster.groups.0.gpu"), Some("A800-80G"));
+        assert_eq!(d.int("cluster.groups.1.count"), Some(4));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let d = Doc::parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(d.str("x"), Some("a#b"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let e = Doc::parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Doc::parse("not a kv").is_err());
+        assert!(Doc::parse("x = @@@").is_err());
+        assert!(Doc::parse("[bad key]").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_are_none() {
+        let d = Doc::parse("a = 1").unwrap();
+        assert_eq!(d.int("b"), None);
+        assert_eq!(d.str("a"), None); // wrong type
+        assert_eq!(d.array_len("xs"), 0);
+        assert!(!d.has_table("t"));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let d = Doc::parse("i = 3\nf = 3.5\nz = 4.0").unwrap();
+        assert_eq!(d.float("i"), Some(3.0));
+        assert_eq!(d.int("f"), None);
+        assert_eq!(d.int("z"), Some(4));
+    }
+}

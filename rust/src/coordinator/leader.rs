@@ -1,0 +1,429 @@
+//! Leader: the full Poplar pipeline over a set of worker threads.
+//!
+//! Mirrors the paper's Fig. 2 workflow:
+//!
+//! 1. **Online profiling** — broadcast `Profile{stage}` to all workers
+//!    (Alg. 1 runs in parallel, one OS thread per GPU); if any worker
+//!    reports that batch 1 OOMs, escalate the ZeRO stage and retry.
+//! 2. **Offline analyzing** — fit [`PerfCurve`]s from the profiled
+//!    points, run the selected allocator (Alg. 2 or a baseline).
+//! 3. **Training** — per iteration, dispatch each rank's schedule and
+//!    reconstruct the BSP timeline from the returned per-micro-step
+//!    times (barrier per micro-step for ZeRO-2/3, one sync for 0/1).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::messages::{WorkerCmd, WorkerReply};
+use super::worker::worker_loop;
+use crate::allocator::{self, baselines, Plan};
+use crate::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::Strategy;
+use crate::curves::PerfCurve;
+use crate::metrics::flops;
+use crate::netsim::NetSim;
+use crate::profiler::{ClusterProfile, Device, ProfileResult, SimDevice};
+
+/// Live (worker-measured) timing of one iteration.
+#[derive(Debug, Clone)]
+pub struct LiveIteration {
+    /// Wall time reconstructed from the BSP barriers.
+    pub wall_s: f64,
+    /// Per-rank busy seconds.
+    pub busy_s: Vec<f64>,
+    /// Per-rank idle seconds.
+    pub idle_s: Vec<f64>,
+    /// Collective seconds.
+    pub comm_s: f64,
+    /// Cluster TFLOP/s for this iteration.
+    pub tflops: f64,
+}
+
+/// Everything `run_job` produces.
+#[derive(Debug)]
+pub struct JobReport {
+    /// Stage actually used (after auto-escalation).
+    pub stage: u8,
+    /// Per-rank profiling results.
+    pub profile: Vec<ProfileResult>,
+    /// The allocation decision.
+    pub plan: Plan,
+    /// Per-iteration live timings.
+    pub iterations: Vec<LiveIteration>,
+    /// Mean TFLOP/s across iterations.
+    pub tflops_mean: f64,
+}
+
+struct WorkerHandle {
+    cmd: Sender<WorkerCmd>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// The coordinator leader.
+pub struct Leader {
+    workers: Vec<WorkerHandle>,
+    replies: Receiver<WorkerReply>,
+    model: ModelSpec,
+    net: NetSim,
+    n: usize,
+}
+
+impl Leader {
+    /// Spawn one simulated worker per GPU of `cluster`.
+    pub fn new_simulated(
+        cluster: &ClusterSpec,
+        model: &ModelSpec,
+        noise_sigma: f64,
+        seed: u64,
+    ) -> Self {
+        let net = NetSim::from_cluster(cluster);
+        let instances = cluster.instances();
+        let devices: Vec<Box<dyn Device>> = instances
+            .iter()
+            .map(|inst| {
+                Box::new(SimDevice::new(
+                    inst.spec.clone(),
+                    model.clone(),
+                    inst.rank,
+                    instances.len(),
+                    net.clone(),
+                    noise_sigma,
+                    seed,
+                )) as Box<dyn Device>
+            })
+            .collect();
+        Self::with_devices(devices, model.clone(), net)
+    }
+
+    /// Spawn workers over caller-provided devices (e.g. real PJRT-backed
+    /// devices from `train`).
+    pub fn with_devices(devices: Vec<Box<dyn Device>>, model: ModelSpec, net: NetSim) -> Self {
+        let n = devices.len();
+        let (rep_tx, rep_rx) = mpsc::channel();
+        let workers = devices
+            .into_iter()
+            .map(|dev| {
+                let (cmd_tx, cmd_rx) = mpsc::channel();
+                let tx = rep_tx.clone();
+                let thread = std::thread::spawn(move || worker_loop(dev, cmd_rx, tx));
+                WorkerHandle { cmd: cmd_tx, thread: Some(thread) }
+            })
+            .collect();
+        Leader { workers, replies: rep_rx, model, net, n }
+    }
+
+    /// Number of ranks.
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// The collective cost model in use.
+    pub fn net(&self) -> &NetSim {
+        &self.net
+    }
+
+    /// Phase 1: parallel Alg. 1 with automatic stage escalation.
+    pub fn profile(&mut self, requested_stage: u8) -> Result<ClusterProfile> {
+        assert!(requested_stage < 4);
+        'stage: for stage in requested_stage..4 {
+            for w in &self.workers {
+                w.cmd
+                    .send(WorkerCmd::Profile { stage })
+                    .map_err(|_| anyhow!("worker died"))?;
+            }
+            let mut results: Vec<Option<ProfileResult>> = (0..self.n).map(|_| None).collect();
+            let mut escalate = false;
+            for _ in 0..self.n {
+                match self.replies.recv().map_err(|_| anyhow!("reply channel closed"))? {
+                    WorkerReply::Profiled { rank, result } => {
+                        match result {
+                            Some(r) => results[rank] = Some(*r),
+                            None => escalate = true,
+                        }
+                    }
+                    other => bail!("unexpected reply during profile: {other:?}"),
+                }
+            }
+            if escalate {
+                if stage == 3 {
+                    bail!("model does not fit a single sample even at ZeRO-3");
+                }
+                continue 'stage;
+            }
+            let ranks: Vec<ProfileResult> =
+                results.into_iter().map(Option::unwrap).collect();
+            return Ok(ClusterProfile { stage, ranks });
+        }
+        unreachable!()
+    }
+
+    /// Phase 2: fit curves + run the selected allocator.
+    pub fn plan_from_profile(
+        &self,
+        profile: &ClusterProfile,
+        strategy: Strategy,
+        gbs: usize,
+    ) -> Result<Plan> {
+        let curves = fit_curves(profile)?;
+        let psi = self.model.param_count();
+        let plan = match strategy {
+            Strategy::Poplar => {
+                allocator::plan(&curves, profile.stage, gbs, &self.net, psi)
+                    .map_err(|e| anyhow!("poplar plan: {e}"))?
+            }
+            Strategy::Uniform => {
+                baselines::plan_uniform(&curves, profile.stage, gbs, &self.net, psi)
+                    .map_err(|e| anyhow!("uniform plan: {e}"))?
+            }
+            Strategy::Flops => {
+                let flops: Vec<f64> = profile.ranks.iter().map(|r| r.flops_rating).collect();
+                baselines::plan_flops_proportional(
+                    &curves, &flops, profile.stage, gbs, &self.net, psi,
+                )
+                .map_err(|e| anyhow!("flops plan: {e}"))?
+            }
+        };
+        plan.validate().map_err(|e| anyhow!("invalid plan: {e}"))?;
+        Ok(plan)
+    }
+
+    /// Phase 3: run one iteration and reconstruct the BSP timeline.
+    pub fn run_iteration(&mut self, plan: &Plan) -> Result<LiveIteration> {
+        for (w, r) in self.workers.iter().zip(&plan.ranks) {
+            w.cmd
+                .send(WorkerCmd::RunSchedule {
+                    stage: plan.stage,
+                    micro_batch: r.micro_batch,
+                    grad_accum_steps: r.grad_accum_steps,
+                    last_batch: r.last_batch,
+                })
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut per_rank: Vec<Vec<f64>> = vec![Vec::new(); self.n];
+        let mut samples = 0usize;
+        for _ in 0..self.n {
+            match self.replies.recv().map_err(|_| anyhow!("reply channel closed"))? {
+                WorkerReply::ScheduleDone { rank, step_times, samples: s, oom_at } => {
+                    if let Some(b) = oom_at {
+                        bail!("rank {rank} OOMed at batch {b} — planner bug");
+                    }
+                    per_rank[rank] = step_times;
+                    samples += s;
+                }
+                other => bail!("unexpected reply during iteration: {other:?}"),
+            }
+        }
+
+        let psi = self.model.param_count();
+        let gas = per_rank.iter().map(Vec::len).max().unwrap_or(0);
+        let mut busy = vec![0.0f64; self.n];
+        let mut idle = vec![0.0f64; self.n];
+        let mut wall = 0.0f64;
+        let mut comm = 0.0f64;
+        match plan.stage {
+            0 | 1 => {
+                // one sync point at the end
+                let totals: Vec<f64> =
+                    per_rank.iter().map(|ts| ts.iter().sum::<f64>()).collect();
+                let t_max = totals.iter().cloned().fold(0.0, f64::max);
+                for i in 0..self.n {
+                    busy[i] = totals[i];
+                    idle[i] = t_max - totals[i];
+                }
+                let c = self.net.iteration_comm_time(plan.stage, psi);
+                comm += c;
+                wall = t_max + c;
+            }
+            2 | 3 => {
+                let c_step = self.net.per_microstep_comm_time(plan.stage, psi);
+                for step in 0..gas {
+                    let times: Vec<f64> = per_rank
+                        .iter()
+                        .map(|ts| ts.get(step).copied().unwrap_or(0.0))
+                        .collect();
+                    let t_max = times.iter().cloned().fold(0.0, f64::max);
+                    for i in 0..self.n {
+                        busy[i] += times[i];
+                        idle[i] += t_max - times[i];
+                    }
+                    wall += t_max + c_step;
+                    comm += c_step;
+                }
+                let c = self.net.iteration_comm_time(plan.stage, psi);
+                comm += c;
+                wall += c;
+            }
+            s => bail!("invalid stage {s}"),
+        }
+
+        Ok(LiveIteration {
+            wall_s: wall,
+            busy_s: busy,
+            idle_s: idle,
+            comm_s: comm,
+            tflops: flops::tflops(&self.model, samples, wall),
+        })
+    }
+
+    /// The full pipeline: profile → plan → `iterations` timed runs.
+    pub fn run_job(
+        &mut self,
+        requested_stage: u8,
+        strategy: Strategy,
+        gbs: usize,
+        iterations: usize,
+    ) -> Result<JobReport> {
+        let profile = self.profile(requested_stage)?;
+        let plan = self.plan_from_profile(&profile, strategy, gbs)?;
+        let mut iters = Vec::with_capacity(iterations);
+        for _ in 0..iterations {
+            iters.push(self.run_iteration(&plan)?);
+        }
+        let tflops_mean =
+            iters.iter().map(|i| i.tflops).sum::<f64>() / iters.len().max(1) as f64;
+        Ok(JobReport { stage: profile.stage, profile: profile.ranks, plan,
+                       iterations: iters, tflops_mean })
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(WorkerCmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for Leader {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(WorkerCmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+/// Fit per-rank performance curves from a cluster profile.
+///
+/// Measurements are pooled across ranks with the same GPU model *and*
+/// the same discovered `mbs`: identical silicon gives identical true
+/// curves, so averaging the probes divides measurement noise by √k —
+/// which matters on homogeneous-compute clusters (cluster A) where a
+/// 1% noise overfit directly costs throughput.
+pub fn fit_curves(profile: &ClusterProfile) -> Result<Vec<PerfCurve>> {
+    use std::collections::HashMap;
+    // (name, mbs) -> batch -> (sum_time, count)
+    let mut pools: HashMap<(String, usize), HashMap<usize, (f64, usize)>> = HashMap::new();
+    for r in &profile.ranks {
+        let pool = pools.entry((r.name.clone(), r.mbs)).or_default();
+        for p in &r.points {
+            let e = pool.entry(p.batch).or_insert((0.0, 0));
+            e.0 += p.step_time_s;
+            e.1 += 1;
+        }
+    }
+    profile
+        .ranks
+        .iter()
+        .map(|r| {
+            let pool = &pools[&(r.name.clone(), r.mbs)];
+            let points: Vec<crate::curves::ProfiledPoint> = r
+                .points
+                .iter()
+                .map(|p| {
+                    let (sum, n) = pool[&p.batch];
+                    crate::curves::ProfiledPoint {
+                        batch: p.batch,
+                        step_time_s: sum / n as f64,
+                    }
+                })
+                .collect();
+            PerfCurve::fit(points, r.mbs)
+                .map_err(|e| anyhow!("rank {} curve: {e}", r.rank))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::config::model::preset;
+
+    fn leader_c(noise: f64) -> Leader {
+        Leader::new_simulated(&cluster::cluster_c(), &preset("llama-0.5b").unwrap(), noise, 11)
+    }
+
+    #[test]
+    fn full_job_poplar_cluster_c() {
+        let mut l = leader_c(0.01);
+        let rep = l.run_job(1, Strategy::Poplar, 256, 3).unwrap();
+        assert_eq!(rep.stage, 1);
+        assert_eq!(rep.profile.len(), 8);
+        assert_eq!(rep.plan.total_samples(), 256);
+        assert_eq!(rep.iterations.len(), 3);
+        assert!(rep.tflops_mean > 0.0);
+        l.shutdown();
+    }
+
+    #[test]
+    fn poplar_beats_uniform_live() {
+        let mut l = leader_c(0.0);
+        let pop = l.run_job(2, Strategy::Poplar, 256, 2).unwrap();
+        let uni = l.run_job(2, Strategy::Uniform, 256, 2).unwrap();
+        assert!(
+            pop.tflops_mean >= uni.tflops_mean * 0.999,
+            "poplar {:.1} vs uniform {:.1}",
+            pop.tflops_mean,
+            uni.tflops_mean
+        );
+        l.shutdown();
+    }
+
+    #[test]
+    fn stage_escalation_through_leader() {
+        // llama-1.1b at ZeRO-0 does not fit V100-16G: must escalate.
+        let mut l = Leader::new_simulated(
+            &cluster::cluster_b(),
+            &preset("llama-1.1b").unwrap(),
+            0.0,
+            3,
+        );
+        let prof = l.profile(0).unwrap();
+        assert!(prof.stage > 0);
+        l.shutdown();
+    }
+
+    #[test]
+    fn live_iteration_idle_matches_barrier_structure() {
+        let mut l = leader_c(0.0);
+        let prof = l.profile(1).unwrap();
+        let plan = l.plan_from_profile(&prof, Strategy::Uniform, 128).unwrap();
+        let it = l.run_iteration(&plan).unwrap();
+        // uniform on heterogeneous GPUs: A800 ranks idle, V100S ranks not
+        let min_idle = it.idle_s.iter().cloned().fold(f64::MAX, f64::min);
+        let max_idle = it.idle_s.iter().cloned().fold(0.0, f64::max);
+        assert!(min_idle < 1e-9);
+        assert!(max_idle > 0.0);
+        l.shutdown();
+    }
+
+    #[test]
+    fn flops_strategy_runs() {
+        let mut l = leader_c(0.0);
+        let rep = l.run_job(3, Strategy::Flops, 128, 1).unwrap();
+        assert_eq!(rep.plan.strategy, "flops-proportional");
+        l.shutdown();
+    }
+}

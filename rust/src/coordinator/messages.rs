@@ -1,0 +1,57 @@
+//! Leader↔worker message protocol.
+//!
+//! One mpsc command channel per worker, one shared reply channel back to
+//! the leader. Workers never talk to each other: collectives are costed
+//! by `netsim` (sim path) or performed by the leader's weighted gradient
+//! average (real path in `train`).
+
+use crate::profiler::ProfileResult;
+
+/// Commands the leader sends to a worker.
+#[derive(Debug)]
+pub enum WorkerCmd {
+    /// Run Algorithm 1 at the given ZeRO stage.
+    Profile {
+        /// ZeRO stage to profile under.
+        stage: u8,
+    },
+    /// Execute one iteration's schedule: `(grad_accum_steps - 1)` full
+    /// micro-steps of `micro_batch` plus one of `last_batch`, at `stage`.
+    RunSchedule {
+        /// ZeRO stage (decides which collectives the device times).
+        stage: u8,
+        /// Steady-state micro-batch size.
+        micro_batch: usize,
+        /// Micro-step count.
+        grad_accum_steps: usize,
+        /// Final micro-step batch size.
+        last_batch: usize,
+    },
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Replies a worker sends to the leader.
+#[derive(Debug)]
+pub enum WorkerReply {
+    /// Algorithm 1 finished.
+    Profiled {
+        /// Worker rank.
+        rank: usize,
+        /// `Some` on success, `None` when even batch 1 OOMs (leader
+        /// escalates the ZeRO stage).
+        result: Option<Box<ProfileResult>>,
+    },
+    /// Schedule finished.
+    ScheduleDone {
+        /// Worker rank.
+        rank: usize,
+        /// Per-micro-step compute time (collectives excluded), so the
+        /// leader can reconstruct the BSP barriers of ZeRO-2/3.
+        step_times: Vec<f64>,
+        /// Samples processed.
+        samples: usize,
+        /// `Some(batch)` if a step OOMed (plan bug — should not happen).
+        oom_at: Option<usize>,
+    },
+}

@@ -1,0 +1,15 @@
+//! L3 coordination: the paper's system contribution as a leader/worker
+//! runtime.
+//!
+//! * [`messages`] — the command/reply protocol;
+//! * [`worker`] — one thread per (simulated or real) GPU;
+//! * [`leader`] — Fig. 2's pipeline: online profiling → offline
+//!   analyzing → training, with automatic ZeRO-stage escalation.
+
+pub mod leader;
+pub mod messages;
+pub mod worker;
+
+pub use leader::{fit_curves, JobReport, Leader, LiveIteration};
+pub use messages::{WorkerCmd, WorkerReply};
+pub use worker::worker_loop;

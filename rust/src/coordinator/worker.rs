@@ -1,0 +1,140 @@
+//! Worker: owns one [`Device`] and serves leader commands on a thread.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use super::messages::{WorkerCmd, WorkerReply};
+use crate::profiler::{self, Device, DeviceOutcome};
+
+/// Run the worker loop until `Shutdown`. Designed to be spawned with
+/// `std::thread::spawn` (the offline image has no tokio; OS threads are
+/// the right tool for a handful of CPU-bound workers anyway).
+pub fn worker_loop(
+    mut device: Box<dyn Device>,
+    cmds: Receiver<WorkerCmd>,
+    replies: Sender<WorkerReply>,
+) {
+    let rank = device.rank();
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            WorkerCmd::Profile { stage } => {
+                let result = match profiler::profile_device(device.as_mut(), stage) {
+                    DeviceOutcome::Ok(r) => Some(Box::new(r)),
+                    DeviceOutcome::NeedsHigherStage => None,
+                };
+                if replies.send(WorkerReply::Profiled { rank, result }).is_err() {
+                    return;
+                }
+            }
+            WorkerCmd::RunSchedule { stage, micro_batch, grad_accum_steps, last_batch } => {
+                device.set_stage(stage);
+                device.reset();
+                let mut step_times = Vec::with_capacity(grad_accum_steps);
+                let mut samples = 0usize;
+                let mut oom_at = None;
+                for step in 0..grad_accum_steps {
+                    let b = if step + 1 == grad_accum_steps { last_batch } else { micro_batch };
+                    if b == 0 {
+                        step_times.push(0.0);
+                        continue;
+                    }
+                    match device.step(b) {
+                        Ok(t) => {
+                            step_times.push(t.time_consumed(stage));
+                            samples += b;
+                        }
+                        Err(_) => {
+                            oom_at = Some(b);
+                            break;
+                        }
+                    }
+                }
+                if replies
+                    .send(WorkerReply::ScheduleDone { rank, step_times, samples, oom_at })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            WorkerCmd::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{catalog, LinkKind};
+    use crate::config::model::preset;
+    use crate::netsim::NetSim;
+    use crate::profiler::SimDevice;
+    use std::sync::mpsc;
+
+    fn spawn_worker(gpu: &str) -> (Sender<WorkerCmd>, Receiver<WorkerReply>) {
+        let dev: Box<dyn Device> = Box::new(SimDevice::new(
+            catalog::spec_or_panic(gpu),
+            preset("llama-0.5b").unwrap(),
+            0,
+            4,
+            NetSim::from_link(4, LinkKind::Ib),
+            0.0,
+            7,
+        ));
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (rep_tx, rep_rx) = mpsc::channel();
+        std::thread::spawn(move || worker_loop(dev, cmd_rx, rep_tx));
+        (cmd_tx, rep_rx)
+    }
+
+    #[test]
+    fn profile_roundtrip() {
+        let (tx, rx) = spawn_worker("A100-80G");
+        tx.send(WorkerCmd::Profile { stage: 1 }).unwrap();
+        match rx.recv().unwrap() {
+            WorkerReply::Profiled { rank: 0, result: Some(r) } => {
+                assert!(r.mbs > 0);
+                assert!(r.points.len() >= 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        tx.send(WorkerCmd::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn schedule_roundtrip() {
+        let (tx, rx) = spawn_worker("V100S-32G");
+        tx.send(WorkerCmd::RunSchedule {
+            stage: 1,
+            micro_batch: 2,
+            grad_accum_steps: 3,
+            last_batch: 1,
+        })
+        .unwrap();
+        match rx.recv().unwrap() {
+            WorkerReply::ScheduleDone { rank: 0, step_times, samples, oom_at } => {
+                assert_eq!(step_times.len(), 3);
+                assert!(step_times.iter().all(|&t| t > 0.0));
+                assert_eq!(samples, 5);
+                assert_eq!(oom_at, None);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        tx.send(WorkerCmd::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn oom_schedule_reported() {
+        let (tx, rx) = spawn_worker("T4");
+        tx.send(WorkerCmd::RunSchedule {
+            stage: 0,
+            micro_batch: 100_000,
+            grad_accum_steps: 1,
+            last_batch: 100_000,
+        })
+        .unwrap();
+        match rx.recv().unwrap() {
+            WorkerReply::ScheduleDone { oom_at, .. } => assert_eq!(oom_at, Some(100_000)),
+            other => panic!("unexpected {other:?}"),
+        }
+        tx.send(WorkerCmd::Shutdown).unwrap();
+    }
+}

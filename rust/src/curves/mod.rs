@@ -1,0 +1,272 @@
+//! Per-GPU performance curves (paper §"Offline Analyzing").
+//!
+//! From the profiled `(batch, step_time)` points Poplar builds a
+//! continuous speed-vs-batch curve with cubic-spline interpolation
+//! (Fig. 7), then derives everything Alg. 2 needs:
+//!
+//! * `speed_at(b)` / `time_at(b)` — interpolated throughput / step time;
+//! * `peak_speed()` and the *peak range* — the batch interval where the
+//!   GPU is within `PEAK_THETA` of its best throughput (Poplar tries to
+//!   keep every rank inside its range);
+//! * `find(t)` — the paper's `find(g_i, t)`: the largest batch the GPU
+//!   finishes within `t` seconds (ZeRO-2/3 t-sweep inner loop).
+
+use crate::spline::CubicSpline;
+
+/// Batch sizes within `PEAK_THETA * peak_speed` count as "at peak".
+pub const PEAK_THETA: f64 = 0.95;
+
+/// One profiled measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfiledPoint {
+    /// Micro-batch size.
+    pub batch: usize,
+    /// Measured (stage-aware) compute time for one step, seconds.
+    pub step_time_s: f64,
+}
+
+/// Errors from curve fitting.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CurveError {
+    /// Need at least two distinct batch sizes.
+    TooFewPoints,
+    /// A non-positive time or batch was supplied.
+    InvalidPoint,
+}
+
+impl std::fmt::Display for CurveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CurveError::TooFewPoints => write!(f, "need >= 2 profiled points"),
+            CurveError::InvalidPoint => write!(f, "batch and time must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for CurveError {}
+
+/// Interpolated speed-vs-batch performance curve for one GPU.
+#[derive(Debug, Clone)]
+pub struct PerfCurve {
+    points: Vec<ProfiledPoint>,
+    /// Maximum batch size that does not OOM (from Alg. 1).
+    mbs: usize,
+    speed: CubicSpline,
+    peak_speed: f64,
+    peak_lo: usize,
+}
+
+impl PerfCurve {
+    /// Fit a curve from profiled points (sorted/deduped internally) and
+    /// the discovered `mbs`.
+    pub fn fit(mut points: Vec<ProfiledPoint>, mbs: usize) -> Result<Self, CurveError> {
+        points.retain(|p| p.batch > 0 && p.batch <= mbs.max(1));
+        points.sort_by_key(|p| p.batch);
+        points.dedup_by_key(|p| p.batch);
+        if points.len() < 2 {
+            return Err(CurveError::TooFewPoints);
+        }
+        if points.iter().any(|p| p.step_time_s <= 0.0 || !p.step_time_s.is_finite()) {
+            return Err(CurveError::InvalidPoint);
+        }
+        let xs: Vec<f64> = points.iter().map(|p| p.batch as f64).collect();
+        let ys: Vec<f64> = points.iter().map(|p| p.batch as f64 / p.step_time_s).collect();
+        let speed = CubicSpline::fit(&xs, &ys).map_err(|_| CurveError::InvalidPoint)?;
+
+        let mbs = mbs.max(points.last().unwrap().batch);
+        let mut peak_speed: f64 = 0.0;
+        for b in 1..=mbs {
+            peak_speed = peak_speed.max(Self::eval_speed(&speed, b as f64));
+        }
+        let mut peak_lo = mbs;
+        for b in 1..=mbs {
+            if Self::eval_speed(&speed, b as f64) >= PEAK_THETA * peak_speed {
+                peak_lo = b;
+                break;
+            }
+        }
+        Ok(PerfCurve { points, mbs, speed, peak_speed, peak_lo })
+    }
+
+    fn eval_speed(spline: &CubicSpline, b: f64) -> f64 {
+        // Clamp to the profiled domain: outside it the boundary cubic is
+        // not trustworthy for a saturating curve.
+        let (lo, hi) = spline.domain();
+        spline.eval(b.clamp(lo, hi)).max(1e-9)
+    }
+
+    /// Interpolated throughput (samples/sec) at batch `b`.
+    pub fn speed_at(&self, b: f64) -> f64 {
+        Self::eval_speed(&self.speed, b)
+    }
+
+    /// Interpolated step time (seconds) at batch `b` (`b / speed(b)`,
+    /// with the batch-proportional extension below the first knot).
+    pub fn time_at(&self, b: f64) -> f64 {
+        if b <= 0.0 {
+            return 0.0;
+        }
+        b / self.speed_at(b)
+    }
+
+    /// Maximum batch size without OOM (Alg. 1 result).
+    pub fn mbs(&self) -> usize {
+        self.mbs
+    }
+
+    /// Best throughput over `1..=mbs` (the paper's `max(p_i)`).
+    pub fn peak_speed(&self) -> f64 {
+        self.peak_speed
+    }
+
+    /// `[lo, mbs]`: batch sizes within `PEAK_THETA` of peak throughput.
+    pub fn peak_range(&self) -> (usize, usize) {
+        (self.peak_lo, self.mbs)
+    }
+
+    /// The paper's `find(g, t)`: largest `b <= mbs` with `time(b) <= t`,
+    /// or 0 if even batch 1 exceeds `t`. Linear scan — `mbs` is at most a
+    /// few thousand and the sweep calls this with monotone-ish curves.
+    pub fn find(&self, t: f64) -> usize {
+        // time_at is (near-)monotone; binary search with a verification
+        // scan at the boundary handles any spline wiggle.
+        let (mut lo, mut hi) = (0usize, self.mbs);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.time_at(mid as f64) <= t {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        // guard against non-monotone wiggle: ensure chosen b really fits
+        while lo > 0 && self.time_at(lo as f64) > t {
+            lo -= 1;
+        }
+        lo
+    }
+
+    /// The profiled points the curve was fitted from.
+    pub fn points(&self) -> &[ProfiledPoint] {
+        &self.points
+    }
+
+    /// Root-mean-square relative error of the spline against a dense set
+    /// of ground-truth `(batch, time)` pairs (Fig. 7's gap metric).
+    pub fn rms_rel_error(&self, truth: &[(usize, f64)]) -> f64 {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for &(b, t_true) in truth {
+            if b == 0 || b > self.mbs {
+                continue;
+            }
+            let t_est = self.time_at(b as f64);
+            acc += ((t_est - t_true) / t_true).powi(2);
+            n += 1;
+        }
+        if n == 0 { 0.0 } else { (acc / n as f64).sqrt() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::catalog;
+    use crate::config::model::preset;
+
+    /// Ground-truth points from the device model (no noise).
+    fn device_points(gpu: &str, every: usize, mbs: usize) -> Vec<ProfiledPoint> {
+        let g = catalog::spec(gpu).unwrap();
+        let m = preset("llama-0.5b").unwrap();
+        (1..=mbs)
+            .step_by(every)
+            .map(|b| ProfiledPoint {
+                batch: b,
+                step_time_s: g.compute_time(
+                    (b as u64 * m.seq) as f64,
+                    m.flops_per_token(),
+                    m.n_layers as usize,
+                ),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn interpolates_profiled_points() {
+        let pts = device_points("A100-80G", 3, 32);
+        let c = PerfCurve::fit(pts.clone(), 32).unwrap();
+        for p in &pts {
+            let t = c.time_at(p.batch as f64);
+            assert!((t - p.step_time_s).abs() / p.step_time_s < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spline_close_to_truth_between_points_fig7() {
+        // Fig. 7: gap between interpolated and actual ≈ 0.
+        let sparse = device_points("A800-80G", 4, 48);
+        let c = PerfCurve::fit(sparse, 48).unwrap();
+        let dense: Vec<(usize, f64)> = device_points("A800-80G", 1, 48)
+            .into_iter()
+            .map(|p| (p.batch, p.step_time_s))
+            .collect();
+        let err = c.rms_rel_error(&dense);
+        assert!(err < 0.02, "rms rel err {err}");
+    }
+
+    #[test]
+    fn peak_range_is_at_the_top() {
+        let pts = device_points("V100S-32G", 2, 40);
+        let c = PerfCurve::fit(pts, 40).unwrap();
+        let (lo, hi) = c.peak_range();
+        assert_eq!(hi, 40);
+        assert!(lo > 1, "saturating curve peaks late, lo={lo}");
+        assert!(c.speed_at(lo as f64) >= PEAK_THETA * c.peak_speed() * 0.999);
+    }
+
+    #[test]
+    fn find_inverts_time() {
+        let pts = device_points("T4", 1, 24);
+        let c = PerfCurve::fit(pts, 24).unwrap();
+        for b in [1usize, 4, 9, 17, 24] {
+            let t = c.time_at(b as f64);
+            assert_eq!(c.find(t * 1.0001), b);
+        }
+        assert_eq!(c.find(1e-9), 0, "no batch fits an impossible budget");
+        assert_eq!(c.find(1e9), 24, "everything fits a huge budget");
+    }
+
+    #[test]
+    fn speed_monotone_for_saturating_device() {
+        let pts = device_points("A100-80G", 2, 32);
+        let c = PerfCurve::fit(pts, 32).unwrap();
+        let mut prev = 0.0;
+        for b in 1..=32 {
+            let s = c.speed_at(b as f64);
+            assert!(s >= prev * 0.995, "speed dip at b={b}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert_eq!(
+            PerfCurve::fit(vec![ProfiledPoint { batch: 1, step_time_s: 0.1 }], 4).unwrap_err(),
+            CurveError::TooFewPoints
+        );
+        let bad = vec![
+            ProfiledPoint { batch: 1, step_time_s: -0.1 },
+            ProfiledPoint { batch: 2, step_time_s: 0.2 },
+        ];
+        assert_eq!(PerfCurve::fit(bad, 4).unwrap_err(), CurveError::InvalidPoint);
+    }
+
+    #[test]
+    fn out_of_domain_clamps() {
+        let pts = device_points("A100-80G", 4, 32);
+        let c = PerfCurve::fit(pts, 32).unwrap();
+        // beyond mbs the speed stays at the boundary value
+        let s32 = c.speed_at(32.0);
+        assert_eq!(c.speed_at(100.0), s32);
+    }
+}

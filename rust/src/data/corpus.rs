@@ -1,0 +1,141 @@
+//! Tiny bundled text corpus + byte-level tokenizer.
+//!
+//! Stand-in for wikitext-2 (DESIGN.md §2): loss-curve validation needs
+//! real-ish token statistics, throughput does not depend on content.
+//! The bundled text is public-domain English prose; the tokenizer maps
+//! bytes to ids directly (vocab 256) or folds into a smaller vocab.
+
+use super::TokenSource;
+
+/// Public-domain English prose (opening passages of several classics) —
+/// enough structure for a small LM to drive its loss down visibly.
+pub const CORPUS: &str = r#"
+It is a truth universally acknowledged, that a single man in possession
+of a good fortune, must be in want of a wife. However little known the
+feelings or views of such a man may be on his first entering a
+neighbourhood, this truth is so well fixed in the minds of the
+surrounding families, that he is considered as the rightful property of
+some one or other of their daughters.
+
+Call me Ishmael. Some years ago - never mind how long precisely -
+having little or no money in my purse, and nothing particular to
+interest me on shore, I thought I would sail about a little and see the
+watery part of the world. It is a way I have of driving off the spleen,
+and regulating the circulation.
+
+It was the best of times, it was the worst of times, it was the age of
+wisdom, it was the age of foolishness, it was the epoch of belief, it
+was the epoch of incredulity, it was the season of Light, it was the
+season of Darkness, it was the spring of hope, it was the winter of
+despair, we had everything before us, we had nothing before us.
+
+In the beginning God created the heaven and the earth. And the earth
+was without form, and void; and darkness was upon the face of the deep.
+And the Spirit of God moved upon the face of the waters. And God said,
+Let there be light: and there was light.
+
+Happy families are all alike; every unhappy family is unhappy in its
+own way. Everything was in confusion in the Oblonskys' house. The wife
+had discovered that the husband was carrying on an intrigue with a
+French girl, who had been a governess in their family, and she had
+announced to her husband that she could not go on living in the same
+house with him.
+
+A spectre is haunting Europe. All the powers of old Europe have entered
+into a holy alliance to exorcise this spectre. Where is the party in
+opposition that has not been decried as communistic by its opponents in
+power? Where is the opposition that has not hurled back the branding
+reproach of communism?
+
+We the People of the United States, in Order to form a more perfect
+Union, establish Justice, insure domestic Tranquility, provide for the
+common defence, promote the general Welfare, and secure the Blessings
+of Liberty to ourselves and our Posterity, do ordain and establish this
+Constitution for the United States of America.
+
+Four score and seven years ago our fathers brought forth on this
+continent, a new nation, conceived in Liberty, and dedicated to the
+proposition that all men are created equal. Now we are engaged in a
+great civil war, testing whether that nation, or any nation so
+conceived and so dedicated, can long endure.
+"#;
+
+/// Byte-level LM token source cycling over the bundled corpus.
+#[derive(Debug, Clone)]
+pub struct CorpusStream {
+    bytes: Vec<u8>,
+    pos: usize,
+    vocab: u32,
+}
+
+impl CorpusStream {
+    /// Stream over the bundled corpus folded into `vocab` ids
+    /// (`vocab >= 256` keeps bytes unmodified).
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab >= 2);
+        CorpusStream { bytes: CORPUS.as_bytes().to_vec(), pos: 0, vocab }
+    }
+
+    /// Stream over caller-provided text.
+    pub fn from_text(text: &str, vocab: u32) -> Self {
+        assert!(vocab >= 2);
+        assert!(!text.is_empty());
+        CorpusStream { bytes: text.as_bytes().to_vec(), pos: 0, vocab }
+    }
+
+    /// Corpus length in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Whether the corpus is empty (never for the bundled one).
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    fn next_id(&mut self) -> i32 {
+        let b = self.bytes[self.pos];
+        self.pos = (self.pos + 1) % self.bytes.len();
+        (b as u32 % self.vocab) as i32
+    }
+}
+
+impl TokenSource for CorpusStream {
+    fn batch(&mut self, batch: usize, seq_plus_1: usize) -> Vec<i32> {
+        (0..batch * seq_plus_1).map(|_| self.next_id()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_nonempty_and_ascii() {
+        assert!(CORPUS.len() > 2000);
+        assert!(CORPUS.is_ascii());
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let mut s = CorpusStream::new(128);
+        let b = s.batch(2, 33);
+        assert_eq!(b.len(), 66);
+        assert!(b.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn wraps_around() {
+        let mut s = CorpusStream::from_text("ab", 256);
+        let b = s.batch(1, 5);
+        assert_eq!(b, vec![97, 98, 97, 98, 97]);
+    }
+
+    #[test]
+    fn full_byte_vocab_preserves_bytes() {
+        let mut s = CorpusStream::new(256);
+        let b = s.batch(1, 4);
+        let expect: Vec<i32> = CORPUS.as_bytes()[..4].iter().map(|&x| x as i32).collect();
+        assert_eq!(b, expect);
+    }
+}

@@ -1,0 +1,180 @@
+//! Appendix ablation: which of Poplar's ingredients buy the speedup?
+//!
+//! Variants, all evaluated on cluster C (ZeRO-1 for the gmbs path,
+//! ZeRO-3 for the t-sweep path):
+//!
+//! * `poplar-full`     — everything (Alg. 1 + spline + Alg. 2);
+//! * `no-spline`       — curves replaced by nearest-profiled-point
+//!   lookup (no interpolation between the sparse probes);
+//! * `no-finegrained`  — wall-time measurement replaced by the FLOPs
+//!   rating (keeps the rest of Alg. 2) — isolates the Fig. 8 effect;
+//! * `no-tsweep`       — ZeRO-2/3 t-sweep replaced by the single largest
+//!   feasible micro-batch (maximum imbalance tolerance, fewest rounds);
+//! * `uniform`         — the DeepSpeed baseline for reference.
+
+use anyhow::{anyhow, Result};
+
+use super::{gbs_samples, plan_with, profile, score, NOISE_SIGMA};
+use crate::allocator::{self, Plan, RankPlan};
+use crate::cluster::{self, ClusterSpec};
+use crate::config::model::ModelSpec;
+use crate::config::{model::preset, Strategy};
+use crate::coordinator::fit_curves;
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::metrics::Table;
+use crate::netsim::NetSim;
+use crate::profiler::ClusterProfile;
+
+/// Curves degraded to a single probe (the `no-spline` variant): without
+/// curve construction a system can only extrapolate linearly from its
+/// one-batch measurement — constant per-sample speed, no saturation
+/// model. That distorts *relative* GPU speeds (each GPU saturates
+/// differently; the whole point of Fig. 6/7).
+fn degrade_to_single_probe(profile_: &ClusterProfile) -> Result<Vec<PerfCurve>> {
+    profile_
+        .ranks
+        .iter()
+        .map(|r| {
+            let p1 = r.points.first().copied().ok_or_else(|| anyhow!("no probes"))?;
+            let pts = vec![
+                p1,
+                ProfiledPoint {
+                    batch: r.mbs.max(p1.batch + 1),
+                    step_time_s: p1.step_time_s
+                        * (r.mbs.max(p1.batch + 1) as f64 / p1.batch as f64),
+                },
+            ];
+            PerfCurve::fit(pts, r.mbs).map_err(|e| anyhow!("degrade: {e}"))
+        })
+        .collect()
+}
+
+/// The `no-tsweep` variant for ZeRO-2/3: everyone runs at mbs, gas
+/// follows.
+fn plan_max_batch(curves: &[PerfCurve], stage: u8, gbs: usize, net: &NetSim,
+                  psi: u64) -> Plan {
+    let batches: Vec<usize> = curves.iter().map(|c| c.mbs()).collect();
+    let msum: usize = batches.iter().sum();
+    let gas = gbs.div_ceil(msum);
+    let mut last: Vec<usize> = batches.clone();
+    let mut excess = msum * gas - gbs;
+    let mut k = 0;
+    while excess > 0 {
+        let i = k % batches.len();
+        if last[i] > 0 {
+            last[i] -= 1;
+            excess -= 1;
+        }
+        k += 1;
+    }
+    let t_step = batches
+        .iter()
+        .zip(curves)
+        .map(|(&b, c)| c.time_at(b as f64))
+        .fold(0.0, f64::max);
+    let wall = (t_step + net.per_microstep_comm_time(stage, psi)) * gas as f64;
+    Plan {
+        stage,
+        gbs,
+        ranks: (0..curves.len())
+            .map(|i| RankPlan {
+                rank: i,
+                micro_batch: batches[i],
+                samples_per_iter: batches[i] * (gas - 1) + last[i],
+                grad_accum_steps: gas,
+                last_batch: last[i],
+            })
+            .collect(),
+        predicted_iter_s: wall,
+        strategy: "no-tsweep".into(),
+    }
+}
+
+/// Evaluate all ablation variants at one stage.
+pub fn column(cluster: &ClusterSpec, model: &ModelSpec, stage: u8) -> Result<Vec<(String, f64)>> {
+    let gbs = gbs_samples(model);
+    let net = NetSim::from_cluster(cluster);
+    let psi = model.param_count();
+    let prof = profile(cluster, model, stage, NOISE_SIGMA, 4000 + stage as u64)?;
+    let stage = prof.stage;
+    let mut out = Vec::new();
+
+    // full poplar
+    let plan = plan_with(&prof, Strategy::Poplar, gbs, &net, model)?;
+    out.push(("poplar-full".to_string(), score(cluster, model, &plan).tflops));
+
+    // no-spline
+    let curves = degrade_to_single_probe(&prof)?;
+    let plan = allocator::plan(&curves, stage, gbs, &net, psi)
+        .map_err(|e| anyhow!("no-spline plan: {e}"))?;
+    out.push(("no-spline".to_string(), score(cluster, model, &plan).tflops));
+
+    // no-finegrained (FLOPs-driven shares, poplar's machinery otherwise)
+    let plan = plan_with(&prof, Strategy::Flops, gbs, &net, model)?;
+    out.push(("no-finegrained".to_string(), score(cluster, model, &plan).tflops));
+
+    // no-tsweep (only different for stages 2/3)
+    if stage >= 2 {
+        let curves = fit_curves(&prof)?;
+        let plan = plan_max_batch(&curves, stage, gbs, &net, psi);
+        plan.validate().map_err(|e| anyhow!("no-tsweep: {e}"))?;
+        out.push(("no-tsweep".to_string(), score(cluster, model, &plan).tflops));
+    }
+
+    // uniform reference
+    let plan = plan_with(&prof, Strategy::Uniform, gbs, &net, model)?;
+    out.push(("uniform".to_string(), score(cluster, model, &plan).tflops));
+    Ok(out)
+}
+
+/// Run the ablation on cluster C, stages 1 and 3.
+pub fn run() -> Result<Table> {
+    let cluster = cluster::cluster_c();
+    let model = preset("llama-0.5b").unwrap();
+    let mut table = Table::new(&["stage", "variant", "tflops", "vs_full"]);
+    for stage in [1u8, 3] {
+        let col = column(&cluster, &model, stage)?;
+        let full = col[0].1;
+        for (variant, tflops) in &col {
+            table.row(&[
+                format!("ZeRO-{stage}"),
+                variant.clone(),
+                format!("{tflops:.1}"),
+                format!("{:.3}", tflops / full),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_poplar_is_best_or_tied() {
+        let cluster = cluster::cluster_c();
+        let model = preset("llama-0.5b").unwrap();
+        for stage in [1u8, 3] {
+            let col = column(&cluster, &model, stage).unwrap();
+            let full = col[0].1;
+            for (variant, tflops) in &col[1..] {
+                assert!(
+                    full >= tflops * 0.98,
+                    "stage {stage}: {variant} ({tflops:.1}) beat full ({full:.1})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn each_component_contributes_somewhere() {
+        let cluster = cluster::cluster_c();
+        let model = preset("llama-0.5b").unwrap();
+        let col = column(&cluster, &model, 3).unwrap();
+        let full = col[0].1;
+        // at ZeRO-3 at least one ablated variant must be clearly worse
+        let worst = col[1..].iter().map(|(_, t)| *t).fold(f64::MAX, f64::min);
+        assert!(worst < full * 0.97, "ablations should hurt at ZeRO-3");
+    }
+}

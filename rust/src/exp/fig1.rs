@@ -1,0 +1,71 @@
+//! Fig. 1 (motivation): without load balancing, powerful GPUs finish
+//! first and idle at the synchronization point.
+//!
+//! Reproduces the figure's story on cluster C: uniform (heterogeneity-
+//! unaware) allocation vs Poplar, per-rank busy/idle seconds.
+
+use anyhow::Result;
+
+use super::{gbs_samples, plan_with, profile, score, NOISE_SIGMA};
+use crate::cluster;
+use crate::config::model::preset;
+use crate::config::Strategy;
+use crate::metrics::Table;
+use crate::netsim::NetSim;
+
+/// Run the experiment.
+pub fn run() -> Result<Table> {
+    let cluster = cluster::cluster_c();
+    let model = preset("llama-0.5b").unwrap();
+    let gbs = gbs_samples(&model);
+    let net = NetSim::from_cluster(&cluster);
+
+    let prof = profile(&cluster, &model, 1, NOISE_SIGMA, 1)?;
+    let mut table = Table::new(&["system", "rank", "gpu", "busy_s", "idle_s", "idle_frac"]);
+    for strategy in [Strategy::Uniform, Strategy::Poplar] {
+        let plan = plan_with(&prof, strategy, gbs, &net, &model)?;
+        let rep = score(&cluster, &model, &plan);
+        let insts = cluster.instances();
+        for r in &rep.ranks {
+            let total = r.busy_s + r.idle_s;
+            table.row(&[
+                strategy.name().to_string(),
+                r.rank.to_string(),
+                insts[r.rank].spec.name.clone(),
+                format!("{:.3}", r.busy_s),
+                format!("{:.3}", r.idle_s),
+                format!("{:.3}", if total > 0.0 { r.idle_s / total } else { 0.0 }),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_idles_fast_ranks_poplar_does_not() {
+        let t = run().unwrap();
+        let csv = t.to_csv();
+        let rows: Vec<Vec<&str>> = csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows.len(), 16);
+        // uniform: A800 ranks (0-3) idle noticeably
+        let uni_a800_idle: f64 = rows[0][4].parse().unwrap();
+        assert!(uni_a800_idle > 0.0);
+        // poplar: every rank's idle fraction is small
+        for r in rows.iter().filter(|r| r[0] == "poplar") {
+            let frac: f64 = r[5].parse().unwrap();
+            assert!(frac < 0.12, "poplar idle frac {frac} too high: {r:?}");
+        }
+        // headline: uniform's worst idle fraction dwarfs poplar's
+        let worst = |sys: &str| -> f64 {
+            rows.iter()
+                .filter(|r| r[0] == sys)
+                .map(|r| r[5].parse::<f64>().unwrap())
+                .fold(0.0, f64::max)
+        };
+        assert!(worst("uniform") > 2.0 * worst("poplar"));
+    }
+}

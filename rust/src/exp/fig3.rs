@@ -1,0 +1,122 @@
+//! Fig. 3 (main result): cluster TFLOPs on clusters A/B/C, ZeRO-0..3,
+//! five systems — weak-homogeneous, strong-homogeneous, DeepSpeed
+//! (uniform), Whale (FLOPs-proportional), Poplar.
+//!
+//! Expected shape (paper): Poplar >= all baselines everywhere;
+//! 1.02-3.92x over DeepSpeed; Whale ≈ DeepSpeed on cluster A (equal
+//! FLOPs ratings hide the memory gap); biggest wins in ZeRO-2/3.
+
+use anyhow::Result;
+
+use super::{eval_system, gbs_samples, homogeneous_subcluster};
+use crate::cluster::{self, ClusterSpec};
+use crate::config::model::preset;
+use crate::config::Strategy;
+use crate::metrics::Table;
+
+/// The five systems of the figure, in presentation order.
+pub const SYSTEMS: &[&str] = &["weak-homog", "strong-homog", "deepspeed", "whale", "poplar"];
+
+/// Evaluate one (cluster, stage) column: TFLOPs of the five systems.
+pub fn column(cluster: &ClusterSpec, stage: u8, seed: u64) -> Result<Vec<(String, f64)>> {
+    let model = preset("llama-0.5b").unwrap();
+    let gbs = gbs_samples(&model);
+    let mut out = Vec::new();
+
+    // group 1 is the weaker GPU in all paper clusters (catalog ordering)
+    let weak = homogeneous_subcluster(cluster, 1);
+    let strong = homogeneous_subcluster(cluster, 0);
+    let r = eval_system(&weak, &model, stage, Strategy::Poplar, gbs, seed)?;
+    out.push(("weak-homog".to_string(), r.tflops));
+    let r = eval_system(&strong, &model, stage, Strategy::Poplar, gbs, seed)?;
+    out.push(("strong-homog".to_string(), r.tflops));
+    let r = eval_system(cluster, &model, stage, Strategy::Uniform, gbs, seed)?;
+    out.push(("deepspeed".to_string(), r.tflops));
+    let r = eval_system(cluster, &model, stage, Strategy::Flops, gbs, seed)?;
+    out.push(("whale".to_string(), r.tflops));
+    let r = eval_system(cluster, &model, stage, Strategy::Poplar, gbs, seed)?;
+    out.push(("poplar".to_string(), r.tflops));
+    Ok(out)
+}
+
+/// Run the full figure.
+pub fn run() -> Result<Table> {
+    let mut table = Table::new(&["cluster", "stage", "system", "tflops", "vs_deepspeed"]);
+    for cluster in [cluster::cluster_a(), cluster::cluster_b(), cluster::cluster_c()] {
+        for stage in 0..4u8 {
+            let col = column(&cluster, stage, 1000 + stage as u64)?;
+            let ds = col.iter().find(|(s, _)| s == "deepspeed").unwrap().1;
+            for (system, tflops) in &col {
+                table.row(&[
+                    cluster.name.clone(),
+                    format!("ZeRO-{stage}"),
+                    system.clone(),
+                    format!("{tflops:.1}"),
+                    format!("{:.2}x", tflops / ds),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tflops_of(col: &[(String, f64)], sys: &str) -> f64 {
+        col.iter().find(|(s, _)| s == sys).unwrap().1
+    }
+
+    #[test]
+    fn poplar_wins_on_cluster_c_all_stages() {
+        let c = cluster::cluster_c();
+        for stage in 0..4u8 {
+            let col = column(&c, stage, 7).unwrap();
+            let pop = tflops_of(&col, "poplar");
+            for sys in ["deepspeed", "whale"] {
+                let other = tflops_of(&col, sys);
+                assert!(
+                    pop >= other * 0.99,
+                    "stage {stage}: poplar {pop:.1} vs {sys} {other:.1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_band_over_deepspeed() {
+        // the paper's headline: 1.02 ~ 3.92x over DeepSpeed
+        let mut ratios = vec![];
+        for cluster in [cluster::cluster_a(), cluster::cluster_b(), cluster::cluster_c()] {
+            for stage in [1u8, 3] {
+                let col = column(&cluster, stage, 11).unwrap();
+                ratios.push(tflops_of(&col, "poplar") / tflops_of(&col, "deepspeed"));
+            }
+        }
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(min >= 0.99, "poplar should never lose: min {min:.3}");
+        assert!(max > 1.15, "poplar should clearly win somewhere: max {max:.3}");
+    }
+
+    #[test]
+    fn whale_close_to_deepspeed_on_cluster_a() {
+        // equal FLOPs ratings on cluster A -> Whale can't see the
+        // memory-only heterogeneity (paper's observation)
+        let col = column(&cluster::cluster_a(), 1, 13).unwrap();
+        let whale = tflops_of(&col, "whale");
+        let ds = tflops_of(&col, "deepspeed");
+        assert!((whale / ds - 1.0).abs() < 0.15, "whale {whale:.1} vs ds {ds:.1}");
+        // while poplar exploits it
+        assert!(tflops_of(&col, "poplar") > ds);
+    }
+
+    #[test]
+    fn hetero_poplar_beats_both_homogeneous_halves() {
+        let col = column(&cluster::cluster_c(), 1, 17).unwrap();
+        let pop = tflops_of(&col, "poplar");
+        assert!(pop > tflops_of(&col, "weak-homog"));
+        assert!(pop > tflops_of(&col, "strong-homog"));
+    }
+}

@@ -1,0 +1,82 @@
+//! Fig. 4: model generality — Llama-0.5B vs Llama-1.1B vs BERT-1.1B on
+//! cluster C, all ZeRO stages, DeepSpeed vs Whale vs Poplar.
+//!
+//! Expected shape (paper): Poplar up to ~2.27x over DeepSpeed on
+//! Llama-1.1B and up to ~3.92x on BERT-1.1B (bigger models stress the
+//! weak GPUs' memory, so heterogeneity-aware batching matters more).
+
+use anyhow::Result;
+
+use super::{eval_system, gbs_samples};
+use crate::cluster;
+use crate::config::model::preset;
+use crate::config::Strategy;
+use crate::metrics::Table;
+
+/// Models of the figure.
+pub const MODELS: &[&str] = &["llama-0.5b", "llama-1.1b", "bert-1.1b"];
+
+/// Run the full figure.
+pub fn run() -> Result<Table> {
+    let cluster = cluster::cluster_c();
+    let mut table =
+        Table::new(&["model", "stage_req", "stage_used", "system", "tflops", "vs_deepspeed"]);
+    for model_name in MODELS {
+        let model = preset(model_name).unwrap();
+        let gbs = gbs_samples(&model);
+        for stage in 0..4u8 {
+            let mut cells = Vec::new();
+            for (label, strategy) in [
+                ("deepspeed", Strategy::Uniform),
+                ("whale", Strategy::Flops),
+                ("poplar", Strategy::Poplar),
+            ] {
+                let r = eval_system(&cluster, &model, stage, strategy, gbs,
+                                    2000 + stage as u64)?;
+                cells.push((label, r.stage, r.tflops));
+            }
+            let ds = cells[0].2;
+            for (label, used, tflops) in cells {
+                table.row(&[
+                    model_name.to_string(),
+                    format!("ZeRO-{stage}"),
+                    format!("ZeRO-{used}"),
+                    label.to_string(),
+                    format!("{tflops:.1}"),
+                    format!("{:.2}x", tflops / ds),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_models_bigger_poplar_gain() {
+        // the Fig. 4 trend: poplar's edge over deepspeed grows from
+        // 0.5B to the 1.1B models (memory pressure on the weak GPUs)
+        let cluster = cluster::cluster_c();
+        let gain = |model_name: &str, stage: u8| -> f64 {
+            let model = preset(model_name).unwrap();
+            let gbs = gbs_samples(&model);
+            let p = eval_system(&cluster, &model, stage, Strategy::Poplar, gbs, 5).unwrap();
+            let d = eval_system(&cluster, &model, stage, Strategy::Uniform, gbs, 5).unwrap();
+            p.tflops / d.tflops
+        };
+        let g05 = gain("llama-0.5b", 2);
+        let g11 = gain("llama-1.1b", 2);
+        assert!(g05 >= 0.99 && g11 >= 0.99);
+        assert!(g11 > g05 * 0.95, "1.1B gain {g11:.2} vs 0.5B gain {g05:.2}");
+    }
+
+    #[test]
+    fn all_models_all_stages_complete() {
+        let t = run().unwrap();
+        // 3 models x 4 stages x 3 systems
+        assert_eq!(t.len(), 36);
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig. 5: scaling across GPU *quantities* — the heterogeneity of number.
+//!
+//! Cluster-C GPU types at ratios V4 (V100S only), A4 (A800 only), then
+//! A800:V100S of 4:1, 4:2, 4:3, 4:4, 3:4, 2:4, 1:4 — all ZeRO stages,
+//! Poplar allocation.
+//!
+//! Expected shape (paper): performance grows with GPU count; removing an
+//! A800 hurts much more than removing a V100S; and in ZeRO-3 the V4A4
+//! group can score *below* V4A3 (added communication outweighs the extra
+//! compute — the appendix's observation).
+
+use anyhow::Result;
+
+use super::{eval_system, gbs_samples};
+use crate::cluster::cluster_c_counts;
+use crate::config::model::preset;
+use crate::config::Strategy;
+use crate::metrics::Table;
+
+/// The figure's groups as `(label, n_a800, n_v100s)`.
+pub const GROUPS: &[(&str, usize, usize)] = &[
+    ("V4", 0, 4),
+    ("A4", 4, 0),
+    ("A4V1", 4, 1),
+    ("A4V2", 4, 2),
+    ("A4V3", 4, 3),
+    ("A4V4", 4, 4),
+    ("A3V4", 3, 4),
+    ("A2V4", 2, 4),
+    ("A1V4", 1, 4),
+];
+
+/// TFLOPs of one group at one stage.
+pub fn cell(label: &str, n_a: usize, n_v: usize, stage: u8) -> Result<f64> {
+    let model = preset("llama-0.5b").unwrap();
+    let gbs = gbs_samples(&model);
+    let cluster = cluster_c_counts(n_a, n_v);
+    let r = eval_system(&cluster, &model, stage, Strategy::Poplar, gbs,
+                        3000 + label.len() as u64 + stage as u64)?;
+    Ok(r.tflops)
+}
+
+/// Run the full figure.
+pub fn run() -> Result<Table> {
+    let mut table = Table::new(&["group", "a800", "v100s", "stage", "tflops"]);
+    for &(label, n_a, n_v) in GROUPS {
+        for stage in 0..4u8 {
+            let tflops = cell(label, n_a, n_v, stage)?;
+            table.row(&[
+                label.to_string(),
+                n_a.to_string(),
+                n_v.to_string(),
+                format!("ZeRO-{stage}"),
+                format!("{tflops:.1}"),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_gpus_more_tflops_zero1() {
+        let t_41 = cell("A4V1", 4, 1, 1).unwrap();
+        let t_44 = cell("A4V4", 4, 4, 1).unwrap();
+        assert!(t_44 > t_41, "{t_44} vs {t_41}");
+    }
+
+    #[test]
+    fn a800_matters_more_than_v100s() {
+        // dropping an A800 (4:4 -> 3:4) costs more than dropping a
+        // V100S (4:4 -> 4:3)
+        let base = cell("A4V4", 4, 4, 1).unwrap();
+        let drop_a = cell("A3V4", 3, 4, 1).unwrap();
+        let drop_v = cell("A4V3", 4, 3, 1).unwrap();
+        assert!(
+            base - drop_a > base - drop_v,
+            "dropping A800 ({:.1}) should cost more than dropping V100S ({:.1})",
+            base - drop_a,
+            base - drop_v
+        );
+    }
+
+    #[test]
+    fn homogeneous_ends_ordered() {
+        // four A800 out-compute four V100S
+        assert!(cell("A4", 4, 0, 1).unwrap() > cell("V4", 0, 4, 1).unwrap());
+    }
+
+    #[test]
+    fn full_grid_completes() {
+        let t = run().unwrap();
+        assert_eq!(t.len(), GROUPS.len() * 4);
+    }
+}

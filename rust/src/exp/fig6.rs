@@ -1,0 +1,97 @@
+//! Fig. 6 (appendix): the speed-vs-batch-size relationship that the
+//! whole batch-allocation approach rests on — throughput rises with
+//! batch size, then plateaus (cuBLAS/MXU tile quantization).
+//!
+//! Four GPUs (A100-80G, V100-32G≈V100S, RTX4090, RTX3060) × three
+//! models (GPT-2 345M, Llama-7B where it fits, CogVLM stand-in:
+//! llama-0.5b).
+
+use anyhow::Result;
+
+use crate::cluster::catalog;
+use crate::config::model::preset;
+use crate::metrics::Table;
+
+/// GPUs of the figure.
+pub const GPUS: &[&str] = &["A100-80G", "V100S-32G", "RTX4090", "RTX3060"];
+
+/// Models of the figure (CogVLM-224 has no public config; llama-0.5b is
+/// the closest dense stand-in — DESIGN.md §2).
+pub const MODELS: &[&str] = &["gpt2-345m", "llama-0.5b", "llama-7b"];
+
+/// Run the sweep.
+pub fn run() -> Result<Table> {
+    let mut table = Table::new(&["gpu", "model", "batch", "samples_per_s", "norm_speed"]);
+    for gpu in GPUS {
+        let spec = catalog::spec_or_panic(gpu);
+        for model_name in MODELS {
+            let model = preset(model_name).unwrap();
+            let mut speeds = Vec::new();
+            for b in [1usize, 2, 4, 8, 12, 16, 24, 32, 48, 64] {
+                let t = spec.compute_time(
+                    (b as u64 * model.seq) as f64,
+                    model.flops_per_token(),
+                    model.n_layers as usize,
+                );
+                speeds.push((b, b as f64 / t));
+            }
+            let peak = speeds.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+            for (b, s) in speeds {
+                table.row(&[
+                    gpu.to_string(),
+                    model_name.to_string(),
+                    b.to_string(),
+                    format!("{s:.3}"),
+                    format!("{:.3}", s / peak),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_rise_then_plateau() {
+        let t = run().unwrap();
+        let rows: Vec<Vec<String>> = t
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        for gpu in GPUS {
+            for model in MODELS {
+                let series: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| r[0] == *gpu && r[1] == *model)
+                    .map(|r| r[3].parse().unwrap())
+                    .collect();
+                assert_eq!(series.len(), 10);
+                // rising: batch 8 beats batch 1 by a lot
+                assert!(series[3] > series[0] * 1.3, "{gpu}/{model}");
+                // plateau: last doubling gains < 15%
+                let last = series[9] / series[8];
+                assert!(last < 1.15, "{gpu}/{model}: late gain {last}");
+            }
+        }
+    }
+
+    #[test]
+    fn consumer_cards_slower_than_datacenter() {
+        let t = run().unwrap();
+        let peak = |gpu: &str| -> f64 {
+            t.to_csv()
+                .lines()
+                .skip(1)
+                .map(|l| l.split(',').collect::<Vec<_>>())
+                .filter(|r| r[0] == gpu && r[1] == "llama-0.5b")
+                .map(|r| r[3].parse::<f64>().unwrap())
+                .fold(0.0, f64::max)
+        };
+        assert!(peak("A100-80G") > peak("RTX3060") * 2.0);
+    }
+}

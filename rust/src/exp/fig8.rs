@@ -1,0 +1,108 @@
+//! Fig. 8 (appendix): measuring compute capability by wall time (Poplar)
+//! vs by FLOPs rating (Whale), normalized to the T4, against the actual
+//! runtime ratio.
+//!
+//! The paper's point: FLOPs ratings systematically mispredict real
+//! relative speed (they ignore memory bandwidth, efficiency ceilings and
+//! launch overheads), while Poplar's measured wall times match reality
+//! by construction.
+
+use anyhow::Result;
+
+use super::{profile, NOISE_SIGMA};
+use crate::cluster::{catalog, ClusterSpec, LinkKind};
+use crate::config::model::preset;
+use crate::coordinator::fit_curves;
+use crate::metrics::Table;
+
+/// GPUs compared (normalized to T4 = 1.0).
+pub const GPUS: &[&str] = &["T4", "V100-16G", "V100S-32G", "A100-40G", "A100-80G", "A800-80G"];
+
+/// Run the comparison.
+pub fn run() -> Result<Table> {
+    let model = preset("llama-0.5b").unwrap();
+
+    // actual + poplar-measured peak speeds per GPU (each at its own mbs,
+    // exactly the paper's protocol: "each GPU performs five iterations
+    // at its respective mbs")
+    let mut actual = Vec::new();
+    let mut measured = Vec::new();
+    let mut flops = Vec::new();
+    for gpu in GPUS {
+        let spec = catalog::spec_or_panic(gpu);
+        let cluster = ClusterSpec::new("solo", &[(gpu, 1, LinkKind::Pcie)], LinkKind::Ib);
+        let prof = profile(&cluster, &model, 1, NOISE_SIGMA, 88)?;
+        let curve = &fit_curves(&prof)?[0];
+        measured.push(curve.peak_speed());
+        // ground truth at the same mbs
+        let mbs = curve.mbs();
+        let t = spec.compute_time(
+            (mbs as u64 * model.seq) as f64,
+            model.flops_per_token(),
+            model.n_layers as usize,
+        );
+        actual.push(mbs as f64 / t);
+        flops.push(spec.flops_rating());
+    }
+
+    let norm = |v: &[f64]| -> Vec<f64> { v.iter().map(|x| x / v[0]).collect() };
+    let (actual, measured, flops) = (norm(&actual), norm(&measured), norm(&flops));
+
+    let mut table = Table::new(&["gpu", "actual_rel", "poplar_rel", "whale_flops_rel",
+                                 "poplar_err", "whale_err"]);
+    for (i, gpu) in GPUS.iter().enumerate() {
+        table.row(&[
+            gpu.to_string(),
+            format!("{:.2}", actual[i]),
+            format!("{:.2}", measured[i]),
+            format!("{:.2}", flops[i]),
+            format!("{:.3}", (measured[i] - actual[i]).abs() / actual[i]),
+            format!("{:.3}", (flops[i] - actual[i]).abs() / actual[i]),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poplar_measurement_closer_than_flops() {
+        let t = run().unwrap();
+        let rows: Vec<Vec<String>> = t
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        let mut poplar_total = 0.0;
+        let mut whale_total = 0.0;
+        for r in &rows {
+            poplar_total += r[4].parse::<f64>().unwrap();
+            whale_total += r[5].parse::<f64>().unwrap();
+        }
+        assert!(
+            poplar_total < whale_total * 0.5,
+            "poplar err {poplar_total:.3} should be far below whale {whale_total:.3}"
+        );
+    }
+
+    #[test]
+    fn flops_overrates_big_gpus() {
+        // A100's FLOPs ratio vs T4 (4.8x) exceeds its wall-time ratio
+        let t = run().unwrap();
+        let row: Vec<String> = t
+            .to_csv()
+            .lines()
+            .find(|l| l.starts_with("A100-80G"))
+            .unwrap()
+            .split(',')
+            .map(str::to_string)
+            .collect();
+        let actual: f64 = row[1].parse().unwrap();
+        let flops: f64 = row[3].parse().unwrap();
+        assert!(flops < actual, "flops rel {flops} vs actual {actual} — \
+                 T4's wall-time penalty exceeds its FLOPs penalty");
+    }
+}

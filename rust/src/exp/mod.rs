@@ -1,0 +1,226 @@
+//! Experiment harness: one runner per paper table/figure.
+//!
+//! Every runner regenerates the corresponding artifact of the paper's
+//! evaluation (DESIGN.md §5) against the simulated substrate and returns
+//! a [`metrics::Table`]; `run_all` writes them under `results/`.
+//!
+//! Evaluation protocol (matches the paper): plans are computed from
+//! *noisy* profiles (Alg. 1 measurements with `noise_sigma`), then scored
+//! against the noise-free ground-truth oracle — so an allocator that
+//! over-fits measurement noise pays for it, exactly as on real hardware.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table2;
+
+use anyhow::{anyhow, Result};
+
+use crate::allocator::{self, baselines, Plan};
+use crate::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::config::Strategy;
+use crate::coordinator::fit_curves;
+use crate::netsim::NetSim;
+use crate::profiler::{profile_cluster, ClusterProfile, Device, SimDevice};
+use crate::zero::{simulate_iteration, DeviceOracle, IterationReport};
+
+/// Default measurement noise used by all figure runners.
+pub const NOISE_SIGMA: f64 = 0.015;
+
+/// The paper's global batch: 2M tokens.
+pub const GBS_TOKENS: u64 = 2 * 1024 * 1024;
+
+/// One evaluated (cluster, model, stage, strategy) cell.
+#[derive(Debug, Clone)]
+pub struct SystemResult {
+    /// Strategy label (`poplar`, `uniform`, …).
+    pub label: String,
+    /// ZeRO stage actually used (after escalation).
+    pub stage: u8,
+    /// Cluster TFLOP/s (the Fig. 3-5 metric).
+    pub tflops: f64,
+    /// Iteration wall seconds.
+    pub wall_s: f64,
+    /// Eq. 4 objective achieved.
+    pub objective: f64,
+}
+
+/// Build simulated devices for a cluster.
+pub fn sim_devices(
+    cluster: &ClusterSpec,
+    model: &ModelSpec,
+    noise: f64,
+    seed: u64,
+) -> Vec<Box<dyn Device>> {
+    let net = NetSim::from_cluster(cluster);
+    let instances = cluster.instances();
+    instances
+        .iter()
+        .map(|inst| {
+            Box::new(SimDevice::new(
+                inst.spec.clone(),
+                model.clone(),
+                inst.rank,
+                instances.len(),
+                net.clone(),
+                noise,
+                seed,
+            )) as Box<dyn Device>
+        })
+        .collect()
+}
+
+/// Profile a cluster (noisy Alg. 1) starting at `stage`.
+pub fn profile(
+    cluster: &ClusterSpec,
+    model: &ModelSpec,
+    stage: u8,
+    noise: f64,
+    seed: u64,
+) -> Result<ClusterProfile> {
+    let mut devices = sim_devices(cluster, model, noise, seed);
+    profile_cluster(&mut devices, stage).map_err(|e| anyhow!("profile: {e}"))
+}
+
+/// Plan with a strategy from a profile.
+pub fn plan_with(
+    profile_: &ClusterProfile,
+    strategy: Strategy,
+    gbs: usize,
+    net: &NetSim,
+    model: &ModelSpec,
+) -> Result<Plan> {
+    let curves = fit_curves(profile_)?;
+    let psi = model.param_count();
+    let plan = match strategy {
+        Strategy::Poplar => allocator::plan(&curves, profile_.stage, gbs, net, psi)
+            .map_err(|e| anyhow!("poplar: {e}"))?,
+        Strategy::Uniform => {
+            baselines::plan_uniform(&curves, profile_.stage, gbs, net, psi)
+                .map_err(|e| anyhow!("uniform: {e}"))?
+        }
+        Strategy::Flops => {
+            let flops: Vec<f64> = profile_.ranks.iter().map(|r| r.flops_rating).collect();
+            baselines::plan_flops_proportional(&curves, &flops, profile_.stage, gbs, net, psi)
+                .map_err(|e| anyhow!("flops: {e}"))?
+        }
+    };
+    plan.validate().map_err(|e| anyhow!("plan invalid: {e}"))?;
+    Ok(plan)
+}
+
+/// Score a plan against the noise-free oracle.
+pub fn score(
+    cluster: &ClusterSpec,
+    model: &ModelSpec,
+    plan: &Plan,
+) -> IterationReport {
+    let net = NetSim::from_cluster(cluster);
+    let specs = cluster.instances().into_iter().map(|i| i.spec).collect();
+    let oracle = DeviceOracle { specs, model };
+    simulate_iteration(plan, &oracle, &net, model)
+}
+
+/// End-to-end cell: profile (noisy) → plan → score (truth).
+pub fn eval_system(
+    cluster: &ClusterSpec,
+    model: &ModelSpec,
+    stage: u8,
+    strategy: Strategy,
+    gbs: usize,
+    seed: u64,
+) -> Result<SystemResult> {
+    let prof = profile(cluster, model, stage, NOISE_SIGMA, seed)?;
+    let net = NetSim::from_cluster(cluster);
+    let plan = plan_with(&prof, strategy, gbs, &net, model)?;
+    let rep = score(cluster, model, &plan);
+    Ok(SystemResult {
+        label: strategy.name().to_string(),
+        stage: prof.stage,
+        tflops: rep.tflops,
+        wall_s: rep.wall_s,
+        objective: rep.objective,
+    })
+}
+
+/// Homogeneous sub-cluster of group `g` only (baselines 1/2 of Fig. 3).
+pub fn homogeneous_subcluster(cluster: &ClusterSpec, g: usize) -> ClusterSpec {
+    let group = cluster.groups[g].clone();
+    ClusterSpec { name: format!("{}-homog-{}", cluster.name, group.gpu),
+                  groups: vec![group], inter_link: cluster.inter_link }
+}
+
+/// gbs in samples for a model at the paper's 2M-token global batch.
+pub fn gbs_samples(model: &ModelSpec) -> usize {
+    (GBS_TOKENS / model.seq) as usize
+}
+
+/// Write a table under `results/` as both markdown and CSV.
+pub fn write_result(out_dir: &std::path::Path, name: &str, title: &str,
+                    table: &crate::metrics::Table) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let md = format!("# {title}\n\n{}", table.to_markdown());
+    std::fs::write(out_dir.join(format!("{name}.md")), md)?;
+    std::fs::write(out_dir.join(format!("{name}.csv")), table.to_csv())?;
+    Ok(())
+}
+
+/// Run every experiment, writing under `out_dir` and echoing to stdout.
+pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
+    let runners: Vec<(&str, &str, fn() -> Result<crate::metrics::Table>)> = vec![
+        ("fig1", "Fig. 1 — idle time without load balancing (motivation)", fig1::run),
+        ("fig3", "Fig. 3 — main: TFLOPs on clusters A/B/C x ZeRO stages x systems", fig3::run),
+        ("fig4", "Fig. 4 — different models on cluster C", fig4::run),
+        ("fig5", "Fig. 5 — GPU-quantity scaling on cluster C types", fig5::run),
+        ("fig6", "Fig. 6 — speed vs batch size across GPUs and models", fig6::run),
+        ("fig7", "Fig. 7 — cubic-spline interpolation accuracy", fig7::run),
+        ("fig8", "Fig. 8 — wall-time vs FLOPs capability measurement", fig8::run),
+        ("table2", "Table 2 — profiling overhead (seconds)", table2::run),
+        ("ablation", "Appendix — ablation of Poplar components", ablation::run),
+    ];
+    for (name, title, f) in runners {
+        eprintln!("[exp] running {name}…");
+        let t = f()?;
+        println!("\n## {title}\n\n{}", t.to_markdown());
+        write_result(out_dir, name, title, &t)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::config::model::preset;
+
+    #[test]
+    fn eval_system_cell() {
+        let c = cluster::cluster_b();
+        let m = preset("tiny").unwrap();
+        let r = eval_system(&c, &m, 1, Strategy::Poplar, 64, 5).unwrap();
+        assert!(r.tflops > 0.0);
+        assert_eq!(r.stage, 1);
+    }
+
+    #[test]
+    fn homogeneous_subcluster_extracts_group() {
+        let c = cluster::cluster_a();
+        let weak = homogeneous_subcluster(&c, 1);
+        assert_eq!(weak.n_gpus(), 4);
+        assert_eq!(weak.groups[0].gpu, "A100-40G");
+    }
+
+    #[test]
+    fn gbs_is_2m_tokens() {
+        let m = preset("llama-0.5b").unwrap();
+        assert_eq!(gbs_samples(&m), 2048);
+        let b = preset("bert-1.1b").unwrap();
+        assert_eq!(gbs_samples(&b), 4096);
+    }
+}

@@ -1,0 +1,54 @@
+//! # Poplar — heterogeneity-aware ZeRO training
+//!
+//! Reproduction of *"Poplar: Efficient Scaling of Distributed DNN Training
+//! on Heterogeneous GPU Clusters"* (AAAI 2025). See `DESIGN.md` for the
+//! system inventory and the substitution plan for the hardware gate.
+//!
+//! Layering (request path is pure rust — python only at build time):
+//!
+//! * **L3 (this crate)** — the paper's system: online profiler (Alg. 1),
+//!   performance-curve construction, batch-allocation search (Alg. 2),
+//!   ZeRO-stage BSP engine, leader/worker coordinator.
+//! * **L2** — JAX Llama/BERT train step, AOT-lowered to HLO text under
+//!   `artifacts/` (`python/compile/model.py` + `aot.py`).
+//! * **L1** — Pallas kernels (fused SwiGLU FFN, flash attention) called by
+//!   L2 (`python/compile/kernels/`).
+//!
+//! Module map (bottom-up):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`spline`] | natural cubic spline (tridiagonal solve) |
+//! | [`cluster`] | GPU catalog + calibrated device performance model |
+//! | [`netsim`] | link topology + ring collective cost models |
+//! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
+//! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
+//! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
+//! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines |
+//! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) |
+//! | [`coordinator`] | leader/worker orchestration (tokio) |
+//! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
+//! | [`train`] | real heterogeneous data-parallel training loop |
+//! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |
+//! | [`metrics`] | FLOPs accounting, timers, report tables |
+//! | [`config`] | TOML config system + paper presets |
+//! | [`exp`] | experiment harness: one runner per paper table/figure |
+
+pub mod allocator;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod curves;
+pub mod data;
+pub mod exp;
+pub mod memmodel;
+pub mod metrics;
+pub mod netsim;
+pub mod profiler;
+pub mod runtime;
+pub mod spline;
+pub mod train;
+pub mod zero;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

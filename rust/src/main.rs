@@ -1,0 +1,260 @@
+//! `poplar` — CLI for the heterogeneity-aware ZeRO training system.
+//!
+//! ```text
+//! poplar profile   --cluster cluster-C --model llama-0.5b [--stage 1]
+//! poplar plan      --cluster cluster-C --model llama-0.5b --gbs-tokens 2097152
+//!                  [--stage 2] [--strategy poplar|uniform|flops]
+//! poplar simulate  --config job.toml            # profile+plan+iterate (sim)
+//! poplar train     --artifacts artifacts/tiny --iters 100 [--gbs 16]
+//!                  [--cluster-sim 2xfast+2xslow]  # real PJRT training
+//! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|ablation|all>
+//!                  [--out results]
+//! ```
+//!
+//! Arg parsing is hand-rolled: the offline image carries no clap.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use poplar::cluster::{self, ClusterSpec};
+use poplar::config::{model as model_cfg, JobConfig, Strategy};
+use poplar::coordinator::Leader;
+use poplar::data::corpus::CorpusStream;
+use poplar::exp;
+use poplar::metrics::Table;
+use poplar::train::{Trainer, VirtualGpu};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Split `args` into positionals and `--key value` flags.
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn resolve_cluster(name: &str) -> Result<ClusterSpec> {
+    match name {
+        "cluster-A" => Ok(cluster::cluster_a()),
+        "cluster-B" => Ok(cluster::cluster_b()),
+        "cluster-C" => Ok(cluster::cluster_c()),
+        other => bail!("unknown cluster {other:?} (use cluster-A/B/C or a config file)"),
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "profile" => cmd_profile(rest),
+        "plan" => cmd_plan(rest),
+        "simulate" => cmd_simulate(rest),
+        "train" => cmd_train(rest),
+        "exp" => cmd_exp(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `poplar help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "poplar — heterogeneity-aware ZeRO training (AAAI'25 reproduction)\n\n\
+         commands:\n\
+         \x20 profile   --cluster cluster-C --model llama-0.5b [--stage N] [--noise S]\n\
+         \x20 plan      --cluster C --model M --gbs-tokens N [--stage N] [--strategy poplar]\n\
+         \x20 simulate  --config job.toml\n\
+         \x20 train     --artifacts artifacts/tiny [--iters 100] [--gbs 16] [--stage 1]\n\
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|ablation|all> [--out results]\n"
+    );
+}
+
+fn cmd_profile(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+    let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
+        .ok_or_else(|| anyhow!("unknown model preset"))?;
+    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let noise: f64 = f.get("noise").map(|s| s.parse()).transpose()?.unwrap_or(0.015);
+
+    let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
+    let prof = leader.profile(stage)?;
+    println!("cluster {} model {} — profiled at ZeRO-{}", cluster.name, model.name, prof.stage);
+    let mut t = Table::new(&["rank", "gpu", "mbs", "peak_speed", "probe_steps", "probe_s"]);
+    let curves = poplar::coordinator::fit_curves(&prof)?;
+    for (r, c) in prof.ranks.iter().zip(&curves) {
+        t.row(&[
+            r.rank.to_string(),
+            r.name.clone(),
+            r.mbs.to_string(),
+            format!("{:.3}", c.peak_speed()),
+            r.probe_steps.to_string(),
+            format!("{:.1}", r.probe_time_s),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    leader.shutdown();
+    Ok(())
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+    let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
+        .ok_or_else(|| anyhow!("unknown model preset"))?;
+    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let gbs_tokens: u64 = f
+        .get("gbs-tokens")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2 * 1024 * 1024);
+    let gbs = (gbs_tokens / model.seq) as usize;
+    let strategy = Strategy::parse(f.get("strategy").map(String::as_str).unwrap_or("poplar"))
+        .ok_or_else(|| anyhow!("unknown strategy"))?;
+
+    let mut leader = Leader::new_simulated(&cluster, &model, 0.015, 42);
+    let prof = leader.profile(stage)?;
+    let plan = leader.plan_from_profile(&prof, strategy, gbs)?;
+    println!(
+        "plan: strategy={} stage=ZeRO-{} gbs={} samples, predicted iter {:.3}s",
+        plan.strategy, plan.stage, plan.gbs, plan.predicted_iter_s
+    );
+    let mut t = Table::new(&["rank", "gpu", "micro_batch", "samples/iter", "gas", "lbs"]);
+    let insts = cluster.instances();
+    for r in &plan.ranks {
+        t.row(&[
+            r.rank.to_string(),
+            insts[r.rank].spec.name.clone(),
+            r.micro_batch.to_string(),
+            r.samples_per_iter.to_string(),
+            r.grad_accum_steps.to_string(),
+            r.last_batch.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    leader.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let path = f.get("config").ok_or_else(|| anyhow!("--config job.toml required"))?;
+    let cfg = JobConfig::load(Path::new(path)).map_err(|e| anyhow!("{e}"))?;
+    let gbs = cfg.gbs_samples();
+    let mut leader = Leader::new_simulated(
+        &cfg.cluster,
+        &cfg.model,
+        cfg.training.noise_sigma,
+        cfg.training.seed,
+    );
+    let rep = leader.run_job(
+        cfg.training.zero_stage,
+        cfg.training.strategy,
+        gbs,
+        cfg.training.iterations,
+    )?;
+    println!(
+        "simulate: {} on {} — ZeRO-{} strategy={} gbs={} — mean {:.1} TFLOP/s over {} iters",
+        cfg.model.name,
+        cfg.cluster.name,
+        rep.stage,
+        cfg.training.strategy.name(),
+        gbs,
+        rep.tflops_mean,
+        rep.iterations.len()
+    );
+    leader.shutdown();
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let dir = PathBuf::from(
+        f.get("artifacts").map(String::as_str).unwrap_or("artifacts/tiny"),
+    );
+    let iters: usize = f.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let gbs: usize = f.get("gbs").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let log_every: usize = f.get("log-every").map(|s| s.parse()).transpose()?.unwrap_or(10);
+
+    let mut trainer = Trainer::open(&dir).context("opening artifacts (run `make artifacts`)")?;
+    let meta = trainer.engine().meta().clone();
+    println!(
+        "train: preset={} params={} seq={} variants={:?} pallas={}",
+        meta.preset, meta.param_count, meta.seq, meta.batch_variants, meta.use_pallas
+    );
+
+    // virtual heterogeneous cluster: 2 fast + 2 slow (DESIGN.md §6)
+    let max_b = *meta.batch_variants.iter().max().unwrap();
+    let vgpus = vec![
+        VirtualGpu { name: "fast-0".into(), slowdown: 1.0, max_batch: max_b },
+        VirtualGpu { name: "fast-1".into(), slowdown: 1.0, max_batch: max_b },
+        VirtualGpu { name: "slow-0".into(), slowdown: 2.4, max_batch: max_b.div_ceil(2) },
+        VirtualGpu { name: "slow-1".into(), slowdown: 2.4, max_batch: max_b.div_ceil(2) },
+    ];
+
+    let mut source = CorpusStream::new(meta.vocab as u32);
+    let curves = trainer.profile_virtual(&vgpus, &mut source, 1)?;
+    let net = poplar::netsim::NetSim::from_link(vgpus.len(), cluster::LinkKind::Pcie);
+    let plan = poplar::allocator::plan(&curves, stage, gbs, &net,
+                                       meta.param_count as u64)
+        .map_err(|e| anyhow!("plan: {e}"))?;
+    println!("plan: {:?}", plan.ranks.iter().map(|r| (r.micro_batch, r.grad_accum_steps,
+             r.last_batch)).collect::<Vec<_>>());
+
+    let logs = trainer.train(&plan, &vgpus, &mut source, iters, log_every)?;
+    let first = logs.first().map(|l| l.loss).unwrap_or(0.0);
+    let last = logs.last().map(|l| l.loss).unwrap_or(0.0);
+    println!("loss: {first:.4} -> {last:.4} over {} iterations", logs.len());
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let (pos, f) = parse_flags(args)?;
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let out = PathBuf::from(f.get("out").map(String::as_str).unwrap_or("results"));
+    let one = |name: &str, title: &str, f: fn() -> Result<Table>| -> Result<()> {
+        let t = f()?;
+        println!("\n## {title}\n\n{}", t.to_markdown());
+        exp::write_result(&out, name, title, &t)
+    };
+    match which {
+        "all" => exp::run_all(&out)?,
+        "fig1" => one("fig1", "Fig. 1 — motivation", exp::fig1::run)?,
+        "fig3" => one("fig3", "Fig. 3 — main result", exp::fig3::run)?,
+        "fig4" => one("fig4", "Fig. 4 — models", exp::fig4::run)?,
+        "fig5" => one("fig5", "Fig. 5 — quantities", exp::fig5::run)?,
+        "fig6" => one("fig6", "Fig. 6 — batch curves", exp::fig6::run)?,
+        "fig7" => one("fig7", "Fig. 7 — spline accuracy", exp::fig7::run)?,
+        "fig8" => one("fig8", "Fig. 8 — capability measurement", exp::fig8::run)?,
+        "table2" => one("table2", "Table 2 — overhead", exp::table2::run)?,
+        "ablation" => one("ablation", "Ablation", exp::ablation::run)?,
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! ZeRO per-stage memory accounting.
+//!
+//! Model-state memory follows the ZeRO paper's mixed-precision layout:
+//! fp16 parameters (2ψ) + fp16 gradients (2ψ) + fp32 optimizer states
+//! (parameter copy + momentum + variance = 12ψ), partitioned per stage:
+//!
+//! | stage | resident per rank |
+//! |---|---|
+//! | 0 | 16ψ |
+//! | 1 | 4ψ + 12ψ/n |
+//! | 2 | 2ψ + 2ψ/n + 12ψ/n |
+//! | 3 | 16ψ/n |
+//!
+//! Activation memory is linear in the micro-batch size (the linearity
+//! Alg. 1's one-batch estimate exploits), with a transient spike the
+//! *estimate* does not see — which is exactly why the paper's linear
+//! estimate over-predicts `mbs` and needs the binary-search refinement.
+
+use crate::config::model::ModelSpec;
+
+/// Bytes reserved by the framework/context before any tensor (CUDA
+/// context, NCCL buffers, allocator pools).
+pub const FRAMEWORK_RESERVE_BYTES: u64 = 1_500_000_000;
+
+/// Fraction of activation memory transiently over-allocated at peak
+/// (temporaries inside attention/softmax) — invisible to the
+/// before/after-forward probe of Alg. 1.
+pub const TRANSIENT_FACTOR: f64 = 0.12;
+
+/// Model-state bytes resident on one rank for a ZeRO stage.
+pub fn model_state_bytes(param_count: u64, stage: u8, n_ranks: usize) -> u64 {
+    let psi = param_count as f64;
+    let n = n_ranks.max(1) as f64;
+    let bytes = match stage {
+        0 => 16.0 * psi,
+        1 => 4.0 * psi + 12.0 * psi / n,
+        2 => 2.0 * psi + 2.0 * psi / n + 12.0 * psi / n,
+        3 => 16.0 * psi / n,
+        _ => panic!("invalid ZeRO stage {stage}"),
+    };
+    bytes as u64
+}
+
+/// Steady-state activation bytes for a micro-batch of `batch` samples.
+pub fn activation_bytes(model: &ModelSpec, batch: usize) -> u64 {
+    model.activation_bytes_per_sample() * batch as u64
+}
+
+/// Peak (transient-inclusive) bytes for a step at `batch`.
+pub fn peak_bytes(model: &ModelSpec, param_count: u64, stage: u8, n_ranks: usize,
+                  batch: usize) -> u64 {
+    let act = activation_bytes(model, batch) as f64;
+    model_state_bytes(param_count, stage, n_ranks)
+        + FRAMEWORK_RESERVE_BYTES
+        + (act * (1.0 + TRANSIENT_FACTOR)) as u64
+}
+
+/// True maximum batch size that fits in `capacity` bytes (transient
+/// included) — the ground truth Alg. 1 searches for.
+pub fn true_mbs(model: &ModelSpec, param_count: u64, stage: u8, n_ranks: usize,
+                capacity: u64) -> usize {
+    let fixed = model_state_bytes(param_count, stage, n_ranks) + FRAMEWORK_RESERVE_BYTES;
+    if capacity <= fixed {
+        return 0;
+    }
+    let per = model.activation_bytes_per_sample() as f64 * (1.0 + TRANSIENT_FACTOR);
+    ((capacity - fixed) as f64 / per).floor() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::preset;
+
+    #[test]
+    fn stage_memory_strictly_decreasing() {
+        let psi = 500_000_000;
+        let n = 8;
+        let m: Vec<u64> = (0..4).map(|s| model_state_bytes(psi, s, n)).collect();
+        assert!(m[0] > m[1] && m[1] > m[2] && m[2] > m[3]);
+    }
+
+    #[test]
+    fn stage0_is_16_psi() {
+        assert_eq!(model_state_bytes(100, 0, 8), 1600);
+    }
+
+    #[test]
+    fn stage3_divides_everything() {
+        let psi = 1_000_000_000u64;
+        assert_eq!(model_state_bytes(psi, 3, 4), 16 * psi / 4);
+    }
+
+    #[test]
+    fn single_rank_stages_equal() {
+        let psi = 12345678;
+        for s in 0..4 {
+            assert_eq!(model_state_bytes(psi, s, 1), 16 * psi);
+        }
+    }
+
+    #[test]
+    fn activation_linear_in_batch() {
+        let m = preset("llama-0.5b").unwrap();
+        assert_eq!(activation_bytes(&m, 8), 8 * activation_bytes(&m, 1));
+    }
+
+    #[test]
+    fn true_mbs_monotone_in_capacity_and_stage() {
+        let m = preset("llama-0.5b").unwrap();
+        let psi = m.param_count();
+        let cap40 = 40 * (1u64 << 30);
+        let cap80 = 80 * (1u64 << 30);
+        for s in 0..4 {
+            assert!(true_mbs(&m, psi, s, 8, cap80) >= true_mbs(&m, psi, s, 8, cap40));
+        }
+        // higher stage frees memory -> larger mbs
+        assert!(true_mbs(&m, psi, 3, 8, cap40) > true_mbs(&m, psi, 0, 8, cap40));
+    }
+
+    #[test]
+    fn paper_scenario_0p5b_fits_differently_on_a100_variants() {
+        // cluster-A premise: A100-80G supports a larger mbs than A100-40G
+        // at the same compute.
+        let m = preset("llama-0.5b").unwrap();
+        let psi = m.param_count();
+        let mbs80 = true_mbs(&m, psi, 1, 8, 80 * (1 << 30));
+        let mbs40 = true_mbs(&m, psi, 1, 8, 40 * (1 << 30));
+        assert!(mbs80 > mbs40, "{mbs80} vs {mbs40}");
+        assert!(mbs40 > 0);
+    }
+
+    #[test]
+    fn oom_when_states_exceed_capacity() {
+        let m = preset("llama-1.1b").unwrap();
+        let psi = m.param_count();
+        // 1.1B * 16 bytes > 16GB: stage 0 cannot run on a T4
+        assert_eq!(true_mbs(&m, psi, 0, 4, 16 * (1 << 30)), 0);
+        // stage 3 on 4 ranks fits
+        assert!(true_mbs(&m, psi, 3, 4, 16 * (1 << 30)) > 0);
+    }
+}

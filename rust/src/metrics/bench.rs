@@ -1,0 +1,96 @@
+//! Minimal micro-benchmark harness (the offline image carries no
+//! criterion). Auto-calibrates iteration counts to a target runtime and
+//! reports mean / p50 / p95 like criterion's summary line.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Measured samples.
+    pub samples: usize,
+    /// Mean nanoseconds per iteration.
+    pub mean_ns: f64,
+    /// Median nanoseconds.
+    pub p50_ns: f64,
+    /// 95th-percentile nanoseconds.
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    /// criterion-style one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.samples
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`target_ms` and report statistics. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warm-up + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = (target_ms as f64) * 1e6;
+    let samples = ((budget_ns / once) as usize).clamp(5, 10_000);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p50 = times[times.len() / 2];
+    let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+    BenchResult { name: name.to_string(), samples, mean_ns: mean, p50_ns: p50, p95_ns: p95 }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", 5, || 1 + 1);
+        assert!(r.samples >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

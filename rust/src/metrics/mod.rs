@@ -1,0 +1,151 @@
+//! Metrics: FLOPs accounting, timers, report tables, and the built-in
+//! micro-benchmark harness ([`bench`]).
+
+pub mod bench;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// FLOPs accounting helpers (the Fig. 3-5 "TFLOPs" metric).
+pub mod flops {
+    use crate::config::model::ModelSpec;
+
+    /// Total fwd+bwd FLOPs to process `samples` sequences.
+    pub fn total(model: &ModelSpec, samples: usize) -> f64 {
+        model.flops_per_sample() * samples as f64
+    }
+
+    /// Cluster TFLOP/s given a wall time.
+    pub fn tflops(model: &ModelSpec, samples: usize, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            return 0.0;
+        }
+        total(model, samples) / wall_s / 1e12
+    }
+}
+
+/// A simple scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates labelled rows and renders a GitHub-markdown table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: append a row of displayables.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as GitHub markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::preset;
+
+    #[test]
+    fn flops_accounting() {
+        let m = preset("llama-0.5b").unwrap();
+        let t = flops::total(&m, 10);
+        assert!(t > 10.0 * 6.0 * m.param_count() as f64 * m.seq as f64 * 0.99);
+        assert!((flops::tflops(&m, 10, 2.0) - t / 2.0 / 1e12).abs() < 1e-9);
+        assert_eq!(flops::tflops(&m, 10, 0.0), 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3, &4.5]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 3 | 4.5 |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        Table::new(&["a"]).row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() > 0.0);
+    }
+}

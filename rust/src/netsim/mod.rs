@@ -1,0 +1,212 @@
+//! Network + collective-communication substrate.
+//!
+//! Replaces NCCL over NVLink/PCIe/IB with α-β ring cost models (Patarasuk
+//! & Yuan 2009; Thakur et al. 2005) — the same models the paper's
+//! analysis assumes. A collective over the whole data-parallel group is
+//! bottlenecked by the slowest link on the ring (paper appendix).
+//!
+//! The paper's ZeRO-3 FFN communication identity
+//! `Comm_volume = 24 d h^2` (all-gather fwd + all-gather bwd +
+//! reduce-scatter bwd over the two h×4h matrices) is reproduced by
+//! [`zero3_ffn_comm_volume`] and unit-tested below.
+
+use crate::cluster::{ClusterSpec, LinkKind};
+
+
+/// Collective operation kinds used by ZeRO stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Ring all-reduce: reduce-scatter + all-gather (ZeRO-0 gradients).
+    AllReduce,
+    /// Ring all-gather (ZeRO-1/2 param refresh, ZeRO-3 weight fetch).
+    AllGather,
+    /// Ring reduce-scatter (ZeRO-2/3 gradient partitioning).
+    ReduceScatter,
+    /// One-to-all broadcast (plan distribution — tiny).
+    Broadcast,
+}
+
+/// Cost model for collectives over a cluster.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    /// Number of ranks in the data-parallel group.
+    pub n: usize,
+    /// Effective unidirectional bandwidth of the bottleneck link (GB/s).
+    pub bw_gbs: f64,
+    /// Per-hop latency of the bottleneck link (seconds).
+    pub alpha_s: f64,
+}
+
+impl NetSim {
+    /// Build the cost model from a cluster spec (bottleneck-link rule).
+    pub fn from_cluster(cluster: &ClusterSpec) -> Self {
+        let link = cluster.bottleneck_link();
+        NetSim::from_link(cluster.n_gpus(), link)
+    }
+
+    /// Build from an explicit rank count and link kind.
+    pub fn from_link(n: usize, link: LinkKind) -> Self {
+        NetSim { n, bw_gbs: link.bandwidth_gbs(), alpha_s: link.latency_s() }
+    }
+
+    /// Time (seconds) for a collective moving `bytes` of payload.
+    ///
+    /// Ring costs for n ranks (V = payload bytes):
+    ///   all-gather / reduce-scatter: (n-1)/n * V / BW  + (n-1) α
+    ///   all-reduce:                2 (n-1)/n * V / BW + 2 (n-1) α
+    ///   broadcast (tree):            V / BW * ceil(log2 n) + α log2 n
+    pub fn time(&self, op: Collective, bytes: u64) -> f64 {
+        let n = self.n as f64;
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let v = bytes as f64;
+        let bw = self.bw_gbs * 1e9;
+        match op {
+            Collective::AllGather | Collective::ReduceScatter => {
+                (n - 1.0) / n * v / bw + (n - 1.0) * self.alpha_s
+            }
+            Collective::AllReduce => {
+                2.0 * (n - 1.0) / n * v / bw + 2.0 * (n - 1.0) * self.alpha_s
+            }
+            Collective::Broadcast => {
+                let hops = (n).log2().ceil();
+                v / bw * hops + self.alpha_s * hops
+            }
+        }
+    }
+
+    /// Per-micro-step communication time for a ZeRO stage, given the
+    /// model's parameter count (fp16 wire format, 2 bytes/param):
+    ///
+    /// * ZeRO-0/1 communicate only once per *iteration* (gradient
+    ///   all-reduce / reduce-scatter+all-gather at the sync point) —
+    ///   returns 0 here; use [`iteration_comm_time`].
+    /// * ZeRO-2: each micro-step's backward ends in a gradient
+    ///   reduce-scatter.
+    /// * ZeRO-3: all-gather (fwd) + all-gather (bwd) + reduce-scatter
+    ///   (bwd) per micro-step.
+    pub fn per_microstep_comm_time(&self, stage: u8, param_count: u64) -> f64 {
+        let bytes = 2 * param_count; // fp16 wire
+        match stage {
+            0 | 1 => 0.0,
+            2 => self.time(Collective::ReduceScatter, bytes),
+            3 => {
+                2.0 * self.time(Collective::AllGather, bytes)
+                    + self.time(Collective::ReduceScatter, bytes)
+            }
+            _ => panic!("invalid ZeRO stage {stage}"),
+        }
+    }
+
+    /// Per-iteration (sync-point) communication time for a ZeRO stage.
+    ///
+    /// * ZeRO-0: gradient all-reduce.
+    /// * ZeRO-1: gradient reduce-scatter at sync + param all-gather after
+    ///   the optimizer step (equivalent volume to all-reduce).
+    /// * ZeRO-2: param all-gather after the optimizer step (the gradient
+    ///   reduce-scatter already happened per micro-step).
+    /// * ZeRO-3: nothing extra (params stay sharded).
+    pub fn iteration_comm_time(&self, stage: u8, param_count: u64) -> f64 {
+        let bytes = 2 * param_count;
+        match stage {
+            0 => self.time(Collective::AllReduce, bytes),
+            1 => {
+                self.time(Collective::ReduceScatter, bytes)
+                    + self.time(Collective::AllGather, bytes)
+            }
+            2 => self.time(Collective::AllGather, bytes),
+            3 => 0.0,
+            _ => panic!("invalid ZeRO stage {stage}"),
+        }
+    }
+}
+
+/// The paper's appendix identity: ZeRO-3 communication volume for one FFN
+/// with hidden size `h`, intermediate `4h`, over `d` devices, in elements:
+/// `24 * d * h^2`.
+pub fn zero3_ffn_comm_volume(h: u64, d: u64) -> u64 {
+    let w = 2 * (h * 4 * h); // the two weight matrices, elements
+    let all_gather_fwd = w * d;
+    let all_gather_bwd = w * d;
+    let reduce_scatter_bwd = w * d;
+    all_gather_fwd + all_gather_bwd + reduce_scatter_bwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn paper_ffn_comm_identity() {
+        // Comm_volume = 24 d h^2 (paper appendix)
+        for (h, d) in [(1024u64, 4u64), (2048, 8), (4096, 3)] {
+            assert_eq!(zero3_ffn_comm_volume(h, d), 24 * d * h * h);
+        }
+    }
+
+    #[test]
+    fn allreduce_is_rs_plus_ag() {
+        let net = NetSim::from_link(8, LinkKind::Pcie);
+        let v = 1 << 30;
+        let ar = net.time(Collective::AllReduce, v);
+        let rs = net.time(Collective::ReduceScatter, v);
+        let ag = net.time(Collective::AllGather, v);
+        assert!((ar - (rs + ag)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let net = NetSim::from_link(1, LinkKind::Socket);
+        assert_eq!(net.time(Collective::AllReduce, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn comm_time_scales_with_bytes_and_inversely_with_bw() {
+        let fast = NetSim::from_link(4, LinkKind::Nvlink);
+        let slow = NetSim::from_link(4, LinkKind::Socket);
+        let v = 1 << 28;
+        assert!(slow.time(Collective::AllGather, v) > fast.time(Collective::AllGather, v) * 10.0);
+        assert!(
+            fast.time(Collective::AllGather, 2 * v) > fast.time(Collective::AllGather, v) * 1.9
+        );
+    }
+
+    #[test]
+    fn ring_term_grows_with_ranks() {
+        let v = 1 << 30;
+        let t4 = NetSim::from_link(4, LinkKind::Pcie).time(Collective::AllGather, v);
+        let t8 = NetSim::from_link(8, LinkKind::Pcie).time(Collective::AllGather, v);
+        // (n-1)/n grows: 0.75 -> 0.875
+        assert!(t8 > t4);
+    }
+
+    #[test]
+    fn stage_comm_structure() {
+        let net = NetSim::from_link(8, LinkKind::Ib);
+        let p = 500_000_000;
+        // per-micro-step: z3 > z2 > z1 = z0 = 0
+        assert_eq!(net.per_microstep_comm_time(0, p), 0.0);
+        assert_eq!(net.per_microstep_comm_time(1, p), 0.0);
+        let z2 = net.per_microstep_comm_time(2, p);
+        let z3 = net.per_microstep_comm_time(3, p);
+        assert!(z3 > 2.5 * z2, "z3 should be ~3x z2's RS cost");
+        // per-iteration: z0 = AR, z3 = 0
+        assert!(net.iteration_comm_time(0, p) > 0.0);
+        assert_eq!(net.iteration_comm_time(3, p), 0.0);
+    }
+
+    #[test]
+    fn cluster_bottleneck_feeds_netsim() {
+        let net = NetSim::from_cluster(&cluster::cluster_a());
+        assert_eq!(net.n, 8);
+        assert_eq!(net.bw_gbs, LinkKind::Ib.bandwidth_gbs());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ZeRO stage")]
+    fn invalid_stage_panics() {
+        NetSim::from_link(4, LinkKind::Ib).per_microstep_comm_time(4, 1);
+    }
+}

@@ -1,0 +1,359 @@
+//! The `Device` abstraction the online profiler runs against.
+//!
+//! Alg. 1 only needs memory probes and timed training steps; anything
+//! providing those can be profiled. Two implementations exist:
+//!
+//! * [`SimDevice`] — the calibrated device model (DESIGN.md §2
+//!   substitution for physical GPUs), with measurement noise and the
+//!   transient-memory spike that makes the linear estimate of Alg. 1
+//!   optimistic (exactly the paper's motivation for the binary search);
+//! * `runtime::RealDevice` — wraps a PJRT executable so the same
+//!   profiler can time real CPU execution in the e2e example.
+
+use crate::cluster::gpu::{GpuSpec, NoiseModel};
+use crate::config::model::ModelSpec;
+use crate::memmodel;
+use crate::netsim::NetSim;
+
+/// Step failure modes surfaced to the profiler.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepError {
+    /// The step did not fit in device memory.
+    Oom {
+        /// Bytes the step needed at peak.
+        needed: u64,
+        /// Device capacity.
+        capacity: u64,
+    },
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StepError::Oom { needed, capacity } => {
+                write!(f, "OOM: needed {needed} B of {capacity} B")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
+
+/// Timing breakdown of one training step, as a runtime monitor would
+/// report it. Collective entries *include* the idle time of early
+/// arrivers (the paper's observation: faster GPUs start the collective
+/// sooner and wait inside it).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepTiming {
+    /// Forward compute, seconds.
+    pub forward_s: f64,
+    /// Backward compute, seconds.
+    pub backward_s: f64,
+    /// Optimizer update, seconds.
+    pub optimizer_s: f64,
+    /// ZeRO-3 forward all-gather (0 otherwise).
+    pub fwd_allgather_s: f64,
+    /// ZeRO-3 backward all-gather (0 otherwise).
+    pub bwd_allgather_s: f64,
+    /// ZeRO-2/3 backward reduce-scatter (0 otherwise).
+    pub bwd_reducescatter_s: f64,
+}
+
+impl StepTiming {
+    /// Wall time of the whole step.
+    pub fn total(&self) -> f64 {
+        self.forward_s
+            + self.backward_s
+            + self.optimizer_s
+            + self.fwd_allgather_s
+            + self.bwd_allgather_s
+            + self.bwd_reducescatter_s
+    }
+
+    /// The paper's `TimeConsumedDuringStep` for a ZeRO stage: pure
+    /// compute, collectives subtracted (§"Time Consumed Estimation").
+    ///
+    /// * ZeRO-0/1 — forward + backward (sync happens after backward;
+    ///   optimizer time is "very short, and even equal" across ranks).
+    /// * ZeRO-2 — forward + (backward − reduce-scatter).
+    /// * ZeRO-3 — total − (fwd all-gather + bwd all-gather + bwd
+    ///   reduce-scatter) − optimizer.
+    pub fn time_consumed(&self, stage: u8) -> f64 {
+        match stage {
+            0 | 1 => self.forward_s + self.backward_s,
+            2 => self.forward_s + self.backward_s, // rs recorded separately
+            3 => self.forward_s + self.backward_s,
+            _ => panic!("invalid ZeRO stage {stage}"),
+        }
+    }
+}
+
+/// Anything Alg. 1 can profile.
+pub trait Device: Send {
+    /// Catalog / display name.
+    fn name(&self) -> &str;
+    /// Global rank.
+    fn rank(&self) -> usize;
+    /// Total device memory (bytes).
+    fn mem_total(&self) -> u64;
+    /// Currently allocated bytes (the `CurrentMemoryAlloced()` probe).
+    fn mem_allocated(&self) -> u64;
+    /// Single-number FLOPs rating (what Whale's cost model uses).
+    fn flops_rating(&self) -> f64;
+    /// Select the ZeRO stage for subsequent calls.
+    fn set_stage(&mut self, stage: u8);
+    /// Forward pass only — updates `mem_allocated`. Used by the linear
+    /// memory estimate.
+    fn forward(&mut self, batch: usize) -> Result<(), StepError>;
+    /// One full training step at `batch`, returning the monitor timing.
+    fn step(&mut self, batch: usize) -> Result<StepTiming, StepError>;
+    /// Free activations (between probes).
+    fn reset(&mut self);
+}
+
+/// Simulated GPU backed by the calibrated device model.
+pub struct SimDevice {
+    spec: GpuSpec,
+    model: ModelSpec,
+    rank: usize,
+    n_ranks: usize,
+    stage: u8,
+    net: NetSim,
+    noise: NoiseModel,
+    allocated: u64,
+    param_count: u64,
+}
+
+impl SimDevice {
+    /// Create a simulated device for `rank` of an `n_ranks` job.
+    pub fn new(
+        spec: GpuSpec,
+        model: ModelSpec,
+        rank: usize,
+        n_ranks: usize,
+        net: NetSim,
+        noise_sigma: f64,
+        seed: u64,
+    ) -> Self {
+        let param_count = model.param_count();
+        SimDevice {
+            spec,
+            model,
+            rank,
+            n_ranks,
+            stage: 0,
+            net,
+            noise: NoiseModel::new(seed.wrapping_add(rank as u64 * 7919), noise_sigma),
+            allocated: 0,
+            param_count,
+        }
+    }
+
+    fn fixed_bytes(&self) -> u64 {
+        memmodel::model_state_bytes(self.param_count, self.stage, self.n_ranks)
+            + memmodel::FRAMEWORK_RESERVE_BYTES
+    }
+
+    fn peak_bytes(&self, batch: usize) -> u64 {
+        memmodel::peak_bytes(&self.model, self.param_count, self.stage, self.n_ranks, batch)
+    }
+
+    /// Ground-truth compute time (no noise) — used by the evaluation
+    /// harness to score plans against "reality".
+    pub fn true_step_compute_time(&self, batch: usize) -> f64 {
+        let tokens = (batch as u64 * self.model.seq) as f64;
+        self.spec
+            .compute_time(tokens, self.model.flops_per_token(), self.model.n_layers as usize)
+    }
+
+    /// Ground-truth maximum batch size for the current stage.
+    pub fn true_mbs(&self) -> usize {
+        memmodel::true_mbs(
+            &self.model,
+            self.param_count,
+            self.stage,
+            self.n_ranks,
+            self.spec.mem_bytes(),
+        )
+    }
+
+    /// The device specification.
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+}
+
+impl Device for SimDevice {
+    fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn mem_total(&self) -> u64 {
+        self.spec.mem_bytes()
+    }
+
+    fn mem_allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    fn flops_rating(&self) -> f64 {
+        self.spec.flops_rating()
+    }
+
+    fn set_stage(&mut self, stage: u8) {
+        assert!(stage < 4, "invalid ZeRO stage {stage}");
+        self.stage = stage;
+        self.allocated = self.fixed_bytes();
+    }
+
+    fn forward(&mut self, batch: usize) -> Result<(), StepError> {
+        // steady-state allocation is linear in batch; the transient spike
+        // decides OOM but is invisible to the post-forward probe
+        let peak = self.peak_bytes(batch);
+        if peak > self.mem_total() {
+            return Err(StepError::Oom { needed: peak, capacity: self.mem_total() });
+        }
+        self.allocated = self.fixed_bytes() + memmodel::activation_bytes(&self.model, batch);
+        Ok(())
+    }
+
+    fn step(&mut self, batch: usize) -> Result<StepTiming, StepError> {
+        let peak = self.peak_bytes(batch);
+        if peak > self.mem_total() {
+            return Err(StepError::Oom { needed: peak, capacity: self.mem_total() });
+        }
+        self.allocated = self.fixed_bytes() + memmodel::activation_bytes(&self.model, batch);
+
+        let compute = self.true_step_compute_time(batch) * self.noise.factor();
+        // the canonical 1/3 forward, 2/3 backward split
+        let fwd = compute / 3.0;
+        let bwd = compute * 2.0 / 3.0;
+        // optimizer: bandwidth-bound over the rank's optimizer shard;
+        // "very short, and even equal" across ranks (paper)
+        let shard = self.param_count as f64 / self.n_ranks.max(1) as f64;
+        let opt = 12.0 * shard / (self.spec.mem_bw_gbs * 1e9);
+
+        let mut t = StepTiming {
+            forward_s: fwd,
+            backward_s: bwd,
+            optimizer_s: opt,
+            ..Default::default()
+        };
+        match self.stage {
+            0 | 1 => {}
+            2 => {
+                t.bwd_reducescatter_s =
+                    self.net.per_microstep_comm_time(2, self.param_count);
+            }
+            3 => {
+                let ag = self.net.time(
+                    crate::netsim::Collective::AllGather,
+                    2 * self.param_count,
+                );
+                let rs = self.net.time(
+                    crate::netsim::Collective::ReduceScatter,
+                    2 * self.param_count,
+                );
+                t.fwd_allgather_s = ag;
+                t.bwd_allgather_s = ag;
+                t.bwd_reducescatter_s = rs;
+            }
+            _ => unreachable!(),
+        }
+        Ok(t)
+    }
+
+    fn reset(&mut self) {
+        self.allocated = self.fixed_bytes();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{catalog, LinkKind};
+    use crate::config::model::preset;
+
+    fn dev(gpu: &str, stage: u8) -> SimDevice {
+        dev_model(gpu, stage, "llama-0.5b")
+    }
+
+    fn dev_model(gpu: &str, stage: u8, model: &str) -> SimDevice {
+        let mut d = SimDevice::new(
+            catalog::spec_or_panic(gpu),
+            preset(model).unwrap(),
+            0,
+            8,
+            NetSim::from_link(8, LinkKind::Ib),
+            0.0,
+            42,
+        );
+        d.set_stage(stage);
+        d
+    }
+
+    #[test]
+    fn forward_updates_allocation_linearly() {
+        let mut d = dev("A100-80G", 1);
+        d.forward(1).unwrap();
+        let a1 = d.mem_allocated() - d.fixed_bytes();
+        d.reset();
+        d.forward(4).unwrap();
+        let a4 = d.mem_allocated() - d.fixed_bytes();
+        assert_eq!(a4, 4 * a1);
+    }
+
+    #[test]
+    fn oom_beyond_true_mbs() {
+        let mut d = dev("V100-16G", 1);
+        let mbs = d.true_mbs();
+        assert!(mbs > 0);
+        assert!(d.step(mbs).is_ok());
+        assert!(matches!(d.step(mbs + 1), Err(StepError::Oom { .. })));
+    }
+
+    #[test]
+    fn stage3_step_has_collective_components() {
+        let mut d = dev("A100-80G", 3);
+        let t = d.step(2).unwrap();
+        assert!(t.fwd_allgather_s > 0.0);
+        assert!(t.bwd_allgather_s > 0.0);
+        assert!(t.bwd_reducescatter_s > 0.0);
+        let mut d01 = dev("A100-80G", 0);
+        let t0 = d01.step(2).unwrap();
+        assert_eq!(t0.fwd_allgather_s, 0.0);
+        assert_eq!(t0.bwd_reducescatter_s, 0.0);
+    }
+
+    #[test]
+    fn time_consumed_excludes_collectives() {
+        let mut d = dev("A100-80G", 3);
+        let t = d.step(2).unwrap();
+        assert!(t.time_consumed(3) < t.total());
+        let recon = t.time_consumed(3)
+            + t.optimizer_s
+            + t.fwd_allgather_s
+            + t.bwd_allgather_s
+            + t.bwd_reducescatter_s;
+        assert!((recon - t.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noiseless_step_deterministic() {
+        let mut d1 = dev("T4", 1);
+        let mut d2 = dev("T4", 1);
+        assert_eq!(d1.step(2).unwrap(), d2.step(2).unwrap());
+    }
+
+    #[test]
+    fn higher_stage_raises_mbs() {
+        // model states must dominate for the stage to matter: 1.1B on 16G
+        let d1 = dev_model("V100-16G", 1, "llama-1.1b");
+        let d3 = dev_model("V100-16G", 3, "llama-1.1b");
+        assert!(d3.true_mbs() > d1.true_mbs(), "{} vs {}", d3.true_mbs(), d1.true_mbs());
+    }
+}

@@ -1,0 +1,343 @@
+//! Online profiling of GPUs — the paper's Algorithm 1.
+//!
+//! For every GPU, in parallel and in one shot per ZeRO stage:
+//!
+//! 1. **Linear memory estimate** — run one forward at batch 1, read the
+//!    allocator before/after, and extrapolate the theoretical max batch
+//!    size (activation memory is linear in batch). This over-estimates:
+//!    transient peaks are invisible to the probe.
+//! 2. **Exponential probe** — step the model at b = 1, 2, 4, … up to the
+//!    estimate (or first OOM), recording `TimeConsumedDuringStep` at
+//!    every probe (stage-aware: collectives subtracted, see
+//!    [`device::StepTiming::time_consumed`]).
+//! 3. **Binary search** — refine the exact `mbs` between the last good
+//!    and first failing batch.
+//!
+//! If even batch 1 OOMs, the stage is escalated (0 → 1 → 2 → 3), the
+//! paper's automatic stage selection.
+
+pub mod device;
+
+pub use device::{Device, SimDevice, StepError, StepTiming};
+
+use crate::curves::ProfiledPoint;
+
+/// Timing measurements per probe point. The paper averages several
+/// iterations per batch size ("each GPU performs five iterations at its
+/// respective mbs, and we compute the average"); 3 keeps the overhead of
+/// Table 2 realistic while suppressing most measurement noise.
+pub const PROBE_REPS: usize = 3;
+
+/// Everything Alg. 1 learns about one GPU.
+#[derive(Debug, Clone)]
+pub struct ProfileResult {
+    /// Global rank.
+    pub rank: usize,
+    /// Device name.
+    pub name: String,
+    /// Discovered maximum batch size (no OOM).
+    pub mbs: usize,
+    /// `(batch, TimeConsumedDuringStep)` samples for curve fitting.
+    pub points: Vec<ProfiledPoint>,
+    /// The device's FLOPs rating (Whale baseline input).
+    pub flops_rating: f64,
+    /// Number of `model.step` invocations spent probing.
+    pub probe_steps: usize,
+    /// Simulated wall time spent probing (Table 2's overhead).
+    pub probe_time_s: f64,
+}
+
+/// Cluster-level profiling outcome: the stage actually used (after
+/// escalation) and the per-rank results.
+#[derive(Debug, Clone)]
+pub struct ClusterProfile {
+    /// ZeRO stage the profile is valid for.
+    pub stage: u8,
+    /// Per-rank results, rank order.
+    pub ranks: Vec<ProfileResult>,
+}
+
+/// Profiling failure.
+#[derive(Debug, PartialEq)]
+pub enum ProfileError {
+    /// Batch 1 OOMs on some rank even at ZeRO-3.
+    ModelTooLarge {
+        /// Rank that cannot fit a single sample.
+        rank: usize,
+    },
+}
+
+impl std::fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProfileError::ModelTooLarge { rank } => {
+                write!(f, "model does not fit a single sample on rank {rank} even at ZeRO-3")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProfileError {}
+
+/// Outcome of profiling one device at a fixed stage.
+pub enum DeviceOutcome {
+    /// Profiling succeeded.
+    Ok(ProfileResult),
+    /// Even batch 1 OOMs — escalate the stage.
+    NeedsHigherStage,
+}
+
+/// Measure one probe point with `PROBE_REPS`-fold averaging. The first
+/// call decides OOM; repeats can only succeed once it did.
+fn measure(dev: &mut dyn Device, batch: usize, stage: u8, points: &mut Vec<ProfiledPoint>,
+           steps: &mut usize, probe_time: &mut f64) -> Result<(), StepError> {
+    let first = dev.step(batch)?;
+    let mut sum = first.time_consumed(stage);
+    *probe_time += first.total();
+    *steps += 1;
+    for _ in 1..PROBE_REPS {
+        if let Ok(t) = dev.step(batch) {
+            sum += t.time_consumed(stage);
+            *probe_time += t.total();
+            *steps += 1;
+        }
+    }
+    points.push(ProfiledPoint { batch, step_time_s: sum / PROBE_REPS as f64 });
+    Ok(())
+}
+
+/// Algorithm 1 for a single device at a fixed ZeRO stage (the unit the
+/// coordinator's workers run in parallel).
+pub fn profile_device(dev: &mut dyn Device, stage: u8) -> DeviceOutcome {
+    dev.set_stage(stage);
+    dev.reset();
+
+    let mut points: Vec<ProfiledPoint> = Vec::new();
+    let mut probe_steps = 0usize;
+    let mut probe_time = 0.0f64;
+
+    // -- step 1: linear estimate from a single forward ---------------------
+    let bf = dev.mem_allocated();
+    if dev.forward(1).is_err() {
+        return DeviceOutcome::NeedsHigherStage;
+    }
+    let af = dev.mem_allocated();
+    let per_batch = (af - bf).max(1);
+    let headroom = dev.mem_total().saturating_sub(bf);
+    let mbs_estimate = (headroom / per_batch).max(1) as usize;
+    dev.reset();
+
+    // -- step 2: exponential probe -----------------------------------------
+    let mut last_ok = 0usize;
+    let mut first_fail: Option<usize> = None;
+    let mut b = 1usize;
+    while b <= mbs_estimate {
+        match measure(dev, b, stage, &mut points, &mut probe_steps, &mut probe_time) {
+            Ok(()) => last_ok = b,
+            Err(StepError::Oom { .. }) => {
+                first_fail = Some(b);
+                break;
+            }
+        }
+        if b == mbs_estimate {
+            break;
+        }
+        b = (b * 2).min(mbs_estimate);
+    }
+    if last_ok == 0 {
+        return DeviceOutcome::NeedsHigherStage;
+    }
+
+    // -- step 3: binary search between last_ok and the upper bound ---------
+    let mut lo = last_ok;
+    let mut hi = first_fail.map(|f| f - 1).unwrap_or(mbs_estimate);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        match measure(dev, mid, stage, &mut points, &mut probe_steps, &mut probe_time) {
+            Ok(()) => lo = mid,
+            Err(StepError::Oom { .. }) => {
+                hi = mid - 1;
+                probe_steps += 1; // OOM attempts cost a step too
+            }
+        }
+    }
+    let mbs = lo;
+
+    // make sure the curve has its endpoint measured
+    if !points.iter().any(|p| p.batch == mbs) {
+        let _ = measure(dev, mbs, stage, &mut points, &mut probe_steps, &mut probe_time);
+    }
+    // a second interior point guarantees >= 2 knots even when mbs == 1
+    if points.len() < 2 && mbs >= 1 {
+        let _ = measure(dev, 1, stage, &mut points, &mut probe_steps, &mut probe_time);
+    }
+
+    points.sort_by_key(|p| p.batch);
+    points.dedup_by_key(|p| p.batch);
+
+    DeviceOutcome::Ok(ProfileResult {
+        rank: dev.rank(),
+        name: dev.name().to_string(),
+        mbs,
+        points,
+        flops_rating: dev.flops_rating(),
+        probe_steps,
+        probe_time_s: probe_time,
+    })
+}
+
+/// Profile a cluster at `requested_stage`, escalating the ZeRO stage
+/// whenever any rank cannot fit a single sample (paper: "starting from
+/// ZeRO-0, if Poplar find that the current stage cannot even run a
+/// single batch, it will automatically increase the ZeRO stage").
+pub fn profile_cluster(
+    devices: &mut [Box<dyn Device>],
+    requested_stage: u8,
+) -> Result<ClusterProfile, ProfileError> {
+    assert!(requested_stage < 4);
+    'stage: for stage in requested_stage..4 {
+        let mut results = Vec::with_capacity(devices.len());
+        for dev in devices.iter_mut() {
+            match profile_device(dev.as_mut(), stage) {
+                DeviceOutcome::Ok(r) => results.push(r),
+                DeviceOutcome::NeedsHigherStage => {
+                    if stage == 3 {
+                        return Err(ProfileError::ModelTooLarge { rank: dev.rank() });
+                    }
+                    continue 'stage;
+                }
+            }
+        }
+        return Ok(ClusterProfile { stage, ranks: results });
+    }
+    unreachable!("loop covers stages 0..=3")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{catalog, LinkKind};
+    use crate::config::model::preset;
+    use crate::netsim::NetSim;
+
+    fn sim(gpu: &str, model: &str, rank: usize, n: usize, sigma: f64) -> Box<dyn Device> {
+        Box::new(SimDevice::new(
+            catalog::spec_or_panic(gpu),
+            preset(model).unwrap(),
+            rank,
+            n,
+            NetSim::from_link(n, LinkKind::Ib),
+            sigma,
+            1234,
+        ))
+    }
+
+    fn true_mbs(gpu: &str, model: &str, stage: u8, n: usize) -> usize {
+        let mut d = SimDevice::new(
+            catalog::spec_or_panic(gpu),
+            preset(model).unwrap(),
+            0,
+            n,
+            NetSim::from_link(n, LinkKind::Ib),
+            0.0,
+            1,
+        );
+        d.set_stage(stage);
+        d.true_mbs()
+    }
+
+    #[test]
+    fn finds_exact_mbs() {
+        // The discovered mbs must equal the ground-truth OOM boundary —
+        // the paper's "no OOM in later training" guarantee.
+        for gpu in ["A100-80G", "A100-40G", "V100-16G", "T4"] {
+            let mut devs = vec![sim(gpu, "llama-0.5b", 0, 8, 0.0)];
+            let prof = profile_cluster(&mut devs, 1).unwrap();
+            assert_eq!(prof.stage, 1);
+            assert_eq!(prof.ranks[0].mbs, true_mbs(gpu, "llama-0.5b", 1, 8), "{gpu}");
+        }
+    }
+
+    #[test]
+    fn probe_count_is_logarithmic() {
+        let mut devs = vec![sim("A100-80G", "llama-0.5b", 0, 8, 0.0)];
+        let prof = profile_cluster(&mut devs, 1).unwrap();
+        let mbs = prof.ranks[0].mbs;
+        // (exp probe ~log2(mbs) + binary search ~log2(mbs) + endpoint)
+        // points, each measured PROBE_REPS times
+        let budget = PROBE_REPS * (2 * (mbs as f64).log2().ceil() as usize + 6);
+        assert!(
+            prof.ranks[0].probe_steps <= budget,
+            "{} probes for mbs={mbs} (budget {budget})",
+            prof.ranks[0].probe_steps
+        );
+    }
+
+    #[test]
+    fn stage_escalation_when_model_too_big() {
+        // llama-1.1b stage-0 needs 16ψ ≈ 17.6 GB > V100-16G: escalate.
+        let mut devs: Vec<Box<dyn Device>> = (0..4)
+            .map(|r| sim("V100-16G", "llama-1.1b", r, 4, 0.0))
+            .collect();
+        let prof = profile_cluster(&mut devs, 0).unwrap();
+        assert!(prof.stage > 0, "stage should escalate, got {}", prof.stage);
+        for r in &prof.ranks {
+            assert!(r.mbs >= 1);
+        }
+    }
+
+    #[test]
+    fn model_too_large_error() {
+        // llama-7b can't fit a single sample on one T4 even at ZeRO-3.
+        let mut devs = vec![sim("T4", "llama-7b", 0, 1, 0.0)];
+        let err = profile_cluster(&mut devs, 0).unwrap_err();
+        assert_eq!(err, ProfileError::ModelTooLarge { rank: 0 });
+    }
+
+    #[test]
+    fn points_cover_endpoint_and_are_sorted() {
+        let mut devs = vec![sim("V100S-32G", "llama-0.5b", 0, 8, 0.0)];
+        let prof = profile_cluster(&mut devs, 2).unwrap();
+        let r = &prof.ranks[0];
+        assert!(r.points.len() >= 2);
+        assert!(r.points.windows(2).all(|w| w[0].batch < w[1].batch));
+        assert_eq!(r.points.last().unwrap().batch, r.mbs);
+    }
+
+    #[test]
+    fn noisy_profile_still_finds_boundary() {
+        let mut devs = vec![sim("A100-40G", "llama-0.5b", 0, 8, 0.02)];
+        let prof = profile_cluster(&mut devs, 1).unwrap();
+        // OOM boundary is noise-free in the sim; must still be exact
+        assert_eq!(prof.ranks[0].mbs, true_mbs("A100-40G", "llama-0.5b", 1, 8));
+    }
+
+    #[test]
+    fn heterogeneous_cluster_profiles_all_ranks() {
+        let mut devs: Vec<Box<dyn Device>> = vec![
+            sim("A800-80G", "llama-0.5b", 0, 4, 0.01),
+            sim("A800-80G", "llama-0.5b", 1, 4, 0.01),
+            sim("V100S-32G", "llama-0.5b", 2, 4, 0.01),
+            sim("V100S-32G", "llama-0.5b", 3, 4, 0.01),
+        ];
+        let prof = profile_cluster(&mut devs, 1).unwrap();
+        assert_eq!(prof.ranks.len(), 4);
+        // 80G rank must discover a larger mbs than 32G rank
+        assert!(prof.ranks[0].mbs > prof.ranks[2].mbs);
+        // and its measured speed at equal batch must be higher
+        let a = &prof.ranks[0];
+        let v = &prof.ranks[2];
+        let t_a = a.points.iter().find(|p| p.batch == 4).map(|p| p.step_time_s);
+        let t_v = v.points.iter().find(|p| p.batch == 4).map(|p| p.step_time_s);
+        if let (Some(ta), Some(tv)) = (t_a, t_v) {
+            assert!(ta < tv);
+        }
+    }
+
+    #[test]
+    fn probe_time_accumulates() {
+        let mut devs = vec![sim("T4", "llama-0.5b", 0, 4, 0.0)];
+        let prof = profile_cluster(&mut devs, 2).unwrap();
+        assert!(prof.ranks[0].probe_time_s > 0.0);
+    }
+}

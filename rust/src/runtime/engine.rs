@@ -1,0 +1,301 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once per
+//! micro-batch variant, execute train steps from the rust hot path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos — see `aot_recipe` in /opt/xla-example/README.md).
+//! Executables are cached per `(kind, batch)`: Poplar's heterogeneous
+//! plans give every rank its own micro-batch size and PJRT executables
+//! are shape-specialized.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::meta::ModelMeta;
+
+/// Which artifact an executable came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// `step_b{B}`: fwd + bwd + fused SGD update (single-rank path).
+    Fused,
+    /// `grad_b{B}`: fwd + bwd, raw gradients (multi-rank path).
+    Grad,
+    /// `apply_update`: optimizer step on reduced gradients.
+    Apply,
+}
+
+impl StepKind {
+    fn file(&self, b: usize) -> String {
+        match self {
+            StepKind::Fused => format!("step_b{b}.hlo.txt"),
+            StepKind::Grad => format!("grad_b{b}.hlo.txt"),
+            StepKind::Apply => "apply_update.hlo.txt".to_string(),
+        }
+    }
+
+    fn batched(&self) -> bool {
+        matches!(self, StepKind::Fused | StepKind::Grad)
+    }
+}
+
+/// Outcome of a fused train step.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// Cross-entropy loss of the micro-batch.
+    pub loss: f32,
+}
+
+/// Outcome of a grad step.
+#[derive(Debug)]
+pub struct GradOutput {
+    /// Per-parameter gradients (ABI order).
+    pub grads: Vec<Vec<f32>>,
+    /// Cross-entropy loss of the micro-batch.
+    pub loss: f32,
+}
+
+/// Parameters resident on the PJRT device.
+///
+/// §Perf optimization: `run_grad_step` re-uploads every parameter
+/// literal on every call (~4·ψ bytes per micro-step). Within one
+/// iteration the parameters are frozen (gradients only apply at the
+/// end), so the coordinator uploads them once per iteration and reuses
+/// the device buffers across all micro-steps via
+/// [`Engine::run_grad_step_device`].
+pub struct DeviceParams {
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceParams {
+    /// Number of parameter buffers.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Whether there are no buffers.
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// The PJRT engine: one CPU client + executable cache for one model.
+pub struct Engine {
+    client: xla::PjRtClient,
+    meta: ModelMeta,
+    dir: PathBuf,
+    cache: HashMap<(StepKind, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (`artifacts/<preset>`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, meta, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Artifact metadata.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// PJRT platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `(kind, b)`.
+    pub fn executable(
+        &mut self,
+        kind: StepKind,
+        b: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (kind, if kind.batched() { b } else { 0 });
+        if !self.cache.contains_key(&key) {
+            if kind.batched() && !self.meta.batch_variants.contains(&b) {
+                bail!(
+                    "no compiled variant for batch {b}; available: {:?}",
+                    self.meta.batch_variants
+                );
+            }
+            let path = self.dir.join(kind.file(b));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.cache.insert(key, exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Upload one parameter set as device buffers (owned by rust).
+    ///
+    /// NOTE: everything executes through `execute_b` with rust-owned
+    /// buffers. The vendored xla crate's `execute()` (Literal path)
+    /// LEAKS its input device buffers — `BufferFromHostLiteral` +
+    /// `release()` with no delete in xla_rs.cc — ~4ψ bytes per call,
+    /// which OOM-killed a 200-iteration training run before this
+    /// workaround (EXPERIMENTS.md §Perf).
+    fn param_buffers(&self, params: &[Vec<f32>]) -> Result<Vec<xla::PjRtBuffer>> {
+        if params.len() != self.meta.params.len() {
+            bail!("expected {} params, got {}", self.meta.params.len(), params.len());
+        }
+        let mut bufs = Vec::with_capacity(params.len());
+        for (spec, vals) in self.meta.params.iter().zip(params) {
+            if vals.len() != spec.numel() {
+                bail!("param {} has {} elements, expected {}", spec.name, vals.len(),
+                      spec.numel());
+            }
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(vals, &spec.shape, None)
+                .map_err(|e| anyhow!("upload {}: {e:?}", spec.name))?;
+            bufs.push(buf);
+        }
+        Ok(bufs)
+    }
+
+    fn token_buffer(&self, tokens: &[i32], b: usize) -> Result<xla::PjRtBuffer> {
+        let want = b * (self.meta.seq + 1);
+        if tokens.len() != want {
+            bail!("tokens: got {} ids, expected {} (b={b}, seq+1={})", tokens.len(), want,
+                  self.meta.seq + 1);
+        }
+        self.client
+            .buffer_from_host_buffer::<i32>(tokens, &[b, self.meta.seq + 1], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))
+    }
+
+    fn run(
+        &mut self,
+        kind: StepKind,
+        b: usize,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(kind, b)?;
+        let result = exe.execute_b(inputs).map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: single tuple root
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    fn read_flat(&self, lit: &xla::Literal, who: &str) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("read {who}: {e:?}"))
+    }
+
+    /// Fused single-rank step: updates `params` and `momenta` in place,
+    /// returns the loss.
+    pub fn run_fused_step(
+        &mut self,
+        b: usize,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        tokens: &[i32],
+    ) -> Result<StepOutput> {
+        let n = self.meta.params.len();
+        let mut inputs = self.param_buffers(params)?;
+        inputs.extend(self.param_buffers(momenta)?);
+        inputs.push(self.token_buffer(tokens, b)?);
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().collect();
+        let outs = self.run(StepKind::Fused, b, &refs)?;
+        if outs.len() != 2 * n + 1 {
+            bail!("fused step returned {} outputs, expected {}", outs.len(), 2 * n + 1);
+        }
+        for i in 0..n {
+            params[i] = self.read_flat(&outs[i], "param")?;
+            momenta[i] = self.read_flat(&outs[n + i], "momentum")?;
+        }
+        let loss = outs[2 * n]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        Ok(StepOutput { loss })
+    }
+
+    /// Multi-rank grad step: returns raw gradients + loss, leaves params
+    /// untouched.
+    pub fn run_grad_step(
+        &mut self,
+        b: usize,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+    ) -> Result<GradOutput> {
+        let n = self.meta.params.len();
+        let mut inputs = self.param_buffers(params)?;
+        inputs.push(self.token_buffer(tokens, b)?);
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().collect();
+        let outs = self.run(StepKind::Grad, b, &refs)?;
+        if outs.len() != n + 1 {
+            bail!("grad step returned {} outputs, expected {}", outs.len(), n + 1);
+        }
+        let mut grads = Vec::with_capacity(n);
+        for (i, o) in outs.iter().take(n).enumerate() {
+            let _ = i;
+            grads.push(self.read_flat(o, "grad")?);
+        }
+        let loss = outs[n]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        Ok(GradOutput { grads, loss })
+    }
+
+    /// Upload parameters to device buffers once (see [`DeviceParams`]).
+    pub fn upload_params(&self, params: &[Vec<f32>]) -> Result<DeviceParams> {
+        Ok(DeviceParams { bufs: self.param_buffers(params)? })
+    }
+
+    /// Grad step with device-resident parameters (§Perf hot path): only
+    /// the token batch crosses the host↔device boundary on the way in.
+    pub fn run_grad_step_device(
+        &mut self,
+        b: usize,
+        params: &DeviceParams,
+        tokens: &[i32],
+    ) -> Result<GradOutput> {
+        let n = self.meta.params.len();
+        let tok_buf = self.token_buffer(tokens, b)?;
+        let mut args: Vec<&xla::PjRtBuffer> = params.bufs.iter().collect();
+        args.push(&tok_buf);
+        let outs = self.run(StepKind::Grad, b, &args)?;
+        if outs.len() != n + 1 {
+            bail!("grad step returned {} outputs, expected {}", outs.len(), n + 1);
+        }
+        let mut grads = Vec::with_capacity(n);
+        for o in outs.iter().take(n) {
+            grads.push(self.read_flat(o, "grad")?);
+        }
+        let loss = outs[n]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        Ok(GradOutput { grads, loss })
+    }
+
+    /// Optimizer step on reduced gradients: updates `params`/`momenta`.
+    pub fn run_apply_update(
+        &mut self,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        let n = self.meta.params.len();
+        let mut inputs = self.param_buffers(params)?;
+        inputs.extend(self.param_buffers(momenta)?);
+        inputs.extend(self.param_buffers(grads)?);
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().collect();
+        let outs = self.run(StepKind::Apply, 0, &refs)?;
+        if outs.len() != 2 * n {
+            bail!("apply returned {} outputs, expected {}", outs.len(), 2 * n);
+        }
+        for i in 0..n {
+            params[i] = self.read_flat(&outs[i], "param")?;
+            momenta[i] = self.read_flat(&outs[n + i], "momentum")?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,239 @@
+//! Artifact metadata: the python↔rust ABI (`artifacts/<preset>/meta.txt`).
+//!
+//! `aot.py` writes a flat-text twin of `meta.json` (the offline image has
+//! no JSON crate). Format: one `key value` pair per line, plus one
+//! `param <name> <d0,d1,...>` line per parameter in ABI order.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shape and name of one parameter in ABI order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    /// Parameter name (`embed`, `layer0.wq`, …).
+    pub name: String,
+    /// Dimensions (possibly 1-D).
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Preset name the artifacts were built from.
+    pub preset: String,
+    /// `llama` or `bert`.
+    pub arch: String,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Hidden size.
+    pub d_model: usize,
+    /// Layers.
+    pub n_layers: usize,
+    /// Heads.
+    pub n_heads: usize,
+    /// FFN intermediate size.
+    pub d_ff: usize,
+    /// Sequence length the step executables are specialized for.
+    pub seq: usize,
+    /// Learning rate baked into `step`/`apply_update`.
+    pub lr: f64,
+    /// SGD momentum baked into the update.
+    pub momentum: f64,
+    /// Total parameter count.
+    pub param_count: usize,
+    /// fwd+bwd FLOPs per token.
+    pub flops_per_token: f64,
+    /// Whether the Pallas kernels were used in the forward path.
+    pub use_pallas: bool,
+    /// Compiled micro-batch-size variants.
+    pub batch_variants: Vec<usize>,
+    /// Parameter layout in ABI order.
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelMeta {
+    /// Parse `meta.txt` content.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        let mut params = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("meta.txt line {}: no value", ln + 1))?;
+            if key == "param" {
+                let (name, dims) = rest
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("meta.txt line {}: bad param", ln + 1))?;
+                let shape: Vec<usize> = dims
+                    .split(',')
+                    .map(|d| d.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .with_context(|| format!("meta.txt line {}: bad dims", ln + 1))?;
+                params.push(ParamSpec { name: name.to_string(), shape });
+            } else {
+                kv.insert(key, rest);
+            }
+        }
+        let get = |k: &str| kv.get(k).copied().ok_or_else(|| anyhow!("meta.txt missing {k}"));
+        let usize_of = |k: &str| -> Result<usize> {
+            Ok(get(k)?.parse::<usize>().with_context(|| format!("meta.txt {k}"))?)
+        };
+        let f64_of = |k: &str| -> Result<f64> {
+            Ok(get(k)?.parse::<f64>().with_context(|| format!("meta.txt {k}"))?)
+        };
+        let batch_variants: Vec<usize> = get("batch_variants")?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .context("meta.txt batch_variants")?;
+        if params.is_empty() {
+            bail!("meta.txt has no param lines");
+        }
+        let meta = ModelMeta {
+            preset: get("preset")?.to_string(),
+            arch: get("arch")?.to_string(),
+            vocab: usize_of("vocab")?,
+            d_model: usize_of("d_model")?,
+            n_layers: usize_of("n_layers")?,
+            n_heads: usize_of("n_heads")?,
+            d_ff: usize_of("d_ff")?,
+            seq: usize_of("seq")?,
+            lr: f64_of("lr")?,
+            momentum: f64_of("momentum")?,
+            param_count: usize_of("param_count")?,
+            flops_per_token: f64_of("flops_per_token")?,
+            use_pallas: get("use_pallas")? == "1",
+            batch_variants,
+            params,
+        };
+        let total: usize = meta.params.iter().map(|p| p.numel()).sum();
+        if total != meta.param_count {
+            bail!("param shapes sum to {total}, meta says {}", meta.param_count);
+        }
+        if meta.batch_variants.is_empty() {
+            bail!("no batch variants compiled");
+        }
+        Ok(meta)
+    }
+
+    /// Load `<dir>/meta.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let p = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        Self::parse(&text)
+    }
+
+    /// The equivalent analytic [`crate::config::model::ModelSpec`].
+    pub fn model_spec(&self) -> crate::config::model::ModelSpec {
+        crate::config::model::ModelSpec {
+            name: self.preset.clone(),
+            arch: self.arch.clone(),
+            vocab: self.vocab as u64,
+            d_model: self.d_model as u64,
+            n_layers: self.n_layers as u64,
+            n_heads: self.n_heads as u64,
+            d_ff: self.d_ff as u64,
+            seq: self.seq as u64,
+        }
+    }
+
+    /// Largest compiled batch variant `<= b`, if any.
+    pub fn best_variant_for(&self, b: usize) -> Option<usize> {
+        self.batch_variants.iter().copied().filter(|&v| v <= b).max()
+    }
+}
+
+/// Load `<dir>/params_init.bin` (flat little-endian f32 in ABI order)
+/// into per-parameter vectors.
+pub fn load_init_params(dir: &Path, meta: &ModelMeta) -> Result<Vec<Vec<f32>>> {
+    let p = dir.join("params_init.bin");
+    let raw = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+    if raw.len() != 4 * meta.param_count {
+        bail!("params_init.bin is {} bytes, expected {}", raw.len(), 4 * meta.param_count);
+    }
+    let mut out = Vec::with_capacity(meta.params.len());
+    let mut off = 0usize;
+    for spec in &meta.params {
+        let n = spec.numel();
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = off + 4 * i;
+            v.push(f32::from_le_bytes([raw[s], raw[s + 1], raw[s + 2], raw[s + 3]]));
+        }
+        off += 4 * n;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+preset tiny
+arch llama
+vocab 2048
+d_model 256
+n_layers 4
+n_heads 4
+d_ff 1024
+seq 256
+lr 0.003
+momentum 0.9
+param_count 20
+flops_per_token 123.5
+abi flat-f32-params-v1
+use_pallas 1
+batch_variants 1,2,4
+param embed 4,4
+param lm_head 2,2
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.seq, 256);
+        assert!(m.use_pallas);
+        assert_eq!(m.batch_variants, vec![1, 2, 4]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 16);
+        assert_eq!(m.model_spec().d_model, 256);
+    }
+
+    #[test]
+    fn best_variant_picks_largest_fitting() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.best_variant_for(3), Some(2));
+        assert_eq!(m.best_variant_for(4), Some(4));
+        assert_eq!(m.best_variant_for(100), Some(4));
+        assert_eq!(m.best_variant_for(0), None);
+    }
+
+    #[test]
+    fn rejects_mismatched_param_count() {
+        let bad = SAMPLE.replace("param_count 20", "param_count 21");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("vocab 2048\n", "");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! rust hot path. Python never runs at training time.
+//!
+//! * [`meta`] — the python↔rust ABI (`meta.txt`, `params_init.bin`);
+//! * [`engine`] — PJRT CPU client + per-batch-variant executable cache.
+
+pub mod engine;
+pub mod meta;
+
+pub use engine::{DeviceParams, Engine, GradOutput, StepKind, StepOutput};
+pub use meta::{load_init_params, ModelMeta, ParamSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts root (relative to the repo/workspace), overridable
+/// with `POPLAR_ARTIFACTS`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("POPLAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Artifacts directory for a preset.
+pub fn artifacts_dir(preset: &str) -> PathBuf {
+    artifacts_root().join(preset)
+}

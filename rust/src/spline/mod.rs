@@ -1,0 +1,248 @@
+//! Natural cubic spline interpolation.
+//!
+//! Substrate for the paper's performance-curve construction (Appendix
+//! "Cubic Spline Interpolation", Fig. 7): Poplar profiles each GPU at a
+//! handful of batch sizes and interpolates speed-vs-batch with a natural
+//! cubic spline — piecewise cubics `S_i(x) = a_i + b_i dx + c_i dx^2 +
+//! d_i dx^3`, C2-continuous at the knots, zero second derivative at the
+//! endpoints.
+//!
+//! The coefficients come from the standard tridiagonal system solved with
+//! the Thomas algorithm (O(n)); evaluation is a binary search for the
+//! segment plus a Horner step (O(log n)).
+
+/// A natural cubic spline through `n >= 2` strictly-increasing knots.
+#[derive(Debug, Clone)]
+pub struct CubicSpline {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    /// Second derivatives at the knots (natural boundary: m[0] = m[n-1] = 0).
+    m: Vec<f64>,
+}
+
+/// Errors from spline construction.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SplineError {
+    /// Fewer than two knots supplied.
+    TooFewPoints,
+    /// Knot x-values not strictly increasing.
+    NotIncreasing,
+    /// A coordinate was NaN or infinite.
+    NonFinite,
+}
+
+impl std::fmt::Display for SplineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SplineError::TooFewPoints => write!(f, "spline needs at least 2 points"),
+            SplineError::NotIncreasing => write!(f, "spline knots must be strictly increasing"),
+            SplineError::NonFinite => write!(f, "spline coordinates must be finite"),
+        }
+    }
+}
+
+impl std::error::Error for SplineError {}
+
+impl CubicSpline {
+    /// Fit a natural cubic spline through `(xs[i], ys[i])`.
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Result<Self, SplineError> {
+        let n = xs.len();
+        if n < 2 || ys.len() != n {
+            return Err(SplineError::TooFewPoints);
+        }
+        if xs.iter().chain(ys.iter()).any(|v| !v.is_finite()) {
+            return Err(SplineError::NonFinite);
+        }
+        if xs.windows(2).any(|w| w[1] <= w[0]) {
+            return Err(SplineError::NotIncreasing);
+        }
+
+        // Solve for second derivatives m[1..n-1]:
+        //   h[i-1]*m[i-1] + 2(h[i-1]+h[i])*m[i] + h[i]*m[i+1] = 6*(s[i] - s[i-1])
+        // where h[i] = x[i+1]-x[i], s[i] = (y[i+1]-y[i])/h[i].
+        let mut m = vec![0.0; n];
+        if n > 2 {
+            let k = n - 2; // interior unknowns
+            let h: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+            let s: Vec<f64> = (0..n - 1).map(|i| (ys[i + 1] - ys[i]) / h[i]).collect();
+            let mut diag = vec![0.0; k];
+            let mut upper = vec![0.0; k];
+            let mut lower = vec![0.0; k];
+            let mut rhs = vec![0.0; k];
+            for i in 0..k {
+                diag[i] = 2.0 * (h[i] + h[i + 1]);
+                upper[i] = h[i + 1];
+                lower[i] = h[i];
+                rhs[i] = 6.0 * (s[i + 1] - s[i]);
+            }
+            // Thomas algorithm (in place).
+            for i in 1..k {
+                let w = lower[i] / diag[i - 1];
+                diag[i] -= w * upper[i - 1];
+                rhs[i] -= w * rhs[i - 1];
+            }
+            m[k] = rhs[k - 1] / diag[k - 1];
+            for i in (1..k).rev() {
+                m[i] = (rhs[i - 1] - upper[i - 1] * m[i + 1]) / diag[i - 1];
+            }
+        }
+        Ok(CubicSpline { xs: xs.to_vec(), ys: ys.to_vec(), m })
+    }
+
+    /// Number of knots.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True if the spline has no knots (never constructible — kept for API
+    /// completeness).
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Domain `[x_min, x_max]` of the knots.
+    pub fn domain(&self) -> (f64, f64) {
+        (self.xs[0], *self.xs.last().unwrap())
+    }
+
+    fn segment(&self, x: f64) -> usize {
+        // Largest i with xs[i] <= x, clamped to the last segment.
+        match self.xs.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+            Ok(i) => i.min(self.xs.len() - 2),
+            Err(0) => 0,
+            Err(i) => (i - 1).min(self.xs.len() - 2),
+        }
+    }
+
+    /// Evaluate the spline at `x`. Outside the domain, extrapolates the
+    /// boundary cubic (callers in `curves` clamp instead).
+    pub fn eval(&self, x: f64) -> f64 {
+        let i = self.segment(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let a = (self.xs[i + 1] - x) / h;
+        let b = (x - self.xs[i]) / h;
+        a * self.ys[i]
+            + b * self.ys[i + 1]
+            + ((a.powi(3) - a) * self.m[i] + (b.powi(3) - b) * self.m[i + 1]) * h * h / 6.0
+    }
+
+    /// First derivative at `x`.
+    pub fn deriv(&self, x: f64) -> f64 {
+        let i = self.segment(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let a = (self.xs[i + 1] - x) / h;
+        let b = (x - self.xs[i]) / h;
+        (self.ys[i + 1] - self.ys[i]) / h
+            + ((3.0 * b * b - 1.0) * self.m[i + 1] - (3.0 * a * a - 1.0) * self.m[i]) * h / 6.0
+    }
+
+    /// Maximum of the spline over its domain, by dense sampling refined
+    /// with the knots (sufficient for the monotone-ish perf curves).
+    pub fn max_over_domain(&self, samples: usize) -> (f64, f64) {
+        let (lo, hi) = self.domain();
+        let mut best = (lo, self.eval(lo));
+        let steps = samples.max(2);
+        for k in 0..=steps {
+            let x = lo + (hi - lo) * (k as f64) / (steps as f64);
+            let y = self.eval(x);
+            if y > best.1 {
+                best = (x, y);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+    }
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let xs = [0.0, 1.0, 2.5, 4.0, 7.0];
+        let ys = [1.0, 2.0, 0.5, 3.0, -1.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_close(s.eval(*x), *y, 1e-12);
+        }
+    }
+
+    #[test]
+    fn reproduces_straight_line_exactly() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x - 2.0).collect();
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for k in 0..90 {
+            let x = k as f64 * 0.1;
+            assert_close(s.eval(x), 3.0 * x - 2.0, 1e-10);
+            assert_close(s.deriv(x), 3.0, 1e-9);
+        }
+    }
+
+    #[test]
+    fn close_to_smooth_function_between_knots() {
+        // The paper's Fig. 7 claim: spline ≈ actual data for smooth curves.
+        let xs: Vec<f64> = (1..=16).map(|i| i as f64).collect();
+        let f = |x: f64| x / (x + 2.0); // saturating, like speed-vs-batch
+        let ys: Vec<f64> = xs.iter().map(|&x| f(x)).collect();
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        // interior points (natural boundary conditions soften the ends)
+        for k in 20..=150 {
+            let x = k as f64 * 0.1;
+            assert_close(s.eval(x), f(x), 3e-3);
+        }
+    }
+
+    #[test]
+    fn natural_boundary_second_derivative_zero() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 4.0, 9.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        assert_close(s.m[0], 0.0, 1e-12);
+        assert_close(*s.m.last().unwrap(), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn c1_continuity_at_knots() {
+        let xs = [0.0, 1.0, 2.0, 4.0, 8.0];
+        let ys = [0.0, 3.0, -1.0, 2.0, 2.5];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for &x in &xs[1..xs.len() - 1] {
+            let dl = s.deriv(x - 1e-7);
+            let dr = s.deriv(x + 1e-7);
+            assert_close(dl, dr, 1e-4);
+        }
+    }
+
+    #[test]
+    fn two_points_is_linear() {
+        let s = CubicSpline::fit(&[1.0, 3.0], &[2.0, 6.0]).unwrap();
+        assert_close(s.eval(2.0), 4.0, 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert_eq!(CubicSpline::fit(&[1.0], &[1.0]).unwrap_err(), SplineError::TooFewPoints);
+        assert_eq!(
+            CubicSpline::fit(&[1.0, 1.0], &[1.0, 2.0]).unwrap_err(),
+            SplineError::NotIncreasing
+        );
+        assert_eq!(
+            CubicSpline::fit(&[0.0, f64::NAN], &[1.0, 2.0]).unwrap_err(),
+            SplineError::NonFinite
+        );
+    }
+
+    #[test]
+    fn max_over_domain_finds_peak() {
+        let xs: Vec<f64> = (0..=20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| -(x - 12.3).powi(2)).collect();
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        let (x, _) = s.max_over_domain(1000);
+        assert_close(x, 12.3, 0.1);
+    }
+}

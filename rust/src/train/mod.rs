@@ -1,0 +1,260 @@
+//! Real heterogeneous data-parallel training over the PJRT runtime.
+//!
+//! This is the end-to-end validation path (DESIGN.md §6): the actual
+//! JAX→HLO train step executes on the CPU PJRT client, while GPU
+//! heterogeneity is *virtualized* — each rank has a slowdown factor and
+//! a memory cap, and its measured wall time is scaled accordingly, so
+//! Poplar's profiler/allocator see exactly the heterogeneous timings
+//! they would on real mixed hardware (same code path, DESIGN.md §2).
+//!
+//! Numerics are genuinely data-parallel: every rank computes raw
+//! gradients on its own micro-batches (`grad_b{B}` executable), the
+//! leader weight-averages them by batch share (`Σ (b_i / gbs) · g_i` —
+//! the exact gradient of the global mean loss; see
+//! `test_weighted_grad_average_is_linear` in python), and one
+//! `apply_update` steps the shared parameters.
+
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+use crate::allocator::Plan;
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::data::{MicroBatch, TokenSource};
+use crate::metrics::Timer;
+use crate::runtime::{load_init_params, Engine};
+
+/// A virtualized heterogeneous GPU on top of the real CPU executor.
+#[derive(Debug, Clone)]
+pub struct VirtualGpu {
+    /// Display name (e.g. `"A800-80G(virt)"`).
+    pub name: String,
+    /// Wall-time multiplier vs the raw CPU step (>= 1 = slower GPU).
+    pub slowdown: f64,
+    /// Maximum micro-batch this virtual device may run (its memory cap).
+    pub max_batch: usize,
+}
+
+/// Per-iteration training record.
+#[derive(Debug, Clone)]
+pub struct IterationLog {
+    /// Iteration index.
+    pub iter: usize,
+    /// Global (batch-share-weighted) training loss.
+    pub loss: f64,
+    /// Simulated heterogeneous wall time (slowdown-scaled BSP max).
+    pub sim_wall_s: f64,
+    /// Real CPU seconds spent.
+    pub real_wall_s: f64,
+}
+
+/// Decompose a batch into compiled variants, largest-first (PJRT
+/// executables are shape-specialized; a rank whose plan says `b = 3`
+/// runs `2 + 1` when only {1, 2, 4, 8} were compiled).
+pub fn decompose_batch(b: usize, variants: &[usize]) -> Vec<usize> {
+    let mut sorted: Vec<usize> = variants.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let mut rest = b;
+    let mut out = Vec::new();
+    for &v in &sorted {
+        while rest >= v {
+            out.push(v);
+            rest -= v;
+        }
+    }
+    assert_eq!(rest, 0, "variants must include 1 to decompose any batch");
+    out
+}
+
+/// The real trainer: one PJRT engine + shared parameters.
+pub struct Trainer {
+    engine: Engine,
+    params: Vec<Vec<f32>>,
+    momenta: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    /// Open artifacts and load the initial parameters.
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let engine = Engine::open(artifacts_dir)?;
+        let params = load_init_params(artifacts_dir, engine.meta())?;
+        let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(Trainer { engine, params, momenta })
+    }
+
+    /// The runtime engine (for metadata).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Current parameters (ABI order).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Profile the *real* step time per compiled batch variant, scaled
+    /// by each virtual GPU's slowdown — the e2e stand-in for Alg. 1's
+    /// timing loop (the mbs search is the `max_batch` cap here).
+    pub fn profile_virtual(
+        &mut self,
+        vgpus: &[VirtualGpu],
+        source: &mut dyn TokenSource,
+        reps: usize,
+    ) -> Result<Vec<PerfCurve>> {
+        let variants = self.engine.meta().batch_variants.clone();
+        let seq1 = self.engine.meta().seq + 1;
+        // measure raw CPU time once per variant, then scale per vgpu
+        let mut raw: Vec<(usize, f64)> = Vec::new();
+        for &b in &variants {
+            // warm-up compiles the executable so timing is steady-state
+            let tokens = source.batch(b, seq1);
+            self.engine.run_grad_step(b, &self.params, &tokens)?;
+            let t = Timer::start();
+            for _ in 0..reps.max(1) {
+                let tokens = source.batch(b, seq1);
+                self.engine.run_grad_step(b, &self.params, &tokens)?;
+            }
+            raw.push((b, t.elapsed_s() / reps.max(1) as f64));
+        }
+        vgpus
+            .iter()
+            .map(|g| {
+                let pts: Vec<ProfiledPoint> = raw
+                    .iter()
+                    .filter(|(b, _)| *b <= g.max_batch)
+                    .map(|&(b, t)| ProfiledPoint { batch: b, step_time_s: t * g.slowdown })
+                    .collect();
+                if pts.len() < 2 {
+                    bail!("vgpu {} has fewer than 2 feasible variants", g.name);
+                }
+                let mbs = pts.iter().map(|p| p.batch).max().unwrap();
+                PerfCurve::fit(pts, mbs).map_err(|e| anyhow!("{}: {e}", g.name))
+            })
+            .collect()
+    }
+
+    /// One data-parallel iteration under `plan`: per-rank grad steps,
+    /// weighted average, single optimizer update. Returns the global
+    /// loss and the simulated heterogeneous wall time.
+    pub fn train_iteration(
+        &mut self,
+        plan: &Plan,
+        vgpus: &[VirtualGpu],
+        batches: &[MicroBatch],
+    ) -> Result<(f64, f64, f64)> {
+        let n_params = self.params.len();
+        let gbs: usize = batches.iter().map(|m| m.batch_size).sum();
+        if gbs == 0 {
+            bail!("empty iteration");
+        }
+        let variants = self.engine.meta().batch_variants.clone();
+        let seq1 = self.engine.meta().seq + 1;
+
+        let mut acc: Vec<Vec<f32>> =
+            self.params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let mut loss_acc = 0.0f64;
+        let mut rank_real: Vec<f64> = vec![0.0; plan.ranks.len()];
+        let real_timer = Timer::start();
+
+        // §Perf: parameters are frozen within the iteration — upload the
+        // device buffers once and reuse them for every micro-step
+        // (POPLAR_NO_DEVICE_PARAMS=1 restores the literal-per-step path
+        // for A/B measurement; see EXPERIMENTS.md §Perf).
+        let use_device_params = std::env::var_os("POPLAR_NO_DEVICE_PARAMS").is_none();
+        let dev_params = if use_device_params {
+            Some(self.engine.upload_params(&self.params)?)
+        } else {
+            None
+        };
+
+        for mb in batches {
+            // shape-specialize: split into compiled variants
+            let mut offset = 0usize;
+            for b in decompose_batch(mb.batch_size, &variants) {
+                let slice = &mb.tokens[offset * seq1..(offset + b) * seq1];
+                let t = Timer::start();
+                let out = match &dev_params {
+                    Some(dp) => self.engine.run_grad_step_device(b, dp, slice)?,
+                    None => self.engine.run_grad_step(b, &self.params, slice)?,
+                };
+                rank_real[mb.rank] += t.elapsed_s();
+                let w = b as f32 / gbs as f32;
+                for (a, g) in acc.iter_mut().zip(&out.grads) {
+                    debug_assert_eq!(a.len(), g.len());
+                    for (x, y) in a.iter_mut().zip(g) {
+                        *x += w * y;
+                    }
+                }
+                loss_acc += f64::from(out.loss) * f64::from(w);
+                offset += b;
+            }
+        }
+
+        self.engine
+            .run_apply_update(&mut self.params, &mut self.momenta, &acc)?;
+        debug_assert_eq!(acc.len(), n_params);
+
+        // simulated heterogeneous wall: each rank's real time scaled by
+        // its virtual slowdown, BSP max across ranks
+        let sim_wall = rank_real
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t * vgpus.get(i).map_or(1.0, |g| g.slowdown))
+            .fold(0.0, f64::max);
+        Ok((loss_acc, sim_wall, real_timer.elapsed_s()))
+    }
+
+    /// Full training run: `iterations` iterations of `plan` over
+    /// `source`, returning the loss curve.
+    pub fn train(
+        &mut self,
+        plan: &Plan,
+        vgpus: &[VirtualGpu],
+        source: &mut dyn TokenSource,
+        iterations: usize,
+        log_every: usize,
+    ) -> Result<Vec<IterationLog>> {
+        let seq = self.engine.meta().seq;
+        let mut loader = crate::data::DynamicLoader::new(AdapterSource(source), seq);
+        let mut logs = Vec::with_capacity(iterations);
+        for iter in 0..iterations {
+            let batches = loader.iteration(plan);
+            let (loss, sim_wall, real_wall) =
+                self.train_iteration(plan, vgpus, &batches)?;
+            if log_every > 0 && iter % log_every == 0 {
+                eprintln!(
+                    "[train] iter {iter:4}  loss {loss:.4}  sim_wall {sim_wall:.3}s  real {real_wall:.2}s"
+                );
+            }
+            logs.push(IterationLog { iter, loss, sim_wall_s: sim_wall, real_wall_s: real_wall });
+        }
+        Ok(logs)
+    }
+}
+
+/// Borrow-adapter so `DynamicLoader` can wrap a `&mut dyn TokenSource`.
+struct AdapterSource<'a>(&'a mut dyn TokenSource);
+
+impl TokenSource for AdapterSource<'_> {
+    fn batch(&mut self, batch: usize, seq_plus_1: usize) -> Vec<i32> {
+        self.0.batch(batch, seq_plus_1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_greedy() {
+        assert_eq!(decompose_batch(7, &[1, 2, 4]), vec![4, 2, 1]);
+        assert_eq!(decompose_batch(4, &[1, 2, 4]), vec![4]);
+        assert_eq!(decompose_batch(3, &[1, 2, 4, 8]), vec![2, 1]);
+        assert_eq!(decompose_batch(0, &[1, 2]), Vec::<usize>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "variants must include 1")]
+    fn decompose_needs_unit() {
+        decompose_batch(3, &[2]);
+    }
+}

@@ -1,0 +1,314 @@
+//! ZeRO-0..3 BSP iteration engine (simulation).
+//!
+//! Executes a [`Plan`] against per-rank ground-truth timing (device
+//! model without noise) and the collective cost model, reproducing the
+//! synchronization structure of each stage (paper §"Time Consumed
+//! Estimation" + appendix "Details about ZeRO"):
+//!
+//! * **ZeRO-0/1** — ranks run their whole gradient-accumulation schedule
+//!   independently, then meet at one sync point (gradient all-reduce /
+//!   reduce-scatter + param all-gather), then the optimizer steps.
+//! * **ZeRO-2** — every micro-step's backward ends in a gradient
+//!   reduce-scatter: a BSP barrier per micro-step; param all-gather once
+//!   per iteration after the optimizer.
+//! * **ZeRO-3** — additionally all-gathers weights in every forward and
+//!   backward; nothing at iteration end.
+//!
+//! The report carries per-rank busy/idle, the Eq. 1-4 quantities, and
+//! cluster TFLOPs — the metric of Figs. 3-5.
+
+use crate::allocator::Plan;
+use crate::config::model::ModelSpec;
+use crate::netsim::NetSim;
+
+
+/// Per-rank outcome of one simulated iteration.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    /// Global rank.
+    pub rank: usize,
+    /// Seconds spent computing.
+    pub busy_s: f64,
+    /// Seconds spent waiting at sync points (the paper's `δt_i`).
+    pub idle_s: f64,
+}
+
+/// Outcome of one simulated training iteration.
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    /// Iteration wall time (Eq. 1 plus communication).
+    pub wall_s: f64,
+    /// Total time spent in collectives.
+    pub comm_s: f64,
+    /// Per-rank busy/idle breakdown.
+    pub ranks: Vec<RankReport>,
+    /// Eq. 4 objective `Σ δt_i · p_i` achieved by this plan.
+    pub objective: f64,
+    /// End-to-end cluster throughput in TFLOP/s (the Fig. 3-5 metric).
+    pub tflops: f64,
+    /// Samples processed (== gbs).
+    pub samples: usize,
+}
+
+/// Ground-truth per-rank timing oracle used by the engine.
+///
+/// `time(rank, batch)` returns the true compute time of one micro-step;
+/// `speed(rank)` the rank's peak throughput (for Eq. 4 weights).
+pub trait TimeOracle {
+    /// True compute seconds for `batch` samples on `rank`.
+    fn time(&self, rank: usize, batch: usize) -> f64;
+    /// Peak samples/second of `rank` (Eq. 4 weight `p_i`).
+    fn speed(&self, rank: usize) -> f64;
+}
+
+/// Oracle backed by the calibrated device model.
+pub struct DeviceOracle<'a> {
+    /// Per-rank GPU specs.
+    pub specs: Vec<crate::cluster::GpuSpec>,
+    /// The model being trained.
+    pub model: &'a ModelSpec,
+}
+
+impl TimeOracle for DeviceOracle<'_> {
+    fn time(&self, rank: usize, batch: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let tokens = (batch as u64 * self.model.seq) as f64;
+        self.specs[rank].compute_time(
+            tokens,
+            self.model.flops_per_token(),
+            self.model.n_layers as usize,
+        )
+    }
+
+    fn speed(&self, rank: usize) -> f64 {
+        // peak speed: large-batch asymptote at 64 samples
+        let b = 64usize;
+        b as f64 / self.time(rank, b)
+    }
+}
+
+/// Simulate one iteration of `plan` and report timings + TFLOPs.
+pub fn simulate_iteration(
+    plan: &Plan,
+    oracle: &dyn TimeOracle,
+    net: &NetSim,
+    model: &ModelSpec,
+) -> IterationReport {
+    let n = plan.ranks.len();
+    let psi = model.param_count();
+    let stage = plan.stage;
+    let mut busy = vec![0.0f64; n];
+    let mut idle = vec![0.0f64; n];
+    let mut comm = 0.0f64;
+    let mut wall = 0.0f64;
+
+    match stage {
+        0 | 1 => {
+            // independent compute, one sync point
+            let times: Vec<f64> = plan
+                .ranks
+                .iter()
+                .map(|r| {
+                    if r.grad_accum_steps == 0 {
+                        return 0.0;
+                    }
+                    (r.grad_accum_steps - 1) as f64 * oracle.time(r.rank, r.micro_batch)
+                        + oracle.time(r.rank, r.last_batch)
+                })
+                .collect();
+            let t_max = times.iter().cloned().fold(0.0, f64::max);
+            for i in 0..n {
+                busy[i] += times[i];
+                idle[i] += t_max - times[i];
+            }
+            let c = net.iteration_comm_time(stage, psi);
+            comm += c;
+            wall = t_max + c;
+        }
+        2 | 3 => {
+            // BSP barrier every micro-step
+            let gas = plan
+                .ranks
+                .iter()
+                .map(|r| r.grad_accum_steps)
+                .max()
+                .unwrap_or(0);
+            let c_step = net.per_microstep_comm_time(stage, psi);
+            for step in 0..gas {
+                let batches: Vec<usize> = plan
+                    .ranks
+                    .iter()
+                    .map(|r| {
+                        if step + 1 > r.grad_accum_steps {
+                            0
+                        } else if step + 1 == r.grad_accum_steps {
+                            r.last_batch
+                        } else {
+                            r.micro_batch
+                        }
+                    })
+                    .collect();
+                let times: Vec<f64> =
+                    (0..n).map(|i| oracle.time(i, batches[i])).collect();
+                let t_max = times.iter().cloned().fold(0.0, f64::max);
+                for i in 0..n {
+                    busy[i] += times[i];
+                    idle[i] += t_max - times[i];
+                }
+                wall += t_max + c_step;
+                comm += c_step;
+            }
+            let c_iter = net.iteration_comm_time(stage, psi);
+            comm += c_iter;
+            wall += c_iter;
+        }
+        _ => panic!("invalid ZeRO stage {stage}"),
+    }
+
+    let speeds: Vec<f64> = (0..n).map(|i| oracle.speed(i)).collect();
+    let objective: f64 = idle.iter().zip(&speeds).map(|(d, p)| d * p).sum();
+
+    let samples: usize = plan.total_samples();
+    let total_flops = samples as f64 * model.flops_per_sample();
+    let tflops = if wall > 0.0 { total_flops / wall / 1e12 } else { 0.0 };
+
+    IterationReport {
+        wall_s: wall,
+        comm_s: comm,
+        ranks: (0..n)
+            .map(|i| RankReport { rank: i, busy_s: busy[i], idle_s: idle[i] })
+            .collect(),
+        objective,
+        tflops,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{self, baselines};
+    use crate::cluster::{self, catalog};
+    use crate::config::model::preset;
+    use crate::curves::{PerfCurve, ProfiledPoint};
+
+    fn curve_for(gpu: &str, model: &ModelSpec, mbs: usize) -> PerfCurve {
+        let g = catalog::spec_or_panic(gpu);
+        let pts: Vec<ProfiledPoint> = (1..=mbs)
+            .map(|b| ProfiledPoint {
+                batch: b,
+                step_time_s: g.compute_time(
+                    (b as u64 * model.seq) as f64,
+                    model.flops_per_token(),
+                    model.n_layers as usize,
+                ),
+            })
+            .collect();
+        PerfCurve::fit(pts, mbs).unwrap()
+    }
+
+    fn cluster_c_setup() -> (Vec<PerfCurve>, Vec<f64>, DeviceOracle<'static>, NetSim) {
+        let model: &'static ModelSpec =
+            Box::leak(Box::new(preset("llama-0.5b").unwrap()));
+        let mut curves = vec![];
+        let mut flops = vec![];
+        let mut specs = vec![];
+        for _ in 0..4 {
+            curves.push(curve_for("A800-80G", model, 48));
+            flops.push(312.0);
+            specs.push(catalog::spec_or_panic("A800-80G"));
+        }
+        for _ in 0..4 {
+            curves.push(curve_for("V100S-32G", model, 16));
+            flops.push(130.0);
+            specs.push(catalog::spec_or_panic("V100S-32G"));
+        }
+        let net = NetSim::from_cluster(&cluster::cluster_c());
+        (curves, flops, DeviceOracle { specs, model }, net)
+    }
+
+    #[test]
+    fn poplar_beats_uniform_on_cluster_c() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        for stage in 0..4u8 {
+            let pop = allocator::plan(&curves, stage, 512, &net, model.param_count()).unwrap();
+            let uni = baselines::plan_uniform(&curves, stage, 512, &net,
+                                              model.param_count()).unwrap();
+            let r_pop = simulate_iteration(&pop, &oracle, &net, model);
+            let r_uni = simulate_iteration(&uni, &oracle, &net, model);
+            assert!(
+                r_pop.tflops >= r_uni.tflops * 0.999,
+                "stage {stage}: poplar {:.1} vs uniform {:.1}",
+                r_pop.tflops,
+                r_uni.tflops
+            );
+        }
+    }
+
+    #[test]
+    fn poplar_beats_flops_proportional_somewhere() {
+        let (curves, flops, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let mut any_win = false;
+        for stage in 0..4u8 {
+            let pop = allocator::plan(&curves, stage, 512, &net, model.param_count()).unwrap();
+            let whale = baselines::plan_flops_proportional(
+                &curves, &flops, stage, 512, &net, model.param_count()).unwrap();
+            let r_pop = simulate_iteration(&pop, &oracle, &net, model);
+            let r_whale = simulate_iteration(&whale, &oracle, &net, model);
+            assert!(r_pop.tflops >= r_whale.tflops * 0.98, "stage {stage}");
+            if r_pop.tflops > r_whale.tflops * 1.02 {
+                any_win = true;
+            }
+        }
+        assert!(any_win, "poplar should clearly beat whale in some stage");
+    }
+
+    #[test]
+    fn idle_time_definition_eq2() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let plan = allocator::plan(&curves, 0, 256, &net, model.param_count()).unwrap();
+        let r = simulate_iteration(&plan, &oracle, &net, model);
+        // some rank must have ~zero idle (the slowest one)
+        let min_idle = r.ranks.iter().map(|x| x.idle_s).fold(f64::MAX, f64::min);
+        assert!(min_idle < 1e-9);
+    }
+
+    #[test]
+    fn tflops_accounting_consistent() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let plan = allocator::plan(&curves, 1, 512, &net, model.param_count()).unwrap();
+        let r = simulate_iteration(&plan, &oracle, &net, model);
+        let expect = 512.0 * model.flops_per_sample() / r.wall_s / 1e12;
+        assert!((r.tflops - expect).abs() < 1e-9);
+        assert_eq!(r.samples, 512);
+    }
+
+    #[test]
+    fn zero3_wall_time_includes_per_step_comm() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let p2 = allocator::plan(&curves, 2, 256, &net, model.param_count()).unwrap();
+        let p3 = allocator::plan(&curves, 3, 256, &net, model.param_count()).unwrap();
+        let r2 = simulate_iteration(&p2, &oracle, &net, model);
+        let r3 = simulate_iteration(&p3, &oracle, &net, model);
+        // z3 moves ~3x the per-step volume of z2's RS
+        assert!(r3.comm_s > r2.comm_s);
+    }
+
+    #[test]
+    fn balanced_plan_has_lower_objective_than_uniform() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let pop = allocator::plan(&curves, 1, 512, &net, model.param_count()).unwrap();
+        let uni = baselines::plan_uniform(&curves, 1, 512, &net, model.param_count()).unwrap();
+        let r_pop = simulate_iteration(&pop, &oracle, &net, model);
+        let r_uni = simulate_iteration(&uni, &oracle, &net, model);
+        assert!(r_pop.objective <= r_uni.objective);
+    }
+}

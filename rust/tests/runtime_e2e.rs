@@ -1,0 +1,146 @@
+//! Runtime integration tests against the real AOT artifacts
+//! (`artifacts/tiny`). `make artifacts` builds them; if they are absent
+//! (e.g. a bare `cargo test` before `make artifacts`) the tests skip
+//! with a notice rather than fail, matching the Makefile's ordering.
+
+use poplar::data::corpus::CorpusStream;
+use poplar::data::TokenSource;
+use poplar::runtime::{artifacts_dir, load_init_params, Engine};
+use poplar::train::{decompose_batch, Trainer, VirtualGpu};
+use std::path::PathBuf;
+
+fn tiny_dir() -> Option<PathBuf> {
+    // tests run from the crate root; also accept the parent (workspace)
+    for cand in [artifacts_dir("tiny"), PathBuf::from("../artifacts/tiny")] {
+        if cand.join("meta.txt").exists() {
+            return Some(cand);
+        }
+    }
+    eprintln!("SKIP: artifacts/tiny missing — run `make artifacts` first");
+    None
+}
+
+#[test]
+fn meta_and_params_roundtrip() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let meta = engine.meta();
+    assert_eq!(meta.preset, "tiny");
+    assert!(meta.use_pallas, "artifacts must embed the Pallas kernels");
+    assert!(meta.batch_variants.contains(&1));
+    let params = load_init_params(&dir, meta).unwrap();
+    assert_eq!(params.len(), meta.params.len());
+    let total: usize = params.iter().map(Vec::len).sum();
+    assert_eq!(total, meta.param_count);
+    // embed is scaled-normal: mean ~0, nontrivial variance
+    let embed = &params[0];
+    let mean: f32 = embed.iter().sum::<f32>() / embed.len() as f32;
+    assert!(mean.abs() < 0.01);
+}
+
+#[test]
+fn fused_step_decreases_loss() {
+    let Some(dir) = tiny_dir() else { return };
+    let mut engine = Engine::open(&dir).unwrap();
+    let meta = engine.meta().clone();
+    let mut params = load_init_params(&dir, &meta).unwrap();
+    let mut momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut src = CorpusStream::new(meta.vocab as u32);
+    let b = meta.batch_variants[0];
+    let tokens = src.batch(b, meta.seq + 1);
+    let mut losses = vec![];
+    for _ in 0..4 {
+        let out = engine.run_fused_step(b, &mut params, &mut momenta, &tokens).unwrap();
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "losses {losses:?}"
+    );
+    // initial loss near ln(vocab): the model starts uniform
+    let ln_v = (meta.vocab as f32).ln();
+    assert!((losses[0] - ln_v).abs() < 1.5, "loss {} vs ln(vocab) {ln_v}", losses[0]);
+}
+
+#[test]
+fn grad_plus_apply_matches_fused_step() {
+    // the multi-rank path (grad + weighted average of ONE rank + apply)
+    // must reproduce the fused single-rank executable bit-for-bit-ish
+    let Some(dir) = tiny_dir() else { return };
+    let mut engine = Engine::open(&dir).unwrap();
+    let meta = engine.meta().clone();
+    let mut src = CorpusStream::new(meta.vocab as u32);
+    let b = meta.batch_variants[0];
+    let tokens = src.batch(b, meta.seq + 1);
+
+    let params0 = load_init_params(&dir, &meta).unwrap();
+    let momenta0: Vec<Vec<f32>> = params0.iter().map(|p| vec![0.0; p.len()]).collect();
+
+    // path A: fused
+    let mut p_a = params0.clone();
+    let mut m_a = momenta0.clone();
+    let loss_a = engine.run_fused_step(b, &mut p_a, &mut m_a, &tokens).unwrap().loss;
+
+    // path B: grad + apply
+    let mut p_b = params0.clone();
+    let mut m_b = momenta0;
+    let out = engine.run_grad_step(b, &p_b, &tokens).unwrap();
+    engine.run_apply_update(&mut p_b, &mut m_b, &out.grads).unwrap();
+
+    assert!((loss_a - out.loss).abs() < 1e-5, "{loss_a} vs {}", out.loss);
+    for (a, b_) in p_a.iter().zip(&p_b) {
+        for (x, y) in a.iter().zip(b_) {
+            assert!((x - y).abs() < 1e-5, "param divergence {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_weighted_training_runs() {
+    // two virtual GPUs with different speeds/memory; plan + 3 iterations
+    let Some(dir) = tiny_dir() else { return };
+    let mut trainer = Trainer::open(&dir).unwrap();
+    let meta = trainer.engine().meta().clone();
+    let max_b = *meta.batch_variants.iter().max().unwrap();
+    let vgpus = vec![
+        VirtualGpu { name: "fast".into(), slowdown: 1.0, max_batch: max_b },
+        VirtualGpu { name: "slow".into(), slowdown: 3.0, max_batch: 2 },
+    ];
+    let mut src = CorpusStream::new(meta.vocab as u32);
+    let curves = trainer.profile_virtual(&vgpus, &mut src, 1).unwrap();
+    assert!(curves[0].peak_speed() > curves[1].peak_speed());
+
+    let net = poplar::netsim::NetSim::from_link(2, poplar::cluster::LinkKind::Pcie);
+    let plan = poplar::allocator::plan(&curves, 1, 6, &net, meta.param_count as u64).unwrap();
+    // the fast rank must get the lion's share
+    assert!(plan.ranks[0].samples_per_iter > plan.ranks[1].samples_per_iter);
+
+    let logs = trainer.train(&plan, &vgpus, &mut src, 3, 0).unwrap();
+    assert_eq!(logs.len(), 3);
+    assert!(logs.iter().all(|l| l.loss.is_finite() && l.loss > 0.0));
+    assert!(logs[2].loss < logs[0].loss + 0.1, "{logs:?}");
+}
+
+#[test]
+fn batch_variant_errors_are_clear() {
+    let Some(dir) = tiny_dir() else { return };
+    let mut engine = Engine::open(&dir).unwrap();
+    let meta = engine.meta().clone();
+    let params = load_init_params(&dir, &meta).unwrap();
+    let bogus_b = 1000;
+    let tokens = vec![0i32; bogus_b * (meta.seq + 1)];
+    let err = engine.run_grad_step(bogus_b, &params, &tokens).unwrap_err();
+    assert!(err.to_string().contains("no compiled variant"), "{err}");
+}
+
+#[test]
+fn decompose_respects_compiled_variants() {
+    let Some(dir) = tiny_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let variants = &engine.meta().batch_variants;
+    for b in 1..=2 * variants.iter().max().unwrap() {
+        let parts = decompose_batch(b, variants);
+        assert_eq!(parts.iter().sum::<usize>(), b);
+        assert!(parts.iter().all(|p| variants.contains(p)));
+    }
+}
