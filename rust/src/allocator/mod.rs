@@ -327,6 +327,23 @@ pub fn plan(
     }
 }
 
+/// Elastic re-allocation entry point: re-run Algorithm 2 for the same
+/// `(stage, gbs)` as `prev` over a *surviving* curve set.
+///
+/// The curves are the already-fitted ones — re-planning never triggers
+/// re-profiling (that decision belongs to `elastic::ElasticPlanner`,
+/// which only re-measures ranks that drifted or have no cached curve).
+/// `net` must reflect the post-change group size: collective costs shift
+/// when ranks come and go, and the t-sweep must see the new costs.
+pub fn replan(
+    prev: &Plan,
+    curves: &[PerfCurve],
+    net: &NetSim,
+    param_count: u64,
+) -> Result<Plan, PlanError> {
+    plan(curves, prev.stage, prev.gbs, net, param_count)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +465,24 @@ mod tests {
         let exact = schedule(0, 12, 4);
         assert_eq!(exact.grad_accum_steps, 3);
         assert_eq!(exact.last_batch, 4);
+    }
+
+    #[test]
+    fn replan_keeps_stage_and_gbs_over_survivors() {
+        let curves = cluster_c_curves();
+        let m = preset("llama-0.5b").unwrap();
+        for stage in [1u8, 3] {
+            let prev = plan(&curves, stage, 512, &net8(), m.param_count()).unwrap();
+            // rank 5 departs: replan over the 7 survivors
+            let mut survivors = curves.clone();
+            survivors.remove(5);
+            let net7 = NetSim::from_link(7, LinkKind::Ib);
+            let p = replan(&prev, &survivors, &net7, m.param_count()).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.stage, stage);
+            assert_eq!(p.total_samples(), 512);
+            assert_eq!(p.ranks.len(), 7);
+        }
     }
 
     #[test]

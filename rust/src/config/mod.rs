@@ -14,6 +14,23 @@
 //! strategy = "poplar"          # poplar | uniform | flops
 //! noise_sigma = 0.015
 //! seed = 42
+//!
+//! # optional: elastic membership schedule (poplar elastic --config …)
+//! [elastic]
+//! drift_threshold = 0.15
+//! [[elastic.events]]
+//! at = 4
+//! kind = "lost"                # lost | joined | slowed
+//! rank = 7
+//! [[elastic.events]]
+//! at = 6
+//! kind = "slowed"
+//! rank = 0
+//! factor = 2.5
+//! [[elastic.events]]
+//! at = 8
+//! kind = "joined"
+//! gpu = "A800-80G"
 //! ```
 //!
 //! Parsed with the in-crate [`toml_mini`] subset parser (offline image —
@@ -23,6 +40,7 @@ pub mod model;
 pub mod toml_mini;
 
 use crate::cluster::{self, ClusterSpec, LinkKind, NodeGroup};
+use crate::elastic::{ElasticEvent, ScheduledEvent, DEFAULT_DRIFT_THRESHOLD};
 use model::ModelSpec;
 use toml_mini::Doc;
 
@@ -75,6 +93,15 @@ pub struct TrainingConfig {
     pub seed: u64,
 }
 
+/// Elastic-run section: a deterministic membership/drift schedule.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Relative micro-step-time deviation that triggers re-profiling.
+    pub drift_threshold: f64,
+    /// Events in iteration order.
+    pub events: Vec<ScheduledEvent>,
+}
+
 /// Top-level job configuration.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -84,6 +111,8 @@ pub struct JobConfig {
     pub cluster: ClusterSpec,
     /// Run parameters.
     pub training: TrainingConfig,
+    /// Optional elastic schedule (`poplar elastic --config …`).
+    pub elastic: Option<ElasticConfig>,
 }
 
 /// Errors from loading/validating a config.
@@ -219,7 +248,69 @@ impl JobConfig {
             seed: d.int("training.seed").unwrap_or(42) as u64,
         };
 
-        let cfg = JobConfig { model, cluster, training };
+        // ---- elastic (optional) ----
+        let elastic = if d.has_table("elastic") {
+            let drift_threshold =
+                d.float("elastic.drift_threshold").unwrap_or(DEFAULT_DRIFT_THRESHOLD);
+            if !(0.0..1.0).contains(&drift_threshold) || drift_threshold == 0.0 {
+                return Err(invalid("elastic.drift_threshold must be in (0, 1)"));
+            }
+            let n = d.array_len("elastic.events");
+            let mut events = Vec::with_capacity(n);
+            for i in 0..n {
+                let at = d
+                    .int(&format!("elastic.events.{i}.at"))
+                    .ok_or_else(|| invalid(format!("elastic.events.{i}.at")))?;
+                if at < 0 {
+                    return Err(invalid("elastic event iteration must be >= 0"));
+                }
+                let kind = d
+                    .str(&format!("elastic.events.{i}.kind"))
+                    .ok_or_else(|| invalid(format!("elastic.events.{i}.kind")))?;
+                let rank_of = |d: &Doc| -> Result<usize, ConfigError> {
+                    let r = d
+                        .int(&format!("elastic.events.{i}.rank"))
+                        .ok_or_else(|| invalid(format!("elastic.events.{i}.rank")))?;
+                    if r < 0 {
+                        return Err(invalid("elastic event rank must be >= 0"));
+                    }
+                    Ok(r as usize)
+                };
+                let event = match kind {
+                    "lost" => ElasticEvent::RankLost { slot: rank_of(&d)? },
+                    "slowed" => {
+                        let factor = d
+                            .float(&format!("elastic.events.{i}.factor"))
+                            .ok_or_else(|| invalid(format!("elastic.events.{i}.factor")))?;
+                        if !factor.is_finite() || factor <= 0.0 {
+                            return Err(invalid("elastic slowdown factor must be finite and > 0"));
+                        }
+                        ElasticEvent::RankSlowed { slot: rank_of(&d)?, factor }
+                    }
+                    "joined" => {
+                        let gpu = d
+                            .str(&format!("elastic.events.{i}.gpu"))
+                            .ok_or_else(|| invalid(format!("elastic.events.{i}.gpu")))?;
+                        if cluster::spec(gpu).is_none() {
+                            return Err(invalid(format!("unknown GPU type {gpu:?} in elastic event")));
+                        }
+                        ElasticEvent::RankJoined { gpu: gpu.to_string() }
+                    }
+                    other => {
+                        return Err(invalid(format!(
+                            "elastic.events.{i}.kind {other:?} (want lost|joined|slowed)"
+                        )))
+                    }
+                };
+                events.push(ScheduledEvent { at_iter: at as usize, event });
+            }
+            events.sort_by_key(|e| e.at_iter);
+            Some(ElasticConfig { drift_threshold, events })
+        } else {
+            None
+        };
+
+        let cfg = JobConfig { model, cluster, training, elastic };
         if cfg.gbs_samples() == 0 {
             return Err(invalid("global_batch_tokens smaller than one sequence"));
         }
@@ -319,6 +410,68 @@ mod tests {
     fn rejects_missing_sections() {
         assert!(JobConfig::from_toml("[model]\npreset = \"tiny\"").is_err());
         assert!(JobConfig::from_toml("").is_err());
+    }
+
+    #[test]
+    fn parses_elastic_section() {
+        let toml = format!(
+            "{GOOD}\n\
+             [elastic]\n\
+             drift_threshold = 0.2\n\
+             [[elastic.events]]\n\
+             at = 4\n\
+             kind = \"lost\"\n\
+             rank = 7\n\
+             [[elastic.events]]\n\
+             at = 2\n\
+             kind = \"slowed\"\n\
+             rank = 0\n\
+             factor = 2.5\n\
+             [[elastic.events]]\n\
+             at = 6\n\
+             kind = \"joined\"\n\
+             gpu = \"A800-80G\"\n"
+        );
+        let cfg = JobConfig::from_toml(&toml).unwrap();
+        let e = cfg.elastic.unwrap();
+        assert_eq!(e.drift_threshold, 0.2);
+        assert_eq!(e.events.len(), 3);
+        // sorted by iteration
+        assert_eq!(e.events[0].at_iter, 2);
+        assert_eq!(
+            e.events[0].event,
+            crate::elastic::ElasticEvent::RankSlowed { slot: 0, factor: 2.5 }
+        );
+        assert_eq!(e.events[2].event,
+                   crate::elastic::ElasticEvent::RankJoined { gpu: "A800-80G".into() });
+    }
+
+    #[test]
+    fn no_elastic_section_is_none() {
+        assert!(JobConfig::from_toml(GOOD).unwrap().elastic.is_none());
+    }
+
+    #[test]
+    fn bare_elastic_section_means_all_defaults() {
+        // just drift detection, no scheduled events
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[elastic]\n")).unwrap();
+        let e = cfg.elastic.unwrap();
+        assert_eq!(e.drift_threshold, crate::elastic::DEFAULT_DRIFT_THRESHOLD);
+        assert!(e.events.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_elastic_events() {
+        let bad_kind = format!(
+            "{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"exploded\"\nrank = 0\n"
+        );
+        assert!(JobConfig::from_toml(&bad_kind).is_err());
+        let bad_gpu = format!(
+            "{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"joined\"\ngpu = \"H100\"\n"
+        );
+        assert!(JobConfig::from_toml(&bad_gpu).is_err());
+        let bad_thresh = format!("{GOOD}\n[elastic]\ndrift_threshold = 1.5\n");
+        assert!(JobConfig::from_toml(&bad_thresh).is_err());
     }
 
     #[test]

@@ -66,6 +66,9 @@ impl Value {
 pub struct Doc {
     map: BTreeMap<String, Value>,
     array_len: BTreeMap<String, usize>,
+    /// Every `[name]` / `[[name]]` header seen, so empty sections (e.g. a
+    /// bare `[elastic]` requesting all-default behaviour) still register.
+    tables: std::collections::BTreeSet<String>,
 }
 
 /// Parse error with a line number.
@@ -101,10 +104,12 @@ impl Doc {
                 check_key(name, line)?;
                 let idx = *doc.array_len.entry(name.to_string()).or_insert(0);
                 doc.array_len.insert(name.to_string(), idx + 1);
+                doc.tables.insert(name.to_string());
                 prefix = format!("{name}.{idx}");
             } else if let Some(name) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
                 let name = name.trim();
                 check_key(name, line)?;
+                doc.tables.insert(name.to_string());
                 prefix = name.to_string();
             } else if let Some(eq) = s.find('=') {
                 let key = s[..eq].trim();
@@ -155,10 +160,12 @@ impl Doc {
         self.array_len.get(path).copied().unwrap_or(0)
     }
 
-    /// True when a key exists under the given table prefix.
+    /// True when the table was declared (even empty) or any key exists
+    /// under the given prefix.
     pub fn has_table(&self, prefix: &str) -> bool {
         let p = format!("{prefix}.");
-        self.map.keys().any(|k| k.starts_with(&p))
+        self.tables.iter().any(|t| t == prefix || t.starts_with(&p))
+            || self.map.keys().any(|k| k.starts_with(&p))
     }
 }
 
@@ -270,6 +277,17 @@ mod tests {
         assert_eq!(d.str("a"), None); // wrong type
         assert_eq!(d.array_len("xs"), 0);
         assert!(!d.has_table("t"));
+    }
+
+    #[test]
+    fn empty_table_header_still_registers() {
+        let d = Doc::parse("[elastic]\n").unwrap();
+        assert!(d.has_table("elastic"));
+        assert!(!d.has_table("training"));
+        // nested headers register their parents too
+        let d = Doc::parse("[a.b]\nx = 1").unwrap();
+        assert!(d.has_table("a"));
+        assert!(d.has_table("a.b"));
     }
 
     #[test]

@@ -10,6 +10,14 @@
 //! 3. **Training** — per iteration, dispatch each rank's schedule and
 //!    reconstruct the BSP timeline from the returned per-micro-step
 //!    times (barrier per micro-step for ZeRO-2/3, one sync for 0/1).
+//!
+//! On top of the static pipeline sits the **elastic runtime**
+//! ([`Leader::run_elastic_job`]): workers can leave (`RankLost`), join
+//! (`RankJoined`, re-using cached curves for known GPU types) or
+//! silently slow down (`RankSlowed`, discovered by drift detection and
+//! answered with an incremental re-profile of only the affected ranks),
+//! with Algorithm 2 re-run over the surviving curve set and the
+//! optimizer-state resharding cost charged once to the next iteration.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -19,10 +27,12 @@ use anyhow::{anyhow, bail, Result};
 use super::messages::{WorkerCmd, WorkerReply};
 use super::worker::worker_loop;
 use crate::allocator::{self, baselines, Plan};
-use crate::cluster::ClusterSpec;
+use crate::cluster::{catalog, ClusterSpec};
 use crate::config::model::ModelSpec;
 use crate::config::Strategy;
 use crate::curves::PerfCurve;
+use crate::elastic::{self, ElasticEvent, ElasticPlanner, ScheduledEvent};
+use crate::memmodel;
 use crate::metrics::flops;
 use crate::netsim::NetSim;
 use crate::profiler::{ClusterProfile, Device, ProfileResult, SimDevice};
@@ -40,6 +50,9 @@ pub struct LiveIteration {
     pub comm_s: f64,
     /// Cluster TFLOP/s for this iteration.
     pub tflops: f64,
+    /// Raw per-rank micro-step compute times (compact rank order) — the
+    /// drift detector's input.
+    pub per_rank_steps: Vec<Vec<f64>>,
 }
 
 /// Everything `run_job` produces.
@@ -57,18 +70,79 @@ pub struct JobReport {
     pub tflops_mean: f64,
 }
 
+/// Knobs of the elastic runtime.
+#[derive(Debug, Clone)]
+pub struct ElasticOptions {
+    /// Relative deviation (observed vs predicted micro-step time) beyond
+    /// which a rank is re-profiled.
+    pub drift_threshold: f64,
+    /// Curve-cache capacity (number of `(gpu, model, stage)` curves).
+    pub cache_cap: usize,
+}
+
+impl Default for ElasticOptions {
+    fn default() -> Self {
+        ElasticOptions { drift_threshold: elastic::DEFAULT_DRIFT_THRESHOLD, cache_cap: 32 }
+    }
+}
+
+/// One iteration of an elastic job.
+#[derive(Debug, Clone)]
+pub struct ElasticIterationReport {
+    /// Iteration index.
+    pub iter: usize,
+    /// Events applied (or skipped, with a reason) before this iteration.
+    pub events: Vec<String>,
+    /// Live rank count during this iteration.
+    pub n_ranks: usize,
+    /// Wall seconds, including any one-shot resharding penalty.
+    pub wall_s: f64,
+    /// Cluster TFLOP/s of this iteration.
+    pub tflops: f64,
+    /// Whether Algorithm 2 re-ran before this iteration.
+    pub replanned: bool,
+    /// Slots (re-)profiled before this iteration (joins + drifters).
+    pub reprofiled_slots: Vec<usize>,
+    /// One-shot optimizer-state resharding cost charged here.
+    pub reshard_penalty_s: f64,
+}
+
+/// Everything `run_elastic_job` produces.
+#[derive(Debug)]
+pub struct ElasticJobReport {
+    /// ZeRO stage (fixed after the initial escalation).
+    pub stage: u8,
+    /// Global batch size every plan covered.
+    pub gbs: usize,
+    /// Per-iteration timeline.
+    pub iterations: Vec<ElasticIterationReport>,
+    /// Total Algorithm 2 runs (initial plan included).
+    pub replans: usize,
+    /// Curve-cache hits after the initial profile — i.e. re-joins that
+    /// skipped Alg. 1 (the initial build's per-duplicate-type hits are
+    /// excluded).
+    pub cache_hits: u64,
+    /// Curve-cache misses after the initial profile.
+    pub cache_misses: u64,
+    /// The plan active after the last iteration.
+    pub final_plan: Plan,
+}
+
 struct WorkerHandle {
     cmd: Sender<WorkerCmd>,
     thread: Option<JoinHandle<()>>,
+    alive: bool,
 }
 
 /// The coordinator leader.
 pub struct Leader {
     workers: Vec<WorkerHandle>,
     replies: Receiver<WorkerReply>,
+    rep_tx: Sender<WorkerReply>,
     model: ModelSpec,
     net: NetSim,
-    n: usize,
+    noise_sigma: f64,
+    seed: u64,
 }
 
 impl Leader {
@@ -95,13 +169,15 @@ impl Leader {
                 )) as Box<dyn Device>
             })
             .collect();
-        Self::with_devices(devices, model.clone(), net)
+        let mut leader = Self::with_devices(devices, model.clone(), net);
+        leader.noise_sigma = noise_sigma;
+        leader.seed = seed;
+        leader
     }
 
     /// Spawn workers over caller-provided devices (e.g. real PJRT-backed
     /// devices from `train`).
     pub fn with_devices(devices: Vec<Box<dyn Device>>, model: ModelSpec, net: NetSim) -> Self {
-        let n = devices.len();
         let (rep_tx, rep_rx) = mpsc::channel();
         let workers = devices
             .into_iter()
@@ -109,55 +185,171 @@ impl Leader {
                 let (cmd_tx, cmd_rx) = mpsc::channel();
                 let tx = rep_tx.clone();
                 let thread = std::thread::spawn(move || worker_loop(dev, cmd_rx, tx));
-                WorkerHandle { cmd: cmd_tx, thread: Some(thread) }
+                WorkerHandle { cmd: cmd_tx, thread: Some(thread), alive: true }
             })
             .collect();
-        Leader { workers, replies: rep_rx, model, net, n }
+        Leader { workers, replies: rep_rx, rep_tx, model, net, noise_sigma: 0.0, seed: 0 }
     }
 
-    /// Number of ranks.
+    /// Number of live ranks.
     pub fn n_ranks(&self) -> usize {
-        self.n
+        self.active_ranks().len()
     }
 
-    /// The collective cost model in use.
+    /// Live worker slots in rank order.
+    pub fn active_ranks(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.alive)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The collective cost model in use (its `n` tracks membership).
     pub fn net(&self) -> &NetSim {
         &self.net
     }
 
-    /// Phase 1: parallel Alg. 1 with automatic stage escalation.
+    /// Receive one worker reply. The leader holds a clone of the reply
+    /// sender (needed to spawn joiners), so a dead worker can never close
+    /// the channel — a timeout stands in for "worker thread died".
+    fn recv_reply(&self) -> Result<WorkerReply> {
+        self.replies
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|e| anyhow!("no worker reply within 120s ({e}); worker thread died?"))
+    }
+
+    /// Tell every live worker the new data-parallel group size (their
+    /// ZeRO shard sizes — and hence memory budgets — move with it).
+    fn broadcast_group_size(&self) {
+        let n = self.n_ranks();
+        for w in self.workers.iter().filter(|w| w.alive) {
+            let _ = w.cmd.send(WorkerCmd::SetGroupSize { n });
+        }
+    }
+
+    /// Remove a live rank from the job (elastic `RankLost`): shuts the
+    /// worker down, joins its thread, shrinks the collective group.
+    pub fn remove_rank(&mut self, slot: usize) -> Result<()> {
+        if !self.workers.get(slot).is_some_and(|w| w.alive) {
+            bail!("slot {slot} is not a live rank");
+        }
+        if self.n_ranks() <= 1 {
+            bail!("cannot remove the last live rank");
+        }
+        let w = &mut self.workers[slot];
+        let _ = w.cmd.send(WorkerCmd::Shutdown);
+        if let Some(t) = w.thread.take() {
+            let _ = t.join();
+        }
+        w.alive = false;
+        self.net.n = self.n_ranks();
+        self.broadcast_group_size();
+        Ok(())
+    }
+
+    /// Add a fresh simulated rank of catalog type `gpu` (elastic
+    /// `RankJoined`); returns the new slot id.
+    pub fn add_simulated_rank(&mut self, gpu: &str) -> Result<usize> {
+        let spec = catalog::spec(gpu).ok_or_else(|| anyhow!("unknown GPU type {gpu:?}"))?;
+        let slot = self.workers.len();
+        let n_after = self.n_ranks() + 1;
+        let mut dev_net = self.net.clone();
+        dev_net.n = n_after;
+        let dev: Box<dyn Device> = Box::new(SimDevice::new(
+            spec,
+            self.model.clone(),
+            slot,
+            n_after,
+            dev_net,
+            self.noise_sigma,
+            self.seed,
+        ));
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let tx = self.rep_tx.clone();
+        let thread = std::thread::spawn(move || worker_loop(dev, cmd_rx, tx));
+        self.workers.push(WorkerHandle { cmd: cmd_tx, thread: Some(thread), alive: true });
+        self.net.n = n_after;
+        self.broadcast_group_size();
+        Ok(slot)
+    }
+
+    /// Inject a compute slowdown on a live rank (elastic `RankSlowed`).
+    pub fn set_slowdown(&mut self, slot: usize, factor: f64) -> Result<()> {
+        if !factor.is_finite() || factor <= 0.0 {
+            bail!("slowdown factor must be finite and > 0, got {factor}");
+        }
+        let w = self
+            .workers
+            .get(slot)
+            .filter(|w| w.alive)
+            .ok_or_else(|| anyhow!("slot {slot} is not a live rank"))?;
+        w.cmd
+            .send(WorkerCmd::SetSlowdown { factor })
+            .map_err(|_| anyhow!("worker died"))?;
+        Ok(())
+    }
+
+    /// Phase 1: parallel Alg. 1 with automatic stage escalation, over the
+    /// live ranks.
     pub fn profile(&mut self, requested_stage: u8) -> Result<ClusterProfile> {
         assert!(requested_stage < 4);
+        let active = self.active_ranks();
         'stage: for stage in requested_stage..4 {
-            for w in &self.workers {
-                w.cmd
-                    .send(WorkerCmd::Profile { stage })
-                    .map_err(|_| anyhow!("worker died"))?;
-            }
-            let mut results: Vec<Option<ProfileResult>> = (0..self.n).map(|_| None).collect();
-            let mut escalate = false;
-            for _ in 0..self.n {
-                match self.replies.recv().map_err(|_| anyhow!("reply channel closed"))? {
-                    WorkerReply::Profiled { rank, result } => {
-                        match result {
-                            Some(r) => results[rank] = Some(*r),
-                            None => escalate = true,
+            let results = self.profile_slots(&active, stage)?;
+            let mut ranks = Vec::with_capacity(results.len());
+            for result in results {
+                match result {
+                    Some(r) => ranks.push(r),
+                    None => {
+                        // some rank cannot fit a single sample: escalate
+                        if stage == 3 {
+                            bail!("model does not fit a single sample even at ZeRO-3");
                         }
+                        continue 'stage;
                     }
-                    other => bail!("unexpected reply during profile: {other:?}"),
                 }
             }
-            if escalate {
-                if stage == 3 {
-                    bail!("model does not fit a single sample even at ZeRO-3");
-                }
-                continue 'stage;
-            }
-            let ranks: Vec<ProfileResult> =
-                results.into_iter().map(Option::unwrap).collect();
             return Ok(ClusterProfile { stage, ranks });
         }
         unreachable!()
+    }
+
+    /// Incremental Alg. 1: profile only `slots`, at a *fixed* stage (the
+    /// elastic runtime never changes the stage mid-job). Results come
+    /// back in `slots` order; `None` means the rank cannot fit a single
+    /// sample at this stage — the caller decides whether that is fatal
+    /// (a survivor) or just grounds for eviction (a hopeful joiner).
+    pub fn profile_slots(
+        &mut self,
+        slots: &[usize],
+        stage: u8,
+    ) -> Result<Vec<Option<ProfileResult>>> {
+        for &slot in slots {
+            let w = self
+                .workers
+                .get(slot)
+                .filter(|w| w.alive)
+                .ok_or_else(|| anyhow!("slot {slot} is not a live rank"))?;
+            w.cmd
+                .send(WorkerCmd::Profile { stage })
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut results: Vec<Option<ProfileResult>> = (0..slots.len()).map(|_| None).collect();
+        for _ in 0..slots.len() {
+            match self.recv_reply()? {
+                WorkerReply::Profiled { rank, result } => {
+                    let pos = slots
+                        .iter()
+                        .position(|&s| s == rank)
+                        .ok_or_else(|| anyhow!("profile reply from unexpected slot {rank}"))?;
+                    results[pos] = result.map(|r| *r);
+                }
+                other => bail!("unexpected reply during incremental profile: {other:?}"),
+            }
+        }
+        Ok(results)
     }
 
     /// Phase 2: fit curves + run the selected allocator.
@@ -191,9 +383,19 @@ impl Leader {
     }
 
     /// Phase 3: run one iteration and reconstruct the BSP timeline.
+    /// `plan.ranks[i]` executes on the i-th *live* slot.
     pub fn run_iteration(&mut self, plan: &Plan) -> Result<LiveIteration> {
-        for (w, r) in self.workers.iter().zip(&plan.ranks) {
-            w.cmd
+        let active = self.active_ranks();
+        if plan.ranks.len() != active.len() {
+            bail!(
+                "plan covers {} ranks but {} are live — replan after membership changes",
+                plan.ranks.len(),
+                active.len()
+            );
+        }
+        for (&slot, r) in active.iter().zip(&plan.ranks) {
+            self.workers[slot]
+                .cmd
                 .send(WorkerCmd::RunSchedule {
                     stage: plan.stage,
                     micro_batch: r.micro_batch,
@@ -202,15 +404,20 @@ impl Leader {
                 })
                 .map_err(|_| anyhow!("worker died"))?;
         }
-        let mut per_rank: Vec<Vec<f64>> = vec![Vec::new(); self.n];
+        let n = active.len();
+        let mut per_rank: Vec<Vec<f64>> = vec![Vec::new(); n];
         let mut samples = 0usize;
-        for _ in 0..self.n {
-            match self.replies.recv().map_err(|_| anyhow!("reply channel closed"))? {
+        for _ in 0..n {
+            match self.recv_reply()? {
                 WorkerReply::ScheduleDone { rank, step_times, samples: s, oom_at } => {
                     if let Some(b) = oom_at {
                         bail!("rank {rank} OOMed at batch {b} — planner bug");
                     }
-                    per_rank[rank] = step_times;
+                    let idx = active
+                        .iter()
+                        .position(|&slot| slot == rank)
+                        .ok_or_else(|| anyhow!("schedule reply from unknown slot {rank}"))?;
+                    per_rank[idx] = step_times;
                     samples += s;
                 }
                 other => bail!("unexpected reply during iteration: {other:?}"),
@@ -219,8 +426,8 @@ impl Leader {
 
         let psi = self.model.param_count();
         let gas = per_rank.iter().map(Vec::len).max().unwrap_or(0);
-        let mut busy = vec![0.0f64; self.n];
-        let mut idle = vec![0.0f64; self.n];
+        let mut busy = vec![0.0f64; n];
+        let mut idle = vec![0.0f64; n];
         let mut wall = 0.0f64;
         let mut comm = 0.0f64;
         match plan.stage {
@@ -229,7 +436,7 @@ impl Leader {
                 let totals: Vec<f64> =
                     per_rank.iter().map(|ts| ts.iter().sum::<f64>()).collect();
                 let t_max = totals.iter().cloned().fold(0.0, f64::max);
-                for i in 0..self.n {
+                for i in 0..n {
                     busy[i] = totals[i];
                     idle[i] = t_max - totals[i];
                 }
@@ -245,7 +452,7 @@ impl Leader {
                         .map(|ts| ts.get(step).copied().unwrap_or(0.0))
                         .collect();
                     let t_max = times.iter().cloned().fold(0.0, f64::max);
-                    for i in 0..self.n {
+                    for i in 0..n {
                         busy[i] += times[i];
                         idle[i] += t_max - times[i];
                     }
@@ -265,6 +472,7 @@ impl Leader {
             idle_s: idle,
             comm_s: comm,
             tflops: flops::tflops(&self.model, samples, wall),
+            per_rank_steps: per_rank,
         })
     }
 
@@ -286,6 +494,244 @@ impl Leader {
             iters.iter().map(|i| i.tflops).sum::<f64>() / iters.len().max(1) as f64;
         Ok(JobReport { stage: profile.stage, profile: profile.ranks, plan,
                        iterations: iters, tflops_mean })
+    }
+
+    /// The elastic pipeline: profile → plan → iterate, applying the
+    /// event `schedule` as it fires.
+    ///
+    /// Per iteration the loop (1) applies due events (losses shut the
+    /// worker down, joins spawn one — re-using the curve cache for known
+    /// GPU types — and slowdowns are injected silently), (2) profiles
+    /// only ranks without a usable curve, (3) re-runs Algorithm 2 if
+    /// membership or curves changed, charging the one-shot resharding
+    /// penalty, (4) runs the iteration live and (5) compares observed
+    /// micro-step times against the curves: drifted ranks are re-profiled
+    /// incrementally and the next iteration replans.
+    pub fn run_elastic_job(
+        &mut self,
+        requested_stage: u8,
+        gbs: usize,
+        iterations: usize,
+        schedule: &[ScheduledEvent],
+        opts: &ElasticOptions,
+    ) -> Result<ElasticJobReport> {
+        let active = self.active_ranks();
+        if active != (0..self.workers.len()).collect::<Vec<_>>() {
+            bail!("run_elastic_job must start from a fresh leader (no departed ranks)");
+        }
+
+        // initial full profile + plan
+        let profile = self.profile(requested_stage)?;
+        let stage = profile.stage;
+        let mut planner = ElasticPlanner::new(
+            stage,
+            gbs,
+            &self.model.name,
+            self.model.param_count(),
+            opts.cache_cap,
+        );
+        let curves = fit_curves(&profile)?;
+        for (r, c) in profile.ranks.iter().zip(curves) {
+            let slot = planner.add_slot(&r.name);
+            planner.install_curve(slot, c, false);
+        }
+        let mut n_prev = planner.active_slots().len();
+        self.net.n = n_prev;
+        planner.replan(&self.net).map_err(|e| anyhow!("initial plan: {e}"))?;
+        // report cache traffic relative to this point: the initial build
+        // scores a hit per duplicate GPU type, which is not a re-join
+        let (hits0, misses0) = (planner.cache().hits(), planner.cache().misses());
+
+        let mut reports = Vec::with_capacity(iterations);
+        for iter in 0..iterations {
+            let mut events = Vec::new();
+            let mut reprofiled = Vec::new();
+            let mut membership_changed = false;
+
+            // (1) apply due events
+            for ev in schedule.iter().filter(|e| e.at_iter == iter) {
+                let outcome = match &ev.event {
+                    ElasticEvent::RankLost { slot } => planner
+                        .lose_slot(*slot)
+                        .map_err(|e| e.to_string())
+                        .and_then(|()| self.remove_rank(*slot).map_err(|e| e.to_string()))
+                        .map(|()| membership_changed = true),
+                    ElasticEvent::RankJoined { gpu } => self
+                        .add_simulated_rank(gpu)
+                        .map_err(|e| e.to_string())
+                        .map(|slot| {
+                            let pslot = planner.add_slot(gpu);
+                            debug_assert_eq!(slot, pslot, "leader/planner slots diverged");
+                            membership_changed = true;
+                        }),
+                    ElasticEvent::RankSlowed { slot, factor } => planner
+                        .apply(&ev.event)
+                        .map_err(|e| e.to_string())
+                        .and_then(|()| {
+                            self.set_slowdown(*slot, *factor).map_err(|e| e.to_string())
+                        }),
+                };
+                match outcome {
+                    Ok(()) => events.push(ev.event.label()),
+                    Err(e) => events.push(format!("skipped {}: {e}", ev.event.label())),
+                }
+            }
+
+            // (2a) incremental profiling: only ranks without a usable
+            // curve (fresh joins). A joiner that cannot fit a single
+            // sample at the job's fixed stage is evicted, not fatal.
+            let need = planner.needs_profile();
+            if !need.is_empty() {
+                let results = self.profile_slots(&need, stage)?;
+                for (&slot, result) in need.iter().zip(results) {
+                    match result {
+                        Some(r) => {
+                            let curve = PerfCurve::fit(r.points.clone(), r.mbs)
+                                .map_err(|e| anyhow!("slot {slot} curve: {e}"))?;
+                            planner.install_curve(slot, curve, false);
+                            reprofiled.push(slot);
+                        }
+                        None => {
+                            planner
+                                .lose_slot(slot)
+                                .map_err(|e| anyhow!("evicting slot {slot}: {e}"))?;
+                            self.remove_rank(slot)?;
+                            membership_changed = true;
+                            events.push(format!(
+                                "evicted joined slot {slot}: cannot fit a sample at ZeRO-{stage}"
+                            ));
+                        }
+                    }
+                }
+            }
+
+            // (2b) group size moved: ZeRO shard sizes changed under every
+            // survivor, so cached/old curves carry an `mbs` from a
+            // different memory budget — too big risks OOM, too small
+            // (a curve cached at a larger group) wastes throughput.
+            // Alg. 1 discovers the exact OOM boundary on the simulated
+            // substrate, so any mismatch with the memory model's bound at
+            // the new `n` marks the curve stale; re-profile only those.
+            // Gated on membership events, not `n_now != n_prev`: a loss
+            // and a join in the same iteration leave `n` unchanged but
+            // still swap in curves from a different group size.
+            let n_now = planner.active_slots().len();
+            if membership_changed {
+                let psi = self.model.param_count();
+                let stale: Vec<usize> = planner
+                    .slots()
+                    .iter()
+                    .filter(|s| s.alive)
+                    .filter(|s| match (&s.curve, catalog::spec(&s.gpu)) {
+                        (Some(c), Some(spec)) => {
+                            c.mbs()
+                                != memmodel::true_mbs(
+                                    &self.model,
+                                    psi,
+                                    stage,
+                                    n_now,
+                                    spec.mem_bytes(),
+                                )
+                        }
+                        _ => false,
+                    })
+                    .map(|s| s.slot)
+                    .collect();
+                if !stale.is_empty() {
+                    let results = self.profile_slots(&stale, stage)?;
+                    for (&slot, result) in stale.iter().zip(results) {
+                        let r = result.ok_or_else(|| {
+                            anyhow!(
+                                "survivor slot {slot} cannot fit a sample at ZeRO-{stage} \
+                                 after the membership change"
+                            )
+                        })?;
+                        let curve = PerfCurve::fit(r.points.clone(), r.mbs)
+                            .map_err(|e| anyhow!("slot {slot} curve: {e}"))?;
+                        // a straggler's re-measured curve must stay a
+                        // rank-local override, not a cached type curve
+                        let drifted = planner.slots()[slot].drifted;
+                        planner.install_curve(slot, curve, drifted);
+                        reprofiled.push(slot);
+                    }
+                }
+            }
+
+            // (3) replan over the surviving curve set
+            debug_assert_eq!(self.net.n, n_now, "remove/add_rank maintain net.n");
+            let mut penalty = 0.0;
+            let mut replanned = false;
+            if planner.dirty() {
+                penalty = elastic::reshard_penalty_s(
+                    &self.net,
+                    stage,
+                    self.model.param_count(),
+                    n_prev,
+                    n_now,
+                );
+                planner
+                    .replan(&self.net)
+                    .map_err(|e| anyhow!("replan at iter {iter}: {e}"))?;
+                replanned = true;
+            }
+            n_prev = n_now;
+
+            // (4) run the iteration live
+            let plan = planner.plan().expect("planned above").clone();
+            let live = self.run_iteration(&plan)?;
+            let wall = live.wall_s + penalty;
+
+            // (5) drift detection → incremental re-profile of stragglers.
+            // Skipped on the final iteration: its output could only feed
+            // a replan that will never run, and Alg. 1 is the job's most
+            // expensive operation (Table 2).
+            if iter + 1 < iterations {
+                let curves_now = planner.active_curves().map_err(|e| anyhow!("{e}"))?;
+                let drifted = elastic::detect_drift(
+                    &plan,
+                    &curves_now,
+                    &live.per_rank_steps,
+                    opts.drift_threshold,
+                );
+                if !drifted.is_empty() {
+                    let slots: Vec<usize> =
+                        drifted.iter().map(|&i| planner.slot_map()[i]).collect();
+                    let results = self.profile_slots(&slots, stage)?;
+                    for (&slot, result) in slots.iter().zip(results) {
+                        let r = result.ok_or_else(|| {
+                            anyhow!("drifted slot {slot} can no longer fit a sample at ZeRO-{stage}")
+                        })?;
+                        let curve = PerfCurve::fit(r.points.clone(), r.mbs)
+                            .map_err(|e| anyhow!("slot {slot} drift curve: {e}"))?;
+                        planner.install_curve(slot, curve, true);
+                    }
+                    // install_curve marked the planner dirty: the next
+                    // iteration replans around the re-measured stragglers
+                    reprofiled.extend(slots);
+                }
+            }
+
+            reports.push(ElasticIterationReport {
+                iter,
+                events,
+                n_ranks: n_now,
+                wall_s: wall,
+                tflops: flops::tflops(&self.model, plan.total_samples(), wall),
+                replanned,
+                reprofiled_slots: reprofiled,
+                reshard_penalty_s: penalty,
+            });
+        }
+
+        Ok(ElasticJobReport {
+            stage,
+            gbs,
+            replans: planner.replans(),
+            cache_hits: planner.cache().hits() - hits0,
+            cache_misses: planner.cache().misses() - misses0,
+            final_plan: planner.plan().expect("planned").clone(),
+            iterations: reports,
+        })
     }
 
     /// Stop all workers and join their threads.
@@ -424,6 +870,145 @@ mod tests {
         let mut l = leader_c(0.0);
         let rep = l.run_job(3, Strategy::Flops, 128, 1).unwrap();
         assert_eq!(rep.plan.strategy, "flops-proportional");
+        l.shutdown();
+    }
+
+    // ---------------- elastic runtime ----------------
+
+    use crate::elastic::{ElasticEvent, ScheduledEvent};
+
+    fn sched(evs: Vec<(usize, ElasticEvent)>) -> Vec<ScheduledEvent> {
+        evs.into_iter().map(|(at_iter, event)| ScheduledEvent { at_iter, event }).collect()
+    }
+
+    #[test]
+    fn elastic_rank_lost_replans_and_covers_gbs() {
+        let mut l = leader_c(0.01);
+        let schedule = sched(vec![(2, ElasticEvent::RankLost { slot: 7 })]);
+        let rep = l
+            .run_elastic_job(1, 256, 5, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert_eq!(rep.iterations.len(), 5);
+        assert_eq!(rep.iterations[1].n_ranks, 8);
+        assert_eq!(rep.iterations[2].n_ranks, 7);
+        assert!(rep.iterations[2].replanned, "loss must trigger a replan");
+        assert!(rep.iterations[2].reshard_penalty_s > 0.0);
+        assert_eq!(rep.final_plan.total_samples(), 256);
+        assert_eq!(rep.final_plan.ranks.len(), 7);
+        rep.final_plan.validate().unwrap();
+        // recovery: post-loss throughput stays close to pre-loss (we lost
+        // 1 of 4 V100S — the weakest 7% of cluster compute)
+        let pre = rep.iterations[1].tflops;
+        let post = rep.iterations[4].tflops;
+        assert!(post > pre * 0.85, "pre {pre:.1} post {post:.1}");
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_rejoin_hits_curve_cache() {
+        let mut l = leader_c(0.01);
+        let schedule = sched(vec![
+            (1, ElasticEvent::RankLost { slot: 6 }),
+            (3, ElasticEvent::RankJoined { gpu: "V100S-32G".into() }),
+        ]);
+        let rep = l
+            .run_elastic_job(1, 256, 5, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert_eq!(rep.iterations[3].n_ranks, 8);
+        assert!(rep.cache_hits >= 1, "re-join of known type must hit the cache");
+        // the join must NOT have re-profiled: cache covered it
+        assert!(rep.iterations[3].reprofiled_slots.is_empty());
+        assert_eq!(rep.final_plan.total_samples(), 256);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_join_of_unknown_type_reprofiles_incrementally() {
+        let mut l = Leader::new_simulated(
+            &cluster::cluster_b(),
+            &preset("llama-0.5b").unwrap(),
+            0.0,
+            9,
+        );
+        let schedule = sched(vec![(2, ElasticEvent::RankJoined { gpu: "A100-40G".into() })]);
+        let rep = l
+            .run_elastic_job(1, 64, 4, &schedule, &ElasticOptions::default())
+            .unwrap();
+        // the new slot (4) was profiled, and only it
+        assert_eq!(rep.iterations[2].reprofiled_slots, vec![4]);
+        assert!(rep.iterations[2].replanned);
+        assert_eq!(rep.iterations[2].n_ranks, 5);
+        assert_eq!(rep.final_plan.total_samples(), 64);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_drift_detected_and_rebalanced() {
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankSlowed { slot: 0, factor: 2.5 })]);
+        let rep = l
+            .run_elastic_job(1, 512, 5, &schedule, &ElasticOptions::default())
+            .unwrap();
+        // iteration 1 runs on the stale plan and observes the straggler
+        assert!(
+            rep.iterations[1].reprofiled_slots.contains(&0),
+            "drift must re-profile the straggler: {:?}",
+            rep.iterations[1]
+        );
+        // iteration 2 replans with the slowed curve: slot 0's share drops
+        assert!(rep.iterations[2].replanned);
+        let pre_share = rep.iterations[1].tflops; // stale plan pays the straggler
+        let post_share = rep.iterations[3].tflops; // rebalanced
+        assert!(
+            post_share > pre_share,
+            "rebalancing must recover throughput: {pre_share:.1} -> {post_share:.1}"
+        );
+        assert_eq!(rep.final_plan.total_samples(), 512);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_infeasible_join_is_evicted_not_fatal() {
+        // llama-1.1b at ZeRO-0 fits an A100-80G (16ψ ≈ 20 GB) but not a
+        // V100-16G: the joiner must be evicted, not kill the job.
+        let c = cluster::ClusterSpec::new(
+            "2xA100",
+            &[("A100-80G", 2, cluster::LinkKind::Nvlink)],
+            cluster::LinkKind::Ib,
+        );
+        let mut l = Leader::new_simulated(&c, &preset("llama-1.1b").unwrap(), 0.0, 5);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "V100-16G".into() })]);
+        let rep = l
+            .run_elastic_job(0, 32, 3, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.contains("evicted")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert_eq!(rep.iterations[1].n_ranks, 2);
+        assert_eq!(rep.final_plan.ranks.len(), 2);
+        assert_eq!(rep.final_plan.total_samples(), 32);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_infeasible_events_are_skipped_not_fatal() {
+        let mut l = Leader::new_simulated(
+            &cluster::cluster_b(),
+            &preset("llama-0.5b").unwrap(),
+            0.0,
+            2,
+        );
+        let schedule = sched(vec![
+            (1, ElasticEvent::RankLost { slot: 99 }),
+            (1, ElasticEvent::RankSlowed { slot: 50, factor: 2.0 }),
+        ]);
+        let rep = l
+            .run_elastic_job(0, 32, 3, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert!(rep.iterations[1].events.iter().all(|e| e.starts_with("skipped")));
+        assert_eq!(rep.iterations[2].n_ranks, 4);
         l.shutdown();
     }
 }

@@ -27,6 +27,22 @@ pub enum WorkerCmd {
         /// Final micro-step batch size.
         last_batch: usize,
     },
+    /// Inject (or clear, with `factor = 1.0`) a compute slowdown on the
+    /// worker's device — the elastic runtime's straggler model. Applies
+    /// to every subsequent step *and* re-profile, so drift-aware
+    /// re-profiling measures the slowed device, not the healthy one.
+    SetSlowdown {
+        /// Compute-time multiplier (`> 1.0` = slower). No reply.
+        factor: f64,
+    },
+    /// Announce the new data-parallel group size after a membership
+    /// change. ZeRO shards model/optimizer state across the group, so
+    /// every survivor's memory budget (and hence its true `mbs`) moves
+    /// with `n` — subsequent steps and re-profiles must see it.
+    SetGroupSize {
+        /// Live rank count. No reply.
+        n: usize,
+    },
     /// Exit the worker loop.
     Shutdown,
 }

@@ -1,15 +1,21 @@
 //! L3 coordination: the paper's system contribution as a leader/worker
 //! runtime.
 //!
-//! * [`messages`] — the command/reply protocol;
-//! * [`worker`] — one thread per (simulated or real) GPU;
+//! * [`messages`] — the command/reply protocol (incl. elastic
+//!   membership/drift commands);
+//! * [`worker`] — one thread per (simulated or real) GPU, wrapped in a
+//!   [`worker::DriftDevice`] so slowdowns apply to steps *and* re-profiles;
 //! * [`leader`] — Fig. 2's pipeline: online profiling → offline
-//!   analyzing → training, with automatic ZeRO-stage escalation.
+//!   analyzing → training, with automatic ZeRO-stage escalation, plus
+//!   the elastic job loop (`run_elastic_job`).
 
 pub mod leader;
 pub mod messages;
 pub mod worker;
 
-pub use leader::{fit_curves, JobReport, Leader, LiveIteration};
+pub use leader::{
+    fit_curves, ElasticIterationReport, ElasticJobReport, ElasticOptions, JobReport, Leader,
+    LiveIteration,
+};
 pub use messages::{WorkerCmd, WorkerReply};
-pub use worker::worker_loop;
+pub use worker::{worker_loop, DriftDevice};

@@ -3,21 +3,94 @@
 use std::sync::mpsc::{Receiver, Sender};
 
 use super::messages::{WorkerCmd, WorkerReply};
-use crate::profiler::{self, Device, DeviceOutcome};
+use crate::profiler::{self, Device, DeviceOutcome, StepError, StepTiming};
+
+/// Device wrapper that stretches compute time by a mutable factor — the
+/// worker-side realization of `RankSlowed`. Because the profiler runs
+/// against the *wrapped* device, a drift-triggered re-profile measures
+/// the straggler as it actually is.
+pub struct DriftDevice {
+    inner: Box<dyn Device>,
+    factor: f64,
+}
+
+impl DriftDevice {
+    /// Wrap a device at full speed.
+    pub fn new(inner: Box<dyn Device>) -> Self {
+        DriftDevice { inner, factor: 1.0 }
+    }
+
+    /// Update the compute-time multiplier (`1.0` = healthy).
+    pub fn set_factor(&mut self, factor: f64) {
+        assert!(factor > 0.0, "slowdown factor must be positive");
+        self.factor = factor;
+    }
+
+    /// Current multiplier.
+    pub fn factor(&self) -> f64 {
+        self.factor
+    }
+}
+
+impl Device for DriftDevice {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn mem_total(&self) -> u64 {
+        self.inner.mem_total()
+    }
+
+    fn mem_allocated(&self) -> u64 {
+        self.inner.mem_allocated()
+    }
+
+    fn flops_rating(&self) -> f64 {
+        self.inner.flops_rating()
+    }
+
+    fn set_stage(&mut self, stage: u8) {
+        self.inner.set_stage(stage)
+    }
+
+    fn forward(&mut self, batch: usize) -> Result<(), StepError> {
+        self.inner.forward(batch)
+    }
+
+    fn step(&mut self, batch: usize) -> Result<StepTiming, StepError> {
+        let mut t = self.inner.step(batch)?;
+        t.forward_s *= self.factor;
+        t.backward_s *= self.factor;
+        Ok(t)
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset()
+    }
+
+    fn set_group_size(&mut self, n: usize) {
+        self.inner.set_group_size(n)
+    }
+}
 
 /// Run the worker loop until `Shutdown`. Designed to be spawned with
 /// `std::thread::spawn` (the offline image has no tokio; OS threads are
 /// the right tool for a handful of CPU-bound workers anyway).
 pub fn worker_loop(
-    mut device: Box<dyn Device>,
+    device: Box<dyn Device>,
     cmds: Receiver<WorkerCmd>,
     replies: Sender<WorkerReply>,
 ) {
+    let mut device = DriftDevice::new(device);
     let rank = device.rank();
     while let Ok(cmd) = cmds.recv() {
         match cmd {
             WorkerCmd::Profile { stage } => {
-                let result = match profiler::profile_device(device.as_mut(), stage) {
+                let result = match profiler::profile_device(&mut device, stage) {
                     DeviceOutcome::Ok(r) => Some(Box::new(r)),
                     DeviceOutcome::NeedsHigherStage => None,
                 };
@@ -55,6 +128,8 @@ pub fn worker_loop(
                     return;
                 }
             }
+            WorkerCmd::SetSlowdown { factor } => device.set_factor(factor),
+            WorkerCmd::SetGroupSize { n } => device.set_group_size(n),
             WorkerCmd::Shutdown => return,
         }
     }
@@ -115,6 +190,38 @@ mod tests {
                 assert!(step_times.iter().all(|&t| t > 0.0));
                 assert_eq!(samples, 5);
                 assert_eq!(oom_at, None);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        tx.send(WorkerCmd::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn slowdown_scales_steps_and_reprofiles() {
+        let (tx, rx) = spawn_worker("A100-80G");
+        let run = |tx: &Sender<WorkerCmd>, rx: &Receiver<WorkerReply>| -> f64 {
+            tx.send(WorkerCmd::RunSchedule {
+                stage: 1,
+                micro_batch: 2,
+                grad_accum_steps: 2,
+                last_batch: 2,
+            })
+            .unwrap();
+            match rx.recv().unwrap() {
+                WorkerReply::ScheduleDone { step_times, .. } => step_times.iter().sum(),
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        let healthy = run(&tx, &rx);
+        tx.send(WorkerCmd::SetSlowdown { factor: 2.0 }).unwrap();
+        let slowed = run(&tx, &rx);
+        assert!((slowed / healthy - 2.0).abs() < 1e-9, "{healthy} vs {slowed}");
+        // a re-profile under slowdown must see the slower device
+        tx.send(WorkerCmd::Profile { stage: 1 }).unwrap();
+        match rx.recv().unwrap() {
+            WorkerReply::Profiled { result: Some(r), .. } => {
+                let p = r.points.iter().find(|p| p.batch == 2).unwrap();
+                assert!((p.step_time_s - slowed / 2.0).abs() / p.step_time_s < 1e-9);
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -1,0 +1,219 @@
+//! Curve cache keyed by `(gpu_name, model, stage)`.
+//!
+//! Profiling is the expensive part of Poplar's pipeline (Table 2), and a
+//! performance curve depends only on the GPU type, the model and the
+//! ZeRO stage — not on *which* rank holds the GPU. When a known GPU type
+//! re-joins an elastic job, the cached curve is reused and Algorithm 1
+//! is skipped entirely for that rank.
+//!
+//! Eviction is LRU with one hard rule: a curve currently backing a live
+//! rank is never evicted, no matter how cold — dropping it would force a
+//! re-profile of a rank that is actively training.
+
+use std::collections::HashMap;
+
+use crate::curves::PerfCurve;
+
+/// Cache key: the triple that fully determines a performance curve.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CurveKey {
+    /// Catalog GPU name, e.g. `"A800-80G"`.
+    pub gpu: String,
+    /// Model preset name, e.g. `"llama-0.5b"`.
+    pub model: String,
+    /// ZeRO stage the curve was profiled under.
+    pub stage: u8,
+}
+
+impl CurveKey {
+    /// Convenience constructor.
+    pub fn new(gpu: &str, model: &str, stage: u8) -> Self {
+        CurveKey { gpu: gpu.to_string(), model: model.to_string(), stage }
+    }
+}
+
+/// LRU curve cache with live-rank pinning.
+#[derive(Debug, Clone)]
+pub struct CurveCache {
+    cap: usize,
+    map: HashMap<CurveKey, PerfCurve>,
+    /// Recency order, oldest first.
+    lru: Vec<CurveKey>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl CurveCache {
+    /// Create a cache holding at most `cap` curves (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        CurveCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            lru: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn touch(&mut self, key: &CurveKey) {
+        if let Some(pos) = self.lru.iter().position(|k| k == key) {
+            let k = self.lru.remove(pos);
+            self.lru.push(k);
+        }
+    }
+
+    /// Look up a curve, counting the hit/miss and refreshing recency.
+    pub fn get(&mut self, key: &CurveKey) -> Option<PerfCurve> {
+        if let Some(c) = self.map.get(key).cloned() {
+            self.hits += 1;
+            self.touch(key);
+            Some(c)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Peek without touching recency or counters.
+    pub fn contains(&self, key: &CurveKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (or refresh) a curve. `live` lists the keys currently
+    /// backing live ranks: they are exempt from eviction. If every
+    /// resident key is live and the cache is full, the cache grows past
+    /// `cap` rather than dropping a live curve.
+    pub fn insert(&mut self, key: CurveKey, curve: PerfCurve, live: &[CurveKey]) {
+        if self.map.insert(key.clone(), curve).is_none() {
+            self.lru.push(key.clone());
+        } else {
+            self.touch(&key);
+        }
+        while self.map.len() > self.cap {
+            // oldest key that is neither live nor the one just inserted
+            let victim = self
+                .lru
+                .iter()
+                .find(|k| !live.contains(k) && **k != key)
+                .cloned();
+            match victim {
+                Some(v) => {
+                    self.map.remove(&v);
+                    self.lru.retain(|k| *k != v);
+                    self.evictions += 1;
+                }
+                None => break, // everything resident is live: grow instead
+            }
+        }
+    }
+
+    /// Resident curve count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Evictions so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::ProfiledPoint;
+
+    fn curve(scale: f64) -> PerfCurve {
+        let pts: Vec<ProfiledPoint> = (1..=8)
+            .map(|b| ProfiledPoint { batch: b, step_time_s: scale * (0.05 + 0.01 * b as f64) })
+            .collect();
+        PerfCurve::fit(pts, 8).unwrap()
+    }
+
+    #[test]
+    fn hit_on_same_gpu_model_stage() {
+        let mut c = CurveCache::new(4);
+        c.insert(CurveKey::new("A800-80G", "llama-0.5b", 1), curve(1.0), &[]);
+        assert!(c.get(&CurveKey::new("A800-80G", "llama-0.5b", 1)).is_some());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 0);
+    }
+
+    #[test]
+    fn miss_on_stage_change() {
+        let mut c = CurveCache::new(4);
+        c.insert(CurveKey::new("A800-80G", "llama-0.5b", 1), curve(1.0), &[]);
+        assert!(c.get(&CurveKey::new("A800-80G", "llama-0.5b", 2)).is_none());
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn miss_on_model_or_gpu_change() {
+        let mut c = CurveCache::new(4);
+        c.insert(CurveKey::new("A800-80G", "llama-0.5b", 1), curve(1.0), &[]);
+        assert!(c.get(&CurveKey::new("A800-80G", "llama-1.1b", 1)).is_none());
+        assert!(c.get(&CurveKey::new("V100S-32G", "llama-0.5b", 1)).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_drops_oldest_unpinned() {
+        let mut c = CurveCache::new(2);
+        let k1 = CurveKey::new("T4", "llama-0.5b", 0);
+        let k2 = CurveKey::new("V100-16G", "llama-0.5b", 0);
+        let k3 = CurveKey::new("A100-80G", "llama-0.5b", 0);
+        c.insert(k1.clone(), curve(3.0), &[]);
+        c.insert(k2.clone(), curve(2.0), &[]);
+        c.insert(k3.clone(), curve(1.0), &[]);
+        assert_eq!(c.len(), 2);
+        assert!(!c.contains(&k1), "oldest should be evicted");
+        assert!(c.contains(&k2));
+        assert!(c.contains(&k3));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn eviction_never_drops_live_curves() {
+        let mut c = CurveCache::new(2);
+        let live1 = CurveKey::new("A800-80G", "llama-0.5b", 1);
+        let live2 = CurveKey::new("V100S-32G", "llama-0.5b", 1);
+        let cold = CurveKey::new("T4", "llama-0.5b", 1);
+        c.insert(live1.clone(), curve(1.0), &[]);
+        c.insert(live2.clone(), curve(2.0), &[]);
+        let live = vec![live1.clone(), live2.clone()];
+        // over capacity while everything resident is live: grows, drops nothing
+        c.insert(cold.clone(), curve(3.0), &live);
+        assert!(c.contains(&live1));
+        assert!(c.contains(&live2));
+        // the cold entry is the only eviction candidate on the next insert
+        let k4 = CurveKey::new("A100-40G", "llama-0.5b", 1);
+        c.insert(k4.clone(), curve(4.0), &live);
+        assert!(c.contains(&live1) && c.contains(&live2), "live curves must survive");
+        assert!(!c.contains(&cold), "cold entry should be evicted first");
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut c = CurveCache::new(2);
+        let k = CurveKey::new("T4", "llama-0.5b", 0);
+        c.insert(k.clone(), curve(1.0), &[]);
+        c.insert(k.clone(), curve(2.0), &[]);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Elastic cluster events and deterministic schedules.
+//!
+//! Events model the three membership/behaviour changes a heterogeneous
+//! fleet actually exhibits mid-training: preemption (`RankLost`),
+//! capacity arriving (`RankJoined`) and stragglers (`RankSlowed`).
+//! Schedules are either written explicitly (config / CLI) or generated
+//! from a seed — both paths are fully deterministic so every elastic run
+//! is replayable.
+
+/// One elastic cluster event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElasticEvent {
+    /// The worker at `slot` leaves the job (preemption, crash).
+    RankLost {
+        /// Leader slot id of the departing rank.
+        slot: usize,
+    },
+    /// A GPU of catalog type `gpu` joins the job as a new rank.
+    RankJoined {
+        /// Catalog GPU name, e.g. `"V100S-32G"`.
+        gpu: String,
+    },
+    /// The worker at `slot` silently slows down by `factor` (thermal
+    /// throttling, a noisy neighbour). Deliberately *not* announced to
+    /// the planner: only drift detection can discover it.
+    RankSlowed {
+        /// Leader slot id of the straggler.
+        slot: usize,
+        /// Compute-time multiplier, `> 1.0` means slower.
+        factor: f64,
+    },
+}
+
+impl ElasticEvent {
+    /// Short human-readable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            ElasticEvent::RankLost { slot } => format!("lost(slot={slot})"),
+            ElasticEvent::RankJoined { gpu } => format!("joined({gpu})"),
+            ElasticEvent::RankSlowed { slot, factor } => {
+                format!("slowed(slot={slot},x{factor:.2})")
+            }
+        }
+    }
+}
+
+/// An event pinned to a training iteration (applied before it runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledEvent {
+    /// Iteration index the event fires before.
+    pub at_iter: usize,
+    /// The event.
+    pub event: ElasticEvent,
+}
+
+/// Deterministic xorshift generator (same discipline as the property
+/// tests: replayable from a single seed).
+#[derive(Debug, Clone)]
+pub struct XorShift(u64);
+
+impl XorShift {
+    /// Seeded generator; any seed works, including 0.
+    pub fn new(seed: u64) -> Self {
+        XorShift(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    /// Next raw 64-bit value.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Generate a seeded random event schedule over `iters` iterations for a
+/// job that starts with slots `0..n_slots`. Guarantees:
+///
+/// * at most one event per iteration, none before iteration 1;
+/// * never loses a slot that a previous event already lost;
+/// * never schedules losses that would leave fewer than 2 live ranks;
+/// * joined GPUs are drawn from `gpu_pool`.
+pub fn seeded_schedule(
+    seed: u64,
+    iters: usize,
+    n_slots: usize,
+    gpu_pool: &[&str],
+) -> Vec<ScheduledEvent> {
+    let mut rng = XorShift::new(seed);
+    let mut out = Vec::new();
+    let mut alive: Vec<usize> = (0..n_slots).collect();
+    let mut next_slot = n_slots;
+    for at_iter in 1..iters {
+        if alive.is_empty() || rng.uniform() > 0.35 {
+            continue; // quiet iteration
+        }
+        let kind = rng.range(0, 2);
+        match kind {
+            0 if alive.len() > 2 => {
+                let idx = rng.range(0, alive.len() as u64 - 1) as usize;
+                let slot = alive.remove(idx);
+                out.push(ScheduledEvent { at_iter, event: ElasticEvent::RankLost { slot } });
+            }
+            1 if !gpu_pool.is_empty() => {
+                let gpu = gpu_pool[(rng.next() as usize) % gpu_pool.len()].to_string();
+                alive.push(next_slot);
+                next_slot += 1;
+                out.push(ScheduledEvent { at_iter, event: ElasticEvent::RankJoined { gpu } });
+            }
+            _ => {
+                let idx = rng.range(0, alive.len() as u64 - 1) as usize;
+                let factor = 1.5 + rng.uniform() * 2.0;
+                out.push(ScheduledEvent {
+                    at_iter,
+                    event: ElasticEvent::RankSlowed { slot: alive[idx], factor },
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Parse a compact CLI schedule: comma-separated
+/// `ITER:lost:SLOT | ITER:join:GPU | ITER:slow:SLOT:FACTOR`.
+pub fn parse_schedule(s: &str) -> Result<Vec<ScheduledEvent>, String> {
+    let mut out = Vec::new();
+    for item in s.split(',').filter(|x| !x.trim().is_empty()) {
+        let parts: Vec<&str> = item.trim().split(':').collect();
+        let bad = || format!("bad event {item:?} (want ITER:lost:SLOT, ITER:join:GPU or ITER:slow:SLOT:FACTOR)");
+        if parts.len() < 3 {
+            return Err(bad());
+        }
+        let at_iter: usize = parts[0].parse().map_err(|_| bad())?;
+        let event = match parts[1] {
+            "lost" => ElasticEvent::RankLost { slot: parts[2].parse().map_err(|_| bad())? },
+            "join" => ElasticEvent::RankJoined { gpu: parts[2].to_string() },
+            "slow" => {
+                if parts.len() != 4 {
+                    return Err(bad());
+                }
+                let factor: f64 = parts[3].parse().map_err(|_| bad())?;
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(format!("slowdown factor must be finite and > 0, got {factor}"));
+                }
+                ElasticEvent::RankSlowed { slot: parts[2].parse().map_err(|_| bad())?, factor }
+            }
+            _ => return Err(bad()),
+        };
+        out.push(ScheduledEvent { at_iter, event });
+    }
+    out.sort_by_key(|e| e.at_iter);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let a = seeded_schedule(7, 20, 4, &["T4", "A800-80G"]);
+        let b = seeded_schedule(7, 20, 4, &["T4", "A800-80G"]);
+        assert_eq!(a, b);
+        let c = seeded_schedule(8, 20, 4, &["T4", "A800-80G"]);
+        assert!(a != c || a.is_empty());
+    }
+
+    #[test]
+    fn seeded_schedule_never_double_loses() {
+        for seed in 0..50u64 {
+            let sched = seeded_schedule(seed, 40, 5, &["T4"]);
+            let mut lost = std::collections::HashSet::new();
+            for ev in &sched {
+                if let ElasticEvent::RankLost { slot } = ev.event {
+                    assert!(lost.insert(slot), "seed {seed}: slot {slot} lost twice");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_schedule_roundtrip() {
+        let s = parse_schedule("4:lost:7, 6:slow:0:2.5 ,8:join:A800-80G").unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], ScheduledEvent { at_iter: 4, event: ElasticEvent::RankLost { slot: 7 } });
+        assert_eq!(
+            s[1],
+            ScheduledEvent {
+                at_iter: 6,
+                event: ElasticEvent::RankSlowed { slot: 0, factor: 2.5 }
+            }
+        );
+        assert_eq!(
+            s[2],
+            ScheduledEvent { at_iter: 8, event: ElasticEvent::RankJoined { gpu: "A800-80G".into() } }
+        );
+        assert!(parse_schedule("nope").is_err());
+        assert!(parse_schedule("1:slow:0").is_err());
+        assert!(parse_schedule("1:slow:0:0").is_err(), "zero factor would panic the worker");
+        assert!(parse_schedule("1:slow:0:-2").is_err());
+        assert!(parse_schedule("1:slow:0:nan").is_err());
+        assert!(parse_schedule("").unwrap().is_empty());
+    }
+}

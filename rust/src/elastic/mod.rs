@@ -1,0 +1,484 @@
+//! Elastic cluster runtime: mid-training membership changes, drift-aware
+//! re-profiling and automatic re-allocation.
+//!
+//! The paper profiles the cluster once (Alg. 1), plans once (Alg. 2) and
+//! assumes the fleet never changes. Real heterogeneous fleets change
+//! constantly: spot ranks are preempted, warm GPUs join, stragglers
+//! appear. This module makes the whole pipeline incremental:
+//!
+//! * [`events`] — the event model (`RankLost` / `RankJoined` /
+//!   `RankSlowed`), explicit or seeded-deterministic schedules;
+//! * [`cache`] — a `(gpu, model, stage)`-keyed curve cache, so a re-join
+//!   of a known GPU type skips Algorithm 1 entirely;
+//! * [`ElasticPlanner`] — the membership/curve state machine: tracks
+//!   live slots, reuses cached curves, asks for incremental re-profiles
+//!   only where needed, and re-runs Algorithm 2 on the surviving curve
+//!   set via [`allocator::replan`];
+//! * [`detect_drift`] — compares observed micro-step times against the
+//!   fitted curves; ranks beyond the threshold are re-profiled (only
+//!   them — the rest of the cluster keeps training on known curves);
+//! * [`reshard_penalty_s`] — the one-shot optimizer-state resharding
+//!   cost charged to the first iteration after a membership change.
+//!
+//! The live driver is `coordinator::Leader::run_elastic_job`; the
+//! analytic comparison (static plan vs re-allocation) is
+//! `exp::fig_elastic`.
+
+pub mod cache;
+pub mod events;
+
+pub use cache::{CurveCache, CurveKey};
+pub use events::{parse_schedule, seeded_schedule, ElasticEvent, ScheduledEvent, XorShift};
+
+use crate::allocator::{self, Plan, PlanError};
+use crate::curves::PerfCurve;
+use crate::netsim::{Collective, NetSim};
+
+/// Default relative drift threshold: re-profile a rank when its observed
+/// micro-step time deviates from the curve prediction by more than 15%
+/// (an order of magnitude above the profiling noise floor).
+pub const DEFAULT_DRIFT_THRESHOLD: f64 = 0.15;
+
+/// Errors from the elastic state machine.
+#[derive(Debug, PartialEq)]
+pub enum ElasticError {
+    /// Event referenced a slot that does not exist.
+    UnknownSlot(usize),
+    /// Event referenced a slot that already left the job.
+    DeadSlot(usize),
+    /// Losing this slot would leave the job with no ranks.
+    LastRank,
+    /// Replan was asked for while some live rank has no curve yet
+    /// (call [`ElasticPlanner::needs_profile`] first).
+    MissingCurves(Vec<usize>),
+    /// The allocator rejected the surviving curve set.
+    Plan(PlanError),
+}
+
+impl std::fmt::Display for ElasticError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ElasticError::UnknownSlot(s) => write!(f, "unknown slot {s}"),
+            ElasticError::DeadSlot(s) => write!(f, "slot {s} already left the job"),
+            ElasticError::LastRank => write!(f, "cannot lose the last live rank"),
+            ElasticError::MissingCurves(s) => {
+                write!(f, "slots {s:?} need profiling before replan")
+            }
+            ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ElasticError {}
+
+/// Per-slot planner state.
+#[derive(Debug, Clone)]
+pub struct SlotState {
+    /// Leader slot id (stable across membership changes).
+    pub slot: usize,
+    /// Catalog GPU name.
+    pub gpu: String,
+    /// False once the slot left the job.
+    pub alive: bool,
+    /// Fitted performance curve, if known.
+    pub curve: Option<PerfCurve>,
+    /// True when the current curve is a rank-local drift override (a
+    /// straggler's curve) rather than the healthy type-level curve — such
+    /// curves are kept out of the shared cache.
+    pub drifted: bool,
+}
+
+/// Membership/curve state machine behind the elastic runtime.
+///
+/// Slots are append-only: a lost slot keeps its id forever (so reports
+/// stay unambiguous) and joined ranks get fresh ids. Plans are always
+/// expressed over the *compact* live-rank order; [`ElasticPlanner::slot_map`]
+/// gives the compact-index → slot-id mapping for the current plan.
+#[derive(Debug, Clone)]
+pub struct ElasticPlanner {
+    stage: u8,
+    gbs: usize,
+    model: String,
+    param_count: u64,
+    slots: Vec<SlotState>,
+    cache: CurveCache,
+    plan: Option<Plan>,
+    slot_map: Vec<usize>,
+    dirty: bool,
+    replans: usize,
+}
+
+impl ElasticPlanner {
+    /// New planner for a fixed `(stage, gbs, model)` job. `cache_cap`
+    /// bounds the curve cache (counting curves, not bytes).
+    pub fn new(stage: u8, gbs: usize, model: &str, param_count: u64, cache_cap: usize) -> Self {
+        ElasticPlanner {
+            stage,
+            gbs,
+            model: model.to_string(),
+            param_count,
+            slots: Vec::new(),
+            cache: CurveCache::new(cache_cap),
+            plan: None,
+            slot_map: Vec::new(),
+            dirty: true,
+            replans: 0,
+        }
+    }
+
+    /// ZeRO stage the job runs at.
+    pub fn stage(&self) -> u8 {
+        self.stage
+    }
+
+    /// Global batch size the plans must cover.
+    pub fn gbs(&self) -> usize {
+        self.gbs
+    }
+
+    /// Register a new rank; returns its slot id. If the cache knows this
+    /// `(gpu, model, stage)` the curve is installed immediately and the
+    /// rank needs no profiling.
+    pub fn add_slot(&mut self, gpu: &str) -> usize {
+        let slot = self.slots.len();
+        let curve = self.cache.get(&CurveKey::new(gpu, &self.model, self.stage));
+        self.slots.push(SlotState {
+            slot,
+            gpu: gpu.to_string(),
+            alive: true,
+            curve,
+            drifted: false,
+        });
+        self.dirty = true;
+        slot
+    }
+
+    /// Apply a membership event. `RankSlowed` is deliberately a no-op
+    /// here: stragglers are *not announced* — drift detection finds them.
+    pub fn apply(&mut self, event: &ElasticEvent) -> Result<(), ElasticError> {
+        match event {
+            ElasticEvent::RankLost { slot } => self.lose_slot(*slot),
+            ElasticEvent::RankJoined { gpu } => {
+                self.add_slot(gpu);
+                Ok(())
+            }
+            ElasticEvent::RankSlowed { slot, .. } => {
+                let s = self.slots.get(*slot).ok_or(ElasticError::UnknownSlot(*slot))?;
+                if !s.alive {
+                    return Err(ElasticError::DeadSlot(*slot));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Remove a slot from the job.
+    pub fn lose_slot(&mut self, slot: usize) -> Result<(), ElasticError> {
+        let n_alive = self.active_slots().len();
+        let s = self.slots.get_mut(slot).ok_or(ElasticError::UnknownSlot(slot))?;
+        if !s.alive {
+            return Err(ElasticError::DeadSlot(slot));
+        }
+        if n_alive <= 1 {
+            return Err(ElasticError::LastRank);
+        }
+        s.alive = false;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Install a freshly fitted curve for a slot. `from_drift` marks a
+    /// rank-local straggler curve: it is used for planning but kept out
+    /// of the shared type-level cache.
+    pub fn install_curve(&mut self, slot: usize, curve: PerfCurve, from_drift: bool) {
+        let live: Vec<CurveKey> = self.live_keys();
+        if let Some(s) = self.slots.get_mut(slot) {
+            if !from_drift {
+                self.cache
+                    .insert(CurveKey::new(&s.gpu, &self.model, self.stage), curve.clone(), &live);
+            }
+            s.curve = Some(curve);
+            s.drifted = from_drift;
+            self.dirty = true;
+        }
+    }
+
+    fn live_keys(&self) -> Vec<CurveKey> {
+        self.slots
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| CurveKey::new(&s.gpu, &self.model, self.stage))
+            .collect()
+    }
+
+    /// Live slots whose curve is unknown — the incremental re-profiling
+    /// work list (empty when the cache covered everything).
+    pub fn needs_profile(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .filter(|s| s.alive && s.curve.is_none())
+            .map(|s| s.slot)
+            .collect()
+    }
+
+    /// Live slot ids in compact-rank order.
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.slots.iter().filter(|s| s.alive).map(|s| s.slot).collect()
+    }
+
+    /// Compact-index → slot-id mapping of the *current plan*.
+    pub fn slot_map(&self) -> &[usize] {
+        &self.slot_map
+    }
+
+    /// Curves of the live slots in compact-rank order (requires all
+    /// profiles present).
+    pub fn active_curves(&self) -> Result<Vec<PerfCurve>, ElasticError> {
+        let missing = self.needs_profile();
+        if !missing.is_empty() {
+            return Err(ElasticError::MissingCurves(missing));
+        }
+        Ok(self
+            .slots
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| s.curve.clone().expect("checked above"))
+            .collect())
+    }
+
+    /// True when membership or curves changed since the last replan.
+    pub fn dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Force a replan on the next [`ElasticPlanner::replan`] call.
+    pub fn mark_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    /// Re-run Algorithm 2 over the surviving curve set. Fitted curves are
+    /// reused as-is — no re-profiling happens here.
+    pub fn replan(&mut self, net: &NetSim) -> Result<&Plan, ElasticError> {
+        let curves = self.active_curves()?;
+        let plan = match &self.plan {
+            Some(prev) => allocator::replan(prev, &curves, net, self.param_count),
+            None => allocator::plan(&curves, self.stage, self.gbs, net, self.param_count),
+        }
+        .map_err(ElasticError::Plan)?;
+        self.slot_map = self.active_slots();
+        self.plan = Some(plan);
+        self.dirty = false;
+        self.replans += 1;
+        Ok(self.plan.as_ref().expect("just set"))
+    }
+
+    /// The current plan, if one was computed.
+    pub fn plan(&self) -> Option<&Plan> {
+        self.plan.as_ref()
+    }
+
+    /// Number of (re)plans so far.
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Slot states (diagnostics / tests).
+    pub fn slots(&self) -> &[SlotState] {
+        &self.slots
+    }
+
+    /// The shared curve cache (diagnostics / tests).
+    pub fn cache(&self) -> &CurveCache {
+        &self.cache
+    }
+}
+
+/// Compare observed per-micro-step compute times against the fitted
+/// curves and return the *compact* rank indices whose relative deviation
+/// exceeds `threshold`. Ranks that processed no samples are skipped.
+pub fn detect_drift(
+    plan: &Plan,
+    curves: &[PerfCurve],
+    per_rank_steps: &[Vec<f64>],
+    threshold: f64,
+) -> Vec<usize> {
+    let mut drifted = Vec::new();
+    for (i, r) in plan.ranks.iter().enumerate() {
+        if r.grad_accum_steps == 0 || i >= curves.len() || i >= per_rank_steps.len() {
+            continue;
+        }
+        let predicted = allocator::rank_compute_time(r, &curves[i]);
+        let observed: f64 = per_rank_steps[i].iter().sum();
+        if predicted <= 0.0 {
+            continue;
+        }
+        let ratio = observed / predicted;
+        if (ratio - 1.0).abs() > threshold {
+            drifted.push(i);
+        }
+    }
+    drifted
+}
+
+/// One-shot optimizer-state resharding cost after a membership change.
+///
+/// ZeRO-1..3 shard the fp32 optimizer states (the paper's `12ψ` bytes:
+/// fp32 params + momentum + variance) across the data-parallel group;
+/// when the group changes from `n_old` to `n_new` ranks every rank must
+/// re-fetch its new shard — an all-gather-shaped movement of the full
+/// `12ψ` volume. ZeRO-0 replicates optimizer states, so only the joining
+/// side needs a broadcast of the fp16 params (`2ψ`).
+pub fn reshard_penalty_s(net: &NetSim, stage: u8, param_count: u64, n_old: usize, n_new: usize) -> f64 {
+    if n_old == n_new {
+        return 0.0;
+    }
+    match stage {
+        0 => net.time(Collective::Broadcast, 2 * param_count),
+        1..=3 => net.time(Collective::AllGather, 12 * param_count),
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::catalog;
+    use crate::cluster::LinkKind;
+    use crate::config::model::preset;
+    use crate::curves::ProfiledPoint;
+
+    fn device_curve(gpu: &str, mbs: usize) -> PerfCurve {
+        let g = catalog::spec_or_panic(gpu);
+        let m = preset("llama-0.5b").unwrap();
+        let pts: Vec<ProfiledPoint> = (1..=mbs)
+            .map(|b| ProfiledPoint {
+                batch: b,
+                step_time_s: g.compute_time(
+                    (b as u64 * m.seq) as f64,
+                    m.flops_per_token(),
+                    m.n_layers as usize,
+                ),
+            })
+            .collect();
+        PerfCurve::fit(pts, mbs).unwrap()
+    }
+
+    fn planner_with(gpus: &[(&str, usize)]) -> ElasticPlanner {
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(1, 256, &m.name, m.param_count(), 16);
+        for &(gpu, mbs) in gpus {
+            let slot = p.add_slot(gpu);
+            if p.needs_profile().contains(&slot) {
+                p.install_curve(slot, device_curve(gpu, mbs), false);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn initial_plan_covers_gbs() {
+        let mut p = planner_with(&[("A800-80G", 48), ("V100S-32G", 16)]);
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let plan = p.replan(&net).unwrap();
+        assert_eq!(plan.total_samples(), 256);
+        plan.validate().unwrap();
+        assert_eq!(p.slot_map(), &[0, 1]);
+    }
+
+    #[test]
+    fn lost_rank_leaves_plan_over_survivors() {
+        let mut p = planner_with(&[("A800-80G", 48), ("A800-80G", 48), ("V100S-32G", 16)]);
+        let net = NetSim::from_link(3, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        p.apply(&ElasticEvent::RankLost { slot: 1 }).unwrap();
+        assert!(p.dirty());
+        let plan = p.replan(&NetSim::from_link(2, LinkKind::Ib)).unwrap();
+        assert_eq!(plan.ranks.len(), 2);
+        assert_eq!(plan.total_samples(), 256);
+        assert_eq!(p.slot_map(), &[0, 2], "compact ranks map to surviving slots");
+    }
+
+    #[test]
+    fn rejoin_of_known_type_hits_cache() {
+        let mut p = planner_with(&[("A800-80G", 48), ("V100S-32G", 16)]);
+        p.lose_slot(1).unwrap();
+        let slot = p.add_slot("V100S-32G");
+        assert_eq!(slot, 2);
+        assert!(p.needs_profile().is_empty(), "cached curve must skip re-profiling");
+        assert!(p.cache().hits() >= 1);
+    }
+
+    #[test]
+    fn join_of_unknown_type_needs_profile() {
+        let mut p = planner_with(&[("A800-80G", 48)]);
+        let slot = p.add_slot("T4");
+        assert_eq!(p.needs_profile(), vec![slot]);
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        assert!(matches!(p.replan(&net), Err(ElasticError::MissingCurves(_))));
+        p.install_curve(slot, device_curve("T4", 8), false);
+        p.replan(&net).unwrap();
+    }
+
+    #[test]
+    fn cannot_lose_last_rank_or_dead_slot() {
+        let mut p = planner_with(&[("A800-80G", 48), ("V100S-32G", 16)]);
+        p.lose_slot(0).unwrap();
+        assert_eq!(p.lose_slot(0), Err(ElasticError::DeadSlot(0)));
+        assert_eq!(p.lose_slot(1), Err(ElasticError::LastRank));
+        assert_eq!(p.lose_slot(9), Err(ElasticError::UnknownSlot(9)));
+    }
+
+    #[test]
+    fn drift_curve_stays_out_of_cache() {
+        let mut p = planner_with(&[("A800-80G", 48), ("A800-80G", 48)]);
+        // install a straggler override for slot 0
+        let slow: Vec<ProfiledPoint> = device_curve("A800-80G", 48)
+            .points()
+            .iter()
+            .map(|pt| ProfiledPoint { batch: pt.batch, step_time_s: pt.step_time_s * 2.0 })
+            .collect();
+        p.install_curve(0, PerfCurve::fit(slow, 48).unwrap(), true);
+        assert!(p.slots()[0].drifted);
+        // a fresh join of the same type must get the healthy cached curve
+        let slot = p.add_slot("A800-80G");
+        assert!(p.needs_profile().is_empty());
+        let joined_peak = p.slots()[slot].curve.as_ref().unwrap().peak_speed();
+        let straggler_peak = p.slots()[0].curve.as_ref().unwrap().peak_speed();
+        assert!(joined_peak > straggler_peak * 1.5, "cache must keep the healthy curve");
+    }
+
+    #[test]
+    fn detect_drift_flags_only_the_straggler() {
+        let curves = vec![device_curve("A800-80G", 48), device_curve("V100S-32G", 16)];
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let m = preset("llama-0.5b").unwrap();
+        let plan = allocator::plan(&curves, 1, 256, &net, m.param_count()).unwrap();
+        // observed = predicted for rank 1; rank 0 runs 2x slow
+        let steps: Vec<Vec<f64>> = plan
+            .ranks
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let scale = if i == 0 { 2.0 } else { 1.0 };
+                let mut v = vec![curves[i].time_at(r.micro_batch as f64) * scale;
+                                 r.grad_accum_steps.saturating_sub(1)];
+                v.push(curves[i].time_at(r.last_batch as f64) * scale);
+                v
+            })
+            .collect();
+        assert_eq!(detect_drift(&plan, &curves, &steps, 0.15), vec![0]);
+        assert!(detect_drift(&plan, &curves, &steps, 1.5).is_empty());
+    }
+
+    #[test]
+    fn reshard_penalty_only_on_membership_change() {
+        let net = NetSim::from_link(8, LinkKind::Ib);
+        let psi = 500_000_000;
+        assert_eq!(reshard_penalty_s(&net, 1, psi, 8, 8), 0.0);
+        assert!(reshard_penalty_s(&net, 1, psi, 8, 7) > 0.0);
+        assert!(
+            reshard_penalty_s(&net, 1, psi, 8, 7) > reshard_penalty_s(&net, 0, psi, 8, 7),
+            "sharded stages move 12ψ, stage 0 only broadcasts 2ψ"
+        );
+    }
+}

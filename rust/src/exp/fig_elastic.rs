@@ -1,0 +1,275 @@
+//! Elasticity experiment: throughput recovery after mid-training events.
+//!
+//! Cluster C (4× A800-80G + 4× V100S-32G), llama-0.5b, ZeRO-1, the
+//! paper's 2M-token global batch. Two scenarios against the noise-free
+//! ground-truth oracle:
+//!
+//! * **lost-v100s** — rank 7 (a V100S) is preempted. The *static* scheme
+//!   keeps the old per-rank schedules and spreads the lost rank's
+//!   samples uniformly over the survivors (what a curve-oblivious
+//!   restart does); *replan* re-runs Algorithm 2 over the surviving
+//!   curves ([`allocator::replan`]).
+//! * **slowed-a800x2** — rank 0 (an A800) silently halves its speed.
+//!   *static* keeps the stale plan; *replan* re-fits the straggler's
+//!   curve (what drift-aware re-profiling measures) and re-allocates.
+//!
+//! Expected shape: static recovery collapses to ≈ `n_old/(n_old+1)` of
+//! pre-event throughput (the naive redistribution bottlenecks the
+//! slowest survivors), while Poplar re-allocation recovers ≥ 90% after
+//! the loss — the cluster only lost ~7% of its aggregate speed, and the
+//! re-planner re-balances to exactly that.
+
+use anyhow::{anyhow, Result};
+
+use super::gbs_samples;
+use crate::allocator::{self, schedule, Plan, RankPlan};
+use crate::cluster::{catalog, GpuSpec, LinkKind};
+use crate::config::model::{preset, ModelSpec};
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::metrics::Table;
+use crate::netsim::NetSim;
+use crate::zero::{simulate_iteration, DeviceOracle, DriftOracle};
+
+/// The slot lost in the preemption scenario (a V100S).
+pub const LOST_SLOT: usize = 7;
+/// The straggler slot and its slowdown factor.
+pub const SLOW_SLOT: usize = 0;
+/// Compute-time multiplier of the straggler scenario.
+pub const SLOW_FACTOR: f64 = 2.0;
+
+fn truth_curve(spec: &GpuSpec, model: &ModelSpec, mbs: usize, factor: f64) -> Result<PerfCurve> {
+    let pts: Vec<ProfiledPoint> = (1..=mbs)
+        .map(|b| ProfiledPoint {
+            batch: b,
+            step_time_s: factor
+                * spec.compute_time(
+                    (b as u64 * model.seq) as f64,
+                    model.flops_per_token(),
+                    model.n_layers as usize,
+                ),
+        })
+        .collect();
+    PerfCurve::fit(pts, mbs).map_err(|e| anyhow!("curve: {e}"))
+}
+
+/// The experiment cluster: 4× A800 (mbs 48) + 4× V100S (mbs 16).
+fn cluster() -> Vec<(GpuSpec, usize)> {
+    let mut out = Vec::new();
+    for _ in 0..4 {
+        out.push((catalog::spec_or_panic("A800-80G"), 48));
+    }
+    for _ in 0..4 {
+        out.push((catalog::spec_or_panic("V100S-32G"), 16));
+    }
+    out
+}
+
+/// Static (curve-oblivious) recovery: survivors keep their schedules,
+/// the lost rank's samples are spread uniformly round-robin.
+fn static_after_loss(pre: &Plan, lost: usize) -> Plan {
+    let lost_samples = pre.ranks[lost].samples_per_iter;
+    let mut ranks: Vec<RankPlan> = pre
+        .ranks
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != lost)
+        .map(|(_, r)| r.clone())
+        .collect();
+    let n = ranks.len();
+    let share = lost_samples / n;
+    let rem = lost_samples % n;
+    for (i, r) in ranks.iter_mut().enumerate() {
+        let extra = share + usize::from(i < rem);
+        *r = schedule(i, r.samples_per_iter + extra, r.micro_batch);
+    }
+    Plan {
+        stage: pre.stage,
+        gbs: pre.gbs,
+        ranks,
+        predicted_iter_s: 0.0,
+        strategy: "static".into(),
+    }
+}
+
+/// One scenario cell: simulated steady-state TFLOPs.
+#[derive(Debug, Clone)]
+pub struct ElasticCell {
+    /// Scenario label.
+    pub scenario: String,
+    /// Scheme label (`static` / `replan`).
+    pub scheme: String,
+    /// Live rank count.
+    pub ranks: usize,
+    /// Steady-state cluster TFLOP/s.
+    pub tflops: f64,
+    /// Fraction of pre-event throughput retained.
+    pub recovery: f64,
+}
+
+/// Compute all cells (pre-event baseline first).
+pub fn cells() -> Result<Vec<ElasticCell>> {
+    let model = preset("llama-0.5b").ok_or_else(|| anyhow!("missing preset"))?;
+    let gbs = gbs_samples(&model);
+    let stage = 1u8;
+    let devices = cluster();
+    let n = devices.len();
+
+    let curves: Vec<PerfCurve> = devices
+        .iter()
+        .map(|(spec, mbs)| truth_curve(spec, &model, *mbs, 1.0))
+        .collect::<Result<_>>()?;
+    let specs: Vec<GpuSpec> = devices.iter().map(|(s, _)| s.clone()).collect();
+    let net = NetSim::from_link(n, LinkKind::Ib);
+
+    // pre-event baseline
+    let pre_plan = allocator::plan(&curves, stage, gbs, &net, model.param_count())
+        .map_err(|e| anyhow!("pre plan: {e}"))?;
+    let oracle = DeviceOracle { specs: specs.clone(), model: &model };
+    let pre = simulate_iteration(&pre_plan, &oracle, &net, &model);
+    let mut out = vec![ElasticCell {
+        scenario: "pre-event".into(),
+        scheme: "poplar".into(),
+        ranks: n,
+        tflops: pre.tflops,
+        recovery: 1.0,
+    }];
+
+    // --- scenario 1: RankLost (slot 7, V100S) --------------------------
+    let surv_curves: Vec<PerfCurve> = curves
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != LOST_SLOT)
+        .map(|(_, c)| c.clone())
+        .collect();
+    let surv_specs: Vec<GpuSpec> = specs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != LOST_SLOT)
+        .map(|(_, s)| s.clone())
+        .collect();
+    let net7 = NetSim::from_link(n - 1, LinkKind::Ib);
+    let surv_oracle = DeviceOracle { specs: surv_specs, model: &model };
+
+    let static_plan = static_after_loss(&pre_plan, LOST_SLOT);
+    static_plan.validate().map_err(|e| anyhow!("static plan: {e}"))?;
+    let r = simulate_iteration(&static_plan, &surv_oracle, &net7, &model);
+    out.push(ElasticCell {
+        scenario: "lost-v100s".into(),
+        scheme: "static".into(),
+        ranks: n - 1,
+        tflops: r.tflops,
+        recovery: r.tflops / pre.tflops,
+    });
+
+    let replan = allocator::replan(&pre_plan, &surv_curves, &net7, model.param_count())
+        .map_err(|e| anyhow!("replan: {e}"))?;
+    replan.validate().map_err(|e| anyhow!("replan: {e}"))?;
+    let r = simulate_iteration(&replan, &surv_oracle, &net7, &model);
+    out.push(ElasticCell {
+        scenario: "lost-v100s".into(),
+        scheme: "replan".into(),
+        ranks: n - 1,
+        tflops: r.tflops,
+        recovery: r.tflops / pre.tflops,
+    });
+
+    // --- scenario 2: RankSlowed (slot 0, A800, ×2) ---------------------
+    let slowed_oracle = DriftOracle::healthy(
+        DeviceOracle { specs: specs.clone(), model: &model },
+        n,
+    )
+    .slow(SLOW_SLOT, SLOW_FACTOR);
+
+    let r = simulate_iteration(&pre_plan, &slowed_oracle, &net, &model);
+    out.push(ElasticCell {
+        scenario: "slowed-a800x2".into(),
+        scheme: "static".into(),
+        ranks: n,
+        tflops: r.tflops,
+        recovery: r.tflops / pre.tflops,
+    });
+
+    // drift-aware: the straggler's curve is re-measured (×factor) and
+    // Algorithm 2 re-balances around it
+    let mut drift_curves = curves.clone();
+    drift_curves[SLOW_SLOT] =
+        truth_curve(&devices[SLOW_SLOT].0, &model, devices[SLOW_SLOT].1, SLOW_FACTOR)?;
+    let replan = allocator::replan(&pre_plan, &drift_curves, &net, model.param_count())
+        .map_err(|e| anyhow!("drift replan: {e}"))?;
+    replan.validate().map_err(|e| anyhow!("drift replan: {e}"))?;
+    let r = simulate_iteration(&replan, &slowed_oracle, &net, &model);
+    out.push(ElasticCell {
+        scenario: "slowed-a800x2".into(),
+        scheme: "replan".into(),
+        ranks: n,
+        tflops: r.tflops,
+        recovery: r.tflops / pre.tflops,
+    });
+
+    Ok(out)
+}
+
+/// Run the full figure.
+pub fn run() -> Result<Table> {
+    let mut table = Table::new(&["scenario", "scheme", "ranks", "tflops", "recovery"]);
+    for c in cells()? {
+        table.row(&[
+            c.scenario,
+            c.scheme,
+            c.ranks.to_string(),
+            format!("{:.1}", c.tflops),
+            format!("{:.3}", c.recovery),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell<'a>(cs: &'a [ElasticCell], scenario: &str, scheme: &str) -> &'a ElasticCell {
+        cs.iter()
+            .find(|c| c.scenario == scenario && c.scheme == scheme)
+            .unwrap()
+    }
+
+    #[test]
+    fn replan_recovers_90_percent_after_rank_lost() {
+        let cs = cells().unwrap();
+        let replan = cell(&cs, "lost-v100s", "replan");
+        let stat = cell(&cs, "lost-v100s", "static");
+        assert!(
+            replan.recovery >= 0.90,
+            "re-allocation must recover >= 90%: got {:.3}",
+            replan.recovery
+        );
+        assert!(
+            stat.recovery < 0.90,
+            "static plan must not reach 90%: got {:.3}",
+            stat.recovery
+        );
+        assert!(replan.recovery > stat.recovery + 0.02);
+    }
+
+    #[test]
+    fn replan_beats_static_under_straggler() {
+        let cs = cells().unwrap();
+        let replan = cell(&cs, "slowed-a800x2", "replan");
+        let stat = cell(&cs, "slowed-a800x2", "static");
+        assert!(
+            replan.recovery > stat.recovery + 0.05,
+            "rebalancing must clearly beat the stale plan: {:.3} vs {:.3}",
+            replan.recovery,
+            stat.recovery
+        );
+    }
+
+    #[test]
+    fn figure_is_deterministic_and_complete() {
+        let a = run().unwrap().to_markdown();
+        let b = run().unwrap().to_markdown();
+        assert_eq!(a, b);
+        assert_eq!(run().unwrap().len(), 5);
+    }
+}

@@ -17,6 +17,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_elastic;
 pub mod table2;
 
 use anyhow::{anyhow, Result};
@@ -183,6 +184,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
         ("fig8", "Fig. 8 — wall-time vs FLOPs capability measurement", fig8::run),
         ("table2", "Table 2 — profiling overhead (seconds)", table2::run),
         ("ablation", "Appendix — ablation of Poplar components", ablation::run),
+        ("fig_elastic", "Elasticity — throughput recovery after membership changes",
+         fig_elastic::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

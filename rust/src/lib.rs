@@ -24,9 +24,10 @@
 //! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
 //! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
-//! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines |
-//! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) |
-//! | [`coordinator`] | leader/worker orchestration (tokio) |
+//! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan` for elastic re-allocation |
+//! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay |
+//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning |
+//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` |
 //! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
 //! | [`train`] | real heterogeneous data-parallel training loop |
 //! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |
@@ -40,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod curves;
 pub mod data;
+pub mod elastic;
 pub mod exp;
 pub mod memmodel;
 pub mod metrics;

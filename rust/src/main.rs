@@ -7,7 +7,10 @@
 //! poplar simulate  --config job.toml            # profile+plan+iterate (sim)
 //! poplar train     --artifacts artifacts/tiny --iters 100 [--gbs 16]
 //!                  [--cluster-sim 2xfast+2xslow]  # real PJRT training
-//! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|ablation|all>
+//! poplar elastic   --cluster cluster-C --model llama-0.5b [--stage 1]
+//!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G"]
+//!                  [--seed-schedule 7]            # elastic membership run
+//! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all>
 //!                  [--out results]
 //! ```
 //!
@@ -73,6 +76,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "plan" => cmd_plan(rest),
         "simulate" => cmd_simulate(rest),
         "train" => cmd_train(rest),
+        "elastic" => cmd_elastic(rest),
         "exp" => cmd_exp(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -90,7 +94,9 @@ fn print_help() {
          \x20 plan      --cluster C --model M --gbs-tokens N [--stage N] [--strategy poplar]\n\
          \x20 simulate  --config job.toml\n\
          \x20 train     --artifacts artifacts/tiny [--iters 100] [--gbs 16] [--stage 1]\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|ablation|all> [--out results]\n"
+         \x20 elastic   --cluster C --model M [--stage N] [--iters 12]\n\
+         \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G\"] [--seed-schedule 7]\n\
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all> [--out results]\n"
     );
 }
 
@@ -234,6 +240,108 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_elastic(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+
+    // config-file path: `[elastic]` section drives everything
+    if let Some(path) = f.get("config") {
+        let cfg = JobConfig::load(Path::new(path)).map_err(|e| anyhow!("{e}"))?;
+        let ecfg = cfg
+            .elastic
+            .clone()
+            .ok_or_else(|| anyhow!("config has no [elastic] section"))?;
+        let mut leader = Leader::new_simulated(
+            &cfg.cluster,
+            &cfg.model,
+            cfg.training.noise_sigma,
+            cfg.training.seed,
+        );
+        let opts = poplar::coordinator::ElasticOptions {
+            drift_threshold: ecfg.drift_threshold,
+            ..Default::default()
+        };
+        let rep = leader.run_elastic_job(
+            cfg.training.zero_stage,
+            cfg.gbs_samples(),
+            cfg.training.iterations,
+            &ecfg.events,
+            &opts,
+        )?;
+        print_elastic_report(&rep);
+        leader.shutdown();
+        return Ok(());
+    }
+
+    // flag path
+    let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+    let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
+        .ok_or_else(|| anyhow!("unknown model preset"))?;
+    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let iters: usize = f.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let gbs_tokens: u64 = f
+        .get("gbs-tokens")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2 * 1024 * 1024);
+    let gbs = (gbs_tokens / model.seq) as usize;
+    let noise: f64 = f.get("noise").map(|s| s.parse()).transpose()?.unwrap_or(0.015);
+    let threshold: f64 = f
+        .get("drift-threshold")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(poplar::elastic::DEFAULT_DRIFT_THRESHOLD);
+
+    let schedule = if let Some(spec) = f.get("events") {
+        poplar::elastic::parse_schedule(spec).map_err(|e| anyhow!("{e}"))?
+    } else {
+        let seed: u64 =
+            f.get("seed-schedule").map(|s| s.parse()).transpose()?.unwrap_or(7);
+        poplar::elastic::seeded_schedule(
+            seed,
+            iters,
+            cluster.n_gpus(),
+            &["A800-80G", "V100S-32G", "T4"],
+        )
+    };
+
+    let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
+    let opts = poplar::coordinator::ElasticOptions {
+        drift_threshold: threshold,
+        ..Default::default()
+    };
+    let rep = leader.run_elastic_job(stage, gbs, iters, &schedule, &opts)?;
+    print_elastic_report(&rep);
+    leader.shutdown();
+    Ok(())
+}
+
+fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
+    println!(
+        "elastic: ZeRO-{} gbs={} — {} replans, curve cache {} hits / {} misses",
+        rep.stage, rep.gbs, rep.replans, rep.cache_hits, rep.cache_misses
+    );
+    let mut t = Table::new(&[
+        "iter", "events", "ranks", "wall_s", "tflops", "replanned", "reprofiled", "reshard_s",
+    ]);
+    for it in &rep.iterations {
+        t.row(&[
+            it.iter.to_string(),
+            if it.events.is_empty() { "-".into() } else { it.events.join("; ") },
+            it.n_ranks.to_string(),
+            format!("{:.3}", it.wall_s),
+            format!("{:.1}", it.tflops),
+            if it.replanned { "yes".into() } else { "-".into() },
+            if it.reprofiled_slots.is_empty() {
+                "-".into()
+            } else {
+                format!("{:?}", it.reprofiled_slots)
+            },
+            format!("{:.3}", it.reshard_penalty_s),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+}
+
 fn cmd_exp(args: &[String]) -> Result<()> {
     let (pos, f) = parse_flags(args)?;
     let which = pos.first().map(String::as_str).unwrap_or("all");
@@ -254,6 +362,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         "fig8" => one("fig8", "Fig. 8 — capability measurement", exp::fig8::run)?,
         "table2" => one("table2", "Table 2 — overhead", exp::table2::run)?,
         "ablation" => one("ablation", "Ablation", exp::ablation::run)?,
+        "fig_elastic" => one(
+            "fig_elastic",
+            "Elasticity — throughput recovery after membership changes",
+            exp::fig_elastic::run,
+        )?,
         other => bail!("unknown experiment {other:?}"),
     }
     Ok(())

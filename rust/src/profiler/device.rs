@@ -109,6 +109,10 @@ pub trait Device: Send {
     fn step(&mut self, batch: usize) -> Result<StepTiming, StepError>;
     /// Free activations (between probes).
     fn reset(&mut self);
+    /// Announce a new data-parallel group size (elastic membership
+    /// change). Default is a no-op for devices whose memory model does
+    /// not depend on the group.
+    fn set_group_size(&mut self, _n: usize) {}
 }
 
 /// Simulated GPU backed by the calibrated device model.
@@ -270,6 +274,13 @@ impl Device for SimDevice {
     fn reset(&mut self) {
         self.allocated = self.fixed_bytes();
     }
+
+    fn set_group_size(&mut self, n: usize) {
+        assert!(n >= 1, "group size must be >= 1");
+        self.n_ranks = n;
+        self.net.n = n;
+        self.allocated = self.fixed_bytes();
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +358,21 @@ mod tests {
         let mut d1 = dev("T4", 1);
         let mut d2 = dev("T4", 1);
         assert_eq!(d1.step(2).unwrap(), d2.step(2).unwrap());
+    }
+
+    #[test]
+    fn group_size_change_moves_mbs_for_sharded_stages() {
+        // fewer ranks -> bigger per-rank shard -> smaller true mbs
+        let mut d = dev_model("V100-16G", 3, "llama-1.1b");
+        let mbs8 = d.true_mbs();
+        d.set_group_size(2);
+        let mbs2 = d.true_mbs();
+        assert!(mbs2 < mbs8, "{mbs2} vs {mbs8}");
+        // stage 0 replicates: group size is irrelevant
+        let mut d0 = dev_model("A100-80G", 0, "llama-0.5b");
+        let a = d0.true_mbs();
+        d0.set_group_size(2);
+        assert_eq!(d0.true_mbs(), a);
     }
 
     #[test]

@@ -89,6 +89,47 @@ impl TimeOracle for DeviceOracle<'_> {
     }
 }
 
+/// Oracle wrapper that replays per-rank slowdowns over a base oracle —
+/// the ground-truth side of the elastic runtime's `RankSlowed` events.
+/// `factors[rank] > 1.0` stretches that rank's compute time (and shrinks
+/// its Eq. 4 peak-speed weight accordingly); ranks beyond the factor
+/// vector run at full speed.
+pub struct DriftOracle<O: TimeOracle> {
+    /// The healthy-cluster oracle.
+    pub inner: O,
+    /// Per-rank compute-time multipliers.
+    pub factors: Vec<f64>,
+}
+
+impl<O: TimeOracle> DriftOracle<O> {
+    /// Wrap `inner` with no slowdown on any of the `n` ranks.
+    pub fn healthy(inner: O, n: usize) -> Self {
+        DriftOracle { inner, factors: vec![1.0; n] }
+    }
+
+    /// Set one rank's slowdown factor.
+    pub fn slow(mut self, rank: usize, factor: f64) -> Self {
+        if rank < self.factors.len() {
+            self.factors[rank] = factor;
+        }
+        self
+    }
+
+    fn factor(&self, rank: usize) -> f64 {
+        self.factors.get(rank).copied().unwrap_or(1.0)
+    }
+}
+
+impl<O: TimeOracle> TimeOracle for DriftOracle<O> {
+    fn time(&self, rank: usize, batch: usize) -> f64 {
+        self.inner.time(rank, batch) * self.factor(rank)
+    }
+
+    fn speed(&self, rank: usize) -> f64 {
+        self.inner.speed(rank) / self.factor(rank)
+    }
+}
+
 /// Simulate one iteration of `plan` and report timings + TFLOPs.
 pub fn simulate_iteration(
     plan: &Plan,
@@ -299,6 +340,21 @@ mod tests {
         let r3 = simulate_iteration(&p3, &oracle, &net, model);
         // z3 moves ~3x the per-step volume of z2's RS
         assert!(r3.comm_s > r2.comm_s);
+    }
+
+    #[test]
+    fn drift_oracle_slows_one_rank_and_raises_wall() {
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let plan = allocator::plan(&curves, 1, 256, &net, model.param_count()).unwrap();
+        let healthy = simulate_iteration(&plan, &oracle, &net, model);
+        let slowed = DriftOracle::healthy(oracle, 8).slow(0, 2.5);
+        assert!((slowed.time(0, 4) - slowed.inner.time(0, 4) * 2.5).abs() < 1e-12);
+        assert!((slowed.time(1, 4) - slowed.inner.time(1, 4)).abs() < 1e-15);
+        assert!(slowed.speed(0) < slowed.inner.speed(0));
+        let drifted = simulate_iteration(&plan, &slowed, &net, slowed.inner.model);
+        assert!(drifted.wall_s > healthy.wall_s, "straggler must stretch the iteration");
+        assert_eq!(drifted.samples, healthy.samples);
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Property tests over the elastic-runtime invariants (same discipline
+//! as `properties.rs`: deterministic xorshift over many seeds, seeds
+//! printed on failure). The invariants:
+//!
+//! 1. after ANY feasible event sequence the active plan `validate()`s
+//!    and covers `gbs` exactly;
+//! 2. no plan ever references a departed rank;
+//! 3. a re-join of a known `(gpu, model, stage)` skips re-profiling
+//!    (curve-cache hit);
+//! 4. a rank that slows down never gains samples after the replan;
+//! 5. cache eviction never drops a curve backing a live rank.
+
+use std::collections::HashSet;
+
+use poplar::cluster::catalog;
+use poplar::config::model::preset;
+use poplar::curves::{PerfCurve, ProfiledPoint};
+use poplar::elastic::{CurveCache, CurveKey, ElasticPlanner, XorShift};
+use poplar::netsim::NetSim;
+use poplar::cluster::LinkKind;
+
+const GPUS: &[&str] = &["A100-80G", "A100-40G", "A800-80G", "V100-16G", "V100S-32G", "T4"];
+
+/// Ground-truth curve for a GPU type, optionally slowed by `factor`.
+fn device_curve(gpu: &str, mbs: usize, factor: f64) -> PerfCurve {
+    let g = catalog::spec_or_panic(gpu);
+    let m = preset("llama-0.5b").unwrap();
+    let pts: Vec<ProfiledPoint> = (1..=mbs)
+        .map(|b| ProfiledPoint {
+            batch: b,
+            step_time_s: factor
+                * g.compute_time(
+                    (b as u64 * m.seq) as f64,
+                    m.flops_per_token(),
+                    m.n_layers as usize,
+                ),
+        })
+        .collect();
+    PerfCurve::fit(pts, mbs).unwrap()
+}
+
+fn mbs_for(rng: &mut XorShift) -> usize {
+    rng.range(6, 48) as usize
+}
+
+/// Build a planner with `n` profiled ranks of random GPU types.
+fn random_planner(rng: &mut XorShift, n: usize, stage: u8, gbs: usize) -> ElasticPlanner {
+    let m = preset("llama-0.5b").unwrap();
+    let mut p = ElasticPlanner::new(stage, gbs, &m.name, m.param_count(), 16);
+    for _ in 0..n {
+        let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+        let slot = p.add_slot(gpu);
+        if p.needs_profile().contains(&slot) {
+            let c = device_curve(gpu, mbs_for(rng), 1.0);
+            p.install_curve(slot, c, false);
+        }
+    }
+    p
+}
+
+/// Simulate the profiling the leader would do for curve-less slots.
+fn profile_missing(rng: &mut XorShift, p: &mut ElasticPlanner) {
+    for slot in p.needs_profile() {
+        let gpu = p.slots()[slot].gpu.clone();
+        let c = device_curve(&gpu, mbs_for(rng), 1.0);
+        p.install_curve(slot, c, false);
+    }
+}
+
+#[test]
+fn prop_plan_valid_and_covers_gbs_after_any_event_sequence() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed);
+        let stage = (seed % 4) as u8;
+        let n = rng.range(2, 5) as usize;
+        let gbs = rng.range(16, 1024) as usize;
+        let mut p = random_planner(&mut rng, n, stage, gbs);
+
+        for step in 0..rng.range(1, 8) {
+            // random event: 0 = lose, 1 = join, 2 = slow (drift override)
+            match rng.range(0, 2) {
+                0 => {
+                    let active = p.active_slots();
+                    let victim = active[(rng.next() as usize) % active.len()];
+                    // losing the last rank must fail loudly, not corrupt state
+                    let _ = p.lose_slot(victim);
+                }
+                1 => {
+                    let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+                    p.add_slot(gpu);
+                    profile_missing(&mut rng, &mut p);
+                }
+                _ => {
+                    let active = p.active_slots();
+                    let slot = active[(rng.next() as usize) % active.len()];
+                    let gpu = p.slots()[slot].gpu.clone();
+                    let factor = 1.5 + rng.uniform() * 2.0;
+                    p.install_curve(slot, device_curve(&gpu, mbs_for(&mut rng), factor), true);
+                }
+            }
+            let n_active = p.active_slots().len();
+            let net = NetSim::from_link(n_active, LinkKind::Ib);
+            let plan = p
+                .replan(&net)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"))
+                .clone();
+            plan.validate().unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(plan.total_samples(), gbs, "seed {seed} step {step}");
+            assert_eq!(plan.ranks.len(), n_active, "seed {seed} step {step}");
+        }
+    }
+}
+
+#[test]
+fn prop_no_plan_references_departed_rank() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed + 500);
+        let n = rng.range(3, 6) as usize;
+        let mut p = random_planner(&mut rng, n, 1, 256);
+        let mut departed: HashSet<usize> = HashSet::new();
+
+        for _ in 0..rng.range(2, 10) {
+            let active = p.active_slots();
+            if rng.uniform() < 0.5 && active.len() > 1 {
+                let victim = active[(rng.next() as usize) % active.len()];
+                if p.lose_slot(victim).is_ok() {
+                    departed.insert(victim);
+                }
+            } else {
+                let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+                p.add_slot(gpu);
+                profile_missing(&mut rng, &mut p);
+            }
+            let n_active = p.active_slots().len();
+            let net = NetSim::from_link(n_active, LinkKind::Ib);
+            let plan = p.replan(&net).unwrap().clone();
+            // the compact-rank -> slot mapping must never touch a departed slot
+            assert_eq!(p.slot_map().len(), plan.ranks.len(), "seed {seed}");
+            for &slot in p.slot_map() {
+                assert!(
+                    !departed.contains(&slot),
+                    "seed {seed}: plan references departed slot {slot}"
+                );
+                assert!(p.slots()[slot].alive, "seed {seed}: slot {slot} not alive");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rejoin_of_known_type_always_hits_cache() {
+    for seed in 0..40u64 {
+        let mut rng = XorShift::new(seed + 1000);
+        let n = rng.range(2, 5) as usize;
+        let mut p = random_planner(&mut rng, n, 2, 128);
+        let seen: HashSet<String> =
+            p.slots().iter().map(|s| s.gpu.clone()).collect();
+
+        for _ in 0..rng.range(1, 6) {
+            // rejoin a type the planner has already profiled at this stage
+            let types: Vec<&String> = seen.iter().collect();
+            let gpu = types[(rng.next() as usize) % types.len()].clone();
+            let slot = p.add_slot(&gpu);
+            assert!(
+                !p.needs_profile().contains(&slot),
+                "seed {seed}: rejoin of known type {gpu} required re-profiling"
+            );
+        }
+        assert!(p.cache().hits() >= 1, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_slowed_rank_never_gains_samples_after_replan() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed + 2000);
+        let stage = (seed % 2) as u8; // ZeRO-0/1: per-rank independent shares
+        let n = rng.range(2, 6) as usize;
+        let gbs = (n as u64 * rng.range(32, 256)) as usize;
+        let mut p = random_planner(&mut rng, n, stage, gbs);
+        let net = NetSim::from_link(n, LinkKind::Ib);
+        p.replan(&net).unwrap();
+
+        let active = p.active_slots();
+        let slot = active[(rng.next() as usize) % active.len()];
+        let idx = p.slot_map().iter().position(|&s| s == slot).unwrap();
+        let before = p.plan().unwrap().ranks[idx].samples_per_iter;
+
+        // the straggler's curve is re-measured `factor` slower
+        let gpu = p.slots()[slot].gpu.clone();
+        let mbs = p.slots()[slot].curve.as_ref().unwrap().mbs();
+        let factor = 1.5 + rng.uniform() * 2.5;
+        p.install_curve(slot, device_curve(&gpu, mbs, factor), true);
+        p.replan(&net).unwrap();
+
+        let idx = p.slot_map().iter().position(|&s| s == slot).unwrap();
+        let after = p.plan().unwrap().ranks[idx].samples_per_iter;
+        assert!(
+            after <= before,
+            "seed {seed}: slowed slot {slot} gained samples ({before} -> {after})"
+        );
+        assert_eq!(p.plan().unwrap().total_samples(), gbs, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_cache_eviction_never_drops_live_keys() {
+    for seed in 0..80u64 {
+        let mut rng = XorShift::new(seed + 3000);
+        let cap = rng.range(1, 4) as usize;
+        let mut cache = CurveCache::new(cap);
+        // the live set: up to `cap + 2` keys (may exceed cap — the cache
+        // must grow rather than drop them)
+        let n_live = rng.range(1, cap as u64 + 2) as usize;
+        let live: Vec<CurveKey> = (0..n_live)
+            .map(|i| CurveKey::new(GPUS[i % GPUS.len()], "llama-0.5b", (i % 4) as u8))
+            .collect();
+        for k in &live {
+            cache.insert(k.clone(), device_curve(&k.gpu, 8, 1.0), &live);
+        }
+        // hammer with random cold inserts
+        for _ in 0..rng.range(3, 20) {
+            let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+            let stage = rng.range(0, 3) as u8;
+            let key = CurveKey::new(gpu, "llama-1.1b", stage); // different model: never live
+            cache.insert(key, device_curve(gpu, 8, 1.0), &live);
+            for k in &live {
+                assert!(cache.contains(k), "seed {seed}: live key {k:?} evicted");
+            }
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Golden-table regression tests: the deterministic experiment runners
+//! (fixed seeds, no wall-clock inputs) must render byte-identical
+//! markdown across runs and across refactors — an allocator change that
+//! shifts a paper figure must show up as a diff here, not silently.
+//!
+//! Protocol: each table is rendered twice in-process (determinism
+//! check), then compared byte-for-byte against the committed snapshot
+//! under `tests/golden/`. If the snapshot does not exist yet (fresh
+//! checkout bootstrapping), it is materialized and the test passes with
+//! a notice — commit the generated file to arm the regression check.
+//! To intentionally update a snapshot, delete it and re-run the tests.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    // tests run with cwd = crate root (rust/)
+    PathBuf::from("tests").join("golden")
+}
+
+fn check_golden(name: &str, render: impl Fn() -> String) {
+    let first = render();
+    let second = render();
+    assert_eq!(first, second, "{name}: output is not deterministic within one process");
+    assert!(!first.trim().is_empty(), "{name}: empty table");
+
+    let path = golden_dir().join(format!("{name}.md"));
+    if path.exists() {
+        let want = fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            want, first,
+            "{name}: output drifted from the committed golden snapshot \
+             ({}). If the change is intentional, delete the snapshot and \
+             re-run to regenerate it.",
+            path.display()
+        );
+    } else {
+        fs::create_dir_all(golden_dir()).unwrap();
+        fs::write(&path, &first).unwrap();
+        eprintln!("NOTE: materialized golden snapshot {} — commit it", path.display());
+    }
+}
+
+#[test]
+fn golden_fig3_main_result() {
+    check_golden("fig3", || poplar::exp::fig3::run().unwrap().to_markdown());
+}
+
+#[test]
+fn golden_fig5_quantity_scaling() {
+    check_golden("fig5", || poplar::exp::fig5::run().unwrap().to_markdown());
+}
+
+#[test]
+fn golden_fig_elastic_recovery() {
+    check_golden("fig_elastic", || {
+        poplar::exp::fig_elastic::run().unwrap().to_markdown()
+    });
+}

@@ -1,0 +1,201 @@
+//! Minimal API-compatible subset of `anyhow` for the offline image.
+//!
+//! The container has no crates.io registry, so the real crate cannot be
+//! fetched; this shim implements exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a message + cause chain, `{}` prints the top message,
+//!   `{:#}` prints the whole chain separated by `": "` (matching anyhow's
+//!   alternate formatting);
+//! * [`Result<T>`] with `Error` as the default error type;
+//! * `?`-conversion from any `std::error::Error` (the blanket `From`);
+//! * [`anyhow!`] / [`bail!`] macros;
+//! * [`Context`] with `.context(..)` / `.with_context(..)` on `Result`s
+//!   whose error is either a std error or already an [`Error`].
+//!
+//! The impl structure (private `ChainError` trait with a blanket impl for
+//! std errors plus a concrete impl for `Error`, and `Error` deliberately
+//! NOT implementing `std::error::Error`) mirrors upstream anyhow — it is
+//! what makes the blanket `From` and the dual `Context` impls coherent.
+
+/// `Result<T, anyhow::Error>` with the error defaulted.
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// A dynamic error: top-level message plus a chain of causes.
+pub struct Error {
+    /// `chain[0]` is the top message; the rest are causes, outermost first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: std::fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: std::fmt::Display>(self, context: C) -> Self {
+        let mut chain = vec![context.to_string()];
+        chain.extend(self.chain);
+        Error { chain }
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The top-level message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if f.alternate() {
+            // `{:#}`: whole chain, anyhow-style
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Blanket conversion from any std error, capturing its source chain.
+/// Coherent with `impl From<T> for T` because `Error` itself does not
+/// implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    /// Sealed dispatch: "something that can become an [`crate::Error`]".
+    pub trait ChainError {
+        fn into_chain_error(self) -> crate::Error;
+    }
+
+    impl<E> ChainError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_chain_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl ChainError for crate::Error {
+        fn into_chain_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Adds `.context(..)` / `.with_context(..)` to `Result`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for core::result::Result<T, E>
+where
+    E: private::ChainError,
+{
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_chain_error().context(context))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_chain_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return core::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("opening config");
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u8> {
+            let v: u8 = "300".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 3));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 3");
+    }
+
+    #[test]
+    fn with_context_on_std_result() {
+        let r: core::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+    }
+
+    #[test]
+    fn bail_and_to_string() {
+        fn f() -> Result<()> {
+            bail!("no compiled variant for b={}", 9)
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("no compiled variant"));
+    }
+}

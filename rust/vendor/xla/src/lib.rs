@@ -1,0 +1,157 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The original development image carried a vendored `xla_extension`
+//! build (see `/opt/xla-example` references in `runtime::engine`); this
+//! container does not, and there is no registry to fetch it from. This
+//! stub keeps `runtime::engine` compiling with the exact API surface it
+//! uses, while failing fast at *runtime*: [`PjRtClient::cpu`] returns an
+//! error, so `Engine::open` reports "PJRT runtime unavailable" instead
+//! of crashing later. The simulated training/evaluation paths (the
+//! paper's figures, the coordinator, the elastic runtime) never touch
+//! this crate.
+//!
+//! Swapping this stub for the real bindings is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` path dependency at the vendored
+//! build).
+
+/// Error type of the stub — everything fails with `Unavailable`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable() -> Self {
+        Error {
+            msg: "PJRT runtime unavailable: xla_extension is not vendored in this image \
+                  (simulated paths are unaffected; see rust/vendor/xla)"
+                .to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's signatures.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types PJRT buffers can hold (subset the engine uses).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A device-resident buffer (stub — cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A host literal (stub — cannot be constructed).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    /// Read the literal as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+
+    /// Read the first element.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled executable (stub — cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with rust-owned buffer arguments.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A PJRT client (stub).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub — the caller
+    /// (`Engine::open`) surfaces the message.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable())
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    /// Upload a host buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let msg = format!("{}", Error::unavailable());
+        assert!(msg.contains("unavailable"));
+    }
+}
