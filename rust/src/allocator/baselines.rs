@@ -26,6 +26,9 @@ pub fn plan_uniform(
     if gbs == 0 {
         return Err(PlanError::EmptyBatch);
     }
+    if curves.is_empty() {
+        return Err(PlanError::NoRanks);
+    }
     let n = curves.len();
     let min_mbs = curves.iter().map(|c| c.mbs()).min().unwrap_or(0);
     if min_mbs == 0 {
@@ -78,12 +81,21 @@ pub fn plan_flops_proportional(
     if gbs == 0 {
         return Err(PlanError::EmptyBatch);
     }
+    // an empty survivor set must be a typed error: the mbs/flops scale
+    // below folds from f64::MAX and would otherwise poison every
+    // downstream throughput figure
+    if curves.is_empty() {
+        return Err(PlanError::NoRanks);
+    }
     let n = curves.len();
     assert_eq!(flops.len(), n);
     if curves.iter().all(|c| c.mbs() == 0) {
         return Err(PlanError::NoCapacity);
     }
     let total_flops: f64 = flops.iter().sum();
+    if !total_flops.is_finite() || total_flops <= 0.0 {
+        return Err(PlanError::NoCapacity);
+    }
 
     // FLOPs-proportional integer shares of gbs, remainder to the
     // highest-rated ranks
@@ -93,7 +105,9 @@ pub fn plan_flops_proportional(
         .collect();
     let mut rem = gbs - shares.iter().sum::<usize>();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| flops[b].partial_cmp(&flops[a]).unwrap());
+    // total_cmp for the same reason as the planner's min_by: a NaN rating
+    // must not panic mid-replan
+    order.sort_by(|&a, &b| flops[b].total_cmp(&flops[a]));
     let mut k = 0;
     while rem > 0 {
         shares[order[k % n]] += 1;
@@ -244,6 +258,19 @@ mod tests {
         let p = plan_flops_proportional(&curves, &flops, 1, 256, &net(2),
                                         m.param_count()).unwrap();
         assert_eq!(p.ranks[0].samples_per_iter, p.ranks[1].samples_per_iter);
+    }
+
+    #[test]
+    fn empty_survivor_set_is_typed_error() {
+        let m = preset("llama-0.5b").unwrap();
+        assert_eq!(
+            plan_uniform(&[], 1, 64, &net(1), m.param_count()).unwrap_err(),
+            PlanError::NoRanks
+        );
+        assert_eq!(
+            plan_flops_proportional(&[], &[], 1, 64, &net(1), m.param_count()).unwrap_err(),
+            PlanError::NoRanks
+        );
     }
 
     #[test]

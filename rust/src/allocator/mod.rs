@@ -103,6 +103,11 @@ pub enum PlanError {
     EmptyBatch,
     /// No rank can fit even one sample.
     NoCapacity,
+    /// The curve set was empty (every rank departed in one event batch).
+    NoRanks,
+    /// ZeRO stage outside 0..=3 (user-controlled via config/CLI — must
+    /// surface as an error, never a panic).
+    InvalidStage(u8),
 }
 
 impl std::fmt::Display for PlanError {
@@ -110,6 +115,8 @@ impl std::fmt::Display for PlanError {
         match self {
             PlanError::EmptyBatch => write!(f, "global batch size is zero"),
             PlanError::NoCapacity => write!(f, "no rank can fit a single sample"),
+            PlanError::NoRanks => write!(f, "no ranks to plan over (empty curve set)"),
+            PlanError::InvalidStage(s) => write!(f, "invalid ZeRO stage {s} (want 0..=3)"),
         }
     }
 }
@@ -149,9 +156,14 @@ pub fn plan_zero01(
     stage: u8,
     gbs: usize,
 ) -> Result<Plan, PlanError> {
-    assert!(stage <= 1);
+    if stage > 1 {
+        return Err(PlanError::InvalidStage(stage));
+    }
     if gbs == 0 {
         return Err(PlanError::EmptyBatch);
+    }
+    if curves.is_empty() {
+        return Err(PlanError::NoRanks);
     }
     let n = curves.len();
     let speeds: Vec<f64> = curves.iter().map(|c| c.peak_speed()).collect();
@@ -171,9 +183,12 @@ pub fn plan_zero01(
     while remaining > 0 {
         let i = (0..n)
             .min_by(|&a, &b| {
+                // total_cmp: a NaN time (degenerate curve) must not panic
+                // the planner mid-replan — NaN sorts last and is never
+                // picked while any finite candidate exists.
                 let ta = (gmbs[a] + 1) as f64 / speeds[a];
                 let tb = (gmbs[b] + 1) as f64 / speeds[b];
-                ta.partial_cmp(&tb).unwrap()
+                ta.total_cmp(&tb)
             })
             .unwrap();
         gmbs[i] += 1;
@@ -224,9 +239,14 @@ pub fn plan_zero23(
     net: &NetSim,
     param_count: u64,
 ) -> Result<Plan, PlanError> {
-    assert!(stage == 2 || stage == 3);
+    if !(stage == 2 || stage == 3) {
+        return Err(PlanError::InvalidStage(stage));
+    }
     if gbs == 0 {
         return Err(PlanError::EmptyBatch);
+    }
+    if curves.is_empty() {
+        return Err(PlanError::NoRanks);
     }
     if curves.iter().all(|c| c.mbs() == 0) {
         return Err(PlanError::NoCapacity);
@@ -241,7 +261,7 @@ pub fn plan_zero23(
             candidates.push(c.time_at(b as f64));
         }
     }
-    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.sort_by(f64::total_cmp);
     candidates.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
 
     let mut best: Option<(f64, Vec<usize>, usize)> = None; // (wall, batches, gas)
@@ -323,7 +343,9 @@ pub fn plan(
     match stage {
         0 | 1 => plan_zero01(curves, stage, gbs),
         2 | 3 => plan_zero23(curves, stage, gbs, net, param_count),
-        _ => panic!("invalid ZeRO stage {stage}"),
+        // reachable from the `[elastic]` config path and the CLI: a typed
+        // error, not a panic
+        _ => Err(PlanError::InvalidStage(stage)),
     }
 }
 
@@ -494,6 +516,68 @@ mod tests {
             plan_zero23(&curves, 2, 0, &net8(), m.param_count()).unwrap_err(),
             PlanError::EmptyBatch
         );
+    }
+
+    #[test]
+    fn invalid_stage_is_typed_error_not_panic() {
+        let curves = cluster_c_curves();
+        let m = preset("llama-0.5b").unwrap();
+        for bad in [4u8, 7, 255] {
+            assert_eq!(
+                plan(&curves, bad, 256, &net8(), m.param_count()).unwrap_err(),
+                PlanError::InvalidStage(bad)
+            );
+        }
+        assert_eq!(plan_zero01(&curves, 2, 256).unwrap_err(), PlanError::InvalidStage(2));
+        assert_eq!(
+            plan_zero23(&curves, 1, 256, &net8(), m.param_count()).unwrap_err(),
+            PlanError::InvalidStage(1)
+        );
+        // replan surfaces it too (a stale plan with a corrupt stage must
+        // not take the whole elastic job down with a panic)
+        let mut prev = plan(&curves, 1, 256, &net8(), m.param_count()).unwrap();
+        prev.stage = 9;
+        assert_eq!(
+            replan(&prev, &curves, &net8(), m.param_count()).unwrap_err(),
+            PlanError::InvalidStage(9)
+        );
+    }
+
+    #[test]
+    fn empty_curve_set_is_typed_error() {
+        // every rank departing in one event batch must yield NoRanks, not
+        // a fold over an empty set returning f64::MAX
+        let m = preset("llama-0.5b").unwrap();
+        assert_eq!(plan_zero01(&[], 1, 64).unwrap_err(), PlanError::NoRanks);
+        assert_eq!(
+            plan_zero23(&[], 3, 64, &net8(), m.param_count()).unwrap_err(),
+            PlanError::NoRanks
+        );
+        assert_eq!(
+            plan(&[], 0, 64, &net8(), m.param_count()).unwrap_err(),
+            PlanError::NoRanks
+        );
+    }
+
+    #[test]
+    fn nan_curves_rejected_at_fit_time() {
+        // the NaN guard lives at PerfCurve::fit: a degenerate probe (NaN
+        // or infinite step time) never reaches the planner's comparators
+        use crate::curves::CurveError;
+        let nan = vec![
+            ProfiledPoint { batch: 1, step_time_s: f64::NAN },
+            ProfiledPoint { batch: 2, step_time_s: 0.2 },
+        ];
+        assert_eq!(PerfCurve::fit(nan, 4).unwrap_err(), CurveError::InvalidPoint);
+        let inf = vec![
+            ProfiledPoint { batch: 1, step_time_s: 0.1 },
+            ProfiledPoint { batch: 2, step_time_s: f64::INFINITY },
+        ];
+        assert_eq!(PerfCurve::fit(inf, 4).unwrap_err(), CurveError::InvalidPoint);
+        // a 1-point "curve" (the degenerate case that used to produce a
+        // NaN time downstream) is rejected before it can poison a plan
+        let one = vec![ProfiledPoint { batch: 1, step_time_s: 0.1 }];
+        assert_eq!(PerfCurve::fit(one, 1).unwrap_err(), CurveError::TooFewPoints);
     }
 
     #[test]

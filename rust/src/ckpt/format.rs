@@ -1,0 +1,316 @@
+//! Versioned on-disk serialization of [`ShardManifest`]s.
+//!
+//! Plain line-oriented text (the offline image has no serde), written
+//! under the checkpoint directory (default `artifacts/ckpt/`):
+//!
+//! ```text
+//! poplar-ckpt v1
+//! model llama-0.5b
+//! stage 1
+//! params 468377600
+//! snapshot 12
+//! shards 8
+//! shard 0 A800-80G 0 58547200
+//! ...
+//! end
+//! ```
+//!
+//! Version policy (recorded in ROADMAP): the header carries the format
+//! version; loaders accept exactly [`FORMAT_VERSION`] and fail with
+//! [`CkptError::VersionMismatch`] otherwise. Any field change — adding
+//! one included — bumps the version; there is no silent
+//! forward-compatibility. The `end` trailer guards against truncated
+//! writes. Each snapshot is one file (`manifest-NNNNNN.ckpt`); `LATEST`
+//! holds the newest file name so restore never scans the directory.
+
+use std::path::{Path, PathBuf};
+
+use super::{CkptError, ShardEntry, ShardManifest, ShardRange, FORMAT_VERSION};
+
+/// Magic first token of every checkpoint file.
+pub const MAGIC: &str = "poplar-ckpt";
+
+/// Name of the pointer file holding the newest snapshot's file name.
+pub const LATEST: &str = "LATEST";
+
+fn corrupt(msg: impl Into<String>) -> CkptError {
+    CkptError::Corrupt(msg.into())
+}
+
+impl ShardManifest {
+    /// Render to the versioned text format.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{MAGIC} v{}\n", self.version));
+        s.push_str(&format!("model {}\n", self.model));
+        s.push_str(&format!("stage {}\n", self.stage));
+        s.push_str(&format!("params {}\n", self.param_count));
+        s.push_str(&format!("snapshot {}\n", self.snapshot));
+        s.push_str(&format!("shards {}\n", self.shards.len()));
+        for e in &self.shards {
+            s.push_str(&format!("shard {} {} {} {}\n", e.slot, e.gpu, e.range.lo, e.range.hi));
+        }
+        s.push_str("end\n");
+        s
+    }
+
+    /// Parse the text format, validating structure and version.
+    pub fn from_text(s: &str) -> Result<Self, CkptError> {
+        let mut lines = s.lines();
+        let header = lines.next().ok_or_else(|| corrupt("empty file"))?;
+        let version = header
+            .strip_prefix(MAGIC)
+            .map(str::trim)
+            .and_then(|v| v.strip_prefix('v'))
+            .and_then(|v| v.parse::<u32>().ok())
+            .ok_or_else(|| corrupt(format!("bad header {header:?}")))?;
+        if version != FORMAT_VERSION {
+            return Err(CkptError::VersionMismatch { found: version, supported: FORMAT_VERSION });
+        }
+
+        fn field<'a>(
+            lines: &mut std::str::Lines<'a>,
+            key: &str,
+        ) -> Result<&'a str, CkptError> {
+            let line = lines.next().ok_or_else(|| corrupt(format!("missing {key}")))?;
+            line.strip_prefix(key)
+                .and_then(|v| v.strip_prefix(' '))
+                .ok_or_else(|| corrupt(format!("expected {key:?}, got {line:?}")))
+        }
+
+        let model = field(&mut lines, "model")?.to_string();
+        let stage: u8 = field(&mut lines, "stage")?
+            .parse()
+            .map_err(|_| corrupt("stage not a number"))?;
+        let param_count: u64 = field(&mut lines, "params")?
+            .parse()
+            .map_err(|_| corrupt("params not a number"))?;
+        let snapshot: usize = field(&mut lines, "snapshot")?
+            .parse()
+            .map_err(|_| corrupt("snapshot not a number"))?;
+        let n: usize = field(&mut lines, "shards")?
+            .parse()
+            .map_err(|_| corrupt("shards not a number"))?;
+
+        // the count is untrusted input: never let it size an allocation
+        // (a corrupt `shards 1844…` line must error, not abort), and the
+        // loop below errors naturally when the lines run out
+        let mut shards = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let line = field(&mut lines, "shard")?;
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(corrupt(format!("bad shard line {line:?}")));
+            }
+            let slot: usize = parts[0].parse().map_err(|_| corrupt("shard slot"))?;
+            let lo: u64 = parts[2].parse().map_err(|_| corrupt("shard lo"))?;
+            let hi: u64 = parts[3].parse().map_err(|_| corrupt("shard hi"))?;
+            if hi < lo {
+                return Err(corrupt(format!("shard range [{lo}, {hi}) inverted")));
+            }
+            shards.push(ShardEntry {
+                slot,
+                gpu: parts[1].to_string(),
+                range: ShardRange::new(lo, hi),
+            });
+        }
+        if lines.next() != Some("end") {
+            return Err(corrupt("missing end trailer (truncated write?)"));
+        }
+        if lines.next().is_some() {
+            return Err(corrupt("trailing content after the end trailer"));
+        }
+
+        let m = ShardManifest { version, model, stage, param_count, snapshot, shards };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// File name this snapshot serializes to.
+    pub fn file_name(&self) -> String {
+        format!("manifest-{:06}.ckpt", self.snapshot)
+    }
+
+    /// Write the snapshot under `dir` (created if absent) and update the
+    /// `LATEST` pointer. Both writes go through a temp-file + rename so
+    /// a crash mid-write can never leave `LATEST` pointing at a
+    /// truncated snapshot (renames are atomic on POSIX filesystems), and
+    /// `LATEST` only ever advances — re-saving an older ordinal (e.g. a
+    /// manual `poplar ckpt save` into a live run's directory) cannot
+    /// silently roll the restore point backwards. A run that *owns* the
+    /// directory repoints `LATEST` unconditionally on its first snapshot
+    /// via [`ShardManifest::save_with`]. Returns the snapshot's path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf, CkptError> {
+        self.save_with(dir, false)
+    }
+
+    /// [`ShardManifest::save`] with control over the pointer:
+    /// `force_latest` repoints `LATEST` at this snapshot even when an
+    /// older run left a higher ordinal behind — `run_elastic_job` uses
+    /// it for the first snapshot of a run so a reused directory tracks
+    /// the *current* run instead of a dead one's tail.
+    pub fn save_with(&self, dir: &Path, force_latest: bool) -> Result<PathBuf, CkptError> {
+        self.validate()?;
+        std::fs::create_dir_all(dir)?;
+        let name = self.file_name();
+        let path = dir.join(&name);
+        let tmp = dir.join(format!("{name}.tmp"));
+        std::fs::write(&tmp, self.to_text())?;
+        std::fs::rename(&tmp, &path)?;
+        // compare parsed ordinals, not names: the {:06} padding does not
+        // truncate, so string order breaks past 999999 snapshots
+        let current_ord = std::fs::read_to_string(dir.join(LATEST))
+            .ok()
+            .and_then(|s| {
+                s.trim()
+                    .strip_prefix("manifest-")?
+                    .strip_suffix(".ckpt")?
+                    .parse::<u64>()
+                    .ok()
+            });
+        let advance = match current_ord {
+            Some(c) => c < self.snapshot as u64,
+            None => true,
+        };
+        if force_latest || advance {
+            let latest_tmp = dir.join(format!("{LATEST}.tmp"));
+            std::fs::write(&latest_tmp, format!("{name}\n"))?;
+            std::fs::rename(latest_tmp, dir.join(LATEST))?;
+        }
+        Ok(path)
+    }
+
+    /// Load one snapshot file.
+    pub fn load(path: &Path) -> Result<Self, CkptError> {
+        let s = std::fs::read_to_string(path)?;
+        Self::from_text(&s)
+    }
+
+    /// Load the newest snapshot in `dir` via the `LATEST` pointer.
+    pub fn load_latest(dir: &Path) -> Result<Self, CkptError> {
+        let name = std::fs::read_to_string(dir.join(LATEST))?;
+        Self::load(&dir.join(name.trim()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ShardManifest {
+        ShardManifest::build(
+            "llama-0.5b",
+            1,
+            1003,
+            7,
+            &[(0, "A800-80G".into()), (2, "V100S-32G".into()), (5, "T4".into())],
+        )
+        .unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("poplar-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let m = sample();
+        let back = ShardManifest::from_text(&m.to_text()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn disk_roundtrip_and_latest_pointer() {
+        let dir = tmpdir("disk");
+        let mut m = sample();
+        m.save(&dir).unwrap();
+        m.snapshot = 8;
+        let p = m.save(&dir).unwrap();
+        assert!(p.ends_with("manifest-000008.ckpt"));
+        let latest = ShardManifest::load_latest(&dir).unwrap();
+        assert_eq!(latest, m);
+        // the older snapshot is still loadable directly
+        let old = ShardManifest::load(&dir.join("manifest-000007.ckpt")).unwrap();
+        assert_eq!(old.snapshot, 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_pointer_only_advances() {
+        let dir = tmpdir("advance");
+        let mut m = sample();
+        m.snapshot = 9;
+        m.save(&dir).unwrap();
+        // a re-save of an older ordinal must not roll LATEST back
+        m.snapshot = 3;
+        m.save(&dir).unwrap();
+        let latest = ShardManifest::load_latest(&dir).unwrap();
+        assert_eq!(latest.snapshot, 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn force_latest_repoints_for_a_new_run() {
+        let dir = tmpdir("force");
+        let mut m = sample();
+        m.snapshot = 9; // a dead run's tail
+        m.save(&dir).unwrap();
+        m.snapshot = 0; // a fresh run claims the directory
+        m.save_with(&dir, true).unwrap();
+        assert_eq!(ShardManifest::load_latest(&dir).unwrap().snapshot, 0);
+        // subsequent advance-only saves track the new run
+        m.snapshot = 1;
+        m.save(&dir).unwrap();
+        assert_eq!(ShardManifest::load_latest(&dir).unwrap().snapshot, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn huge_shard_count_is_error_not_panic() {
+        let txt = sample()
+            .to_text()
+            .replace("shards 3", "shards 18446744073709551615");
+        assert!(matches!(ShardManifest::from_text(&txt), Err(CkptError::Corrupt(_))));
+    }
+
+    #[test]
+    fn trailing_content_rejected() {
+        let full = sample().to_text();
+        let doubled = format!("{full}{full}");
+        assert!(matches!(ShardManifest::from_text(&doubled), Err(CkptError::Corrupt(_))));
+        let tail = format!("{full}stray\n");
+        assert!(matches!(ShardManifest::from_text(&tail), Err(CkptError::Corrupt(_))));
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let txt = sample().to_text().replace("poplar-ckpt v1", "poplar-ckpt v2");
+        assert!(matches!(
+            ShardManifest::from_text(&txt),
+            Err(CkptError::VersionMismatch { found: 2, supported: 1 })
+        ));
+    }
+
+    #[test]
+    fn truncated_or_mangled_files_rejected() {
+        let full = sample().to_text();
+        let truncated: String = full.lines().take(5).map(|l| format!("{l}\n")).collect();
+        assert!(matches!(ShardManifest::from_text(&truncated), Err(CkptError::Corrupt(_))));
+        let no_end = full.replace("end\n", "");
+        assert!(matches!(ShardManifest::from_text(&no_end), Err(CkptError::Corrupt(_))));
+        assert!(matches!(ShardManifest::from_text(""), Err(CkptError::Corrupt(_))));
+        assert!(matches!(
+            ShardManifest::from_text("not-a-ckpt v1\n"),
+            Err(CkptError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn missing_latest_is_io_error() {
+        let dir = tmpdir("empty");
+        assert!(matches!(ShardManifest::load_latest(&dir), Err(CkptError::Io(_))));
+    }
+}

@@ -1,0 +1,650 @@
+//! Checkpoint/restore of ZeRO optimizer shards across membership changes.
+//!
+//! Poplar's elastic runtime (PR 1) replans batches after every
+//! `RankLost`/`RankJoined`, but it priced the optimizer-state movement
+//! with a one-shot constant (a full `12ψ` all-gather). This module makes
+//! that cost *measured*: it tracks which rank owns which contiguous
+//! parameter range per ZeRO stage ([`ShardManifest`]), persists that
+//! layout in a versioned on-disk format under `artifacts/ckpt/`
+//! ([`format`]), and computes the **minimal shard-movement set** between
+//! two layouts ([`reshard`]) — so a membership change costs only the
+//! bytes whose owner actually changed, with lost ranks' shards restored
+//! from the checkpoint instead of recomputed.
+//!
+//! Layout rules (from [`crate::zero::optimizer_shard_ranges`]):
+//!
+//! * **ZeRO-0** — optimizer states are replicated: every rank owns the
+//!   full `[0, ψ)` range; only joiners move bytes (a full fetch from the
+//!   lowest surviving peer, or the checkpoint if nobody survived).
+//! * **ZeRO-1..3** — states are partitioned contiguously: rank `i` of
+//!   `n` owns `ψ/n` parameters (remainder to the first ranks). Slots are
+//!   identified by their *stable leader slot id*, so a survivor's
+//!   retained range is the overlap of its old and new intervals.
+//!
+//! The recompute baseline ([`ReshardPlan::full_restore`]) prices the
+//! naive alternative — every rank refetches its entire shard — and is
+//! what `exp::fig_elastic`'s `recompute_s` column reports against the
+//! measured `reshard_s`.
+
+pub mod format;
+
+use std::collections::BTreeMap;
+
+use crate::netsim::NetSim;
+use crate::zero::{optimizer_shard_ranges, OPTIMIZER_BYTES_PER_PARAM};
+
+/// On-disk format version this build reads and writes. Policy: readers
+/// reject any other version with [`CkptError::VersionMismatch`] — the
+/// format has no forward-compatibility window, so any field change
+/// (addition included) must bump this constant and keep a loader for the
+/// old version only if a migration is shipped alongside it.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Half-open parameter-index interval `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// First parameter index owned.
+    pub lo: u64,
+    /// One past the last parameter index owned.
+    pub hi: u64,
+}
+
+impl ShardRange {
+    /// Construct (empty ranges are allowed and have `len() == 0`).
+    pub fn new(lo: u64, hi: u64) -> Self {
+        ShardRange { lo, hi: hi.max(lo) }
+    }
+
+    /// Number of parameters in the range.
+    pub fn len(&self) -> u64 {
+        self.hi - self.lo
+    }
+
+    /// True when the range holds no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    /// Intersection with another range, if non-empty.
+    pub fn intersect(&self, other: &ShardRange) -> Option<ShardRange> {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if lo < hi {
+            Some(ShardRange { lo, hi })
+        } else {
+            None
+        }
+    }
+}
+
+/// One rank's shard assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Stable leader slot id (survives membership changes).
+    pub slot: usize,
+    /// Catalog GPU name (diagnostics only — not part of the layout key).
+    pub gpu: String,
+    /// Owned parameter range.
+    pub range: ShardRange,
+}
+
+/// The partition layout of the optimizer state at one point in time:
+/// which slot owns which parameter range, for a `(model, stage, ψ)` job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    /// On-disk format version ([`FORMAT_VERSION`] for in-memory builds).
+    pub version: u32,
+    /// Model name the state belongs to.
+    pub model: String,
+    /// ZeRO stage of the layout (0 replicates, 1..3 partition).
+    pub stage: u8,
+    /// Total parameter count `ψ`.
+    pub param_count: u64,
+    /// Snapshot ordinal (the plan/iteration the layout was active for).
+    pub snapshot: usize,
+    /// Per-rank assignments in slot order.
+    pub shards: Vec<ShardEntry>,
+}
+
+/// Errors from the checkpoint subsystem.
+#[derive(Debug)]
+pub enum CkptError {
+    /// Stage outside 0..=3.
+    InvalidStage(u8),
+    /// A manifest over zero ranks.
+    EmptyGroup,
+    /// On-disk version this build cannot read.
+    VersionMismatch {
+        /// Version found in the file.
+        found: u32,
+        /// Version this build supports.
+        supported: u32,
+    },
+    /// Structurally invalid file or manifest.
+    Corrupt(String),
+    /// Two manifests that do not describe the same optimizer state.
+    Incompatible(String),
+    /// Filesystem failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::InvalidStage(s) => write!(f, "invalid ZeRO stage {s} (want 0..=3)"),
+            CkptError::EmptyGroup => write!(f, "manifest needs at least one rank"),
+            CkptError::VersionMismatch { found, supported } => write!(
+                f,
+                "checkpoint format v{found} is not readable by this build (supports v{supported}); \
+                 re-snapshot with the matching binary"
+            ),
+            CkptError::Corrupt(m) => write!(f, "corrupt checkpoint: {m}"),
+            CkptError::Incompatible(m) => write!(f, "incompatible manifests: {m}"),
+            CkptError::Io(e) => write!(f, "checkpoint io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+impl ShardManifest {
+    /// Build the layout for `slots` (stable slot id + GPU name, compact
+    /// rank order) at a ZeRO stage, via the partition rule in
+    /// [`crate::zero::optimizer_shard_ranges`].
+    pub fn build(
+        model: &str,
+        stage: u8,
+        param_count: u64,
+        snapshot: usize,
+        slots: &[(usize, String)],
+    ) -> Result<Self, CkptError> {
+        if slots.is_empty() {
+            return Err(CkptError::EmptyGroup);
+        }
+        let ranges = optimizer_shard_ranges(stage, param_count, slots.len())
+            .ok_or(CkptError::InvalidStage(stage))?;
+        let shards = slots
+            .iter()
+            .zip(ranges)
+            .map(|((slot, gpu), (lo, hi))| ShardEntry {
+                slot: *slot,
+                gpu: gpu.clone(),
+                range: ShardRange::new(lo, hi),
+            })
+            .collect();
+        Ok(ShardManifest {
+            version: FORMAT_VERSION,
+            model: model.to_string(),
+            stage,
+            param_count,
+            snapshot,
+            shards,
+        })
+    }
+
+    /// The range owned by `slot`, if the slot is in the manifest.
+    pub fn shard_of(&self, slot: usize) -> Option<ShardRange> {
+        self.shards.iter().find(|e| e.slot == slot).map(|e| e.range)
+    }
+
+    /// True when `slot` appears in the manifest.
+    pub fn has_slot(&self, slot: usize) -> bool {
+        self.shards.iter().any(|e| e.slot == slot)
+    }
+
+    /// Structural validation: version, stage, non-empty, and (for the
+    /// partitioned stages) that the ranges tile `[0, ψ)` exactly.
+    pub fn validate(&self) -> Result<(), CkptError> {
+        if self.version != FORMAT_VERSION {
+            return Err(CkptError::VersionMismatch {
+                found: self.version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        if self.stage > 3 {
+            return Err(CkptError::InvalidStage(self.stage));
+        }
+        if self.shards.is_empty() {
+            return Err(CkptError::EmptyGroup);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.shards {
+            if !seen.insert(e.slot) {
+                return Err(CkptError::Corrupt(format!("slot {} listed twice", e.slot)));
+            }
+            if e.range.hi > self.param_count {
+                return Err(CkptError::Corrupt(format!(
+                    "slot {} range [{}, {}) exceeds ψ={}",
+                    e.slot, e.range.lo, e.range.hi, self.param_count
+                )));
+            }
+        }
+        match self.stage {
+            0 => {
+                for e in &self.shards {
+                    if e.range != ShardRange::new(0, self.param_count) {
+                        return Err(CkptError::Corrupt(format!(
+                            "ZeRO-0 replicates: slot {} must own [0, ψ)",
+                            e.slot
+                        )));
+                    }
+                }
+            }
+            _ => {
+                // contiguous tiling of [0, ψ) in shard order
+                let mut cursor = 0u64;
+                for e in &self.shards {
+                    if e.range.lo != cursor {
+                        return Err(CkptError::Corrupt(format!(
+                            "gap or overlap at parameter {cursor} (slot {} starts at {})",
+                            e.slot, e.range.lo
+                        )));
+                    }
+                    cursor = e.range.hi;
+                }
+                if cursor != self.param_count {
+                    return Err(CkptError::Corrupt(format!(
+                        "layout covers {cursor} of ψ={} parameters",
+                        self.param_count
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check that `other` describes the same optimizer state (same model,
+    /// stage and ψ) so a reshard between the two is meaningful.
+    fn check_compatible(&self, other: &ShardManifest) -> Result<(), CkptError> {
+        if self.model != other.model {
+            return Err(CkptError::Incompatible(format!(
+                "model {:?} vs {:?}",
+                self.model, other.model
+            )));
+        }
+        if self.stage != other.stage {
+            return Err(CkptError::Incompatible(format!(
+                "stage {} vs {}",
+                self.stage, other.stage
+            )));
+        }
+        if self.param_count != other.param_count {
+            return Err(CkptError::Incompatible(format!(
+                "ψ {} vs {}",
+                self.param_count, other.param_count
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One shard transfer: `to_slot` receives `range`, either from a peer
+/// (`from_slot = Some`) or restored off the checkpoint (`None` — the old
+/// owner left the job, which is exactly what persistence is for).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMove {
+    /// Receiving slot.
+    pub to_slot: usize,
+    /// Sending slot, or `None` for a checkpoint restore.
+    pub from_slot: Option<usize>,
+    /// Parameter range transferred.
+    pub range: ShardRange,
+}
+
+/// A retained region: `slot` already holds `range` and moves nothing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetainedShard {
+    /// Owning slot.
+    pub slot: usize,
+    /// Parameter range kept in place.
+    pub range: ShardRange,
+}
+
+/// The minimal shard-movement set between two layouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReshardPlan {
+    /// ZeRO stage of both layouts.
+    pub stage: u8,
+    /// Total parameter count `ψ`.
+    pub param_count: u64,
+    /// Transfers, destination slot order.
+    pub moves: Vec<ShardMove>,
+    /// Regions that stay where they are.
+    pub retained: Vec<RetainedShard>,
+}
+
+impl ReshardPlan {
+    /// Optimizer-state bytes that must move (peer + checkpoint sources).
+    pub fn bytes_moved(&self) -> u64 {
+        self.moves.iter().map(|m| m.range.len() * OPTIMIZER_BYTES_PER_PARAM).sum()
+    }
+
+    /// Bytes restored from the checkpoint (no surviving owner).
+    pub fn bytes_from_checkpoint(&self) -> u64 {
+        self.moves
+            .iter()
+            .filter(|m| m.from_slot.is_none())
+            .map(|m| m.range.len() * OPTIMIZER_BYTES_PER_PARAM)
+            .sum()
+    }
+
+    /// Bytes that stay in place.
+    pub fn bytes_retained(&self) -> u64 {
+        self.retained.iter().map(|r| r.range.len() * OPTIMIZER_BYTES_PER_PARAM).sum()
+    }
+
+    /// True when nothing moves (layout unchanged).
+    pub fn is_noop(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Measured one-shot transfer time: point-to-point shard moves run in
+    /// parallel, so the wall time is the most-loaded endpoint's
+    /// `bytes / bw` plus a per-transfer latency — not a full-volume
+    /// collective. Checkpoint restores are charged to the receiving rank
+    /// at the same link bandwidth (the checkpoint store sits on the same
+    /// fabric).
+    pub fn transfer_time_s(&self, net: &NetSim) -> f64 {
+        if self.moves.is_empty() {
+            return 0.0;
+        }
+        let bw = net.bw_gbs * 1e9;
+        // per-slot (bytes sent, bytes received, transfer count)
+        let mut load: BTreeMap<usize, (u64, u64, u64)> = BTreeMap::new();
+        for m in &self.moves {
+            let bytes = m.range.len() * OPTIMIZER_BYTES_PER_PARAM;
+            let d = load.entry(m.to_slot).or_insert((0, 0, 0));
+            d.1 += bytes;
+            d.2 += 1;
+            if let Some(src) = m.from_slot {
+                let s = load.entry(src).or_insert((0, 0, 0));
+                s.0 += bytes;
+                s.2 += 1;
+            }
+        }
+        load.values()
+            .map(|&(sent, recv, count)| {
+                sent.max(recv) as f64 / bw + count as f64 * net.alpha_s
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// The recompute baseline: every rank of `new` refetches its entire
+    /// shard from the checkpoint, retaining nothing — what a restart
+    /// without shard-aware resharding pays.
+    pub fn full_restore(new: &ShardManifest) -> ReshardPlan {
+        ReshardPlan {
+            stage: new.stage,
+            param_count: new.param_count,
+            moves: new
+                .shards
+                .iter()
+                .filter(|e| !e.range.is_empty())
+                .map(|e| ShardMove { to_slot: e.slot, from_slot: None, range: e.range })
+                .collect(),
+            retained: Vec::new(),
+        }
+    }
+}
+
+/// Compute the minimal shard-movement set taking the optimizer state
+/// from layout `old` to layout `new`.
+///
+/// For the partitioned stages every destination's new range is split
+/// into (a) the overlap with its *own* old range — retained, zero cost —
+/// and (b) the rest, sourced from each sub-interval's old owner if that
+/// owner survived, else from the checkpoint. ZeRO-0 replicates, so only
+/// slots absent from `old` move anything (one full fetch each).
+pub fn reshard(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, CkptError> {
+    old.validate()?;
+    new.validate()?;
+    old.check_compatible(new)?;
+
+    let mut moves = Vec::new();
+    let mut retained = Vec::new();
+
+    if old.stage == 0 {
+        let full = ShardRange::new(0, old.param_count);
+        // round-robin full-state fetches over the surviving replicas so a
+        // multi-join batch does not serialize on one donor's uplink
+        let donors: Vec<usize> = old
+            .shards
+            .iter()
+            .map(|e| e.slot)
+            .filter(|&s| new.has_slot(s))
+            .collect();
+        let mut k = 0usize;
+        for e in &new.shards {
+            if old.has_slot(e.slot) {
+                retained.push(RetainedShard { slot: e.slot, range: full });
+            } else if !full.is_empty() {
+                let from_slot = if donors.is_empty() {
+                    None
+                } else {
+                    k += 1;
+                    Some(donors[(k - 1) % donors.len()])
+                };
+                moves.push(ShardMove { to_slot: e.slot, from_slot, range: full });
+            }
+        }
+        return Ok(ReshardPlan { stage: old.stage, param_count: old.param_count, moves, retained });
+    }
+
+    for e in &new.shards {
+        if e.range.is_empty() {
+            continue;
+        }
+        let kept = old.shard_of(e.slot).and_then(|o| o.intersect(&e.range));
+        if let Some(k) = kept {
+            retained.push(RetainedShard { slot: e.slot, range: k });
+        }
+        // the (up to two) gaps of e.range not covered by `kept`
+        let gaps: Vec<ShardRange> = match kept {
+            None => vec![e.range],
+            Some(k) => {
+                let mut g = Vec::new();
+                if e.range.lo < k.lo {
+                    g.push(ShardRange::new(e.range.lo, k.lo));
+                }
+                if k.hi < e.range.hi {
+                    g.push(ShardRange::new(k.hi, e.range.hi));
+                }
+                g
+            }
+        };
+        for gap in gaps {
+            // split the gap by its old owners (old tiles [0, ψ), so every
+            // sub-interval has exactly one)
+            for o in &old.shards {
+                if let Some(piece) = o.range.intersect(&gap) {
+                    let from_slot = if new.has_slot(o.slot) {
+                        Some(o.slot)
+                    } else {
+                        None
+                    };
+                    moves.push(ShardMove { to_slot: e.slot, from_slot, range: piece });
+                }
+            }
+        }
+    }
+
+    Ok(ReshardPlan { stage: old.stage, param_count: old.param_count, moves, retained })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+
+    fn slots(ids: &[usize]) -> Vec<(usize, String)> {
+        ids.iter().map(|&i| (i, format!("G{i}"))).collect()
+    }
+
+    fn manifest(stage: u8, psi: u64, ids: &[usize], snapshot: usize) -> ShardManifest {
+        ShardManifest::build("m", stage, psi, snapshot, &slots(ids)).unwrap()
+    }
+
+    #[test]
+    fn build_tiles_param_space_for_partitioned_stages() {
+        for stage in 1..=3u8 {
+            let m = manifest(stage, 1003, &[0, 1, 2, 3], 0);
+            m.validate().unwrap();
+            assert_eq!(m.shards[0].range.lo, 0);
+            assert_eq!(m.shards.last().unwrap().range.hi, 1003);
+            let total: u64 = m.shards.iter().map(|e| e.range.len()).sum();
+            assert_eq!(total, 1003);
+            // remainder goes to the first ranks
+            assert_eq!(m.shards[0].range.len(), 251);
+            assert_eq!(m.shards[3].range.len(), 250);
+        }
+    }
+
+    #[test]
+    fn build_replicates_for_stage0() {
+        let m = manifest(0, 500, &[0, 1], 0);
+        m.validate().unwrap();
+        for e in &m.shards {
+            assert_eq!(e.range, ShardRange::new(0, 500));
+        }
+    }
+
+    #[test]
+    fn build_rejects_bad_inputs() {
+        assert!(matches!(
+            ShardManifest::build("m", 4, 100, 0, &slots(&[0])),
+            Err(CkptError::InvalidStage(4))
+        ));
+        assert!(matches!(
+            ShardManifest::build("m", 1, 100, 0, &[]),
+            Err(CkptError::EmptyGroup)
+        ));
+    }
+
+    #[test]
+    fn noop_reshard_when_layout_unchanged() {
+        let a = manifest(1, 1000, &[0, 1, 2], 0);
+        let b = manifest(1, 1000, &[0, 1, 2], 1);
+        let plan = reshard(&a, &b).unwrap();
+        assert!(plan.is_noop());
+        assert_eq!(plan.bytes_moved(), 0);
+        assert_eq!(plan.bytes_retained(), 1000 * OPTIMIZER_BYTES_PER_PARAM);
+        assert_eq!(plan.transfer_time_s(&NetSim::from_link(3, LinkKind::Ib)), 0.0);
+    }
+
+    #[test]
+    fn lost_rank_restores_only_its_shard_from_checkpoint() {
+        // 4 ranks -> slot 3 lost -> 3 ranks: survivors grow, and the
+        // bytes with no surviving owner come off the checkpoint. A
+        // realistic ψ keeps the comparison bandwidth-bound (at toy sizes
+        // per-transfer latency dominates and the ordering is undefined).
+        let psi = 1_200_000_000u64;
+        let old = manifest(1, psi, &[0, 1, 2, 3], 0);
+        let new = manifest(1, psi, &[0, 1, 2], 1);
+        let plan = reshard(&old, &new).unwrap();
+        assert!(!plan.is_noop());
+        // moved + retained exactly cover each destination's new range
+        for e in &new.shards {
+            let got: u64 = plan
+                .moves
+                .iter()
+                .filter(|m| m.to_slot == e.slot)
+                .map(|m| m.range.len())
+                .chain(
+                    plan.retained
+                        .iter()
+                        .filter(|r| r.slot == e.slot)
+                        .map(|r| r.range.len()),
+                )
+                .sum();
+            assert_eq!(got, e.range.len(), "slot {}", e.slot);
+        }
+        // slot 3 owned the last quarter: exactly those params come from disk
+        assert_eq!(plan.bytes_from_checkpoint(), (psi / 4) * OPTIMIZER_BYTES_PER_PARAM);
+        // minimal movement beats the full-restore recompute baseline
+        let recompute = ReshardPlan::full_restore(&new);
+        assert!(plan.bytes_moved() < recompute.bytes_moved());
+        let net = NetSim::from_link(3, LinkKind::Ib);
+        assert!(plan.transfer_time_s(&net) < recompute.transfer_time_s(&net));
+    }
+
+    #[test]
+    fn join_moves_only_the_new_shard() {
+        let old = manifest(2, 1200, &[0, 1, 2], 0);
+        let new = manifest(2, 1200, &[0, 1, 2, 7], 1);
+        let plan = reshard(&old, &new).unwrap();
+        // every byte has a surviving owner: nothing comes off the disk
+        assert_eq!(plan.bytes_from_checkpoint(), 0);
+        // the joiner receives its whole shard from peers
+        let joiner_bytes: u64 = plan
+            .moves
+            .iter()
+            .filter(|m| m.to_slot == 7)
+            .map(|m| m.range.len())
+            .sum();
+        assert_eq!(joiner_bytes, new.shard_of(7).unwrap().len());
+        assert!(plan.moves.iter().all(|m| m.from_slot.is_some()));
+    }
+
+    #[test]
+    fn stage0_join_fetches_full_copy_and_losses_are_free() {
+        let old = manifest(0, 800, &[0, 1], 0);
+        let lost = manifest(0, 800, &[0], 1);
+        assert!(reshard(&old, &lost).unwrap().is_noop());
+        let joined = manifest(0, 800, &[0, 1, 2], 1);
+        let plan = reshard(&old, &joined).unwrap();
+        assert_eq!(plan.moves.len(), 1);
+        assert_eq!(plan.moves[0].to_slot, 2);
+        assert_eq!(plan.moves[0].from_slot, Some(0));
+        assert_eq!(plan.moves[0].range.len(), 800);
+    }
+
+    #[test]
+    fn stage0_multi_join_spreads_donors() {
+        let old = manifest(0, 800, &[0, 1], 0);
+        let joined = manifest(0, 800, &[0, 1, 2, 3, 4], 1);
+        let plan = reshard(&old, &joined).unwrap();
+        let sources: Vec<Option<usize>> =
+            plan.moves.iter().map(|m| m.from_slot).collect();
+        // three joiners over two donors: round-robin 0, 1, 0
+        assert_eq!(sources, vec![Some(0), Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn incompatible_manifests_rejected() {
+        let a = manifest(1, 1000, &[0, 1], 0);
+        let b = manifest(2, 1000, &[0, 1], 0);
+        assert!(matches!(reshard(&a, &b), Err(CkptError::Incompatible(_))));
+        let c = manifest(1, 999, &[0, 1], 0);
+        assert!(matches!(reshard(&a, &c), Err(CkptError::Incompatible(_))));
+    }
+
+    #[test]
+    fn validate_catches_corrupt_layouts() {
+        let mut m = manifest(1, 1000, &[0, 1], 0);
+        m.shards[1].range.lo += 1; // gap
+        assert!(matches!(m.validate(), Err(CkptError::Corrupt(_))));
+        let mut m = manifest(1, 1000, &[0, 1], 0);
+        m.shards[1].slot = 0; // duplicate
+        assert!(matches!(m.validate(), Err(CkptError::Corrupt(_))));
+        let mut m = manifest(1, 1000, &[0, 1], 0);
+        m.version = 99;
+        assert!(matches!(m.validate(), Err(CkptError::VersionMismatch { .. })));
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_link() {
+        let old = manifest(3, 4_000_000, &[0, 1, 2, 3], 0);
+        let new = manifest(3, 4_000_000, &[0, 1], 1);
+        let plan = reshard(&old, &new).unwrap();
+        let fast = plan.transfer_time_s(&NetSim::from_link(2, LinkKind::Nvlink));
+        let slow = plan.transfer_time_s(&NetSim::from_link(2, LinkKind::Socket));
+        assert!(slow > fast);
+        assert!(fast > 0.0);
+    }
+}

@@ -15,6 +15,11 @@
 //! noise_sigma = 0.015
 //! seed = 42
 //!
+//! # optional: persist optimizer-shard manifests across membership
+//! # changes (poplar elastic --config … / poplar ckpt …)
+//! [ckpt]
+//! dir = "artifacts/ckpt"
+//!
 //! # optional: elastic membership schedule (poplar elastic --config …)
 //! [elastic]
 //! drift_threshold = 0.15
@@ -102,6 +107,20 @@ pub struct ElasticConfig {
     pub events: Vec<ScheduledEvent>,
 }
 
+/// Checkpoint section: where optimizer-shard manifests persist so a
+/// `RankLost` costs resharding, not recomputation.
+#[derive(Debug, Clone)]
+pub struct CkptConfig {
+    /// Snapshot directory (versioned manifest files + `LATEST` pointer).
+    pub dir: std::path::PathBuf,
+}
+
+impl Default for CkptConfig {
+    fn default() -> Self {
+        CkptConfig { dir: std::path::PathBuf::from("artifacts/ckpt") }
+    }
+}
+
 /// Top-level job configuration.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -113,6 +132,8 @@ pub struct JobConfig {
     pub training: TrainingConfig,
     /// Optional elastic schedule (`poplar elastic --config …`).
     pub elastic: Option<ElasticConfig>,
+    /// Optional checkpoint persistence (`[ckpt]` section).
+    pub ckpt: Option<CkptConfig>,
 }
 
 /// Errors from loading/validating a config.
@@ -310,7 +331,18 @@ impl JobConfig {
             None
         };
 
-        let cfg = JobConfig { model, cluster, training, elastic };
+        // ---- ckpt (optional) ----
+        let ckpt = if d.has_table("ckpt") {
+            let dir = d.str("ckpt.dir").unwrap_or("artifacts/ckpt");
+            if dir.trim().is_empty() {
+                return Err(invalid("ckpt.dir must not be empty"));
+            }
+            Some(CkptConfig { dir: std::path::PathBuf::from(dir) })
+        } else {
+            None
+        };
+
+        let cfg = JobConfig { model, cluster, training, elastic, ckpt };
         if cfg.gbs_samples() == 0 {
             return Err(invalid("global_batch_tokens smaller than one sequence"));
         }
@@ -449,6 +481,20 @@ mod tests {
     #[test]
     fn no_elastic_section_is_none() {
         assert!(JobConfig::from_toml(GOOD).unwrap().elastic.is_none());
+    }
+
+    #[test]
+    fn ckpt_section_parses_with_defaults() {
+        assert!(JobConfig::from_toml(GOOD).unwrap().ckpt.is_none());
+        // bare [ckpt] means the default directory
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[ckpt]\n")).unwrap();
+        assert_eq!(
+            cfg.ckpt.unwrap().dir,
+            std::path::PathBuf::from("artifacts/ckpt")
+        );
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[ckpt]\ndir = \"/tmp/ck\"\n")).unwrap();
+        assert_eq!(cfg.ckpt.unwrap().dir, std::path::PathBuf::from("/tmp/ck"));
+        assert!(JobConfig::from_toml(&format!("{GOOD}\n[ckpt]\ndir = \"\"\n")).is_err());
     }
 
     #[test]

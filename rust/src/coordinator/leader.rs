@@ -16,8 +16,12 @@
 //! (`RankJoined`, re-using cached curves for known GPU types) or
 //! silently slow down (`RankSlowed`, discovered by drift detection and
 //! answered with an incremental re-profile of only the affected ranks),
-//! with Algorithm 2 re-run over the surviving curve set and the
-//! optimizer-state resharding cost charged once to the next iteration.
+//! with Algorithm 2 re-run over the surviving curve set. Every replan
+//! also rebuilds the optimizer-shard layout (`ckpt::ShardManifest`,
+//! snapshotted to disk when `ElasticOptions::ckpt_dir` is set) and
+//! charges the *measured* minimal shard-movement cost — bytes that
+//! actually changed owner, lost shards restored from the checkpoint —
+//! once to the next iteration.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -78,11 +82,18 @@ pub struct ElasticOptions {
     pub drift_threshold: f64,
     /// Curve-cache capacity (number of `(gpu, model, stage)` curves).
     pub cache_cap: usize,
+    /// Directory to snapshot the optimizer-shard manifest into after
+    /// every plan (`[ckpt] dir` in config; `None` disables persistence).
+    pub ckpt_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ElasticOptions {
     fn default() -> Self {
-        ElasticOptions { drift_threshold: elastic::DEFAULT_DRIFT_THRESHOLD, cache_cap: 32 }
+        ElasticOptions {
+            drift_threshold: elastic::DEFAULT_DRIFT_THRESHOLD,
+            cache_cap: 32,
+            ckpt_dir: None,
+        }
     }
 }
 
@@ -103,8 +114,11 @@ pub struct ElasticIterationReport {
     pub replanned: bool,
     /// Slots (re-)profiled before this iteration (joins + drifters).
     pub reprofiled_slots: Vec<usize>,
-    /// One-shot optimizer-state resharding cost charged here.
+    /// One-shot optimizer-state resharding cost charged here — measured
+    /// from the minimal shard-movement set, not a full-state constant.
     pub reshard_penalty_s: f64,
+    /// Optimizer-state bytes that changed owner in that reshard.
+    pub reshard_bytes: u64,
 }
 
 /// Everything `run_elastic_job` produces.
@@ -126,6 +140,8 @@ pub struct ElasticJobReport {
     pub cache_misses: u64,
     /// The plan active after the last iteration.
     pub final_plan: Plan,
+    /// The optimizer-shard layout of the final plan.
+    pub final_manifest: crate::ckpt::ShardManifest,
 }
 
 struct WorkerHandle {
@@ -294,7 +310,10 @@ impl Leader {
     /// Phase 1: parallel Alg. 1 with automatic stage escalation, over the
     /// live ranks.
     pub fn profile(&mut self, requested_stage: u8) -> Result<ClusterProfile> {
-        assert!(requested_stage < 4);
+        // user-controlled via CLI/config: an error, never a panic
+        if requested_stage >= 4 {
+            bail!("invalid ZeRO stage {requested_stage} (want 0..=3)");
+        }
         let active = self.active_ranks();
         'stage: for stage in requested_stage..4 {
             let results = self.profile_slots(&active, stage)?;
@@ -503,8 +522,9 @@ impl Leader {
     /// worker down, joins spawn one — re-using the curve cache for known
     /// GPU types — and slowdowns are injected silently), (2) profiles
     /// only ranks without a usable curve, (3) re-runs Algorithm 2 if
-    /// membership or curves changed, charging the one-shot resharding
-    /// penalty, (4) runs the iteration live and (5) compares observed
+    /// membership or curves changed, charging the measured minimal
+    /// shard-movement cost and snapshotting the shard manifest when
+    /// persistence is on, (4) runs the iteration live and (5) compares observed
     /// micro-step times against the curves: drifted ranks are re-profiled
     /// incrementally and the next iteration replans.
     pub fn run_elastic_job(
@@ -535,9 +555,15 @@ impl Leader {
             let slot = planner.add_slot(&r.name);
             planner.install_curve(slot, c, false);
         }
-        let mut n_prev = planner.active_slots().len();
-        self.net.n = n_prev;
+        self.net.n = planner.active_slots().len();
         planner.replan(&self.net).map_err(|e| anyhow!("initial plan: {e}"))?;
+        if let Some(dir) = &opts.ckpt_dir {
+            if let Some(m) = planner.manifest() {
+                // this run now owns the directory: repoint LATEST even if
+                // a previous (longer) run left a higher ordinal behind
+                m.save_with(dir, true).map_err(|e| anyhow!("ckpt snapshot: {e}"))?;
+            }
+        }
         // report cache traffic relative to this point: the initial build
         // scores a hit per duplicate GPU type, which is not a re-join
         let (hits0, misses0) = (planner.cache().hits(), planner.cache().misses());
@@ -657,24 +683,33 @@ impl Leader {
                 }
             }
 
-            // (3) replan over the surviving curve set
+            // (3) replan over the surviving curve set. The replan also
+            // rebuilds the optimizer-shard layout, so the one-shot
+            // penalty is *measured* from the bytes whose owner actually
+            // changed (zero for pure drift replans: same membership,
+            // same layout), with lost ranks' shards restored from the
+            // checkpoint instead of recomputed.
             debug_assert_eq!(self.net.n, n_now, "remove/add_rank maintain net.n");
             let mut penalty = 0.0;
+            let mut reshard_bytes = 0u64;
             let mut replanned = false;
             if planner.dirty() {
-                penalty = elastic::reshard_penalty_s(
-                    &self.net,
-                    stage,
-                    self.model.param_count(),
-                    n_prev,
-                    n_now,
-                );
                 planner
                     .replan(&self.net)
                     .map_err(|e| anyhow!("replan at iter {iter}: {e}"))?;
+                // honest pricing: minimal movement only if the shards are
+                // actually persisted — otherwise a loss forces the
+                // full-restore baseline
+                let checkpointed = opts.ckpt_dir.is_some();
+                penalty = planner.reshard_penalty_s(&self.net, checkpointed);
+                reshard_bytes = planner.reshard_bytes(checkpointed);
                 replanned = true;
+                if let Some(dir) = &opts.ckpt_dir {
+                    if let Some(m) = planner.manifest() {
+                        m.save(dir).map_err(|e| anyhow!("ckpt snapshot: {e}"))?;
+                    }
+                }
             }
-            n_prev = n_now;
 
             // (4) run the iteration live
             let plan = planner.plan().expect("planned above").clone();
@@ -720,6 +755,7 @@ impl Leader {
                 replanned,
                 reprofiled_slots: reprofiled,
                 reshard_penalty_s: penalty,
+                reshard_bytes,
             });
         }
 
@@ -730,6 +766,7 @@ impl Leader {
             cache_hits: planner.cache().hits() - hits0,
             cache_misses: planner.cache().misses() - misses0,
             final_plan: planner.plan().expect("planned").clone(),
+            final_manifest: planner.manifest().expect("planned").clone(),
             iterations: reports,
         })
     }
@@ -964,6 +1001,89 @@ mod tests {
             "rebalancing must recover throughput: {pre_share:.1} -> {post_share:.1}"
         );
         assert_eq!(rep.final_plan.total_samples(), 512);
+        l.shutdown();
+    }
+
+    #[test]
+    fn invalid_stage_is_error_not_panic() {
+        let mut l = leader_c(0.0);
+        assert!(l.profile(4).is_err());
+        assert!(l.run_job(9, Strategy::Poplar, 64, 1).is_err());
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_reshard_penalty_is_measured_not_full_state() {
+        // with persistence on, losing 1 of 8 ranks must cost strictly
+        // less than moving the whole 12ψ optimizer state (the PR 1
+        // constant it replaces)
+        let dir = std::env::temp_dir()
+            .join(format!("poplar-leader-measured-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankLost { slot: 7 })]);
+        let opts = ElasticOptions { ckpt_dir: Some(dir.clone()), ..Default::default() };
+        let rep = l.run_elastic_job(1, 256, 3, &schedule, &opts).unwrap();
+        let it = &rep.iterations[1];
+        assert!(it.reshard_penalty_s > 0.0);
+        assert!(it.reshard_bytes > 0);
+        let psi = preset("llama-0.5b").unwrap().param_count();
+        assert!(
+            it.reshard_bytes < 12 * psi,
+            "moved {} of the full {} state bytes",
+            it.reshard_bytes,
+            12 * psi
+        );
+        // quiet iterations charge nothing
+        assert_eq!(rep.iterations[2].reshard_penalty_s, 0.0);
+        assert_eq!(rep.iterations[2].reshard_bytes, 0);
+        // final layout covers the 7 survivors
+        rep.final_manifest.validate().unwrap();
+        assert_eq!(rep.final_manifest.shards.len(), 7);
+        assert!(!rep.final_manifest.has_slot(7));
+        let _ = std::fs::remove_dir_all(&dir);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_loss_without_persistence_pays_full_restore() {
+        // persistence off (the default): a departed rank's shard has no
+        // source, so the honest charge is the full 12ψ rebuild
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankLost { slot: 7 })]);
+        let rep = l
+            .run_elastic_job(1, 256, 3, &schedule, &ElasticOptions::default())
+            .unwrap();
+        let psi = preset("llama-0.5b").unwrap().param_count();
+        assert_eq!(rep.iterations[1].reshard_bytes, 12 * psi);
+        assert!(rep.iterations[1].reshard_penalty_s > 0.0);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_job_snapshots_manifest_each_plan() {
+        let dir = std::env::temp_dir()
+            .join(format!("poplar-leader-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankLost { slot: 6 })]);
+        let opts = ElasticOptions { ckpt_dir: Some(dir.clone()), ..Default::default() };
+        let rep = l.run_elastic_job(1, 256, 3, &schedule, &opts).unwrap();
+        // initial plan + post-loss replan = two snapshots on disk
+        let latest = crate::ckpt::ShardManifest::load_latest(&dir).unwrap();
+        assert_eq!(latest, rep.final_manifest);
+        let n_snaps = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .ends_with(".ckpt")
+            })
+            .count();
+        assert_eq!(n_snaps, rep.replans);
+        let _ = std::fs::remove_dir_all(&dir);
         l.shutdown();
     }
 

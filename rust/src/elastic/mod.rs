@@ -17,8 +17,12 @@
 //! * [`detect_drift`] — compares observed micro-step times against the
 //!   fitted curves; ranks beyond the threshold are re-profiled (only
 //!   them — the rest of the cluster keeps training on known curves);
-//! * [`reshard_penalty_s`] — the one-shot optimizer-state resharding
-//!   cost charged to the first iteration after a membership change.
+//! * every replan also rebuilds the optimizer-shard layout
+//!   ([`crate::ckpt::ShardManifest`]) and computes the minimal
+//!   shard-movement set against the previous layout, so
+//!   [`ElasticPlanner::reshard_penalty_s`] is *measured* from the bytes
+//!   that actually change owner — not the one-shot `12ψ` constant PR 1
+//!   charged.
 //!
 //! The live driver is `coordinator::Leader::run_elastic_job`; the
 //! analytic comparison (static plan vs re-allocation) is
@@ -31,8 +35,9 @@ pub use cache::{CurveCache, CurveKey};
 pub use events::{parse_schedule, seeded_schedule, ElasticEvent, ScheduledEvent, XorShift};
 
 use crate::allocator::{self, Plan, PlanError};
+use crate::ckpt::{self, ReshardPlan, ShardManifest};
 use crate::curves::PerfCurve;
-use crate::netsim::{Collective, NetSim};
+use crate::netsim::NetSim;
 
 /// Default relative drift threshold: re-profile a rank when its observed
 /// micro-step time deviates from the curve prediction by more than 15%
@@ -53,6 +58,9 @@ pub enum ElasticError {
     MissingCurves(Vec<usize>),
     /// The allocator rejected the surviving curve set.
     Plan(PlanError),
+    /// The checkpoint subsystem rejected the shard layout (message form:
+    /// `CkptError` is not `PartialEq`).
+    Ckpt(String),
 }
 
 impl std::fmt::Display for ElasticError {
@@ -65,6 +73,7 @@ impl std::fmt::Display for ElasticError {
                 write!(f, "slots {s:?} need profiling before replan")
             }
             ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
+            ElasticError::Ckpt(e) => write!(f, "shard layout: {e}"),
         }
     }
 }
@@ -106,6 +115,8 @@ pub struct ElasticPlanner {
     slot_map: Vec<usize>,
     dirty: bool,
     replans: usize,
+    manifest: Option<ShardManifest>,
+    last_reshard: Option<ReshardPlan>,
 }
 
 impl ElasticPlanner {
@@ -123,6 +134,8 @@ impl ElasticPlanner {
             slot_map: Vec::new(),
             dirty: true,
             replans: 0,
+            manifest: None,
+            last_reshard: None,
         }
     }
 
@@ -257,7 +270,9 @@ impl ElasticPlanner {
     }
 
     /// Re-run Algorithm 2 over the surviving curve set. Fitted curves are
-    /// reused as-is — no re-profiling happens here.
+    /// reused as-is — no re-profiling happens here. Also rebuilds the
+    /// optimizer-shard layout and computes the minimal shard-movement set
+    /// against the previous layout ([`ElasticPlanner::last_reshard`]).
     pub fn replan(&mut self, net: &NetSim) -> Result<&Plan, ElasticError> {
         let curves = self.active_curves()?;
         let plan = match &self.plan {
@@ -266,10 +281,77 @@ impl ElasticPlanner {
         }
         .map_err(ElasticError::Plan)?;
         self.slot_map = self.active_slots();
+
+        // shard layout for the new membership, and the minimal movement
+        // set from the previous layout (None on the initial plan: the
+        // optimizer state is born sharded, nothing moves)
+        let live: Vec<(usize, String)> = self
+            .slots
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| (s.slot, s.gpu.clone()))
+            .collect();
+        let new_manifest =
+            ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
+                .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        self.last_reshard = match &self.manifest {
+            Some(old) => Some(
+                ckpt::reshard(old, &new_manifest)
+                    .map_err(|e| ElasticError::Ckpt(e.to_string()))?,
+            ),
+            None => None,
+        };
+        self.manifest = Some(new_manifest);
+
         self.plan = Some(plan);
         self.dirty = false;
         self.replans += 1;
         Ok(self.plan.as_ref().expect("just set"))
+    }
+
+    /// The optimizer-shard layout of the current plan.
+    pub fn manifest(&self) -> Option<&ShardManifest> {
+        self.manifest.as_ref()
+    }
+
+    /// The shard-movement set computed by the latest replan (`None` on
+    /// the initial plan).
+    pub fn last_reshard(&self) -> Option<&ReshardPlan> {
+        self.last_reshard.as_ref()
+    }
+
+    /// The movement the latest replan actually pays, honest about
+    /// checkpoint availability: the minimal set when every byte has a
+    /// source (`checkpointed`, or nothing was lost), else the
+    /// full-restore baseline — without a persisted checkpoint a departed
+    /// rank's shard is unrecoverable in place and the whole state must
+    /// be rebuilt. Borrows in the common case; only the fallback builds
+    /// a plan.
+    fn effective_reshard(&self, checkpointed: bool) -> Option<std::borrow::Cow<'_, ReshardPlan>> {
+        let r = self.last_reshard.as_ref()?;
+        if !checkpointed && r.bytes_from_checkpoint() > 0 {
+            let full = ReshardPlan::full_restore(self.manifest.as_ref()?);
+            return Some(std::borrow::Cow::Owned(full));
+        }
+        Some(std::borrow::Cow::Borrowed(r))
+    }
+
+    /// Measured one-shot resharding cost of the latest replan: derived
+    /// from the bytes that actually changed owner, zero when the layout
+    /// is unchanged (pure drift replans) or on the initial plan.
+    /// `checkpointed` says whether shard manifests are persisted — when
+    /// they are not and the change lost bytes, the cost falls back to
+    /// the full-restore baseline instead of pricing restores off a
+    /// checkpoint that does not exist.
+    pub fn reshard_penalty_s(&self, net: &NetSim, checkpointed: bool) -> f64 {
+        self.effective_reshard(checkpointed).map_or(0.0, |r| r.transfer_time_s(net))
+    }
+
+    /// Optimizer-state bytes the latest replan actually moves, under the
+    /// same checkpoint-availability rule as
+    /// [`ElasticPlanner::reshard_penalty_s`].
+    pub fn reshard_bytes(&self, checkpointed: bool) -> u64 {
+        self.effective_reshard(checkpointed).map_or(0, |r| r.bytes_moved())
     }
 
     /// The current plan, if one was computed.
@@ -318,25 +400,6 @@ pub fn detect_drift(
         }
     }
     drifted
-}
-
-/// One-shot optimizer-state resharding cost after a membership change.
-///
-/// ZeRO-1..3 shard the fp32 optimizer states (the paper's `12ψ` bytes:
-/// fp32 params + momentum + variance) across the data-parallel group;
-/// when the group changes from `n_old` to `n_new` ranks every rank must
-/// re-fetch its new shard — an all-gather-shaped movement of the full
-/// `12ψ` volume. ZeRO-0 replicates optimizer states, so only the joining
-/// side needs a broadcast of the fp16 params (`2ψ`).
-pub fn reshard_penalty_s(net: &NetSim, stage: u8, param_count: u64, n_old: usize, n_new: usize) -> f64 {
-    if n_old == n_new {
-        return 0.0;
-    }
-    match stage {
-        0 => net.time(Collective::Broadcast, 2 * param_count),
-        1..=3 => net.time(Collective::AllGather, 12 * param_count),
-        _ => 0.0,
-    }
 }
 
 #[cfg(test)]
@@ -471,14 +534,47 @@ mod tests {
     }
 
     #[test]
-    fn reshard_penalty_only_on_membership_change() {
-        let net = NetSim::from_link(8, LinkKind::Ib);
-        let psi = 500_000_000;
-        assert_eq!(reshard_penalty_s(&net, 1, psi, 8, 8), 0.0);
-        assert!(reshard_penalty_s(&net, 1, psi, 8, 7) > 0.0);
-        assert!(
-            reshard_penalty_s(&net, 1, psi, 8, 7) > reshard_penalty_s(&net, 0, psi, 8, 7),
-            "sharded stages move 12ψ, stage 0 only broadcasts 2ψ"
-        );
+    fn measured_reshard_penalty_only_on_membership_change() {
+        let mut p = planner_with(&[
+            ("A800-80G", 48),
+            ("A800-80G", 48),
+            ("V100S-32G", 16),
+            ("V100S-32G", 16),
+        ]);
+        let net4 = NetSim::from_link(4, LinkKind::Ib);
+        p.replan(&net4).unwrap();
+        // initial plan: the state is born sharded, nothing moves
+        assert!(p.last_reshard().is_none());
+        assert_eq!(p.reshard_penalty_s(&net4, true), 0.0);
+        let m0 = p.manifest().unwrap().clone();
+        m0.validate().unwrap();
+        assert_eq!(m0.shards.len(), 4);
+
+        // pure drift replan: same membership, same layout, zero penalty
+        p.mark_dirty();
+        p.replan(&net4).unwrap();
+        assert!(p.last_reshard().unwrap().is_noop());
+        assert_eq!(p.reshard_penalty_s(&net4, true), 0.0);
+        assert_eq!(p.reshard_penalty_s(&net4, false), 0.0, "nothing lost: no fallback");
+
+        // a loss moves only the bytes whose owner changed — strictly
+        // cheaper than the full-restore recompute baseline
+        p.lose_slot(3).unwrap();
+        let net3 = NetSim::from_link(3, LinkKind::Ib);
+        p.replan(&net3).unwrap();
+        let reshard = p.last_reshard().unwrap();
+        assert!(!reshard.is_noop());
+        assert!(p.reshard_penalty_s(&net3, true) > 0.0);
+        let recompute = crate::ckpt::ReshardPlan::full_restore(p.manifest().unwrap());
+        assert!(reshard.bytes_moved() < recompute.bytes_moved());
+        assert!(reshard.transfer_time_s(&net3) < recompute.transfer_time_s(&net3));
+        // the lost slot's shard comes off the checkpoint, not a peer
+        assert!(reshard.bytes_from_checkpoint() > 0);
+        // without a persisted checkpoint those bytes are unrecoverable:
+        // the honest price is the full-restore baseline
+        assert_eq!(p.reshard_bytes(false), recompute.bytes_moved());
+        assert!(p.reshard_penalty_s(&net3, false) >= p.reshard_penalty_s(&net3, true));
+        // with one, the minimal measured set applies
+        assert_eq!(p.reshard_bytes(true), reshard.bytes_moved());
     }
 }

@@ -25,9 +25,10 @@
 //! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan` for elastic re-allocation |
-//! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay |
-//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning |
-//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` |
+//! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
+//! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` |
+//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning, measured reshard penalty |
+//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan) |
 //! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
 //! | [`train`] | real heterogeneous data-parallel training loop |
 //! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |
@@ -36,6 +37,7 @@
 //! | [`exp`] | experiment harness: one runner per paper table/figure |
 
 pub mod allocator;
+pub mod ckpt;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -9,7 +9,12 @@
 //!                  [--cluster-sim 2xfast+2xslow]  # real PJRT training
 //! poplar elastic   --cluster cluster-C --model llama-0.5b [--stage 1]
 //!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G"]
-//!                  [--seed-schedule 7]            # elastic membership run
+//!                  [--seed-schedule 7] [--ckpt-dir artifacts/ckpt]
+//! poplar ckpt      save    --cluster cluster-C --model llama-0.5b [--stage 1]
+//!                          [--dir artifacts/ckpt] [--snapshot 0]
+//! poplar ckpt      inspect [--dir artifacts/ckpt | --path FILE]
+//! poplar ckpt      restore --cluster cluster-C --model llama-0.5b
+//!                          [--dir artifacts/ckpt | --path FILE] [--lost 7,3]
 //! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all>
 //!                  [--out results]
 //! ```
@@ -77,6 +82,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "train" => cmd_train(rest),
         "elastic" => cmd_elastic(rest),
+        "ckpt" => cmd_ckpt(rest),
         "exp" => cmd_exp(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -96,6 +102,10 @@ fn print_help() {
          \x20 train     --artifacts artifacts/tiny [--iters 100] [--gbs 16] [--stage 1]\n\
          \x20 elastic   --cluster C --model M [--stage N] [--iters 12]\n\
          \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G\"] [--seed-schedule 7]\n\
+         \x20           [--ckpt-dir artifacts/ckpt]\n\
+         \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
+         \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
+         \x20 ckpt      restore --cluster C --model M [--lost 7,3]\n\
          \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all> [--out results]\n"
     );
 }
@@ -244,6 +254,8 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
     let (_, f) = parse_flags(args)?;
 
     // config-file path: `[elastic]` section drives everything
+    // (--ckpt-dir still overrides the `[ckpt]` section either way)
+    let ckpt_dir_flag = f.get("ckpt-dir").map(PathBuf::from);
     if let Some(path) = f.get("config") {
         let cfg = JobConfig::load(Path::new(path)).map_err(|e| anyhow!("{e}"))?;
         let ecfg = cfg
@@ -258,6 +270,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
         );
         let opts = poplar::coordinator::ElasticOptions {
             drift_threshold: ecfg.drift_threshold,
+            ckpt_dir: ckpt_dir_flag.or_else(|| cfg.ckpt.as_ref().map(|c| c.dir.clone())),
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -307,6 +320,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
     let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
     let opts = poplar::coordinator::ElasticOptions {
         drift_threshold: threshold,
+        ckpt_dir: ckpt_dir_flag,
         ..Default::default()
     };
     let rep = leader.run_elastic_job(stage, gbs, iters, &schedule, &opts)?;
@@ -322,6 +336,7 @@ fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
     );
     let mut t = Table::new(&[
         "iter", "events", "ranks", "wall_s", "tflops", "replanned", "reprofiled", "reshard_s",
+        "moved_mb",
     ]);
     for it in &rep.iterations {
         t.row(&[
@@ -337,9 +352,163 @@ fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
                 format!("{:?}", it.reprofiled_slots)
             },
             format!("{:.3}", it.reshard_penalty_s),
+            format!("{:.1}", it.reshard_bytes as f64 / 1e6),
         ]);
     }
     println!("{}", t.to_markdown());
+}
+
+/// Slot list of a cluster spec: `(rank, gpu name)` in rank order.
+fn cluster_slots(cluster: &ClusterSpec) -> Vec<(usize, String)> {
+    cluster
+        .instances()
+        .iter()
+        .map(|inst| (inst.rank, inst.spec.name.clone()))
+        .collect()
+}
+
+fn print_manifest(m: &poplar::ckpt::ShardManifest) {
+    println!(
+        "manifest v{}: model={} ZeRO-{} ψ={} snapshot={} ({} ranks)",
+        m.version, m.model, m.stage, m.param_count, m.snapshot, m.shards.len()
+    );
+    let mut t = Table::new(&["slot", "gpu", "lo", "hi", "params", "state_mb"]);
+    for e in &m.shards {
+        t.row(&[
+            e.slot.to_string(),
+            e.gpu.clone(),
+            e.range.lo.to_string(),
+            e.range.hi.to_string(),
+            e.range.len().to_string(),
+            format!(
+                "{:.1}",
+                (e.range.len() * poplar::zero::OPTIMIZER_BYTES_PER_PARAM) as f64 / 1e6
+            ),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+}
+
+fn cmd_ckpt(args: &[String]) -> Result<()> {
+    use poplar::ckpt::{reshard, ReshardPlan, ShardManifest};
+
+    let Some(sub) = args.first() else {
+        bail!("usage: poplar ckpt <save|restore|inspect> …  (see `poplar help`)");
+    };
+    let (_, f) = parse_flags(&args[1..])?;
+    let dir = PathBuf::from(f.get("dir").map(String::as_str).unwrap_or("artifacts/ckpt"));
+    let load = |f: &HashMap<String, String>| -> Result<ShardManifest> {
+        match f.get("path") {
+            Some(p) => ShardManifest::load(Path::new(p)).map_err(|e| anyhow!("{e}")),
+            None => ShardManifest::load_latest(&dir)
+                .map_err(|e| anyhow!("{e} (no --path given, tried {}/LATEST)", dir.display())),
+        }
+    };
+
+    match sub.as_str() {
+        "save" => {
+            let cluster =
+                resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+            let model = model_cfg::preset(
+                f.get("model").map(String::as_str).unwrap_or("llama-0.5b"),
+            )
+            .ok_or_else(|| anyhow!("unknown model preset"))?;
+            let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let snapshot: usize =
+                f.get("snapshot").map(|s| s.parse()).transpose()?.unwrap_or(0);
+            let m = ShardManifest::build(
+                &model.name,
+                stage,
+                model.param_count(),
+                snapshot,
+                &cluster_slots(&cluster),
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            let path = m.save(&dir).map_err(|e| anyhow!("{e}"))?;
+            println!("saved {}", path.display());
+            print_manifest(&m);
+        }
+        "inspect" => {
+            let m = load(&f)?;
+            m.validate().map_err(|e| anyhow!("{e}"))?;
+            print_manifest(&m);
+        }
+        "restore" => {
+            let old = load(&f)?;
+            let cluster =
+                resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+            // default to the checkpoint's own recorded model (like stage):
+            // any other default would just fail the compatibility check
+            let model_name = f.get("model").map(String::as_str).unwrap_or(&old.model);
+            let model = model_cfg::preset(model_name).ok_or_else(|| {
+                anyhow!("model {model_name:?} is not a known preset; pass --model")
+            })?;
+            // the restored layout keeps the checkpoint's stage: cross-stage
+            // migration is a manifest rewrite, not a reshard (ROADMAP)
+            let stage = old.stage;
+            let mut slots = cluster_slots(&cluster);
+            if let Some(lost) = f.get("lost") {
+                for part in lost.split(',').filter(|s| !s.trim().is_empty()) {
+                    let slot: usize = part
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad --lost entry {part:?}"))?;
+                    let before = slots.len();
+                    slots.retain(|(s, _)| *s != slot);
+                    if slots.len() == before {
+                        bail!("--lost {slot}: no such rank in the cluster");
+                    }
+                }
+            }
+            let new = ShardManifest::build(
+                &model.name,
+                stage,
+                model.param_count(),
+                old.snapshot + 1,
+                &slots,
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            let plan = reshard(&old, &new).map_err(|e| anyhow!("{e}"))?;
+            // transfer pricing is point-to-point: only the bottleneck
+            // link's bw/latency matter, not the group size
+            let net = poplar::netsim::NetSim::from_cluster(&cluster);
+            let recompute = ReshardPlan::full_restore(&new);
+            println!(
+                "restore onto {} ranks: {} moves — {:.1} MB moved ({:.1} MB off the checkpoint, \
+                 {:.1} MB retained in place)",
+                slots.len(),
+                plan.moves.len(),
+                plan.bytes_moved() as f64 / 1e6,
+                plan.bytes_from_checkpoint() as f64 / 1e6,
+                plan.bytes_retained() as f64 / 1e6,
+            );
+            println!(
+                "measured reshard {:.3}s vs full-restore recompute {:.3}s",
+                plan.transfer_time_s(&net),
+                recompute.transfer_time_s(&net)
+            );
+            let mut t = Table::new(&["to_slot", "source", "lo", "hi", "mb"]);
+            for mv in &plan.moves {
+                t.row(&[
+                    mv.to_slot.to_string(),
+                    match mv.from_slot {
+                        Some(s) => format!("slot {s}"),
+                        None => "checkpoint".into(),
+                    },
+                    mv.range.lo.to_string(),
+                    mv.range.hi.to_string(),
+                    format!(
+                        "{:.1}",
+                        (mv.range.len() * poplar::zero::OPTIMIZER_BYTES_PER_PARAM) as f64 / 1e6
+                    ),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+            print_manifest(&new);
+        }
+        other => bail!("unknown ckpt subcommand {other:?} (want save|restore|inspect)"),
+    }
+    Ok(())
 }
 
 fn cmd_exp(args: &[String]) -> Result<()> {

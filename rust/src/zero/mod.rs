@@ -21,6 +21,38 @@ use crate::allocator::Plan;
 use crate::config::model::ModelSpec;
 use crate::netsim::NetSim;
 
+/// Bytes of fp32 optimizer state per parameter in the ZeRO mixed-precision
+/// layout: fp32 master copy + momentum + variance (the paper's `12ψ`).
+pub const OPTIMIZER_BYTES_PER_PARAM: u64 = 12;
+
+/// Optimizer-state ownership ranges `[lo, hi)` per compact rank for a
+/// ZeRO stage — the partition layout `ckpt::ShardManifest` is keyed by.
+///
+/// * ZeRO-0 replicates: every rank owns the full `[0, ψ)`.
+/// * ZeRO-1..3 partition contiguously: `ψ/n` each, remainder spread over
+///   the first ranks (matching [`crate::memmodel::model_state_bytes`]'s
+///   `12ψ/n` per-rank accounting).
+///
+/// Returns `None` for an invalid stage or an empty group.
+pub fn optimizer_shard_ranges(stage: u8, param_count: u64, n: usize) -> Option<Vec<(u64, u64)>> {
+    if n == 0 || stage > 3 {
+        return None;
+    }
+    if stage == 0 {
+        return Some(vec![(0, param_count); n]);
+    }
+    let n64 = n as u64;
+    let base = param_count / n64;
+    let rem = param_count % n64;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0u64;
+    for i in 0..n64 {
+        let len = base + u64::from(i < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    Some(out)
+}
 
 /// Per-rank outcome of one simulated iteration.
 #[derive(Debug, Clone)]
@@ -355,6 +387,28 @@ mod tests {
         let drifted = simulate_iteration(&plan, &slowed, &net, slowed.inner.model);
         assert!(drifted.wall_s > healthy.wall_s, "straggler must stretch the iteration");
         assert_eq!(drifted.samples, healthy.samples);
+    }
+
+    #[test]
+    fn shard_ranges_tile_or_replicate_per_stage() {
+        // partitioned stages tile [0, ψ) exactly, remainder first
+        for stage in 1..=3u8 {
+            let r = optimizer_shard_ranges(stage, 1001, 4).unwrap();
+            assert_eq!(r.len(), 4);
+            assert_eq!(r[0], (0, 251));
+            assert_eq!(r[3].1, 1001);
+            let mut cursor = 0;
+            for (lo, hi) in r {
+                assert_eq!(lo, cursor);
+                cursor = hi;
+            }
+        }
+        // stage 0 replicates
+        let r = optimizer_shard_ranges(0, 1001, 3).unwrap();
+        assert!(r.iter().all(|&x| x == (0, 1001)));
+        // invalid inputs
+        assert!(optimizer_shard_ranges(4, 1001, 3).is_none());
+        assert!(optimizer_shard_ranges(1, 1001, 0).is_none());
     }
 
     #[test]

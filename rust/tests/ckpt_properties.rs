@@ -1,0 +1,187 @@
+//! Property tests over the checkpoint/reshard invariants (same
+//! discipline as `elastic_properties.rs`: deterministic xorshift over
+//! many seeds, the seed printed on failure). The invariants:
+//!
+//! 1. serialization round-trips: `from_text(to_text(m)) == m` (and the
+//!    disk path `load(save(m))` likewise) for any valid manifest;
+//! 2. for ANY random membership event sequence, `ckpt::reshard` covers
+//!    every destination's new shard exactly — the union of its moved and
+//!    retained ranges equals its new range with no overlap — and for the
+//!    partitioned stages the destination ranges tile `[0, ψ)`;
+//! 3. every move is sourced correctly: surviving old owners serve their
+//!    former bytes, only departed owners' bytes come off the checkpoint;
+//! 4. minimality: the reshard never moves more bytes than the
+//!    full-restore recompute baseline, and moves zero when the
+//!    membership is unchanged.
+
+use poplar::ckpt::{reshard, ReshardPlan, ShardManifest, ShardRange};
+use poplar::elastic::XorShift;
+use poplar::zero::OPTIMIZER_BYTES_PER_PARAM;
+
+const GPUS: &[&str] = &["A100-80G", "A800-80G", "V100S-32G", "T4"];
+
+fn manifest(
+    rng: &mut XorShift,
+    stage: u8,
+    psi: u64,
+    slots: &[usize],
+    snap: usize,
+) -> ShardManifest {
+    let with_gpus: Vec<(usize, String)> = slots
+        .iter()
+        .map(|&s| (s, GPUS[(rng.next() as usize) % GPUS.len()].to_string()))
+        .collect();
+    ShardManifest::build("llama-0.5b", stage, psi, snap, &with_gpus).unwrap()
+}
+
+/// Sorted, merged view of a slot's covered ranges (moved + retained).
+fn coverage_of(plan: &ReshardPlan, slot: usize) -> Vec<ShardRange> {
+    let mut ranges: Vec<ShardRange> = plan
+        .moves
+        .iter()
+        .filter(|m| m.to_slot == slot)
+        .map(|m| m.range)
+        .chain(plan.retained.iter().filter(|r| r.slot == slot).map(|r| r.range))
+        .collect();
+    ranges.sort_by_key(|r| r.lo);
+    ranges
+}
+
+#[test]
+fn prop_text_and_disk_roundtrip_identity() {
+    let dir = std::env::temp_dir()
+        .join(format!("poplar-ckpt-prop-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed);
+        let stage = (rng.next() % 4) as u8;
+        let psi = rng.range(1_000, 2_000_000_000);
+        let n = rng.range(1, 12) as usize;
+        // arbitrary, non-contiguous slot ids
+        let slots: Vec<usize> = (0..n).map(|i| i * 2 + (seed as usize % 3)).collect();
+        let m = manifest(&mut rng, stage, psi, &slots, seed as usize);
+        m.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        let back = ShardManifest::from_text(&m.to_text())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back, m, "seed {seed}: text round-trip drifted");
+
+        let path = m.save(&dir).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let loaded = ShardManifest::load(&path).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(loaded, m, "seed {seed}: disk round-trip drifted");
+        let latest =
+            ShardManifest::load_latest(&dir).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(latest, m, "seed {seed}: LATEST pointer stale");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_reshard_covers_every_destination_exactly_no_overlap() {
+    for seed in 0..80u64 {
+        let mut rng = XorShift::new(seed + 100);
+        let stage = (rng.next() % 4) as u8;
+        let psi = rng.range(100, 1_000_000_000);
+        let n0 = rng.range(1, 8) as usize;
+        let mut slots: Vec<usize> = (0..n0).collect();
+        let mut next_slot = n0;
+        let mut old = manifest(&mut rng, stage, psi, &slots, 0);
+
+        for step in 0..rng.range(1, 10) {
+            // random membership event batch: losses (keeping >= 1 rank)
+            // and joins, possibly several at once
+            for _ in 0..rng.range(1, 3) {
+                if rng.uniform() < 0.5 && slots.len() > 1 {
+                    let idx = (rng.next() as usize) % slots.len();
+                    slots.remove(idx);
+                } else {
+                    slots.push(next_slot);
+                    next_slot += 1;
+                }
+            }
+            let new = manifest(&mut rng, stage, psi, &slots, step as usize + 1);
+            let plan = reshard(&old, &new)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+
+            // every destination's new range is covered exactly once
+            for e in &new.shards {
+                let cov = coverage_of(&plan, e.slot);
+                let mut cursor = e.range.lo;
+                for r in &cov {
+                    assert_eq!(
+                        r.lo, cursor,
+                        "seed {seed} step {step}: slot {} gap/overlap at {cursor}",
+                        e.slot
+                    );
+                    cursor = r.hi;
+                }
+                assert_eq!(
+                    cursor, e.range.hi,
+                    "seed {seed} step {step}: slot {} covered to {cursor} of {}",
+                    e.slot, e.range.hi
+                );
+            }
+            // partitioned stages: destinations tile the whole space, so
+            // moved + retained account for exactly 12ψ bytes
+            if stage > 0 {
+                assert_eq!(
+                    plan.bytes_moved() + plan.bytes_retained(),
+                    psi * OPTIMIZER_BYTES_PER_PARAM,
+                    "seed {seed} step {step}"
+                );
+            }
+            // sources: surviving owners serve, departed owners -> checkpoint
+            for m in &plan.moves {
+                match m.from_slot {
+                    Some(src) => {
+                        assert!(new.has_slot(src), "seed {seed} step {step}: dead source {src}");
+                        if stage > 0 {
+                            let owned = old.shard_of(src).unwrap();
+                            assert!(
+                                owned.intersect(&m.range) == Some(m.range),
+                                "seed {seed} step {step}: slot {src} never owned {:?}",
+                                m.range
+                            );
+                        }
+                    }
+                    None => {
+                        if stage > 0 {
+                            let owner = old
+                                .shards
+                                .iter()
+                                .find(|o| o.range.intersect(&m.range) == Some(m.range));
+                            assert!(
+                                owner.is_some_and(|o| !new.has_slot(o.slot)),
+                                "seed {seed} step {step}: checkpoint used for bytes with a \
+                                 surviving owner"
+                            );
+                        }
+                    }
+                }
+            }
+            // minimality vs the recompute baseline
+            let recompute = ReshardPlan::full_restore(&new);
+            assert!(
+                plan.bytes_moved() <= recompute.bytes_moved(),
+                "seed {seed} step {step}: reshard moved more than a full restore"
+            );
+            old = new;
+        }
+    }
+}
+
+#[test]
+fn prop_unchanged_membership_is_noop() {
+    for seed in 0..40u64 {
+        let mut rng = XorShift::new(seed + 900);
+        let stage = (rng.next() % 4) as u8;
+        let psi = rng.range(100, 1_000_000);
+        let n = rng.range(1, 9) as usize;
+        let slots: Vec<usize> = (0..n).collect();
+        let a = manifest(&mut rng, stage, psi, &slots, 0);
+        let b = manifest(&mut rng, stage, psi, &slots, 1);
+        let plan = reshard(&a, &b).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(plan.is_noop(), "seed {seed}: same membership must move nothing");
+        assert_eq!(plan.bytes_moved(), 0, "seed {seed}");
+    }
+}
