@@ -96,7 +96,7 @@ fn main() {
         .collect();
     let oracle = DeviceOracle { specs, model: &model };
     let r = bench("simulate_iteration/8gpu", 300, || {
-        simulate_iteration(&plan, &oracle, &net, &model)
+        simulate_iteration(&plan, &oracle, &net, &model).unwrap()
     });
     println!("{}", r.line());
 }

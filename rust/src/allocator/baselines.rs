@@ -34,8 +34,8 @@ pub fn plan_uniform(
     if min_mbs == 0 {
         return Err(PlanError::NoCapacity);
     }
-    let t_comm = net.per_microstep_comm_time(stage, param_count);
-    let t_iter_comm = net.iteration_comm_time(stage, param_count);
+    let t_comm = net.per_microstep_comm_time(stage, param_count)?;
+    let t_iter_comm = net.iteration_comm_time(stage, param_count)?;
 
     let mut best: Option<(f64, usize)> = None; // (wall, b)
     for b in 1..=min_mbs {
@@ -137,14 +137,14 @@ pub fn plan_flops_proportional(
                 .zip(curves)
                 .map(|(r, c)| rank_compute_time(r, c))
                 .fold(0.0, f64::max)
-                + net.iteration_comm_time(stage, param_count);
+                + net.iteration_comm_time(stage, param_count)?;
             (ranks, wall)
         }
         _ => {
             // shared gas, FLOPs-proportional micro-batches
             let msum: usize = micro.iter().sum();
             let gas = gbs.div_ceil(msum).max(1);
-            let t_comm = net.per_microstep_comm_time(stage, param_count);
+            let t_comm = net.per_microstep_comm_time(stage, param_count)?;
             let mut last: Vec<usize> = micro.clone();
             // shrink the final step so totals match gbs
             let mut excess = msum * gas - gbs;
@@ -174,7 +174,7 @@ pub fn plan_flops_proportional(
                 .map(|(&b, c)| c.time_at(b as f64))
                 .fold(0.0, f64::max);
             let wall = (t_step + t_comm) * gas as f64
-                + net.iteration_comm_time(stage, param_count);
+                + net.iteration_comm_time(stage, param_count)?;
             (ranks, wall)
         }
     };

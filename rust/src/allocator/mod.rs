@@ -251,8 +251,8 @@ pub fn plan_zero23(
     if curves.iter().all(|c| c.mbs() == 0) {
         return Err(PlanError::NoCapacity);
     }
-    let t_comm = net.per_microstep_comm_time(stage, param_count);
-    let t_iter_comm = net.iteration_comm_time(stage, param_count);
+    let t_comm = net.per_microstep_comm_time(stage, param_count)?;
+    let t_iter_comm = net.iteration_comm_time(stage, param_count)?;
 
     // candidate budgets: every rank's step time at every integer batch
     let mut candidates: Vec<f64> = Vec::new();

@@ -1,0 +1,817 @@
+//! Cost-aware autoscaling policy: is admitting a candidate GPU worth it?
+//!
+//! The elastic runtime (PR 1/2) *reacts* to membership events — every
+//! `RankJoined` is admitted unconditionally. Real heterogeneous fleets
+//! face the opposite problem: spot capacity is *offered* and the
+//! scheduler must decide whether the extra throughput pays for the
+//! disruption — the cost/throughput question schedulers like Zorse and
+//! Nie et al.'s optimal-performance framework optimize for. This module
+//! closes the ROADMAP item: given the current [`ElasticPlanner`] state,
+//! a candidate GPU type and the collective cost model, it predicts the
+//! post-admission operating point *without profiling* and prices the
+//! admission honestly:
+//!
+//! * **throughput** — [`ElasticPlanner::preview_join`] re-runs
+//!   Algorithm 2 over live curves + the candidate's. When the
+//!   `(gpu, model, stage)` curve is cached the prediction costs zero
+//!   profiling calls (the lookup goes through `CurveCache::peek`, so
+//!   the hit/miss counters and LRU order stay untouched); otherwise a
+//!   **catalog-FLOPs-scaled estimate** is synthesized from the GPU's
+//!   spec-sheet ratings ([`synthesize_curve`]) and the decision is
+//!   flagged as estimate-based;
+//! * **disruption** — the *measured* `ckpt::reshard` penalty of moving
+//!   the optimizer shards to the post-admission layout, plus (for
+//!   uncached types) an Algorithm 1 cost estimate — profiling is the
+//!   pipeline's most expensive step (Table 2) and an admission that
+//!   triggers it must amortize it too;
+//! * **decision** — the gain is amortized over `[autoscale] horizon_s`
+//!   (the expected tenure of the candidate before the next membership
+//!   change): with `stall = reshard + est. profiling`,
+//!   `gain = post_rate·(horizon − stall) − pre_rate·horizon`, and the
+//!   offer is **accepted** when `gain / (pre_rate·horizon) ≥ min_gain`
+//!   on a cached curve, **deferred** (profile before committing) when
+//!   only the synthesized estimate clears the bar, and **rejected**
+//!   otherwise;
+//! * **frontier** — every offer is also placed on the cluster-level
+//!   cost/throughput plane (samples/s vs $/sample from per-type $/hr
+//!   prices), and the Pareto-optimal set is reported, so an operator
+//!   sees not just accept/reject but *which* accepts are efficient.
+//!
+//! Wired end to end: `Leader::run_elastic_job` treats `RankJoined`
+//! events as offers when `[autoscale]` is configured (declined offers
+//! never mutate the planner), `poplar autoscale --offer A,B,…` exposes
+//! the policy on the CLI, and `exp::fig_autoscale` snapshots the
+//! decision table.
+
+use crate::allocator::{self, Plan, PlanError};
+use crate::cluster::catalog;
+use crate::config::model::ModelSpec;
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::elastic::{CurveKey, ElasticError, ElasticPlanner};
+use crate::memmodel;
+use crate::metrics::Table;
+use crate::netsim::NetSim;
+use crate::profiler::PROBE_REPS;
+
+/// Default amortization horizon: how long a candidate is expected to
+/// stay before the next membership change re-prices everything. Five
+/// minutes matches volatile spot fleets — the regime where admission
+/// cost actually matters.
+pub const DEFAULT_HORIZON_S: f64 = 300.0;
+
+/// Default minimum amortized relative gain to accept an offer.
+pub const DEFAULT_MIN_GAIN: f64 = 0.02;
+
+/// Built-in per-type $/hr price table (typical on-demand cloud rates;
+/// deterministic constants so figures are reproducible). `[autoscale]`
+/// `prices` entries override these; unknown types price as $0/hr —
+/// give them an explicit price to make the cost axis meaningful.
+pub fn default_price_per_hour(gpu: &str) -> Option<f64> {
+    Some(match gpu {
+        "A100-80G" => 3.67,
+        "A100-40G" => 2.74,
+        "A800-80G" => 3.20,
+        "V100-16G" => 1.14,
+        "V100S-32G" => 1.58,
+        "T4" => 0.53,
+        "RTX4090" => 0.69,
+        "RTX3060" => 0.18,
+        _ => return None,
+    })
+}
+
+/// Policy knobs (`[autoscale]` in config).
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Amortization horizon in seconds (expected candidate tenure).
+    pub horizon_s: f64,
+    /// Minimum amortized relative gain to accept/defer an offer.
+    pub min_gain: f64,
+    /// Per-type $/hr overrides of [`default_price_per_hour`].
+    pub prices: Vec<(String, f64)>,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        AutoscaleOptions {
+            horizon_s: DEFAULT_HORIZON_S,
+            min_gain: DEFAULT_MIN_GAIN,
+            prices: Vec::new(),
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    /// Effective $/hr for a GPU type: explicit override, then the
+    /// built-in table, then $0 (unknown types).
+    pub fn price_per_hour(&self, gpu: &str) -> f64 {
+        self.prices
+            .iter()
+            .find(|(g, _)| g == gpu)
+            .map(|(_, p)| *p)
+            .or_else(|| default_price_per_hour(gpu))
+            .unwrap_or(0.0)
+    }
+
+    fn validate(&self) -> Result<(), AutoscaleError> {
+        if !self.horizon_s.is_finite() || self.horizon_s <= 0.0 {
+            return Err(AutoscaleError::BadOptions(format!(
+                "horizon_s must be finite and > 0, got {}",
+                self.horizon_s
+            )));
+        }
+        // same range the config loader enforces: a bar of 1.0 or more
+        // (doubling cluster throughput with one rank) can never accept
+        if !self.min_gain.is_finite() || !(0.0..1.0).contains(&self.min_gain) {
+            return Err(AutoscaleError::BadOptions(format!(
+                "min_gain must be in [0, 1), got {}",
+                self.min_gain
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Errors from the autoscale policy.
+#[derive(Debug, PartialEq)]
+pub enum AutoscaleError {
+    /// Offered GPU type is not in the catalog.
+    UnknownGpu(String),
+    /// The candidate cannot fit enough samples at this stage to even
+    /// estimate a curve.
+    NoCapacity(String),
+    /// Invalid policy options.
+    BadOptions(String),
+    /// The elastic planner rejected the preview.
+    Elastic(ElasticError),
+    /// The allocator rejected a plan (message form).
+    Plan(PlanError),
+}
+
+impl std::fmt::Display for AutoscaleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AutoscaleError::UnknownGpu(g) => write!(f, "unknown GPU type {g:?}"),
+            AutoscaleError::NoCapacity(g) => {
+                write!(f, "candidate {g:?} cannot fit enough samples to estimate a curve")
+            }
+            AutoscaleError::BadOptions(m) => write!(f, "autoscale options: {m}"),
+            AutoscaleError::Elastic(e) => write!(f, "preview: {e}"),
+            AutoscaleError::Plan(e) => write!(f, "plan: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AutoscaleError {}
+
+impl From<ElasticError> for AutoscaleError {
+    fn from(e: ElasticError) -> Self {
+        AutoscaleError::Elastic(e)
+    }
+}
+
+impl From<PlanError> for AutoscaleError {
+    fn from(e: PlanError) -> Self {
+        AutoscaleError::Plan(e)
+    }
+}
+
+/// The verdict on one offer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Admit: measured curve, amortized gain clears the bar.
+    Accept,
+    /// Promising but estimate-based: profile before committing.
+    Defer,
+    /// Decline: the admission does not pay for itself.
+    Reject,
+}
+
+impl Decision {
+    /// Display label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Decision::Accept => "accept",
+            Decision::Defer => "defer",
+            Decision::Reject => "reject",
+        }
+    }
+}
+
+/// Everything the policy concluded about one offer.
+#[derive(Debug, Clone)]
+pub struct OfferDecision {
+    /// Catalog GPU type offered.
+    pub gpu: String,
+    /// The verdict.
+    pub decision: Decision,
+    /// True when the prediction used a cached measured curve (zero
+    /// profiling calls); false means a catalog-FLOPs-scaled estimate.
+    pub curve_cached: bool,
+    /// Predicted samples/s of the current cluster.
+    pub pre_rate: f64,
+    /// Predicted samples/s after admission.
+    pub post_rate: f64,
+    /// Measured `ckpt::reshard` cost of the admission (seconds).
+    pub reshard_penalty_s: f64,
+    /// Optimizer-state bytes that reshard moves.
+    pub reshard_bytes: u64,
+    /// Estimated Algorithm 1 cost for an uncached type (0 when cached).
+    pub profile_est_s: f64,
+    /// Net samples gained over the horizon, stall time included.
+    pub gain_samples: f64,
+    /// `gain_samples / (pre_rate * horizon_s)`.
+    pub rel_gain: f64,
+    /// Candidate's $/hr.
+    pub price_per_hour: f64,
+    /// Post-admission cluster $ per 1000 samples.
+    pub cost_per_ksample: f64,
+    /// True when the post-admission operating point is Pareto-optimal
+    /// on the (samples/s, $/sample) plane (set by [`evaluate_offers`]).
+    pub on_frontier: bool,
+    /// Human-readable one-line justification.
+    pub reason: String,
+}
+
+/// The full policy output over a batch of offers.
+#[derive(Debug, Clone)]
+pub struct AutoscaleReport {
+    /// Horizon the gains were amortized over.
+    pub horizon_s: f64,
+    /// Acceptance bar used.
+    pub min_gain: f64,
+    /// Current cluster samples/s (no admission).
+    pub baseline_rate: f64,
+    /// Current cluster $ per 1000 samples.
+    pub baseline_cost_per_ksample: f64,
+    /// Whether keeping the cluster as-is is Pareto-optimal.
+    pub baseline_on_frontier: bool,
+    /// Per-offer verdicts, offer order.
+    pub decisions: Vec<OfferDecision>,
+}
+
+/// Predicted iteration wall time of a plan under fitted curves —
+/// compute of the slowest rank plus the stage's collective costs.
+/// ZeRO-2/3 planners already fold communication into
+/// `predicted_iter_s`; ZeRO-0/1 report compute only, so the sync-point
+/// collective is added here.
+pub fn predicted_wall_s(
+    plan: &Plan,
+    curves: &[PerfCurve],
+    net: &NetSim,
+    param_count: u64,
+) -> Result<f64, PlanError> {
+    match plan.stage {
+        0 | 1 => {
+            let t = plan
+                .ranks
+                .iter()
+                .zip(curves)
+                .map(|(r, c)| allocator::rank_compute_time(r, c))
+                .fold(0.0, f64::max);
+            Ok(t + net.iteration_comm_time(plan.stage, param_count)?)
+        }
+        2 | 3 => Ok(plan.predicted_iter_s),
+        s => Err(PlanError::InvalidStage(s)),
+    }
+}
+
+/// Synthesize a catalog-FLOPs-scaled performance curve for an
+/// unprofiled GPU type: the calibrated spec-sheet device model
+/// (peak TFLOPs, efficiency ceiling, memory bandwidth) evaluated at
+/// every feasible batch size, with `mbs` from the ZeRO memory model at
+/// the post-admission group size. This is the cost-model analogue of a
+/// Whale-style FLOPs rating — available with zero profiling, but an
+/// *estimate*: decisions built on it are deferred, never accepted
+/// outright.
+pub fn synthesize_curve(
+    gpu: &str,
+    model: &ModelSpec,
+    stage: u8,
+    n_after: usize,
+) -> Result<PerfCurve, AutoscaleError> {
+    let spec = catalog::spec(gpu).ok_or_else(|| AutoscaleError::UnknownGpu(gpu.to_string()))?;
+    let mbs = memmodel::true_mbs(model, model.param_count(), stage, n_after, spec.mem_bytes());
+    if mbs < 2 {
+        return Err(AutoscaleError::NoCapacity(gpu.to_string()));
+    }
+    let pts: Vec<ProfiledPoint> = (1..=mbs)
+        .map(|b| ProfiledPoint {
+            batch: b,
+            step_time_s: spec.compute_time(
+                (b as u64 * model.seq) as f64,
+                model.flops_per_token(),
+                model.n_layers as usize,
+            ),
+        })
+        .collect();
+    PerfCurve::fit(pts, mbs).map_err(|_| AutoscaleError::NoCapacity(gpu.to_string()))
+}
+
+/// Estimated wall time of Algorithm 1 for a candidate with this curve:
+/// the exponential probe (1, 2, 4, … up to `mbs`) plus the
+/// binary-search refinement, each point measured `PROBE_REPS` times —
+/// the cost structure of `profiler::profile_device`, priced on the
+/// candidate's own step times.
+pub fn profile_cost_estimate_s(curve: &PerfCurve) -> f64 {
+    let mbs = curve.mbs().max(1);
+    let mut s = 0.0;
+    let mut b = 1usize;
+    loop {
+        s += curve.time_at(b as f64);
+        if b >= mbs {
+            break;
+        }
+        b = (b * 2).min(mbs);
+    }
+    // binary search probes ~log2(mbs) points near the boundary
+    s += (mbs as f64).log2().ceil().max(0.0) * curve.time_at(mbs as f64);
+    s * PROBE_REPS as f64
+}
+
+/// Pareto flags over (maximize rate, minimize cost) points: `true`
+/// where no other point is at least as good on both axes and strictly
+/// better on one.
+pub fn pareto_flags(points: &[(f64, f64)]) -> Vec<bool> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| {
+            !points.iter().enumerate().any(|(j, &(rj, cj))| {
+                j != i && rj >= r && cj <= c && (rj > r || cj < c)
+            })
+        })
+        .collect()
+}
+
+fn cluster_price_per_hour(planner: &ElasticPlanner, opts: &AutoscaleOptions) -> f64 {
+    planner
+        .slots()
+        .iter()
+        .filter(|s| s.alive)
+        .map(|s| opts.price_per_hour(&s.gpu))
+        .sum()
+}
+
+fn cost_per_ksample(price_per_hour: f64, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    price_per_hour / 3600.0 / rate * 1000.0
+}
+
+/// Predicted samples/s of the cluster as it stands (membership events
+/// applied since the last replan included), plus the live curve set the
+/// prediction used.
+fn baseline(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+) -> Result<(f64, Vec<PerfCurve>), AutoscaleError> {
+    let live_curves = planner.active_curves()?;
+    let psi = planner.param_count();
+    let mut net0 = net.clone();
+    net0.n = live_curves.len();
+    let base_plan =
+        allocator::plan(&live_curves, planner.stage(), planner.gbs(), &net0, psi)?;
+    let pre_wall = predicted_wall_s(&base_plan, &live_curves, &net0, psi)?;
+    Ok((planner.gbs() as f64 / pre_wall, live_curves))
+}
+
+/// Evaluate one offer against the planner's current state. Pure: the
+/// planner, its cache (counters and LRU order included) and the leader
+/// are untouched whatever the verdict. `on_frontier` is left `false` —
+/// frontier placement needs the whole offer batch
+/// ([`evaluate_offers`]).
+pub fn evaluate_offer(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    gpu: &str,
+    opts: &AutoscaleOptions,
+) -> Result<OfferDecision, AutoscaleError> {
+    opts.validate()?;
+    let (pre_rate, live_curves) = baseline(planner, net)?;
+    decide_offer(planner, net, model, gpu, opts, pre_rate, &live_curves)
+}
+
+/// The per-offer decision against an already-computed baseline —
+/// `opts` must be validated and `pre_rate`/`live_curves` must come from
+/// [`baseline`] on the same planner state.
+#[allow(clippy::too_many_arguments)]
+fn decide_offer(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    gpu: &str,
+    opts: &AutoscaleOptions,
+    pre_rate: f64,
+    live_curves: &[PerfCurve],
+) -> Result<OfferDecision, AutoscaleError> {
+    if catalog::spec(gpu).is_none() {
+        return Err(AutoscaleError::UnknownGpu(gpu.to_string()));
+    }
+    let psi = planner.param_count();
+    let gbs = planner.gbs() as f64;
+
+    // candidate: cached curve when available, catalog estimate otherwise
+    let key = CurveKey::new(gpu, planner.model(), planner.stage());
+    let synth = if planner.cache().peek(&key).is_some() {
+        None
+    } else {
+        Some(synthesize_curve(gpu, model, planner.stage(), live_curves.len() + 1)?)
+    };
+    let pv = planner.preview_join(gpu, synth.as_ref(), net)?;
+    let mut post_curves = live_curves.to_vec();
+    post_curves.push(pv.curve.clone());
+    let post_wall = predicted_wall_s(&pv.plan, &post_curves, &pv.net, psi)?;
+    let post_rate = gbs / post_wall;
+
+    // amortized accounting: the reshard stalls the whole cluster once,
+    // and an uncached type additionally pays Algorithm 1 before its
+    // first productive iteration
+    let profile_est_s = if pv.curve_cached { 0.0 } else { profile_cost_estimate_s(&pv.curve) };
+    let stall_s = pv.reshard_penalty_s + profile_est_s;
+    let horizon = opts.horizon_s;
+    let gain_samples = post_rate * (horizon - stall_s).max(0.0) - pre_rate * horizon;
+    let rel_gain = gain_samples / (pre_rate * horizon);
+
+    let (decision, reason) = if rel_gain >= opts.min_gain {
+        if pv.curve_cached {
+            (
+                Decision::Accept,
+                format!(
+                    "net gain {:.1}% over {:.0}s clears min {:.1}% (reshard {:.2}s, cached curve)",
+                    rel_gain * 100.0,
+                    horizon,
+                    opts.min_gain * 100.0,
+                    pv.reshard_penalty_s
+                ),
+            )
+        } else {
+            (
+                Decision::Defer,
+                format!(
+                    "est. net gain {:.1}% clears min {:.1}% but the curve is a catalog \
+                     estimate: profile before committing",
+                    rel_gain * 100.0,
+                    opts.min_gain * 100.0
+                ),
+            )
+        }
+    } else if gain_samples <= 0.0 {
+        (
+            Decision::Reject,
+            format!(
+                "stall {:.2}s (reshard {:.2}s + est. profiling {:.2}s) exceeds the gain \
+                 amortized over {:.0}s",
+                stall_s, pv.reshard_penalty_s, profile_est_s, horizon
+            ),
+        )
+    } else {
+        (
+            Decision::Reject,
+            format!(
+                "net gain {:.1}% below min {:.1}%",
+                rel_gain * 100.0,
+                opts.min_gain * 100.0
+            ),
+        )
+    };
+
+    let price = opts.price_per_hour(gpu);
+    let post_price = cluster_price_per_hour(planner, opts) + price;
+    Ok(OfferDecision {
+        gpu: gpu.to_string(),
+        decision,
+        curve_cached: pv.curve_cached,
+        pre_rate,
+        post_rate,
+        reshard_penalty_s: pv.reshard_penalty_s,
+        reshard_bytes: pv.reshard_bytes,
+        profile_est_s,
+        gain_samples,
+        rel_gain,
+        price_per_hour: price,
+        cost_per_ksample: cost_per_ksample(post_price, post_rate),
+        on_frontier: false,
+        reason,
+    })
+}
+
+/// Evaluate a batch of offers and place every post-admission operating
+/// point — plus the keep-as-is baseline — on the cost/throughput
+/// Pareto frontier.
+pub fn evaluate_offers(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    offers: &[String],
+    opts: &AutoscaleOptions,
+) -> Result<AutoscaleReport, AutoscaleError> {
+    opts.validate()?;
+    // one baseline for the whole batch: every offer is judged against
+    // the same keep-as-is operating point
+    let (baseline_rate, live_curves) = baseline(planner, net)?;
+    let baseline_cost =
+        cost_per_ksample(cluster_price_per_hour(planner, opts), baseline_rate);
+    let mut decisions: Vec<OfferDecision> = offers
+        .iter()
+        .map(|gpu| decide_offer(planner, net, model, gpu, opts, baseline_rate, &live_curves))
+        .collect::<Result<_, _>>()?;
+
+    let mut points = vec![(baseline_rate, baseline_cost)];
+    points.extend(decisions.iter().map(|d| (d.post_rate, d.cost_per_ksample)));
+    let flags = pareto_flags(&points);
+    for (d, &f) in decisions.iter_mut().zip(&flags[1..]) {
+        d.on_frontier = f;
+    }
+
+    Ok(AutoscaleReport {
+        horizon_s: opts.horizon_s,
+        min_gain: opts.min_gain,
+        baseline_rate,
+        baseline_cost_per_ksample: baseline_cost,
+        baseline_on_frontier: flags[0],
+        decisions,
+    })
+}
+
+/// Render a report as the canonical decision table — shared by the CLI
+/// (`poplar autoscale`) and the golden figure (`exp::fig_autoscale`),
+/// so the two can never drift apart. Baseline row first, then one row
+/// per offer in offer order.
+pub fn report_table(rep: &AutoscaleReport) -> Table {
+    let mut table = Table::new(&[
+        "offer",
+        "decision",
+        "curve",
+        "rate_sps",
+        "gain_pct",
+        "reshard_s",
+        "profile_est_s",
+        "net_gain_pct",
+        "usd_per_ksample",
+        "frontier",
+    ]);
+    table.row(&[
+        "(baseline)".into(),
+        "keep".into(),
+        "-".into(),
+        format!("{:.1}", rep.baseline_rate),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.4}", rep.baseline_cost_per_ksample),
+        if rep.baseline_on_frontier { "yes".into() } else { "-".into() },
+    ]);
+    for d in &rep.decisions {
+        table.row(&[
+            d.gpu.clone(),
+            d.decision.label().to_string(),
+            if d.curve_cached { "cached".into() } else { "estimated".into() },
+            format!("{:.1}", d.post_rate),
+            format!("{:+.1}", (d.post_rate / d.pre_rate - 1.0) * 100.0),
+            format!("{:.3}", d.reshard_penalty_s),
+            format!("{:.2}", d.profile_est_s),
+            format!("{:+.1}", d.rel_gain * 100.0),
+            format!("{:.4}", d.cost_per_ksample),
+            if d.on_frontier { "yes".into() } else { "-".into() },
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::config::model::preset;
+
+    fn device_curve(gpu: &str, mbs: usize) -> PerfCurve {
+        let g = catalog::spec_or_panic(gpu);
+        let m = preset("llama-0.5b").unwrap();
+        let pts: Vec<ProfiledPoint> = (1..=mbs)
+            .map(|b| ProfiledPoint {
+                batch: b,
+                step_time_s: g.compute_time(
+                    (b as u64 * m.seq) as f64,
+                    m.flops_per_token(),
+                    m.n_layers as usize,
+                ),
+            })
+            .collect();
+        PerfCurve::fit(pts, mbs).unwrap()
+    }
+
+    fn planner_c() -> (ElasticPlanner, NetSim) {
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(1, 2048, &m.name, m.param_count(), 16);
+        for (gpu, mbs) in [
+            ("A800-80G", 48),
+            ("A800-80G", 48),
+            ("A800-80G", 48),
+            ("A800-80G", 48),
+            ("V100S-32G", 16),
+            ("V100S-32G", 16),
+            ("V100S-32G", 16),
+            ("V100S-32G", 16),
+        ] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, device_curve(gpu, mbs), false).unwrap();
+            }
+        }
+        let net = NetSim::from_link(8, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        (p, net)
+    }
+
+    #[test]
+    fn pareto_flags_drop_dominated_points() {
+        // (rate, cost): b dominates a (faster, cheaper); c is the cheap
+        // end, d the fast end, e dominated by d (equal rate, pricier)
+        let pts = [(10.0, 5.0), (12.0, 4.0), (8.0, 1.0), (20.0, 9.0), (20.0, 10.0)];
+        assert_eq!(pareto_flags(&pts), vec![false, true, true, true, false]);
+        // identical points never dominate each other
+        assert_eq!(pareto_flags(&[(1.0, 1.0), (1.0, 1.0)]), vec![true, true]);
+        assert_eq!(pareto_flags(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn every_catalog_gpu_has_a_default_price() {
+        for n in catalog::NAMES {
+            assert!(default_price_per_hour(n).unwrap() > 0.0, "{n}");
+        }
+        assert!(default_price_per_hour("H100").is_none());
+        // overrides win
+        let opts = AutoscaleOptions {
+            prices: vec![("T4".into(), 9.99)],
+            ..Default::default()
+        };
+        assert_eq!(opts.price_per_hour("T4"), 9.99);
+        assert_eq!(opts.price_per_hour("A800-80G"), 3.20);
+        assert_eq!(opts.price_per_hour("made-up"), 0.0);
+    }
+
+    #[test]
+    fn synthesized_curve_tracks_the_catalog_model() {
+        let m = preset("llama-0.5b").unwrap();
+        let c = synthesize_curve("T4", &m, 1, 9).unwrap();
+        assert!(c.mbs() >= 2);
+        assert!(c.peak_speed() > 0.0);
+        // a faster part synthesizes a faster curve
+        let fast = synthesize_curve("A100-80G", &m, 1, 9).unwrap();
+        assert!(fast.peak_speed() > c.peak_speed() * 2.0);
+        // unknown type is a typed error
+        assert_eq!(
+            synthesize_curve("H100", &m, 1, 9).unwrap_err(),
+            AutoscaleError::UnknownGpu("H100".into())
+        );
+        // a 7B model on a T4 has no capacity at ZeRO-0
+        let big = preset("llama-7b").unwrap();
+        assert_eq!(
+            synthesize_curve("T4", &big, 0, 2).unwrap_err(),
+            AutoscaleError::NoCapacity("T4".into())
+        );
+    }
+
+    #[test]
+    fn cached_offer_accepts_with_zero_profiling_and_no_cache_traffic() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let (h0, m0) = (p.cache().hits(), p.cache().misses());
+        let lru0 = p.cache().lru_order().to_vec();
+        let opts = AutoscaleOptions::default();
+        let d = evaluate_offer(&p, &net, &m, "A800-80G", &opts).unwrap();
+        assert_eq!(d.decision, Decision::Accept);
+        assert!(d.curve_cached);
+        assert_eq!(d.profile_est_s, 0.0, "cached candidates are decided without profiling");
+        assert!(d.post_rate > d.pre_rate);
+        // accepted gain, amortized over the horizon, exceeds the
+        // measured reshard penalty
+        assert!(
+            (d.post_rate - d.pre_rate) * opts.horizon_s
+                > d.post_rate * d.reshard_penalty_s
+        );
+        assert!(d.reshard_penalty_s > 0.0);
+        assert!(d.reshard_bytes > 0);
+        // the decision left no trace in the cache
+        assert_eq!((p.cache().hits(), p.cache().misses()), (h0, m0));
+        assert_eq!(p.cache().lru_order(), lru0.as_slice());
+    }
+
+    #[test]
+    fn uncached_offer_never_accepts_outright() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let opts = AutoscaleOptions { horizon_s: 36000.0, ..Default::default() };
+        // RTX4090 is strong enough to clear any bar at a 10h horizon,
+        // but its curve is synthesized: defer, not accept
+        let d = evaluate_offer(&p, &net, &m, "RTX4090", &opts).unwrap();
+        assert!(!d.curve_cached);
+        assert!(d.profile_est_s > 0.0);
+        assert_eq!(d.decision, Decision::Defer);
+    }
+
+    #[test]
+    fn weak_offer_is_rejected_when_stall_exceeds_amortized_gain() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        // a very short tenure: nothing can amortize its admission
+        let opts = AutoscaleOptions { horizon_s: 30.0, ..Default::default() };
+        let d = evaluate_offer(&p, &net, &m, "RTX3060", &opts).unwrap();
+        assert_eq!(d.decision, Decision::Reject);
+        assert!(d.gain_samples <= 0.0, "stall must exceed the amortized gain");
+    }
+
+    #[test]
+    fn decisions_never_mutate_planner_state() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let slots0 = p.slots().len();
+        let replans0 = p.replans();
+        let manifest0 = p.manifest().unwrap().clone();
+        let offers: Vec<String> = ["A800-80G", "V100S-32G", "RTX4090", "T4", "RTX3060"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let rep =
+            evaluate_offers(&p, &net, &m, &offers, &AutoscaleOptions::default()).unwrap();
+        assert_eq!(rep.decisions.len(), 5);
+        assert_eq!(p.slots().len(), slots0);
+        assert_eq!(p.replans(), replans0);
+        assert!(!p.dirty());
+        assert_eq!(p.manifest().unwrap(), &manifest0);
+        // every decision used the same baseline
+        for d in &rep.decisions {
+            assert!((d.pre_rate - rep.baseline_rate).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frontier_has_no_dominated_points_and_accepts_gain_throughput() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let offers: Vec<String> = ["A800-80G", "V100S-32G", "RTX4090", "T4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let opts = AutoscaleOptions::default();
+        let rep = evaluate_offers(&p, &net, &m, &offers, &opts).unwrap();
+        // collect all points and check the frontier flags are exactly
+        // the non-dominated set
+        let mut pts = vec![(rep.baseline_rate, rep.baseline_cost_per_ksample, rep.baseline_on_frontier)];
+        for d in &rep.decisions {
+            pts.push((d.post_rate, d.cost_per_ksample, d.on_frontier));
+        }
+        for (i, &(r, c, on)) in pts.iter().enumerate() {
+            let dominated = pts.iter().enumerate().any(|(j, &(rj, cj, _))| {
+                j != i && rj >= r && cj <= c && (rj > r || cj < c)
+            });
+            assert_eq!(on, !dominated, "point {i}: rate {r}, cost {c}");
+        }
+        assert!(pts.iter().any(|&(_, _, on)| on), "frontier cannot be empty");
+        // accepting never lowers predicted throughput net of the
+        // amortized penalty
+        for d in rep.decisions.iter().filter(|d| d.decision == Decision::Accept) {
+            assert!(d.gain_samples > 0.0, "{}: {}", d.gpu, d.reason);
+            assert!(d.post_rate > d.pre_rate);
+        }
+    }
+
+    #[test]
+    fn bad_options_and_unknown_gpu_are_typed_errors() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let bad = AutoscaleOptions { horizon_s: 0.0, ..Default::default() };
+        assert!(matches!(
+            evaluate_offer(&p, &net, &m, "T4", &bad),
+            Err(AutoscaleError::BadOptions(_))
+        ));
+        let nan = AutoscaleOptions { min_gain: f64::NAN, ..Default::default() };
+        assert!(matches!(
+            evaluate_offer(&p, &net, &m, "T4", &nan),
+            Err(AutoscaleError::BadOptions(_))
+        ));
+        assert_eq!(
+            evaluate_offer(&p, &net, &m, "H100", &AutoscaleOptions::default()).unwrap_err(),
+            AutoscaleError::UnknownGpu("H100".into())
+        );
+    }
+
+    #[test]
+    fn invalid_stage_reaches_the_policy_as_a_typed_error() {
+        // regression for the ZeRO-stage panic hardening: a corrupt stage
+        // flows through plan/preview into the policy as InvalidStage
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(7, 256, &m.name, m.param_count(), 8);
+        let slot = p.add_slot("A800-80G");
+        p.install_curve(slot, device_curve("A800-80G", 48), false).unwrap();
+        let net = NetSim::from_link(1, LinkKind::Ib);
+        assert!(matches!(
+            evaluate_offer(&p, &net, &m, "A800-80G", &AutoscaleOptions::default()),
+            Err(AutoscaleError::Plan(PlanError::InvalidStage(7)))
+        ));
+    }
+}

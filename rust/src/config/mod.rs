@@ -20,6 +20,15 @@
 //! [ckpt]
 //! dir = "artifacts/ckpt"
 //!
+//! # optional: cost-aware admission policy — `RankJoined` events become
+//! # offers the policy may decline (poplar elastic / poplar autoscale)
+//! [autoscale]
+//! horizon_s = 300          # expected candidate tenure (amortization window)
+//! min_gain = 0.02          # minimum amortized relative gain to admit
+//! [[autoscale.prices]]     # $/hr overrides of the built-in price table
+//! gpu = "A800-80G"
+//! usd_per_hour = 2.95
+//!
 //! # optional: elastic membership schedule (poplar elastic --config …)
 //! [elastic]
 //! drift_threshold = 0.15
@@ -44,6 +53,7 @@
 pub mod model;
 pub mod toml_mini;
 
+use crate::autoscale::AutoscaleOptions;
 use crate::cluster::{self, ClusterSpec, LinkKind, NodeGroup};
 use crate::elastic::{ElasticEvent, ScheduledEvent, DEFAULT_DRIFT_THRESHOLD};
 use model::ModelSpec;
@@ -134,6 +144,9 @@ pub struct JobConfig {
     pub elastic: Option<ElasticConfig>,
     /// Optional checkpoint persistence (`[ckpt]` section).
     pub ckpt: Option<CkptConfig>,
+    /// Optional cost-aware admission policy (`[autoscale]` section):
+    /// when present, elastic `RankJoined` events become offers.
+    pub autoscale: Option<AutoscaleOptions>,
 }
 
 /// Errors from loading/validating a config.
@@ -331,6 +344,43 @@ impl JobConfig {
             None
         };
 
+        // ---- autoscale (optional) ----
+        let autoscale = if d.has_table("autoscale") {
+            let horizon_s = d
+                .float("autoscale.horizon_s")
+                .unwrap_or(crate::autoscale::DEFAULT_HORIZON_S);
+            if !horizon_s.is_finite() || horizon_s <= 0.0 {
+                return Err(invalid("autoscale.horizon_s must be finite and > 0"));
+            }
+            let min_gain =
+                d.float("autoscale.min_gain").unwrap_or(crate::autoscale::DEFAULT_MIN_GAIN);
+            if !min_gain.is_finite() || !(0.0..1.0).contains(&min_gain) {
+                return Err(invalid("autoscale.min_gain must be in [0, 1)"));
+            }
+            let n = d.array_len("autoscale.prices");
+            let mut prices = Vec::with_capacity(n);
+            for i in 0..n {
+                let gpu = d
+                    .str(&format!("autoscale.prices.{i}.gpu"))
+                    .ok_or_else(|| invalid(format!("autoscale.prices.{i}.gpu")))?;
+                if cluster::spec(gpu).is_none() {
+                    return Err(invalid(format!(
+                        "unknown GPU type {gpu:?} in autoscale.prices"
+                    )));
+                }
+                let usd = d
+                    .float(&format!("autoscale.prices.{i}.usd_per_hour"))
+                    .ok_or_else(|| invalid(format!("autoscale.prices.{i}.usd_per_hour")))?;
+                if !usd.is_finite() || usd < 0.0 {
+                    return Err(invalid("autoscale price must be finite and >= 0"));
+                }
+                prices.push((gpu.to_string(), usd));
+            }
+            Some(AutoscaleOptions { horizon_s, min_gain, prices })
+        } else {
+            None
+        };
+
         // ---- ckpt (optional) ----
         let ckpt = if d.has_table("ckpt") {
             let dir = d.str("ckpt.dir").unwrap_or("artifacts/ckpt");
@@ -342,7 +392,7 @@ impl JobConfig {
             None
         };
 
-        let cfg = JobConfig { model, cluster, training, elastic, ckpt };
+        let cfg = JobConfig { model, cluster, training, elastic, ckpt, autoscale };
         if cfg.gbs_samples() == 0 {
             return Err(invalid("global_batch_tokens smaller than one sequence"));
         }
@@ -518,6 +568,49 @@ mod tests {
         assert!(JobConfig::from_toml(&bad_gpu).is_err());
         let bad_thresh = format!("{GOOD}\n[elastic]\ndrift_threshold = 1.5\n");
         assert!(JobConfig::from_toml(&bad_thresh).is_err());
+    }
+
+    #[test]
+    fn autoscale_section_parses_with_defaults_and_overrides() {
+        assert!(JobConfig::from_toml(GOOD).unwrap().autoscale.is_none());
+        // bare [autoscale] means all defaults
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[autoscale]\n")).unwrap();
+        let a = cfg.autoscale.unwrap();
+        assert_eq!(a.horizon_s, crate::autoscale::DEFAULT_HORIZON_S);
+        assert_eq!(a.min_gain, crate::autoscale::DEFAULT_MIN_GAIN);
+        assert!(a.prices.is_empty());
+        // explicit knobs + a price override (integer horizon coerces)
+        let toml = format!(
+            "{GOOD}\n\
+             [autoscale]\n\
+             horizon_s = 600\n\
+             min_gain = 0.05\n\
+             [[autoscale.prices]]\n\
+             gpu = \"A800-80G\"\n\
+             usd_per_hour = 2.95\n"
+        );
+        let a = JobConfig::from_toml(&toml).unwrap().autoscale.unwrap();
+        assert_eq!(a.horizon_s, 600.0);
+        assert_eq!(a.min_gain, 0.05);
+        assert_eq!(a.price_per_hour("A800-80G"), 2.95);
+        // un-overridden types still hit the built-in table
+        assert!(a.price_per_hour("T4") > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_autoscale_sections() {
+        let bad_h = format!("{GOOD}\n[autoscale]\nhorizon_s = 0\n");
+        assert!(JobConfig::from_toml(&bad_h).is_err());
+        let bad_gain = format!("{GOOD}\n[autoscale]\nmin_gain = 1.5\n");
+        assert!(JobConfig::from_toml(&bad_gain).is_err());
+        let bad_gpu = format!(
+            "{GOOD}\n[autoscale]\n[[autoscale.prices]]\ngpu = \"H100\"\nusd_per_hour = 9.0\n"
+        );
+        assert!(JobConfig::from_toml(&bad_gpu).is_err());
+        let bad_price = format!(
+            "{GOOD}\n[autoscale]\n[[autoscale.prices]]\ngpu = \"T4\"\nusd_per_hour = -1.0\n"
+        );
+        assert!(JobConfig::from_toml(&bad_price).is_err());
     }
 
     #[test]

@@ -85,6 +85,14 @@ pub struct ElasticOptions {
     /// Directory to snapshot the optimizer-shard manifest into after
     /// every plan (`[ckpt] dir` in config; `None` disables persistence).
     pub ckpt_dir: Option<std::path::PathBuf>,
+    /// Cost-aware admission policy (`[autoscale]` in config). When set,
+    /// `RankJoined` events become *offers*: the policy predicts the
+    /// post-admission throughput (zero profiling for cached curve
+    /// types), amortizes the measured reshard penalty over its horizon,
+    /// and may decline the join — a declined offer never mutates the
+    /// planner or spawns a worker. `None` keeps the PR 1 behaviour:
+    /// every join is admitted.
+    pub autoscale: Option<crate::autoscale::AutoscaleOptions>,
 }
 
 impl Default for ElasticOptions {
@@ -93,6 +101,7 @@ impl Default for ElasticOptions {
             drift_threshold: elastic::DEFAULT_DRIFT_THRESHOLD,
             cache_cap: 32,
             ckpt_dir: None,
+            autoscale: None,
         }
     }
 }
@@ -345,6 +354,11 @@ impl Leader {
         slots: &[usize],
         stage: u8,
     ) -> Result<Vec<Option<ProfileResult>>> {
+        // validate before any worker sees the command: an invalid stage
+        // must not assert inside a worker thread
+        if stage >= 4 {
+            bail!("invalid ZeRO stage {stage} (want 0..=3)");
+        }
         for &slot in slots {
             let w = self
                 .workers
@@ -459,12 +473,18 @@ impl Leader {
                     busy[i] = totals[i];
                     idle[i] = t_max - totals[i];
                 }
-                let c = self.net.iteration_comm_time(plan.stage, psi);
+                let c = self
+                    .net
+                    .iteration_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
                 comm += c;
                 wall = t_max + c;
             }
             2 | 3 => {
-                let c_step = self.net.per_microstep_comm_time(plan.stage, psi);
+                let c_step = self
+                    .net
+                    .per_microstep_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
                 for step in 0..gas {
                     let times: Vec<f64> = per_rank
                         .iter()
@@ -478,7 +498,10 @@ impl Leader {
                     wall += t_max + c_step;
                     comm += c_step;
                 }
-                let c = self.net.iteration_comm_time(plan.stage, psi);
+                let c = self
+                    .net
+                    .iteration_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
                 comm += c;
                 wall += c;
             }
@@ -553,7 +576,9 @@ impl Leader {
         let curves = fit_curves(&profile)?;
         for (r, c) in profile.ranks.iter().zip(curves) {
             let slot = planner.add_slot(&r.name);
-            planner.install_curve(slot, c, false);
+            planner
+                .install_curve(slot, c, false)
+                .map_err(|e| anyhow!("installing initial curve for slot {slot}: {e}"))?;
         }
         self.net.n = planner.active_slots().len();
         planner.replan(&self.net).map_err(|e| anyhow!("initial plan: {e}"))?;
@@ -574,31 +599,94 @@ impl Leader {
             let mut reprofiled = Vec::new();
             let mut membership_changed = false;
 
-            // (1) apply due events
-            for ev in schedule.iter().filter(|e| e.at_iter == iter) {
-                let outcome = match &ev.event {
+            // (1) apply due events. Losses and slowdowns first (in
+            // schedule order), then joins as a batch: with `[autoscale]`
+            // configured, each join is an *offer* the policy may decline
+            // (zero profiling when the type's curve is cached, the
+            // measured reshard penalty amortized over its horizon), and
+            // all offers of one iteration are evaluated against the same
+            // pre-admission state — an earlier deferred (not yet
+            // profiled) joiner must not make its batch-mates
+            // unevaluable. Declining touches nothing.
+            let due: Vec<&ScheduledEvent> =
+                schedule.iter().filter(|e| e.at_iter == iter).collect();
+            for ev in &due {
+                let outcome: Result<String, String> = match &ev.event {
+                    ElasticEvent::RankJoined { .. } => continue, // second pass
                     ElasticEvent::RankLost { slot } => planner
                         .lose_slot(*slot)
                         .map_err(|e| e.to_string())
                         .and_then(|()| self.remove_rank(*slot).map_err(|e| e.to_string()))
-                        .map(|()| membership_changed = true),
-                    ElasticEvent::RankJoined { gpu } => self
-                        .add_simulated_rank(gpu)
-                        .map_err(|e| e.to_string())
-                        .map(|slot| {
-                            let pslot = planner.add_slot(gpu);
-                            debug_assert_eq!(slot, pslot, "leader/planner slots diverged");
+                        .map(|()| {
                             membership_changed = true;
+                            ev.event.label()
                         }),
                     ElasticEvent::RankSlowed { slot, factor } => planner
                         .apply(&ev.event)
                         .map_err(|e| e.to_string())
                         .and_then(|()| {
                             self.set_slowdown(*slot, *factor).map_err(|e| e.to_string())
-                        }),
+                        })
+                        .map(|()| ev.event.label()),
                 };
                 match outcome {
-                    Ok(()) => events.push(ev.event.label()),
+                    Ok(label) => events.push(label),
+                    Err(e) => events.push(format!("skipped {}: {e}", ev.event.label())),
+                }
+            }
+            // evaluate every offer of the batch before admitting any
+            let verdicts: Vec<(&ScheduledEvent, Option<Result<_, String>>)> = due
+                .iter()
+                .filter(|ev| matches!(ev.event, ElasticEvent::RankJoined { .. }))
+                .map(|ev| {
+                    let ElasticEvent::RankJoined { gpu } = &ev.event else {
+                        unreachable!("filtered above")
+                    };
+                    let verdict = opts.autoscale.as_ref().map(|a| {
+                        crate::autoscale::evaluate_offer(
+                            &planner, &self.net, &self.model, gpu, a,
+                        )
+                        .map_err(|e| e.to_string())
+                    });
+                    (*ev, verdict)
+                })
+                .collect();
+            for (ev, verdict) in verdicts {
+                let ElasticEvent::RankJoined { gpu } = &ev.event else {
+                    unreachable!("joins only")
+                };
+                let outcome: Result<String, String> = match verdict {
+                    Some(Err(e)) => Err(format!("offer evaluation failed: {e}")),
+                    Some(Ok(d)) if d.decision == crate::autoscale::Decision::Reject => {
+                        // declined: no worker spawned, no planner slot,
+                        // no cache traffic
+                        Ok(format!("declined {}: {}", ev.event.label(), d.reason))
+                    }
+                    verdict => {
+                        let prefix = match &verdict {
+                            Some(Ok(d))
+                                if d.decision == crate::autoscale::Decision::Defer =>
+                            {
+                                "deferred->profiling "
+                            }
+                            Some(Ok(_)) => "accepted ",
+                            _ => "",
+                        };
+                        self.add_simulated_rank(gpu).map_err(|e| e.to_string()).map(
+                            |slot| {
+                                let pslot = planner.add_slot(gpu);
+                                debug_assert_eq!(
+                                    slot, pslot,
+                                    "leader/planner slots diverged"
+                                );
+                                membership_changed = true;
+                                format!("{prefix}{}", ev.event.label())
+                            },
+                        )
+                    }
+                };
+                match outcome {
+                    Ok(label) => events.push(label),
                     Err(e) => events.push(format!("skipped {}: {e}", ev.event.label())),
                 }
             }
@@ -614,7 +702,9 @@ impl Leader {
                         Some(r) => {
                             let curve = PerfCurve::fit(r.points.clone(), r.mbs)
                                 .map_err(|e| anyhow!("slot {slot} curve: {e}"))?;
-                            planner.install_curve(slot, curve, false);
+                            planner
+                                .install_curve(slot, curve, false)
+                                .map_err(|e| anyhow!("installing slot {slot} curve: {e}"))?;
                             reprofiled.push(slot);
                         }
                         None => {
@@ -677,7 +767,9 @@ impl Leader {
                         // a straggler's re-measured curve must stay a
                         // rank-local override, not a cached type curve
                         let drifted = planner.slots()[slot].drifted;
-                        planner.install_curve(slot, curve, drifted);
+                        planner
+                            .install_curve(slot, curve, drifted)
+                            .map_err(|e| anyhow!("installing stale slot {slot} curve: {e}"))?;
                         reprofiled.push(slot);
                     }
                 }
@@ -738,7 +830,9 @@ impl Leader {
                         })?;
                         let curve = PerfCurve::fit(r.points.clone(), r.mbs)
                             .map_err(|e| anyhow!("slot {slot} drift curve: {e}"))?;
-                        planner.install_curve(slot, curve, true);
+                        planner
+                            .install_curve(slot, curve, true)
+                            .map_err(|e| anyhow!("installing drift slot {slot} curve: {e}"))?;
                     }
                     // install_curve marked the planner dirty: the next
                     // iteration replans around the re-measured stragglers
@@ -1109,6 +1203,67 @@ mod tests {
         assert_eq!(rep.iterations[1].n_ranks, 2);
         assert_eq!(rep.final_plan.ranks.len(), 2);
         assert_eq!(rep.final_plan.total_samples(), 32);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_autoscale_declines_weak_offer_and_accepts_cached_one() {
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![
+            // a weak consumer card whose admission cannot amortize inside
+            // a 30 s tenure (its curve is uncached, so it would also pay
+            // Alg. 1 before the first productive iteration)
+            (1, ElasticEvent::RankJoined { gpu: "RTX3060".into() }),
+            // a known type: cached curve, zero profiling, clear gain
+            (2, ElasticEvent::RankJoined { gpu: "V100S-32G".into() }),
+        ]);
+        let opts = ElasticOptions {
+            autoscale: Some(crate::autoscale::AutoscaleOptions {
+                horizon_s: 30.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let rep = l.run_elastic_job(1, 256, 4, &schedule, &opts).unwrap();
+        // declined: no worker spawned, no planner slot, no replan
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.starts_with("declined")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert_eq!(rep.iterations[1].n_ranks, 8);
+        assert!(!rep.iterations[1].replanned, "a declined offer must not replan");
+        assert_eq!(rep.iterations[1].reshard_penalty_s, 0.0);
+        // accepted: rank joined off the cached curve, no Alg. 1 run
+        assert!(
+            rep.iterations[2].events.iter().any(|e| e.starts_with("accepted")),
+            "events: {:?}",
+            rep.iterations[2].events
+        );
+        assert_eq!(rep.iterations[2].n_ranks, 9);
+        assert!(
+            rep.iterations[2].reprofiled_slots.is_empty(),
+            "cached offer must be admitted with zero profiling calls: {:?}",
+            rep.iterations[2].reprofiled_slots
+        );
+        assert!(rep.iterations[2].replanned);
+        assert_eq!(rep.final_plan.ranks.len(), 9);
+        assert_eq!(rep.final_plan.total_samples(), 256);
+        rep.final_plan.validate().unwrap();
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_without_autoscale_admits_unconditionally() {
+        // the PR 1 behaviour is preserved when no policy is configured:
+        // the same weak offer that autoscale declines is admitted
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "RTX3060".into() })]);
+        let rep = l
+            .run_elastic_job(1, 256, 3, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert_eq!(rep.iterations[1].n_ranks, 9);
+        assert!(rep.iterations[1].events.iter().any(|e| e == "joined(RTX3060)"));
         l.shutdown();
     }
 

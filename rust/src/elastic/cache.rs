@@ -81,6 +81,19 @@ impl CurveCache {
         self.map.contains_key(key)
     }
 
+    /// Read a curve without touching recency or counters — the lookup
+    /// for *hypothetical* membership questions (`preview_join`, the
+    /// autoscale policy): a declined offer must leave no trace in the
+    /// cache statistics or the LRU order.
+    pub fn peek(&self, key: &CurveKey) -> Option<&PerfCurve> {
+        self.map.get(key)
+    }
+
+    /// Current recency order, oldest first (diagnostics / tests).
+    pub fn lru_order(&self) -> &[CurveKey] {
+        &self.lru
+    }
+
     /// Insert (or refresh) a curve. `live` lists the keys currently
     /// backing live ranks: they are exempt from eviction. If every
     /// resident key is live and the cache is full, the cache grows past
@@ -206,6 +219,26 @@ mod tests {
         c.insert(k4.clone(), curve(4.0), &live);
         assert!(c.contains(&live1) && c.contains(&live2), "live curves must survive");
         assert!(!c.contains(&cold), "cold entry should be evicted first");
+    }
+
+    #[test]
+    fn peek_does_not_touch_counters_or_lru_order() {
+        let mut c = CurveCache::new(4);
+        let k1 = CurveKey::new("T4", "llama-0.5b", 0);
+        let k2 = CurveKey::new("V100-16G", "llama-0.5b", 0);
+        c.insert(k1.clone(), curve(1.0), &[]);
+        c.insert(k2.clone(), curve(2.0), &[]);
+        let order: Vec<CurveKey> = c.lru_order().to_vec();
+        // peek the oldest entry and a miss: nothing may move or count
+        assert!(c.peek(&k1).is_some());
+        assert!(c.peek(&CurveKey::new("A100-80G", "llama-0.5b", 0)).is_none());
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 0);
+        assert_eq!(c.lru_order(), order.as_slice());
+        // a real get() DOES refresh recency — peek is the exception
+        assert!(c.get(&k1).is_some());
+        assert_eq!(c.lru_order().last(), Some(&k1));
+        assert_eq!(c.hits(), 1);
     }
 
     #[test]

@@ -56,6 +56,9 @@ pub enum ElasticError {
     /// Replan was asked for while some live rank has no curve yet
     /// (call [`ElasticPlanner::needs_profile`] first).
     MissingCurves(Vec<usize>),
+    /// A join preview needs a curve, but the type-level cache has none
+    /// and the caller supplied no estimate.
+    NoCurve(String),
     /// The allocator rejected the surviving curve set.
     Plan(PlanError),
     /// The checkpoint subsystem rejected the shard layout (message form:
@@ -71,6 +74,9 @@ impl std::fmt::Display for ElasticError {
             ElasticError::LastRank => write!(f, "cannot lose the last live rank"),
             ElasticError::MissingCurves(s) => {
                 write!(f, "slots {s:?} need profiling before replan")
+            }
+            ElasticError::NoCurve(gpu) => {
+                write!(f, "no cached curve for GPU type {gpu:?} and no estimate supplied")
             }
             ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
             ElasticError::Ckpt(e) => write!(f, "shard layout: {e}"),
@@ -149,6 +155,16 @@ impl ElasticPlanner {
         self.gbs
     }
 
+    /// Model preset name the job trains.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Total parameter count `ψ` of the model.
+    pub fn param_count(&self) -> u64 {
+        self.param_count
+    }
+
     /// Register a new rank; returns its slot id. If the cache knows this
     /// `(gpu, model, stage)` the curve is installed immediately and the
     /// rank needs no profiling.
@@ -203,17 +219,34 @@ impl ElasticPlanner {
     /// Install a freshly fitted curve for a slot. `from_drift` marks a
     /// rank-local straggler curve: it is used for planning but kept out
     /// of the shared type-level cache.
-    pub fn install_curve(&mut self, slot: usize, curve: PerfCurve, from_drift: bool) {
+    ///
+    /// A dead slot is rejected with [`ElasticError::DeadSlot`]: a late
+    /// profile reply for a rank that already left the job must be
+    /// dropped, not poison the shared type-level cache and force a
+    /// spurious replan (the departed rank may have been re-measured
+    /// mid-failure, so its curve is the *least* trustworthy sample of
+    /// its type).
+    pub fn install_curve(
+        &mut self,
+        slot: usize,
+        curve: PerfCurve,
+        from_drift: bool,
+    ) -> Result<(), ElasticError> {
         let live: Vec<CurveKey> = self.live_keys();
-        if let Some(s) = self.slots.get_mut(slot) {
-            if !from_drift {
-                self.cache
-                    .insert(CurveKey::new(&s.gpu, &self.model, self.stage), curve.clone(), &live);
-            }
-            s.curve = Some(curve);
-            s.drifted = from_drift;
-            self.dirty = true;
+        let model = self.model.clone();
+        let stage = self.stage;
+        let s = self.slots.get_mut(slot).ok_or(ElasticError::UnknownSlot(slot))?;
+        if !s.alive {
+            return Err(ElasticError::DeadSlot(slot));
         }
+        if !from_drift {
+            self.cache
+                .insert(CurveKey::new(&s.gpu, &model, stage), curve.clone(), &live);
+        }
+        s.curve = Some(curve);
+        s.drifted = from_drift;
+        self.dirty = true;
+        Ok(())
     }
 
     fn live_keys(&self) -> Vec<CurveKey> {
@@ -309,6 +342,81 @@ impl ElasticPlanner {
         Ok(self.plan.as_ref().expect("just set"))
     }
 
+    /// Would-be outcome of admitting one rank of `gpu`, computed WITHOUT
+    /// mutating any planner state — no slot is created, the cache
+    /// counters and LRU order stay untouched (curve lookup goes through
+    /// [`CurveCache::peek`]), and no manifest or plan is installed. This
+    /// is the primitive the autoscale policy (`crate::autoscale`)
+    /// evaluates offers with.
+    ///
+    /// The candidate's curve comes from the type-level cache when
+    /// present (`JoinPreview::curve_cached`, zero profiling); otherwise
+    /// `fallback` must supply an estimate or the preview fails with
+    /// [`ElasticError::NoCurve`].
+    ///
+    /// `net` is the *current* cost model; the preview re-prices
+    /// collectives at the post-admission group size internally
+    /// (`JoinPreview::net`). The reshard penalty is measured against the
+    /// manifest of the latest replan; any membership events applied
+    /// since then are folded into the same hypothetical movement set.
+    pub fn preview_join(
+        &self,
+        gpu: &str,
+        fallback: Option<&PerfCurve>,
+        net: &NetSim,
+    ) -> Result<JoinPreview, ElasticError> {
+        let mut curves = self.active_curves()?;
+        let key = CurveKey::new(gpu, &self.model, self.stage);
+        let (curve, curve_cached) = match self.cache.peek(&key) {
+            Some(c) => (c.clone(), true),
+            None => match fallback {
+                Some(c) => (c.clone(), false),
+                None => return Err(ElasticError::NoCurve(gpu.to_string())),
+            },
+        };
+        curves.push(curve.clone());
+
+        let mut net_after = net.clone();
+        net_after.n = curves.len();
+        let plan = match &self.plan {
+            Some(prev) => allocator::replan(prev, &curves, &net_after, self.param_count),
+            None => allocator::plan(&curves, self.stage, self.gbs, &net_after, self.param_count),
+        }
+        .map_err(ElasticError::Plan)?;
+
+        // hypothetical shard layout: the live slots plus the joiner at
+        // the slot id add_slot() would assign
+        let mut live: Vec<(usize, String)> = self
+            .slots
+            .iter()
+            .filter(|s| s.alive)
+            .map(|s| (s.slot, s.gpu.clone()))
+            .collect();
+        live.push((self.slots.len(), gpu.to_string()));
+        let manifest =
+            ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
+                .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        let (reshard_penalty_s, reshard_bytes) = match &self.manifest {
+            Some(old) => {
+                let r = ckpt::reshard(old, &manifest)
+                    .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+                (r.transfer_time_s(&net_after), r.bytes_moved())
+            }
+            // no plan yet: the state would be born sharded, nothing moves
+            None => (0.0, 0),
+        };
+
+        Ok(JoinPreview {
+            gpu: gpu.to_string(),
+            curve,
+            curve_cached,
+            plan,
+            net: net_after,
+            reshard_penalty_s,
+            reshard_bytes,
+        })
+    }
+
     /// The optimizer-shard layout of the current plan.
     pub fn manifest(&self) -> Option<&ShardManifest> {
         self.manifest.as_ref()
@@ -375,18 +483,63 @@ impl ElasticPlanner {
     }
 }
 
+/// Everything [`ElasticPlanner::preview_join`] predicts about admitting
+/// one candidate rank — a pure what-if: nothing in the planner moved.
+#[derive(Debug, Clone)]
+pub struct JoinPreview {
+    /// Catalog GPU type of the candidate.
+    pub gpu: String,
+    /// The curve the prediction used (cached or caller-supplied).
+    pub curve: PerfCurve,
+    /// True when the curve came from the type-level cache — the
+    /// candidate could be admitted with zero profiling calls.
+    pub curve_cached: bool,
+    /// The would-be Algorithm 2 plan over live ranks + the candidate.
+    pub plan: Plan,
+    /// Collective cost model at the post-admission group size.
+    pub net: NetSim,
+    /// Measured one-shot optimizer-state movement cost of the admission
+    /// (`ckpt::reshard` against the current layout).
+    pub reshard_penalty_s: f64,
+    /// Optimizer-state bytes that movement touches.
+    pub reshard_bytes: u64,
+}
+
 /// Compare observed per-micro-step compute times against the fitted
 /// curves and return the *compact* rank indices whose relative deviation
 /// exceeds `threshold`. Ranks that processed no samples are skipped.
+///
+/// `curves` and `per_rank_steps` must be parallel to `plan.ranks`: a
+/// length mismatch is a wiring bug upstream (the caller zipped state
+/// from two different plans), not a rank to silently ignore — it
+/// debug-asserts, and in release builds the affected ranks are skipped
+/// with a logged warning so one bad report cannot take the job down.
 pub fn detect_drift(
     plan: &Plan,
     curves: &[PerfCurve],
     per_rank_steps: &[Vec<f64>],
     threshold: f64,
 ) -> Vec<usize> {
+    debug_assert!(
+        curves.len() == plan.ranks.len() && per_rank_steps.len() == plan.ranks.len(),
+        "detect_drift wiring bug: {} ranks but {} curves / {} step reports",
+        plan.ranks.len(),
+        curves.len(),
+        per_rank_steps.len()
+    );
     let mut drifted = Vec::new();
     for (i, r) in plan.ranks.iter().enumerate() {
-        if r.grad_accum_steps == 0 || i >= curves.len() || i >= per_rank_steps.len() {
+        if i >= curves.len() || i >= per_rank_steps.len() {
+            eprintln!(
+                "[elastic] detect_drift: skipping rank {i} — only {} curves / {} step \
+                 reports for a {}-rank plan (stale wiring upstream)",
+                curves.len(),
+                per_rank_steps.len(),
+                plan.ranks.len()
+            );
+            continue;
+        }
+        if r.grad_accum_steps == 0 {
             continue;
         }
         let predicted = allocator::rank_compute_time(r, &curves[i]);
@@ -432,7 +585,7 @@ mod tests {
         for &(gpu, mbs) in gpus {
             let slot = p.add_slot(gpu);
             if p.needs_profile().contains(&slot) {
-                p.install_curve(slot, device_curve(gpu, mbs), false);
+                p.install_curve(slot, device_curve(gpu, mbs), false).unwrap();
             }
         }
         p
@@ -478,7 +631,7 @@ mod tests {
         assert_eq!(p.needs_profile(), vec![slot]);
         let net = NetSim::from_link(2, LinkKind::Ib);
         assert!(matches!(p.replan(&net), Err(ElasticError::MissingCurves(_))));
-        p.install_curve(slot, device_curve("T4", 8), false);
+        p.install_curve(slot, device_curve("T4", 8), false).unwrap();
         p.replan(&net).unwrap();
     }
 
@@ -500,7 +653,7 @@ mod tests {
             .iter()
             .map(|pt| ProfiledPoint { batch: pt.batch, step_time_s: pt.step_time_s * 2.0 })
             .collect();
-        p.install_curve(0, PerfCurve::fit(slow, 48).unwrap(), true);
+        p.install_curve(0, PerfCurve::fit(slow, 48).unwrap(), true).unwrap();
         assert!(p.slots()[0].drifted);
         // a fresh join of the same type must get the healthy cached curve
         let slot = p.add_slot("A800-80G");
@@ -576,5 +729,125 @@ mod tests {
         assert!(p.reshard_penalty_s(&net3, false) >= p.reshard_penalty_s(&net3, true));
         // with one, the minimal measured set applies
         assert_eq!(p.reshard_bytes(true), reshard.bytes_moved());
+    }
+
+    #[test]
+    fn late_profile_reply_for_departed_rank_is_dropped() {
+        // regression: install_curve used to accept a dead slot silently —
+        // inserting into the shared type-level cache, marking the planner
+        // dirty and forcing a spurious replan
+        let mut p = planner_with(&[("A800-80G", 48), ("V100S-32G", 16)]);
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        assert!(!p.dirty());
+        p.lose_slot(1).unwrap();
+        p.replan(&NetSim::from_link(1, LinkKind::Ib)).unwrap();
+        assert!(!p.dirty());
+        let (hits0, misses0) = (p.cache().hits(), p.cache().misses());
+        let cache_len0 = p.cache().len();
+
+        // the departed rank's profile reply arrives now: a poisoned curve
+        // (say the rank was dying while it measured — 10x slow)
+        let slow: Vec<ProfiledPoint> = device_curve("V100S-32G", 16)
+            .points()
+            .iter()
+            .map(|pt| ProfiledPoint { batch: pt.batch, step_time_s: pt.step_time_s * 10.0 })
+            .collect();
+        let poisoned = PerfCurve::fit(slow, 16).unwrap();
+        assert_eq!(
+            p.install_curve(1, poisoned.clone(), false),
+            Err(ElasticError::DeadSlot(1))
+        );
+        assert_eq!(p.install_curve(99, poisoned, false), Err(ElasticError::UnknownSlot(99)));
+
+        // nothing changed: no dirty flag, no spurious replan pending, the
+        // cached V100S curve is still the healthy one
+        assert!(!p.dirty(), "a dropped reply must not force a replan");
+        assert_eq!(p.cache().len(), cache_len0);
+        assert_eq!((p.cache().hits(), p.cache().misses()), (hits0, misses0));
+        let slot = p.add_slot("V100S-32G");
+        let rejoined_peak = p.slots()[slot].curve.as_ref().unwrap().peak_speed();
+        let healthy_peak = device_curve("V100S-32G", 16).peak_speed();
+        assert!(
+            (rejoined_peak - healthy_peak).abs() / healthy_peak < 1e-9,
+            "cache must still hold the healthy curve"
+        );
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "detect_drift wiring bug")]
+    fn detect_drift_length_mismatch_is_a_wiring_bug() {
+        let curves = vec![device_curve("A800-80G", 48), device_curve("V100S-32G", 16)];
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let m = preset("llama-0.5b").unwrap();
+        let plan = allocator::plan(&curves, 1, 256, &net, m.param_count()).unwrap();
+        // a curve vector from some other plan: one entry short
+        detect_drift(&plan, &curves[..1], &[vec![0.1], vec![0.1]], 0.15);
+    }
+
+    #[test]
+    fn preview_join_predicts_without_mutating() {
+        let mut p = planner_with(&[("A800-80G", 48), ("V100S-32G", 16)]);
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        let slots0 = p.slots().len();
+        let (hits0, misses0) = (p.cache().hits(), p.cache().misses());
+        let lru0: Vec<CurveKey> = p.cache().lru_order().to_vec();
+        let replans0 = p.replans();
+        let manifest0 = p.manifest().unwrap().clone();
+
+        // cached type: preview works with zero profiling and no fallback
+        let pv = p.preview_join("A800-80G", None, &net).unwrap();
+        assert!(pv.curve_cached);
+        assert_eq!(pv.plan.ranks.len(), 3);
+        assert_eq!(pv.plan.total_samples(), 256);
+        assert_eq!(pv.net.n, 3);
+        // a join moves the joiner's shard: measured, non-zero, less than
+        // the full state
+        assert!(pv.reshard_penalty_s > 0.0);
+        assert!(pv.reshard_bytes > 0);
+        let m = preset("llama-0.5b").unwrap();
+        assert!(pv.reshard_bytes < 12 * m.param_count());
+
+        // unknown type without an estimate: typed error
+        assert!(matches!(
+            p.preview_join("T4", None, &net),
+            Err(ElasticError::NoCurve(g)) if g == "T4"
+        ));
+        // with an estimate it previews, flagged as such
+        let est = device_curve("T4", 8);
+        let pv2 = p.preview_join("T4", Some(&est), &net).unwrap();
+        assert!(!pv2.curve_cached);
+        assert_eq!(pv2.plan.ranks.len(), 3);
+
+        // NOTHING moved: no slots, no replans, no cache traffic, no LRU
+        // reordering, same manifest
+        assert_eq!(p.slots().len(), slots0);
+        assert_eq!(p.replans(), replans0);
+        assert!(!p.dirty());
+        assert_eq!((p.cache().hits(), p.cache().misses()), (hits0, misses0));
+        assert_eq!(p.cache().lru_order(), lru0.as_slice());
+        assert_eq!(p.manifest().unwrap(), &manifest0);
+    }
+
+    #[test]
+    fn preview_join_invalid_stage_is_typed_error() {
+        // a corrupt stage must surface as PlanError::InvalidStage through
+        // the preview path too, not panic in netsim
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(9, 256, &m.name, m.param_count(), 16);
+        let slot = p.add_slot("A800-80G");
+        p.install_curve(slot, device_curve("A800-80G", 48), false).unwrap();
+        let net = NetSim::from_link(1, LinkKind::Ib);
+        assert_eq!(
+            p.replan(&net).unwrap_err(),
+            ElasticError::Plan(PlanError::InvalidStage(9))
+        );
+        let est = device_curve("V100S-32G", 16);
+        assert!(matches!(
+            p.preview_join("V100S-32G", Some(&est), &net),
+            Err(ElasticError::Plan(PlanError::InvalidStage(9)))
+        ));
     }
 }

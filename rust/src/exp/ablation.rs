@@ -52,7 +52,7 @@ fn degrade_to_single_probe(profile_: &ClusterProfile) -> Result<Vec<PerfCurve>> 
 /// The `no-tsweep` variant for ZeRO-2/3: everyone runs at mbs, gas
 /// follows.
 fn plan_max_batch(curves: &[PerfCurve], stage: u8, gbs: usize, net: &NetSim,
-                  psi: u64) -> Plan {
+                  psi: u64) -> Result<Plan> {
     let batches: Vec<usize> = curves.iter().map(|c| c.mbs()).collect();
     let msum: usize = batches.iter().sum();
     let gas = gbs.div_ceil(msum);
@@ -72,8 +72,11 @@ fn plan_max_batch(curves: &[PerfCurve], stage: u8, gbs: usize, net: &NetSim,
         .zip(curves)
         .map(|(&b, c)| c.time_at(b as f64))
         .fold(0.0, f64::max);
-    let wall = (t_step + net.per_microstep_comm_time(stage, psi)) * gas as f64;
-    Plan {
+    let comm = net
+        .per_microstep_comm_time(stage, psi)
+        .map_err(|e| anyhow!("no-tsweep comm: {e}"))?;
+    let wall = (t_step + comm) * gas as f64;
+    Ok(Plan {
         stage,
         gbs,
         ranks: (0..curves.len())
@@ -87,7 +90,7 @@ fn plan_max_batch(curves: &[PerfCurve], stage: u8, gbs: usize, net: &NetSim,
             .collect(),
         predicted_iter_s: wall,
         strategy: "no-tsweep".into(),
-    }
+    })
 }
 
 /// Evaluate all ablation variants at one stage.
@@ -101,29 +104,29 @@ pub fn column(cluster: &ClusterSpec, model: &ModelSpec, stage: u8) -> Result<Vec
 
     // full poplar
     let plan = plan_with(&prof, Strategy::Poplar, gbs, &net, model)?;
-    out.push(("poplar-full".to_string(), score(cluster, model, &plan).tflops));
+    out.push(("poplar-full".to_string(), score(cluster, model, &plan)?.tflops));
 
     // no-spline
     let curves = degrade_to_single_probe(&prof)?;
     let plan = allocator::plan(&curves, stage, gbs, &net, psi)
         .map_err(|e| anyhow!("no-spline plan: {e}"))?;
-    out.push(("no-spline".to_string(), score(cluster, model, &plan).tflops));
+    out.push(("no-spline".to_string(), score(cluster, model, &plan)?.tflops));
 
     // no-finegrained (FLOPs-driven shares, poplar's machinery otherwise)
     let plan = plan_with(&prof, Strategy::Flops, gbs, &net, model)?;
-    out.push(("no-finegrained".to_string(), score(cluster, model, &plan).tflops));
+    out.push(("no-finegrained".to_string(), score(cluster, model, &plan)?.tflops));
 
     // no-tsweep (only different for stages 2/3)
     if stage >= 2 {
         let curves = fit_curves(&prof)?;
-        let plan = plan_max_batch(&curves, stage, gbs, &net, psi);
+        let plan = plan_max_batch(&curves, stage, gbs, &net, psi)?;
         plan.validate().map_err(|e| anyhow!("no-tsweep: {e}"))?;
-        out.push(("no-tsweep".to_string(), score(cluster, model, &plan).tflops));
+        out.push(("no-tsweep".to_string(), score(cluster, model, &plan)?.tflops));
     }
 
     // uniform reference
     let plan = plan_with(&prof, Strategy::Uniform, gbs, &net, model)?;
-    out.push(("uniform".to_string(), score(cluster, model, &plan).tflops));
+    out.push(("uniform".to_string(), score(cluster, model, &plan)?.tflops));
     Ok(out)
 }
 

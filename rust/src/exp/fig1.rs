@@ -24,7 +24,7 @@ pub fn run() -> Result<Table> {
     let mut table = Table::new(&["system", "rank", "gpu", "busy_s", "idle_s", "idle_frac"]);
     for strategy in [Strategy::Uniform, Strategy::Poplar] {
         let plan = plan_with(&prof, strategy, gbs, &net, &model)?;
-        let rep = score(&cluster, &model, &plan);
+        let rep = score(&cluster, &model, &plan)?;
         let insts = cluster.instances();
         for r in &rep.ranks {
             let total = r.busy_s + r.idle_s;

@@ -1,0 +1,172 @@
+//! Autoscaling experiment: the cost/throughput frontier of candidate
+//! GPU offers against the running cluster.
+//!
+//! Cluster C (4× A800-80G + 4× V100S-32G), llama-0.5b, ZeRO-1, the
+//! paper's 2M-token global batch, noise-free truth curves. Four
+//! candidate types are offered to the default policy
+//! (`horizon_s = 300`, `min_gain = 2%`):
+//!
+//! * **A800-80G** — cached curve (the type is live): decided with zero
+//!   profiling calls, large gain → **accept**, and its operating point
+//!   sits on the cost/throughput frontier;
+//! * **V100S-32G** — cached, moderate gain → **accept**, but its
+//!   operating point is *dominated* (the RTX4090 estimate gives more
+//!   samples/s per dollar): throughput-positive is not the same as
+//!   cost-efficient;
+//! * **RTX4090** — no cached curve: the prediction runs on a
+//!   catalog-FLOPs-scaled estimate, clears the bar → **defer**
+//!   (profile before committing), never an outright accept;
+//! * **T4** — weak and uncached: the admission stall (measured
+//!   `ckpt::reshard` movement + estimated Alg. 1 time) exceeds the
+//!   gain amortized over the 300 s horizon → **reject**.
+//!
+//! The `frontier` column marks the Pareto set over (samples/s,
+//! $/1000 samples), baseline row included.
+
+use anyhow::{anyhow, Result};
+
+use super::gbs_samples;
+use crate::autoscale::{self, AutoscaleOptions, AutoscaleReport};
+use crate::cluster::{catalog, GpuSpec, LinkKind};
+use crate::config::model::{preset, ModelSpec};
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::elastic::ElasticPlanner;
+use crate::metrics::Table;
+use crate::netsim::NetSim;
+
+/// The candidate GPU types offered, in presentation order.
+pub const OFFERS: &[&str] = &["A800-80G", "V100S-32G", "RTX4090", "T4"];
+
+fn truth_curve(spec: &GpuSpec, model: &ModelSpec, mbs: usize) -> Result<PerfCurve> {
+    let pts: Vec<ProfiledPoint> = (1..=mbs)
+        .map(|b| ProfiledPoint {
+            batch: b,
+            step_time_s: spec.compute_time(
+                (b as u64 * model.seq) as f64,
+                model.flops_per_token(),
+                model.n_layers as usize,
+            ),
+        })
+        .collect();
+    PerfCurve::fit(pts, mbs).map_err(|e| anyhow!("curve: {e}"))
+}
+
+/// Evaluate the four offers against the cluster-C planner.
+pub fn report() -> Result<AutoscaleReport> {
+    let model = preset("llama-0.5b").ok_or_else(|| anyhow!("missing preset"))?;
+    let gbs = gbs_samples(&model);
+    let mut planner = ElasticPlanner::new(1, gbs, &model.name, model.param_count(), 16);
+    for (gpu, mbs) in [
+        ("A800-80G", 48usize),
+        ("A800-80G", 48),
+        ("A800-80G", 48),
+        ("A800-80G", 48),
+        ("V100S-32G", 16),
+        ("V100S-32G", 16),
+        ("V100S-32G", 16),
+        ("V100S-32G", 16),
+    ] {
+        let slot = planner.add_slot(gpu);
+        if planner.slots()[slot].curve.is_none() {
+            let spec = catalog::spec_or_panic(gpu);
+            planner
+                .install_curve(slot, truth_curve(&spec, &model, mbs)?, false)
+                .map_err(|e| anyhow!("install: {e}"))?;
+        }
+    }
+    let net = NetSim::from_link(8, LinkKind::Ib);
+    planner.replan(&net).map_err(|e| anyhow!("initial plan: {e}"))?;
+
+    let offers: Vec<String> = OFFERS.iter().map(|s| s.to_string()).collect();
+    autoscale::evaluate_offers(&planner, &net, &model, &offers, &AutoscaleOptions::default())
+        .map_err(|e| anyhow!("autoscale: {e}"))
+}
+
+/// Run the full figure (rendering shared with `poplar autoscale` via
+/// [`autoscale::report_table`]).
+pub fn run() -> Result<Table> {
+    Ok(autoscale::report_table(&report()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::Decision;
+
+    #[test]
+    fn at_least_one_accept_and_one_stall_bound_reject() {
+        let rep = report().unwrap();
+        let accepts: Vec<_> =
+            rep.decisions.iter().filter(|d| d.decision == Decision::Accept).collect();
+        assert!(!accepts.is_empty(), "need >= 1 accepted offer");
+        // the acceptance bar: every accepted offer's amortized gain
+        // exceeds its measured ckpt::reshard penalty, off a cached curve
+        // with zero profiling
+        for d in &accepts {
+            assert!(d.curve_cached, "{}: accepts must use measured curves", d.gpu);
+            assert_eq!(d.profile_est_s, 0.0, "{}: zero profiling calls", d.gpu);
+            assert!(d.gain_samples > 0.0);
+            assert!(
+                (d.post_rate - d.pre_rate) * rep.horizon_s
+                    > d.post_rate * d.reshard_penalty_s,
+                "{}: amortized gain must exceed the reshard penalty",
+                d.gpu
+            );
+        }
+        // and at least one offer is declined because its stall exceeds
+        // the amortized gain (the T4 at a 300 s tenure)
+        let rejects: Vec<_> =
+            rep.decisions.iter().filter(|d| d.decision == Decision::Reject).collect();
+        assert!(!rejects.is_empty(), "need >= 1 declined offer");
+        assert!(
+            rejects.iter().any(|d| d.gain_samples <= 0.0),
+            "some reject must be stall-bound: {rejects:?}"
+        );
+    }
+
+    #[test]
+    fn uncached_candidates_never_accept_outright() {
+        let rep = report().unwrap();
+        for d in rep.decisions.iter().filter(|d| !d.curve_cached) {
+            assert_ne!(
+                d.decision,
+                Decision::Accept,
+                "{}: estimate-based decisions must defer or reject",
+                d.gpu
+            );
+            assert!(d.profile_est_s > 0.0, "{}: uncached admission prices Alg. 1", d.gpu);
+        }
+    }
+
+    #[test]
+    fn frontier_is_pareto_and_contains_an_accept() {
+        let rep = report().unwrap();
+        let mut pts =
+            vec![(rep.baseline_rate, rep.baseline_cost_per_ksample, rep.baseline_on_frontier)];
+        for d in &rep.decisions {
+            pts.push((d.post_rate, d.cost_per_ksample, d.on_frontier));
+        }
+        for (i, &(r, c, on)) in pts.iter().enumerate() {
+            let dominated = pts.iter().enumerate().any(|(j, &(rj, cj, _))| {
+                j != i && rj >= r && cj <= c && (rj > r || cj < c)
+            });
+            assert_eq!(on, !dominated, "point {i}");
+        }
+        // the strongest accepted offer has the highest rate of all
+        // points, so it must sit on the frontier
+        assert!(
+            rep.decisions
+                .iter()
+                .any(|d| d.decision == Decision::Accept && d.on_frontier),
+            "an accepted offer should be Pareto-optimal"
+        );
+    }
+
+    #[test]
+    fn figure_is_deterministic_and_complete() {
+        let a = run().unwrap().to_markdown();
+        let b = run().unwrap().to_markdown();
+        assert_eq!(a, b);
+        assert_eq!(run().unwrap().len(), 1 + OFFERS.len());
+    }
+}

@@ -140,7 +140,8 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
     let pre_plan = allocator::plan(&curves, stage, gbs, &net, model.param_count())
         .map_err(|e| anyhow!("pre plan: {e}"))?;
     let oracle = DeviceOracle { specs: specs.clone(), model: &model };
-    let pre = simulate_iteration(&pre_plan, &oracle, &net, &model);
+    let pre = simulate_iteration(&pre_plan, &oracle, &net, &model)
+        .map_err(|e| anyhow!("pre sim: {e}"))?;
     let mut out = vec![ElasticCell {
         scenario: "pre-event".into(),
         scheme: "poplar".into(),
@@ -189,7 +190,8 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
 
     let static_plan = static_after_loss(&pre_plan, LOST_SLOT);
     static_plan.validate().map_err(|e| anyhow!("static plan: {e}"))?;
-    let r = simulate_iteration(&static_plan, &surv_oracle, &net7, &model);
+    let r = simulate_iteration(&static_plan, &surv_oracle, &net7, &model)
+        .map_err(|e| anyhow!("static sim: {e}"))?;
     out.push(ElasticCell {
         scenario: "lost-v100s".into(),
         scheme: "static".into(),
@@ -205,7 +207,8 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
     let replan = allocator::replan(&pre_plan, &surv_curves, &net7, model.param_count())
         .map_err(|e| anyhow!("replan: {e}"))?;
     replan.validate().map_err(|e| anyhow!("replan: {e}"))?;
-    let r = simulate_iteration(&replan, &surv_oracle, &net7, &model);
+    let r = simulate_iteration(&replan, &surv_oracle, &net7, &model)
+        .map_err(|e| anyhow!("replan sim: {e}"))?;
     out.push(ElasticCell {
         scenario: "lost-v100s".into(),
         scheme: "replan".into(),
@@ -223,7 +226,8 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
     )
     .slow(SLOW_SLOT, SLOW_FACTOR);
 
-    let r = simulate_iteration(&pre_plan, &slowed_oracle, &net, &model);
+    let r = simulate_iteration(&pre_plan, &slowed_oracle, &net, &model)
+        .map_err(|e| anyhow!("slowed sim: {e}"))?;
     out.push(ElasticCell {
         scenario: "slowed-a800x2".into(),
         scheme: "static".into(),
@@ -243,7 +247,8 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
     let replan = allocator::replan(&pre_plan, &drift_curves, &net, model.param_count())
         .map_err(|e| anyhow!("drift replan: {e}"))?;
     replan.validate().map_err(|e| anyhow!("drift replan: {e}"))?;
-    let r = simulate_iteration(&replan, &slowed_oracle, &net, &model);
+    let r = simulate_iteration(&replan, &slowed_oracle, &net, &model)
+        .map_err(|e| anyhow!("drift sim: {e}"))?;
     out.push(ElasticCell {
         scenario: "slowed-a800x2".into(),
         scheme: "replan".into(),

@@ -17,6 +17,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_autoscale;
 pub mod fig_elastic;
 pub mod table2;
 
@@ -121,11 +122,11 @@ pub fn score(
     cluster: &ClusterSpec,
     model: &ModelSpec,
     plan: &Plan,
-) -> IterationReport {
+) -> Result<IterationReport> {
     let net = NetSim::from_cluster(cluster);
     let specs = cluster.instances().into_iter().map(|i| i.spec).collect();
     let oracle = DeviceOracle { specs, model };
-    simulate_iteration(plan, &oracle, &net, model)
+    simulate_iteration(plan, &oracle, &net, model).map_err(|e| anyhow!("score: {e}"))
 }
 
 /// End-to-end cell: profile (noisy) → plan → score (truth).
@@ -140,7 +141,7 @@ pub fn eval_system(
     let prof = profile(cluster, model, stage, NOISE_SIGMA, seed)?;
     let net = NetSim::from_cluster(cluster);
     let plan = plan_with(&prof, strategy, gbs, &net, model)?;
-    let rep = score(cluster, model, &plan);
+    let rep = score(cluster, model, &plan)?;
     Ok(SystemResult {
         label: strategy.name().to_string(),
         stage: prof.stage,
@@ -186,6 +187,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
         ("ablation", "Appendix — ablation of Poplar components", ablation::run),
         ("fig_elastic", "Elasticity — throughput recovery after membership changes",
          fig_elastic::run),
+        ("fig_autoscale", "Autoscaling — cost/throughput frontier of candidate offers",
+         fig_autoscale::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

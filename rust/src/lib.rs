@@ -27,8 +27,9 @@
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan` for elastic re-allocation |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
 //! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` |
-//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning, measured reshard penalty |
-//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan) |
+//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join` |
+//! | [`autoscale`] | cost-aware admission policy: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), amortizes the measured reshard penalty over a horizon, emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier |
+//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` turns joins into declinable offers) |
 //! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
 //! | [`train`] | real heterogeneous data-parallel training loop |
 //! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |
@@ -37,6 +38,7 @@
 //! | [`exp`] | experiment harness: one runner per paper table/figure |
 
 pub mod allocator;
+pub mod autoscale;
 pub mod ckpt;
 pub mod cluster;
 pub mod config;

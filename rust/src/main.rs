@@ -10,6 +10,10 @@
 //! poplar elastic   --cluster cluster-C --model llama-0.5b [--stage 1]
 //!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G"]
 //!                  [--seed-schedule 7] [--ckpt-dir artifacts/ckpt]
+//!                  [--horizon 300] [--min-gain 0.02]   # enables the offer policy
+//! poplar autoscale --offer A800-80G,T4[,...] [--cluster cluster-C]
+//!                  [--model llama-0.5b] [--stage 1] [--gbs-tokens N]
+//!                  [--horizon 300] [--min-gain 0.02] [--noise 0.015]
 //! poplar ckpt      save    --cluster cluster-C --model llama-0.5b [--stage 1]
 //!                          [--dir artifacts/ckpt] [--snapshot 0]
 //! poplar ckpt      inspect [--dir artifacts/ckpt | --path FILE]
@@ -82,6 +86,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "train" => cmd_train(rest),
         "elastic" => cmd_elastic(rest),
+        "autoscale" => cmd_autoscale(rest),
         "ckpt" => cmd_ckpt(rest),
         "exp" => cmd_exp(rest),
         "help" | "--help" | "-h" => {
@@ -102,11 +107,13 @@ fn print_help() {
          \x20 train     --artifacts artifacts/tiny [--iters 100] [--gbs 16] [--stage 1]\n\
          \x20 elastic   --cluster C --model M [--stage N] [--iters 12]\n\
          \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G\"] [--seed-schedule 7]\n\
-         \x20           [--ckpt-dir artifacts/ckpt]\n\
+         \x20           [--ckpt-dir artifacts/ckpt] [--horizon 300] [--min-gain 0.02]\n\
+         \x20 autoscale --offer A800-80G,T4[,...] [--cluster C] [--model M] [--stage N]\n\
+         \x20           [--gbs-tokens N] [--horizon 300] [--min-gain 0.02] [--noise S]\n\
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
          \x20 ckpt      restore --cluster C --model M [--lost 7,3]\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all> [--out results]\n"
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|table2|ablation|all> [--out results]\n"
     );
 }
 
@@ -271,6 +278,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
         let opts = poplar::coordinator::ElasticOptions {
             drift_threshold: ecfg.drift_threshold,
             ckpt_dir: ckpt_dir_flag.or_else(|| cfg.ckpt.as_ref().map(|c| c.dir.clone())),
+            autoscale: cfg.autoscale.clone(),
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -317,10 +325,13 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
         )
     };
 
+    // presence of --horizon or --min-gain enables the offer policy
+    let autoscale = parse_autoscale_flags(&f)?;
     let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
     let opts = poplar::coordinator::ElasticOptions {
         drift_threshold: threshold,
         ckpt_dir: ckpt_dir_flag,
+        autoscale,
         ..Default::default()
     };
     let rep = leader.run_elastic_job(stage, gbs, iters, &schedule, &opts)?;
@@ -356,6 +367,95 @@ fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
         ]);
     }
     println!("{}", t.to_markdown());
+}
+
+/// Parse the optional `--horizon` / `--min-gain` pair: either flag turns
+/// the cost-aware offer policy on.
+fn parse_autoscale_flags(
+    f: &HashMap<String, String>,
+) -> Result<Option<poplar::autoscale::AutoscaleOptions>> {
+    let horizon = f.get("horizon").map(|s| s.parse::<f64>()).transpose()?;
+    let min_gain = f.get("min-gain").map(|s| s.parse::<f64>()).transpose()?;
+    if horizon.is_none() && min_gain.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(poplar::autoscale::AutoscaleOptions {
+        horizon_s: horizon.unwrap_or(poplar::autoscale::DEFAULT_HORIZON_S),
+        min_gain: min_gain.unwrap_or(poplar::autoscale::DEFAULT_MIN_GAIN),
+        prices: Vec::new(),
+    }))
+}
+
+fn cmd_autoscale(args: &[String]) -> Result<()> {
+    let (_, f) = parse_flags(args)?;
+    let offers: Vec<String> = f
+        .get("offer")
+        .ok_or_else(|| anyhow!("--offer GPU[,GPU...] required (e.g. --offer A800-80G,T4)"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if offers.is_empty() {
+        bail!("--offer needs at least one GPU type");
+    }
+    let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
+    let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
+        .ok_or_else(|| anyhow!("unknown model preset"))?;
+    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let gbs_tokens: u64 = f
+        .get("gbs-tokens")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2 * 1024 * 1024);
+    let gbs = (gbs_tokens / model.seq) as usize;
+    let noise: f64 = f.get("noise").map(|s| s.parse()).transpose()?.unwrap_or(0.015);
+    let opts = parse_autoscale_flags(&f)?.unwrap_or_default();
+
+    // profile the running cluster once (Alg. 1), then every offer is
+    // decided analytically — cached types with zero further profiling
+    let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
+    let prof = leader.profile(stage)?;
+    let stage = prof.stage;
+    let curves = poplar::coordinator::fit_curves(&prof)?;
+    let mut planner = poplar::elastic::ElasticPlanner::new(
+        stage,
+        gbs,
+        &model.name,
+        model.param_count(),
+        32,
+    );
+    for (r, c) in prof.ranks.iter().zip(curves) {
+        let slot = planner.add_slot(&r.name);
+        planner
+            .install_curve(slot, c, false)
+            .map_err(|e| anyhow!("installing slot {slot} curve: {e}"))?;
+    }
+    let net = leader.net().clone();
+    planner.replan(&net).map_err(|e| anyhow!("plan: {e}"))?;
+    leader.shutdown();
+
+    let rep = poplar::autoscale::evaluate_offers(&planner, &net, &model, &offers, &opts)
+        .map_err(|e| anyhow!("{e}"))?;
+    print_autoscale_report(&rep, &model.name, &cluster.name, stage);
+    Ok(())
+}
+
+fn print_autoscale_report(
+    rep: &poplar::autoscale::AutoscaleReport,
+    model: &str,
+    cluster: &str,
+    stage: u8,
+) {
+    println!(
+        "autoscale: {model} on {cluster} at ZeRO-{stage} — horizon {:.0}s, min gain {:.1}%",
+        rep.horizon_s,
+        rep.min_gain * 100.0
+    );
+    // same rendering as exp::fig_autoscale — one source of truth
+    println!("{}", poplar::autoscale::report_table(rep).to_markdown());
+    for d in &rep.decisions {
+        println!("  {} -> {}: {}", d.gpu, d.decision.label(), d.reason);
+    }
 }
 
 /// Slot list of a cluster spec: `(rank, gpu name)` in rank order.
@@ -535,6 +635,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             "fig_elastic",
             "Elasticity — throughput recovery after membership changes",
             exp::fig_elastic::run,
+        )?,
+        "fig_autoscale" => one(
+            "fig_autoscale",
+            "Autoscaling — cost/throughput frontier of candidate offers",
+            exp::fig_autoscale::run,
         )?,
         other => bail!("unknown experiment {other:?}"),
     }

@@ -28,15 +28,21 @@ pub const FRAMEWORK_RESERVE_BYTES: u64 = 1_500_000_000;
 pub const TRANSIENT_FACTOR: f64 = 0.12;
 
 /// Model-state bytes resident on one rank for a ZeRO stage.
+///
+/// Every public entry point (allocator, profiler, leader, config)
+/// rejects stages outside 0..=3 with a typed error before memory
+/// accounting runs; if a bad stage slips past them anyway it is priced
+/// as ZeRO-0's full replication — the conservative maximum, so the
+/// derived `mbs` can only under-estimate, never OOM.
 pub fn model_state_bytes(param_count: u64, stage: u8, n_ranks: usize) -> u64 {
+    debug_assert!(stage <= 3, "stage {stage} should have been rejected upstream");
     let psi = param_count as f64;
     let n = n_ranks.max(1) as f64;
     let bytes = match stage {
-        0 => 16.0 * psi,
         1 => 4.0 * psi + 12.0 * psi / n,
         2 => 2.0 * psi + 2.0 * psi / n + 12.0 * psi / n,
         3 => 16.0 * psi / n,
-        _ => panic!("invalid ZeRO stage {stage}"),
+        _ => 16.0 * psi,
     };
     bytes as u64
 }

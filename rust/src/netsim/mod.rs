@@ -10,6 +10,7 @@
 //! reduce-scatter bwd over the two h×4h matrices) is reproduced by
 //! [`zero3_ffn_comm_volume`] and unit-tested below.
 
+use crate::allocator::PlanError;
 use crate::cluster::{ClusterSpec, LinkKind};
 
 
@@ -86,16 +87,18 @@ impl NetSim {
     ///   reduce-scatter.
     /// * ZeRO-3: all-gather (fwd) + all-gather (bwd) + reduce-scatter
     ///   (bwd) per micro-step.
-    pub fn per_microstep_comm_time(&self, stage: u8, param_count: u64) -> f64 {
+    ///
+    /// A stage outside 0..=3 is a typed error, mirroring the allocator:
+    /// the stage reaches here from config/CLI via `Plan.stage` (a `pub`
+    /// field), so a corrupt value must surface, not panic mid-job.
+    pub fn per_microstep_comm_time(&self, stage: u8, param_count: u64) -> Result<f64, PlanError> {
         let bytes = 2 * param_count; // fp16 wire
         match stage {
-            0 | 1 => 0.0,
-            2 => self.time(Collective::ReduceScatter, bytes),
-            3 => {
-                2.0 * self.time(Collective::AllGather, bytes)
-                    + self.time(Collective::ReduceScatter, bytes)
-            }
-            _ => panic!("invalid ZeRO stage {stage}"),
+            0 | 1 => Ok(0.0),
+            2 => Ok(self.time(Collective::ReduceScatter, bytes)),
+            3 => Ok(2.0 * self.time(Collective::AllGather, bytes)
+                + self.time(Collective::ReduceScatter, bytes)),
+            _ => Err(PlanError::InvalidStage(stage)),
         }
     }
 
@@ -107,17 +110,17 @@ impl NetSim {
     /// * ZeRO-2: param all-gather after the optimizer step (the gradient
     ///   reduce-scatter already happened per micro-step).
     /// * ZeRO-3: nothing extra (params stay sharded).
-    pub fn iteration_comm_time(&self, stage: u8, param_count: u64) -> f64 {
+    ///
+    /// Invalid stages error like [`NetSim::per_microstep_comm_time`].
+    pub fn iteration_comm_time(&self, stage: u8, param_count: u64) -> Result<f64, PlanError> {
         let bytes = 2 * param_count;
         match stage {
-            0 => self.time(Collective::AllReduce, bytes),
-            1 => {
-                self.time(Collective::ReduceScatter, bytes)
-                    + self.time(Collective::AllGather, bytes)
-            }
-            2 => self.time(Collective::AllGather, bytes),
-            3 => 0.0,
-            _ => panic!("invalid ZeRO stage {stage}"),
+            0 => Ok(self.time(Collective::AllReduce, bytes)),
+            1 => Ok(self.time(Collective::ReduceScatter, bytes)
+                + self.time(Collective::AllGather, bytes)),
+            2 => Ok(self.time(Collective::AllGather, bytes)),
+            3 => Ok(0.0),
+            _ => Err(PlanError::InvalidStage(stage)),
         }
     }
 }
@@ -187,14 +190,14 @@ mod tests {
         let net = NetSim::from_link(8, LinkKind::Ib);
         let p = 500_000_000;
         // per-micro-step: z3 > z2 > z1 = z0 = 0
-        assert_eq!(net.per_microstep_comm_time(0, p), 0.0);
-        assert_eq!(net.per_microstep_comm_time(1, p), 0.0);
-        let z2 = net.per_microstep_comm_time(2, p);
-        let z3 = net.per_microstep_comm_time(3, p);
+        assert_eq!(net.per_microstep_comm_time(0, p).unwrap(), 0.0);
+        assert_eq!(net.per_microstep_comm_time(1, p).unwrap(), 0.0);
+        let z2 = net.per_microstep_comm_time(2, p).unwrap();
+        let z3 = net.per_microstep_comm_time(3, p).unwrap();
         assert!(z3 > 2.5 * z2, "z3 should be ~3x z2's RS cost");
         // per-iteration: z0 = AR, z3 = 0
-        assert!(net.iteration_comm_time(0, p) > 0.0);
-        assert_eq!(net.iteration_comm_time(3, p), 0.0);
+        assert!(net.iteration_comm_time(0, p).unwrap() > 0.0);
+        assert_eq!(net.iteration_comm_time(3, p).unwrap(), 0.0);
     }
 
     #[test]
@@ -205,8 +208,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "invalid ZeRO stage")]
-    fn invalid_stage_panics() {
-        NetSim::from_link(4, LinkKind::Ib).per_microstep_comm_time(4, 1);
+    fn invalid_stage_is_typed_error_not_panic() {
+        // the same input the allocator rejects with PlanError::InvalidStage
+        // must not panic here either (PR 2 hardened the allocator; this
+        // closes the netsim half)
+        let net = NetSim::from_link(4, LinkKind::Ib);
+        for bad in [4u8, 7, 255] {
+            assert_eq!(
+                net.per_microstep_comm_time(bad, 1).unwrap_err(),
+                PlanError::InvalidStage(bad)
+            );
+            assert_eq!(
+                net.iteration_comm_time(bad, 1).unwrap_err(),
+                PlanError::InvalidStage(bad)
+            );
+        }
     }
 }

@@ -78,13 +78,13 @@ impl StepTiming {
     /// * ZeRO-2 — forward + (backward − reduce-scatter).
     /// * ZeRO-3 — total − (fwd all-gather + bwd all-gather + bwd
     ///   reduce-scatter) − optimizer.
-    pub fn time_consumed(&self, stage: u8) -> f64 {
-        match stage {
-            0 | 1 => self.forward_s + self.backward_s,
-            2 => self.forward_s + self.backward_s, // rs recorded separately
-            3 => self.forward_s + self.backward_s,
-            _ => panic!("invalid ZeRO stage {stage}"),
-        }
+    ///
+    /// Every collective component is recorded in its own field, so the
+    /// compute remainder is the same expression at all stages — the
+    /// `stage` parameter documents intent and keeps the call sites
+    /// aligned with the paper's per-stage definitions.
+    pub fn time_consumed(&self, _stage: u8) -> f64 {
+        self.forward_s + self.backward_s
     }
 }
 
@@ -250,8 +250,13 @@ impl Device for SimDevice {
         match self.stage {
             0 | 1 => {}
             2 => {
-                t.bwd_reducescatter_s =
-                    self.net.per_microstep_comm_time(2, self.param_count);
+                // the ZeRO-2 per-micro-step cost is exactly one gradient
+                // reduce-scatter (composed directly: `set_stage` bounds
+                // the stage, so no fallible dispatch is needed here)
+                t.bwd_reducescatter_s = self.net.time(
+                    crate::netsim::Collective::ReduceScatter,
+                    2 * self.param_count,
+                );
             }
             3 => {
                 let ag = self.net.time(

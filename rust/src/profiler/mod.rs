@@ -65,6 +65,9 @@ pub enum ProfileError {
         /// Rank that cannot fit a single sample.
         rank: usize,
     },
+    /// Requested ZeRO stage outside 0..=3 (user-controlled via
+    /// config/CLI — an error, never a panic).
+    InvalidStage(u8),
 }
 
 impl std::fmt::Display for ProfileError {
@@ -72,6 +75,9 @@ impl std::fmt::Display for ProfileError {
         match self {
             ProfileError::ModelTooLarge { rank } => {
                 write!(f, "model does not fit a single sample on rank {rank} even at ZeRO-3")
+            }
+            ProfileError::InvalidStage(s) => {
+                write!(f, "invalid ZeRO stage {s} (want 0..=3)")
             }
         }
     }
@@ -194,7 +200,9 @@ pub fn profile_cluster(
     devices: &mut [Box<dyn Device>],
     requested_stage: u8,
 ) -> Result<ClusterProfile, ProfileError> {
-    assert!(requested_stage < 4);
+    if requested_stage >= 4 {
+        return Err(ProfileError::InvalidStage(requested_stage));
+    }
     'stage: for stage in requested_stage..4 {
         let mut results = Vec::with_capacity(devices.len());
         for dev in devices.iter_mut() {
@@ -284,6 +292,15 @@ mod tests {
         for r in &prof.ranks {
             assert!(r.mbs >= 1);
         }
+    }
+
+    #[test]
+    fn invalid_stage_is_typed_error() {
+        let mut devs = vec![sim("T4", "llama-0.5b", 0, 1, 0.0)];
+        assert_eq!(
+            profile_cluster(&mut devs, 4).unwrap_err(),
+            ProfileError::InvalidStage(4)
+        );
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! The report carries per-rank busy/idle, the Eq. 1-4 quantities, and
 //! cluster TFLOPs — the metric of Figs. 3-5.
 
-use crate::allocator::Plan;
+use crate::allocator::{Plan, PlanError};
 use crate::config::model::ModelSpec;
 use crate::netsim::NetSim;
 
@@ -163,12 +163,16 @@ impl<O: TimeOracle> TimeOracle for DriftOracle<O> {
 }
 
 /// Simulate one iteration of `plan` and report timings + TFLOPs.
+///
+/// `Plan.stage` is a `pub` field, so a corrupt stage can reach the
+/// engine from outside the validated planners — it surfaces as
+/// [`PlanError::InvalidStage`], never a panic.
 pub fn simulate_iteration(
     plan: &Plan,
     oracle: &dyn TimeOracle,
     net: &NetSim,
     model: &ModelSpec,
-) -> IterationReport {
+) -> Result<IterationReport, PlanError> {
     let n = plan.ranks.len();
     let psi = model.param_count();
     let stage = plan.stage;
@@ -196,7 +200,7 @@ pub fn simulate_iteration(
                 busy[i] += times[i];
                 idle[i] += t_max - times[i];
             }
-            let c = net.iteration_comm_time(stage, psi);
+            let c = net.iteration_comm_time(stage, psi)?;
             comm += c;
             wall = t_max + c;
         }
@@ -208,7 +212,7 @@ pub fn simulate_iteration(
                 .map(|r| r.grad_accum_steps)
                 .max()
                 .unwrap_or(0);
-            let c_step = net.per_microstep_comm_time(stage, psi);
+            let c_step = net.per_microstep_comm_time(stage, psi)?;
             for step in 0..gas {
                 let batches: Vec<usize> = plan
                     .ranks
@@ -233,11 +237,11 @@ pub fn simulate_iteration(
                 wall += t_max + c_step;
                 comm += c_step;
             }
-            let c_iter = net.iteration_comm_time(stage, psi);
+            let c_iter = net.iteration_comm_time(stage, psi)?;
             comm += c_iter;
             wall += c_iter;
         }
-        _ => panic!("invalid ZeRO stage {stage}"),
+        s => return Err(PlanError::InvalidStage(s)),
     }
 
     let speeds: Vec<f64> = (0..n).map(|i| oracle.speed(i)).collect();
@@ -247,7 +251,7 @@ pub fn simulate_iteration(
     let total_flops = samples as f64 * model.flops_per_sample();
     let tflops = if wall > 0.0 { total_flops / wall / 1e12 } else { 0.0 };
 
-    IterationReport {
+    Ok(IterationReport {
         wall_s: wall,
         comm_s: comm,
         ranks: (0..n)
@@ -256,7 +260,7 @@ pub fn simulate_iteration(
         objective,
         tflops,
         samples,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -310,8 +314,8 @@ mod tests {
             let pop = allocator::plan(&curves, stage, 512, &net, model.param_count()).unwrap();
             let uni = baselines::plan_uniform(&curves, stage, 512, &net,
                                               model.param_count()).unwrap();
-            let r_pop = simulate_iteration(&pop, &oracle, &net, model);
-            let r_uni = simulate_iteration(&uni, &oracle, &net, model);
+            let r_pop = simulate_iteration(&pop, &oracle, &net, model).unwrap();
+            let r_uni = simulate_iteration(&uni, &oracle, &net, model).unwrap();
             assert!(
                 r_pop.tflops >= r_uni.tflops * 0.999,
                 "stage {stage}: poplar {:.1} vs uniform {:.1}",
@@ -330,8 +334,8 @@ mod tests {
             let pop = allocator::plan(&curves, stage, 512, &net, model.param_count()).unwrap();
             let whale = baselines::plan_flops_proportional(
                 &curves, &flops, stage, 512, &net, model.param_count()).unwrap();
-            let r_pop = simulate_iteration(&pop, &oracle, &net, model);
-            let r_whale = simulate_iteration(&whale, &oracle, &net, model);
+            let r_pop = simulate_iteration(&pop, &oracle, &net, model).unwrap();
+            let r_whale = simulate_iteration(&whale, &oracle, &net, model).unwrap();
             assert!(r_pop.tflops >= r_whale.tflops * 0.98, "stage {stage}");
             if r_pop.tflops > r_whale.tflops * 1.02 {
                 any_win = true;
@@ -345,7 +349,7 @@ mod tests {
         let (curves, _, oracle, net) = cluster_c_setup();
         let model = oracle.model;
         let plan = allocator::plan(&curves, 0, 256, &net, model.param_count()).unwrap();
-        let r = simulate_iteration(&plan, &oracle, &net, model);
+        let r = simulate_iteration(&plan, &oracle, &net, model).unwrap();
         // some rank must have ~zero idle (the slowest one)
         let min_idle = r.ranks.iter().map(|x| x.idle_s).fold(f64::MAX, f64::min);
         assert!(min_idle < 1e-9);
@@ -356,7 +360,7 @@ mod tests {
         let (curves, _, oracle, net) = cluster_c_setup();
         let model = oracle.model;
         let plan = allocator::plan(&curves, 1, 512, &net, model.param_count()).unwrap();
-        let r = simulate_iteration(&plan, &oracle, &net, model);
+        let r = simulate_iteration(&plan, &oracle, &net, model).unwrap();
         let expect = 512.0 * model.flops_per_sample() / r.wall_s / 1e12;
         assert!((r.tflops - expect).abs() < 1e-9);
         assert_eq!(r.samples, 512);
@@ -368,8 +372,8 @@ mod tests {
         let model = oracle.model;
         let p2 = allocator::plan(&curves, 2, 256, &net, model.param_count()).unwrap();
         let p3 = allocator::plan(&curves, 3, 256, &net, model.param_count()).unwrap();
-        let r2 = simulate_iteration(&p2, &oracle, &net, model);
-        let r3 = simulate_iteration(&p3, &oracle, &net, model);
+        let r2 = simulate_iteration(&p2, &oracle, &net, model).unwrap();
+        let r3 = simulate_iteration(&p3, &oracle, &net, model).unwrap();
         // z3 moves ~3x the per-step volume of z2's RS
         assert!(r3.comm_s > r2.comm_s);
     }
@@ -379,12 +383,12 @@ mod tests {
         let (curves, _, oracle, net) = cluster_c_setup();
         let model = oracle.model;
         let plan = allocator::plan(&curves, 1, 256, &net, model.param_count()).unwrap();
-        let healthy = simulate_iteration(&plan, &oracle, &net, model);
+        let healthy = simulate_iteration(&plan, &oracle, &net, model).unwrap();
         let slowed = DriftOracle::healthy(oracle, 8).slow(0, 2.5);
         assert!((slowed.time(0, 4) - slowed.inner.time(0, 4) * 2.5).abs() < 1e-12);
         assert!((slowed.time(1, 4) - slowed.inner.time(1, 4)).abs() < 1e-15);
         assert!(slowed.speed(0) < slowed.inner.speed(0));
-        let drifted = simulate_iteration(&plan, &slowed, &net, slowed.inner.model);
+        let drifted = simulate_iteration(&plan, &slowed, &net, slowed.inner.model).unwrap();
         assert!(drifted.wall_s > healthy.wall_s, "straggler must stretch the iteration");
         assert_eq!(drifted.samples, healthy.samples);
     }
@@ -412,13 +416,26 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_stage_is_typed_error_not_panic() {
+        // Plan.stage is pub: a corrupt value must surface, not panic
+        let (curves, _, oracle, net) = cluster_c_setup();
+        let model = oracle.model;
+        let mut plan = allocator::plan(&curves, 1, 256, &net, model.param_count()).unwrap();
+        plan.stage = 11;
+        assert_eq!(
+            simulate_iteration(&plan, &oracle, &net, model).unwrap_err(),
+            PlanError::InvalidStage(11)
+        );
+    }
+
+    #[test]
     fn balanced_plan_has_lower_objective_than_uniform() {
         let (curves, _, oracle, net) = cluster_c_setup();
         let model = oracle.model;
         let pop = allocator::plan(&curves, 1, 512, &net, model.param_count()).unwrap();
         let uni = baselines::plan_uniform(&curves, 1, 512, &net, model.param_count()).unwrap();
-        let r_pop = simulate_iteration(&pop, &oracle, &net, model);
-        let r_uni = simulate_iteration(&uni, &oracle, &net, model);
+        let r_pop = simulate_iteration(&pop, &oracle, &net, model).unwrap();
+        let r_uni = simulate_iteration(&uni, &oracle, &net, model).unwrap();
         assert!(r_pop.objective <= r_uni.objective);
     }
 }

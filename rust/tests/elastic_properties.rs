@@ -52,7 +52,7 @@ fn random_planner(rng: &mut XorShift, n: usize, stage: u8, gbs: usize) -> Elasti
         let slot = p.add_slot(gpu);
         if p.needs_profile().contains(&slot) {
             let c = device_curve(gpu, mbs_for(rng), 1.0);
-            p.install_curve(slot, c, false);
+            p.install_curve(slot, c, false).unwrap();
         }
     }
     p
@@ -63,7 +63,7 @@ fn profile_missing(rng: &mut XorShift, p: &mut ElasticPlanner) {
     for slot in p.needs_profile() {
         let gpu = p.slots()[slot].gpu.clone();
         let c = device_curve(&gpu, mbs_for(rng), 1.0);
-        p.install_curve(slot, c, false);
+        p.install_curve(slot, c, false).unwrap();
     }
 }
 
@@ -95,7 +95,8 @@ fn prop_plan_valid_and_covers_gbs_after_any_event_sequence() {
                     let slot = active[(rng.next() as usize) % active.len()];
                     let gpu = p.slots()[slot].gpu.clone();
                     let factor = 1.5 + rng.uniform() * 2.0;
-                    p.install_curve(slot, device_curve(&gpu, mbs_for(&mut rng), factor), true);
+                    p.install_curve(slot, device_curve(&gpu, mbs_for(&mut rng), factor), true)
+                        .unwrap();
                 }
             }
             let n_active = p.active_slots().len();
@@ -190,7 +191,7 @@ fn prop_slowed_rank_never_gains_samples_after_replan() {
         let gpu = p.slots()[slot].gpu.clone();
         let mbs = p.slots()[slot].curve.as_ref().unwrap().mbs();
         let factor = 1.5 + rng.uniform() * 2.5;
-        p.install_curve(slot, device_curve(&gpu, mbs, factor), true);
+        p.install_curve(slot, device_curve(&gpu, mbs, factor), true).unwrap();
         p.replan(&net).unwrap();
 
         let idx = p.slot_map().iter().position(|&s| s == slot).unwrap();

@@ -57,3 +57,10 @@ fn golden_fig_elastic_recovery() {
         poplar::exp::fig_elastic::run().unwrap().to_markdown()
     });
 }
+
+#[test]
+fn golden_fig_autoscale_frontier() {
+    check_golden("fig_autoscale", || {
+        poplar::exp::fig_autoscale::run().unwrap().to_markdown()
+    });
+}

@@ -104,7 +104,7 @@ fn simulated_and_live_timings_agree_without_noise() {
         let plan: Plan = leader.plan_from_profile(&prof, Strategy::Poplar, 256).unwrap();
         let live = leader.run_iteration(&plan).unwrap();
         let net = NetSim::from_cluster(&cluster);
-        let sim = simulate_iteration(&plan, &oracle_for(&cluster, &model), &net, &model);
+        let sim = simulate_iteration(&plan, &oracle_for(&cluster, &model), &net, &model).unwrap();
         let rel = (live.wall_s - sim.wall_s).abs() / sim.wall_s;
         assert!(
             rel < 0.02,
