@@ -363,7 +363,51 @@ pub fn replan(
     net: &NetSim,
     param_count: u64,
 ) -> Result<Plan, PlanError> {
-    plan(curves, prev.stage, prev.gbs, net, param_count)
+    replan_with_stage(prev, curves, prev.stage, net, param_count)
+}
+
+/// [`replan`] with an explicit ZeRO stage: the elastic runtime's
+/// stage-migration path re-plans the same `gbs` at a *different* stage
+/// when the stage search decides the migration pays for itself. The
+/// curves must already be fitted *at `stage`* — a stage change shifts
+/// every rank's memory budget, so curves from another stage carry a
+/// wrong `mbs`.
+pub fn replan_with_stage(
+    prev: &Plan,
+    curves: &[PerfCurve],
+    stage: u8,
+    net: &NetSim,
+    param_count: u64,
+) -> Result<Plan, PlanError> {
+    plan(curves, stage, prev.gbs, net, param_count)
+}
+
+/// Predicted iteration wall time of a plan under fitted curves —
+/// compute of the slowest rank plus the stage's collective costs.
+/// ZeRO-2/3 planners already fold communication into
+/// `predicted_iter_s`; ZeRO-0/1 report compute only, so the sync-point
+/// collective is added here. Shared by the autoscale policy and the
+/// elastic stage search: cross-stage rate comparisons are only fair
+/// with the collectives priced in.
+pub fn predicted_wall_s(
+    plan: &Plan,
+    curves: &[PerfCurve],
+    net: &NetSim,
+    param_count: u64,
+) -> Result<f64, PlanError> {
+    match plan.stage {
+        0 | 1 => {
+            let t = plan
+                .ranks
+                .iter()
+                .zip(curves)
+                .map(|(r, c)| rank_compute_time(r, c))
+                .fold(0.0, f64::max);
+            Ok(t + net.iteration_comm_time(plan.stage, param_count)?)
+        }
+        2 | 3 => Ok(plan.predicted_iter_s),
+        s => Err(PlanError::InvalidStage(s)),
+    }
 }
 
 #[cfg(test)]

@@ -43,7 +43,7 @@
 //! the policy on the CLI, and `exp::fig_autoscale` snapshots the
 //! decision table.
 
-use crate::allocator::{self, Plan, PlanError};
+use crate::allocator::{self, PlanError};
 use crate::cluster::catalog;
 use crate::config::model::ModelSpec;
 use crate::curves::{PerfCurve, ProfiledPoint};
@@ -250,31 +250,10 @@ pub struct AutoscaleReport {
     pub decisions: Vec<OfferDecision>,
 }
 
-/// Predicted iteration wall time of a plan under fitted curves —
-/// compute of the slowest rank plus the stage's collective costs.
-/// ZeRO-2/3 planners already fold communication into
-/// `predicted_iter_s`; ZeRO-0/1 report compute only, so the sync-point
-/// collective is added here.
-pub fn predicted_wall_s(
-    plan: &Plan,
-    curves: &[PerfCurve],
-    net: &NetSim,
-    param_count: u64,
-) -> Result<f64, PlanError> {
-    match plan.stage {
-        0 | 1 => {
-            let t = plan
-                .ranks
-                .iter()
-                .zip(curves)
-                .map(|(r, c)| allocator::rank_compute_time(r, c))
-                .fold(0.0, f64::max);
-            Ok(t + net.iteration_comm_time(plan.stage, param_count)?)
-        }
-        2 | 3 => Ok(plan.predicted_iter_s),
-        s => Err(PlanError::InvalidStage(s)),
-    }
-}
+/// Re-export of [`allocator::predicted_wall_s`] (the policy's original
+/// home — the elastic stage search now shares it, so it lives with the
+/// planners).
+pub use crate::allocator::predicted_wall_s;
 
 /// Synthesize a catalog-FLOPs-scaled performance curve for an
 /// unprofiled GPU type: the calibrated spec-sheet device model
@@ -420,10 +399,10 @@ fn decide_offer(
     } else {
         Some(synthesize_curve(gpu, model, planner.stage(), live_curves.len() + 1)?)
     };
+    // the preview may re-stage the admission (planner stage policy): its
+    // curve set is the one matching the returned plan's stage
     let pv = planner.preview_join(gpu, synth.as_ref(), net)?;
-    let mut post_curves = live_curves.to_vec();
-    post_curves.push(pv.curve.clone());
-    let post_wall = predicted_wall_s(&pv.plan, &post_curves, &pv.net, psi)?;
+    let post_wall = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, psi)?;
     let post_rate = gbs / post_wall;
 
     // amortized accounting: the reshard stalls the whole cluster once,
@@ -435,7 +414,7 @@ fn decide_offer(
     let gain_samples = post_rate * (horizon - stall_s).max(0.0) - pre_rate * horizon;
     let rel_gain = gain_samples / (pre_rate * horizon);
 
-    let (decision, reason) = if rel_gain >= opts.min_gain {
+    let (decision, mut reason) = if rel_gain >= opts.min_gain {
         if pv.curve_cached {
             (
                 Decision::Accept,
@@ -477,6 +456,13 @@ fn decide_offer(
             ),
         )
     };
+
+    if pv.stage != planner.stage() {
+        // the stage policy re-staged the admission: an offer that is a
+        // stall-bound reject at the incumbent stage can clear the bar
+        // this way, and the operator should see why
+        reason.push_str(&format!(" [re-staged to ZeRO-{}]", pv.stage));
+    }
 
     let price = opts.price_per_hour(gpu);
     let post_price = cluster_price_per_hour(planner, opts) + price;
@@ -797,6 +783,54 @@ mod tests {
         assert_eq!(
             evaluate_offer(&p, &net, &m, "H100", &AutoscaleOptions::default()).unwrap_err(),
             AutoscaleError::UnknownGpu("H100".into())
+        );
+    }
+
+    #[test]
+    fn re_staged_offer_clears_a_bar_the_incumbent_stage_cannot() {
+        // ZeRO-3 on a 2 GB/s socket link: admitting one more V100S
+        // barely moves the needle because per-micro-step collectives
+        // dominate, so a 15% bar rejects the offer. With the stage
+        // policy on (and ZeRO-1 measured for every type), the same
+        // offer re-stages to ZeRO-1, drops the per-step traffic and
+        // clears the bar by a wide margin.
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(3, 2048, &m.name, m.param_count(), 32);
+        for (gpu, mbs) in
+            [("A800-80G", 24), ("A800-80G", 24), ("V100S-32G", 9), ("V100S-32G", 9)]
+        {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, device_curve(gpu, mbs), false).unwrap();
+            }
+        }
+        // ZeRO-1 curves as measured at the post-admission group size
+        // (n=5): the preview's staleness rule disqualifies anything else
+        for gpu in ["A800-80G", "V100S-32G"] {
+            let c = synthesize_curve(gpu, &m, 1, 5).unwrap();
+            p.install_stage_curve(gpu, 1, c).unwrap();
+        }
+        let net = NetSim::from_link(4, LinkKind::Socket);
+        p.replan(&net).unwrap();
+        let opts = AutoscaleOptions { min_gain: 0.15, ..Default::default() };
+
+        let before = evaluate_offer(&p, &net, &m, "V100S-32G", &opts).unwrap();
+        assert_eq!(before.decision, Decision::Reject, "{}", before.reason);
+
+        p.set_stage_policy(Some(crate::elastic::StagePolicy::default()));
+        let after = evaluate_offer(&p, &net, &m, "V100S-32G", &opts).unwrap();
+        assert_eq!(after.decision, Decision::Accept, "{}", after.reason);
+        assert!(after.curve_cached);
+        assert!(
+            after.reason.contains("re-staged to ZeRO-1"),
+            "reason must surface the migration: {}",
+            after.reason
+        );
+        assert!(
+            after.post_rate > before.post_rate * 1.5,
+            "re-staging is where the gain comes from: {} vs {}",
+            after.post_rate,
+            before.post_rate
         );
     }
 

@@ -9,7 +9,11 @@
 //! ([`format`]), and computes the **minimal shard-movement set** between
 //! two layouts ([`reshard`]) — so a membership change costs only the
 //! bytes whose owner actually changed, with lost ranks' shards restored
-//! from the checkpoint instead of recomputed.
+//! from the checkpoint instead of recomputed. A *stage* change is a
+//! [`migrate`]: the partition rule itself is rewritten, priced from the
+//! bytes that change owner under the new rule (partition↔partition and
+//! replicate→partition are cheap overlaps; partition→replicate is a
+//! priced broadcast).
 //!
 //! Layout rules (from [`crate::zero::optimizer_shard_ranges`]):
 //!
@@ -111,6 +115,14 @@ pub struct ShardManifest {
 pub enum CkptError {
     /// Stage outside 0..=3.
     InvalidStage(u8),
+    /// [`reshard`] was asked to cross ZeRO stages — that is a *migration*
+    /// (the layout rule itself changes), priced by [`migrate`].
+    CrossStage {
+        /// Stage of the old layout.
+        from: u8,
+        /// Stage of the new layout.
+        to: u8,
+    },
     /// A manifest over zero ranks.
     EmptyGroup,
     /// On-disk version this build cannot read.
@@ -132,6 +144,11 @@ impl std::fmt::Display for CkptError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             CkptError::InvalidStage(s) => write!(f, "invalid ZeRO stage {s} (want 0..=3)"),
+            CkptError::CrossStage { from, to } => write!(
+                f,
+                "layouts cross ZeRO stages ({from} -> {to}): a stage change is a \
+                 migration, not a reshard — use ckpt::migrate"
+            ),
             CkptError::EmptyGroup => write!(f, "manifest needs at least one rank"),
             CkptError::VersionMismatch { found, supported } => write!(
                 f,
@@ -259,19 +276,15 @@ impl ShardManifest {
         Ok(())
     }
 
-    /// Check that `other` describes the same optimizer state (same model,
-    /// stage and ψ) so a reshard between the two is meaningful.
+    /// Check that `other` describes the same optimizer state (same model
+    /// and ψ) so a re-layout between the two is meaningful. The stage may
+    /// differ — that is exactly what [`migrate`] prices; [`reshard`]
+    /// additionally insists on equal stages.
     fn check_compatible(&self, other: &ShardManifest) -> Result<(), CkptError> {
         if self.model != other.model {
             return Err(CkptError::Incompatible(format!(
                 "model {:?} vs {:?}",
                 self.model, other.model
-            )));
-        }
-        if self.stage != other.stage {
-            return Err(CkptError::Incompatible(format!(
-                "stage {} vs {}",
-                self.stage, other.stage
             )));
         }
         if self.param_count != other.param_count {
@@ -281,6 +294,24 @@ impl ShardManifest {
             )));
         }
         Ok(())
+    }
+
+    /// Re-layout this manifest's slots at `new_stage` and price the
+    /// cross-stage movement: returns the new manifest (same slots,
+    /// `snapshot + 1`) plus the [`ReshardPlan`] taking the optimizer
+    /// state there. See [`migrate`] for the pricing rules.
+    pub fn migrate(&self, new_stage: u8) -> Result<(ShardManifest, ReshardPlan), CkptError> {
+        let slots: Vec<(usize, String)> =
+            self.shards.iter().map(|e| (e.slot, e.gpu.clone())).collect();
+        let new = ShardManifest::build(
+            &self.model,
+            new_stage,
+            self.param_count,
+            self.snapshot + 1,
+            &slots,
+        )?;
+        let plan = migrate(self, &new)?;
+        Ok((new, plan))
     }
 }
 
@@ -309,8 +340,11 @@ pub struct RetainedShard {
 /// The minimal shard-movement set between two layouts.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ReshardPlan {
-    /// ZeRO stage of both layouts.
+    /// ZeRO stage of the *destination* layout.
     pub stage: u8,
+    /// ZeRO stage of the source layout (`== stage` for a same-stage
+    /// reshard; differs for a cross-stage migration).
+    pub from_stage: u8,
     /// Total parameter count `ψ`.
     pub param_count: u64,
     /// Transfers, destination slot order.
@@ -342,6 +376,11 @@ impl ReshardPlan {
     /// True when nothing moves (layout unchanged).
     pub fn is_noop(&self) -> bool {
         self.moves.is_empty()
+    }
+
+    /// True when the plan crosses ZeRO stages (a migration).
+    pub fn is_migration(&self) -> bool {
+        self.stage != self.from_stage
     }
 
     /// Measured one-shot transfer time: point-to-point shard moves run in
@@ -381,6 +420,7 @@ impl ReshardPlan {
     pub fn full_restore(new: &ShardManifest) -> ReshardPlan {
         ReshardPlan {
             stage: new.stage,
+            from_stage: new.stage,
             param_count: new.param_count,
             moves: new
                 .shards
@@ -394,14 +434,38 @@ impl ReshardPlan {
 }
 
 /// Compute the minimal shard-movement set taking the optimizer state
-/// from layout `old` to layout `new`.
+/// from layout `old` to layout `new` at the *same* ZeRO stage.
 ///
-/// For the partitioned stages every destination's new range is split
-/// into (a) the overlap with its *own* old range — retained, zero cost —
-/// and (b) the rest, sourced from each sub-interval's old owner if that
-/// owner survived, else from the checkpoint. ZeRO-0 replicates, so only
-/// slots absent from `old` move anything (one full fetch each).
+/// Cross-stage layouts are rejected with [`CkptError::CrossStage`]: a
+/// stage change rewrites the partition rule itself and is priced by the
+/// typed migration path, [`migrate`].
 pub fn reshard(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, CkptError> {
+    if old.stage != new.stage {
+        return Err(CkptError::CrossStage { from: old.stage, to: new.stage });
+    }
+    migrate(old, new)
+}
+
+/// Compute the shard-movement set taking the optimizer state from
+/// layout `old` to layout `new`, stage change allowed.
+///
+/// Every destination's new range is split into (a) the overlap with its
+/// *own* old range — retained, zero cost — and (b) the rest, sourced
+/// from each sub-interval's old owner if that owner survived, else from
+/// the checkpoint. The stage only changes where bytes *live*:
+///
+/// * **partition → partition** (stages 1..=3 in any direction) — the
+///   optimizer tiling rule is identical across the partitioned stages,
+///   so with unchanged membership the migration is free; otherwise it
+///   costs exactly the membership reshard (cheap overlaps).
+/// * **replicate → partition** (0 → 1..=3) — every surviving slot
+///   already holds the full state, so it retains its whole new shard;
+///   only joiners fetch (from a round-robin surviving replica).
+/// * **partition → replicate** (1..=3 → 0) — every slot must end with
+///   the full `[0, ψ)`: each retains its old shard and fetches the rest
+///   from the other owners — a priced all-gather-shaped broadcast, the
+///   one genuinely expensive direction.
+pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, CkptError> {
     old.validate()?;
     new.validate()?;
     old.check_compatible(new)?;
@@ -409,72 +473,76 @@ pub fn reshard(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
     let mut moves = Vec::new();
     let mut retained = Vec::new();
 
-    if old.stage == 0 {
-        let full = ShardRange::new(0, old.param_count);
-        // round-robin full-state fetches over the surviving replicas so a
-        // multi-join batch does not serialize on one donor's uplink
-        let donors: Vec<usize> = old
-            .shards
+    // when the old layout replicates (ZeRO-0), any gap has *every*
+    // surviving old slot as a possible source: round-robin the fetches
+    // over them so a multi-join batch does not serialize on one donor
+    let donors: Vec<usize> = if old.stage == 0 {
+        old.shards
             .iter()
             .map(|e| e.slot)
             .filter(|&s| new.has_slot(s))
-            .collect();
-        let mut k = 0usize;
-        for e in &new.shards {
-            if old.has_slot(e.slot) {
-                retained.push(RetainedShard { slot: e.slot, range: full });
-            } else if !full.is_empty() {
-                let from_slot = if donors.is_empty() {
-                    None
-                } else {
-                    k += 1;
-                    Some(donors[(k - 1) % donors.len()])
-                };
-                moves.push(ShardMove { to_slot: e.slot, from_slot, range: full });
-            }
-        }
-        return Ok(ReshardPlan { stage: old.stage, param_count: old.param_count, moves, retained });
-    }
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut k = 0usize;
 
     for e in &new.shards {
         if e.range.is_empty() {
             continue;
         }
         let kept = old.shard_of(e.slot).and_then(|o| o.intersect(&e.range));
-        if let Some(k) = kept {
-            retained.push(RetainedShard { slot: e.slot, range: k });
+        if let Some(kr) = kept {
+            retained.push(RetainedShard { slot: e.slot, range: kr });
         }
         // the (up to two) gaps of e.range not covered by `kept`
         let gaps: Vec<ShardRange> = match kept {
             None => vec![e.range],
-            Some(k) => {
+            Some(kr) => {
                 let mut g = Vec::new();
-                if e.range.lo < k.lo {
-                    g.push(ShardRange::new(e.range.lo, k.lo));
+                if e.range.lo < kr.lo {
+                    g.push(ShardRange::new(e.range.lo, kr.lo));
                 }
-                if k.hi < e.range.hi {
-                    g.push(ShardRange::new(k.hi, e.range.hi));
+                if kr.hi < e.range.hi {
+                    g.push(ShardRange::new(kr.hi, e.range.hi));
                 }
                 g
             }
         };
         for gap in gaps {
-            // split the gap by its old owners (old tiles [0, ψ), so every
-            // sub-interval has exactly one)
-            for o in &old.shards {
-                if let Some(piece) = o.range.intersect(&gap) {
-                    let from_slot = if new.has_slot(o.slot) {
-                        Some(o.slot)
-                    } else {
-                        None
-                    };
-                    moves.push(ShardMove { to_slot: e.slot, from_slot, range: piece });
+            if old.stage == 0 {
+                // replicated source: one donor serves the whole gap
+                let from_slot = if donors.is_empty() {
+                    None
+                } else {
+                    k += 1;
+                    Some(donors[(k - 1) % donors.len()])
+                };
+                moves.push(ShardMove { to_slot: e.slot, from_slot, range: gap });
+            } else {
+                // partitioned source tiles [0, ψ): every sub-interval has
+                // exactly one old owner
+                for o in &old.shards {
+                    if let Some(piece) = o.range.intersect(&gap) {
+                        let from_slot = if new.has_slot(o.slot) {
+                            Some(o.slot)
+                        } else {
+                            None
+                        };
+                        moves.push(ShardMove { to_slot: e.slot, from_slot, range: piece });
+                    }
                 }
             }
         }
     }
 
-    Ok(ReshardPlan { stage: old.stage, param_count: old.param_count, moves, retained })
+    Ok(ReshardPlan {
+        stage: new.stage,
+        from_stage: old.stage,
+        param_count: old.param_count,
+        moves,
+        retained,
+    })
 }
 
 #[cfg(test)]
@@ -618,10 +686,106 @@ mod tests {
     #[test]
     fn incompatible_manifests_rejected() {
         let a = manifest(1, 1000, &[0, 1], 0);
+        // a stage change is no longer a generic incompatibility: it is
+        // the typed cross-stage path, pointing at migrate()
         let b = manifest(2, 1000, &[0, 1], 0);
-        assert!(matches!(reshard(&a, &b), Err(CkptError::Incompatible(_))));
+        assert!(matches!(
+            reshard(&a, &b),
+            Err(CkptError::CrossStage { from: 1, to: 2 })
+        ));
+        assert!(migrate(&a, &b).is_ok());
+        // model/ψ mismatches stay hard errors on both paths
         let c = manifest(1, 999, &[0, 1], 0);
         assert!(matches!(reshard(&a, &c), Err(CkptError::Incompatible(_))));
+        assert!(matches!(migrate(&a, &c), Err(CkptError::Incompatible(_))));
+    }
+
+    #[test]
+    fn partition_to_partition_migration_is_free_with_same_membership() {
+        // stages 1..=3 share the optimizer tiling rule: changing between
+        // them moves zero optimizer bytes when the membership is stable
+        let psi = 1_000_000u64;
+        for (from, to) in [(1u8, 2u8), (2, 3), (3, 1), (1, 3)] {
+            let old = manifest(from, psi, &[0, 1, 2], 0);
+            let (new, plan) = old.migrate(to).unwrap();
+            assert_eq!(new.stage, to);
+            assert_eq!(new.snapshot, old.snapshot + 1);
+            new.validate().unwrap();
+            assert!(plan.is_noop(), "{from}->{to} moved bytes");
+            assert!(plan.is_migration());
+            assert_eq!(plan.from_stage, from);
+            assert_eq!(plan.stage, to);
+            assert_eq!(plan.bytes_retained(), psi * OPTIMIZER_BYTES_PER_PARAM);
+        }
+    }
+
+    #[test]
+    fn replicate_to_partition_migration_is_free_for_survivors() {
+        // de-escalating from ZeRO-0: every slot already holds the full
+        // state, so it retains its new shard in place
+        let old = manifest(0, 900, &[0, 1, 2], 0);
+        let (new, plan) = old.migrate(3).unwrap();
+        assert!(plan.is_noop());
+        assert_eq!(plan.bytes_retained(), 900 * OPTIMIZER_BYTES_PER_PARAM);
+        // a joiner alongside the stage change still fetches its shard
+        let joined = ShardManifest::build("m", 3, 900, 1, &slots(&[0, 1, 2, 7])).unwrap();
+        let plan = migrate(&old, &joined).unwrap();
+        let joiner: u64 = plan
+            .moves
+            .iter()
+            .filter(|m| m.to_slot == 7)
+            .map(|m| m.range.len())
+            .sum();
+        assert_eq!(joiner, joined.shard_of(7).unwrap().len());
+        assert!(plan.moves.iter().all(|m| m.from_slot.is_some()));
+    }
+
+    #[test]
+    fn partition_to_replicate_migration_prices_the_broadcast() {
+        // escalation to ZeRO-0 replication: every rank must end with the
+        // full [0, ψ) — the one genuinely expensive direction
+        let psi = 1_200_000u64;
+        let old = manifest(2, psi, &[0, 1, 2, 3], 0);
+        let (new, plan) = old.migrate(0).unwrap();
+        new.validate().unwrap();
+        assert!(!plan.is_noop());
+        // each of the 4 ranks retains its own quarter and fetches the
+        // other three quarters: 4 * (3/4)ψ moved, 4 * (1/4)ψ retained
+        assert_eq!(plan.bytes_moved(), 3 * psi * OPTIMIZER_BYTES_PER_PARAM);
+        assert_eq!(plan.bytes_retained(), psi * OPTIMIZER_BYTES_PER_PARAM);
+        // every byte has a surviving owner: nothing off the checkpoint
+        assert_eq!(plan.bytes_from_checkpoint(), 0);
+        // and the broadcast costs real time
+        let net = NetSim::from_link(4, LinkKind::Ib);
+        assert!(plan.transfer_time_s(&net) > 0.0);
+    }
+
+    #[test]
+    fn migration_combined_with_loss_sources_from_checkpoint() {
+        // slot 3 departs in the same event as a 1 -> 2 stage change: the
+        // bytes only it owned must come off the checkpoint
+        let psi = 1_000_000u64;
+        let old = manifest(1, psi, &[0, 1, 2, 3], 0);
+        let new = ShardManifest::build("m", 2, psi, 1, &slots(&[0, 1, 2])).unwrap();
+        let plan = migrate(&old, &new).unwrap();
+        assert!(plan.is_migration());
+        assert!(plan.bytes_from_checkpoint() > 0);
+        // destinations are covered exactly
+        for e in &new.shards {
+            let got: u64 = plan
+                .moves
+                .iter()
+                .filter(|m| m.to_slot == e.slot)
+                .map(|m| m.range.len())
+                .chain(
+                    plan.retained
+                        .iter()
+                        .filter(|r| r.slot == e.slot)
+                        .map(|r| r.range.len()),
+                )
+                .sum();
+            assert_eq!(got, e.range.len(), "slot {}", e.slot);
+        }
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! # optional: elastic membership schedule (poplar elastic --config …)
 //! [elastic]
 //! drift_threshold = 0.15
+//! allow_stage_change = true   # replan-time ZeRO-stage re-selection
 //! [[elastic.events]]
 //! at = 4
 //! kind = "lost"                # lost | joined | slowed
@@ -113,6 +114,10 @@ pub struct TrainingConfig {
 pub struct ElasticConfig {
     /// Relative micro-step-time deviation that triggers re-profiling.
     pub drift_threshold: f64,
+    /// Make the ZeRO stage a replan-time decision: after membership
+    /// events the stage search may migrate the optimizer-shard layout
+    /// to a better stage (`ckpt::migrate`, charged like a reshard).
+    pub allow_stage_change: bool,
     /// Events in iteration order.
     pub events: Vec<ScheduledEvent>,
 }
@@ -289,6 +294,12 @@ impl JobConfig {
             if !(0.0..1.0).contains(&drift_threshold) || drift_threshold == 0.0 {
                 return Err(invalid("elastic.drift_threshold must be in (0, 1)"));
             }
+            let allow_stage_change = match d.get("elastic.allow_stage_change") {
+                None => false,
+                Some(v) => v.as_bool().ok_or_else(|| {
+                    invalid("elastic.allow_stage_change must be a boolean")
+                })?,
+            };
             let n = d.array_len("elastic.events");
             let mut events = Vec::with_capacity(n);
             for i in 0..n {
@@ -339,7 +350,7 @@ impl JobConfig {
                 events.push(ScheduledEvent { at_iter: at as usize, event });
             }
             events.sort_by_key(|e| e.at_iter);
-            Some(ElasticConfig { drift_threshold, events })
+            Some(ElasticConfig { drift_threshold, allow_stage_change, events })
         } else {
             None
         };
@@ -554,6 +565,19 @@ mod tests {
         let e = cfg.elastic.unwrap();
         assert_eq!(e.drift_threshold, crate::elastic::DEFAULT_DRIFT_THRESHOLD);
         assert!(e.events.is_empty());
+    }
+
+    #[test]
+    fn elastic_allow_stage_change_parses_and_defaults_off() {
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[elastic]\n")).unwrap();
+        assert!(!cfg.elastic.unwrap().allow_stage_change, "must default off");
+        let on = format!("{GOOD}\n[elastic]\nallow_stage_change = true\n");
+        assert!(JobConfig::from_toml(&on).unwrap().elastic.unwrap().allow_stage_change);
+        let off = format!("{GOOD}\n[elastic]\nallow_stage_change = false\n");
+        assert!(!JobConfig::from_toml(&off).unwrap().elastic.unwrap().allow_stage_change);
+        // a non-boolean is a config error, not a silent default
+        let bad = format!("{GOOD}\n[elastic]\nallow_stage_change = 1\n");
+        assert!(JobConfig::from_toml(&bad).is_err());
     }
 
     #[test]

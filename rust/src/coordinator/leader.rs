@@ -93,6 +93,15 @@ pub struct ElasticOptions {
     /// planner or spawns a worker. `None` keeps the PR 1 behaviour:
     /// every join is admitted.
     pub autoscale: Option<crate::autoscale::AutoscaleOptions>,
+    /// Make the ZeRO stage a replan-time decision (`[elastic]
+    /// allow_stage_change` / `poplar elastic --allow-stage-change`):
+    /// after membership events the stage search re-checks every stage's
+    /// Alg. 1 memory bound at the new group size, profiles only missing
+    /// `(type, stage)` curve pairs, and migrates the optimizer-shard
+    /// layout (`ckpt::migrate`, charged like a reshard) when the
+    /// amortized gain beats the incumbent. `false` keeps the stage
+    /// fixed after the initial escalation.
+    pub allow_stage_change: bool,
 }
 
 impl Default for ElasticOptions {
@@ -102,6 +111,7 @@ impl Default for ElasticOptions {
             cache_cap: 32,
             ckpt_dir: None,
             autoscale: None,
+            allow_stage_change: false,
         }
     }
 }
@@ -115,6 +125,9 @@ pub struct ElasticIterationReport {
     pub events: Vec<String>,
     /// Live rank count during this iteration.
     pub n_ranks: usize,
+    /// ZeRO stage this iteration ran at (moves when
+    /// [`ElasticOptions::allow_stage_change`] lets a replan migrate).
+    pub stage: u8,
     /// Wall seconds, including any one-shot resharding penalty.
     pub wall_s: f64,
     /// Cluster TFLOP/s of this iteration.
@@ -133,8 +146,14 @@ pub struct ElasticIterationReport {
 /// Everything `run_elastic_job` produces.
 #[derive(Debug)]
 pub struct ElasticJobReport {
-    /// ZeRO stage (fixed after the initial escalation).
+    /// ZeRO stage the job *started* at (after the initial escalation).
+    /// Fixed for the whole job unless
+    /// [`ElasticOptions::allow_stage_change`] is set — then
+    /// [`ElasticJobReport::final_stage`] and the per-iteration `stage`
+    /// fields track the migrations.
     pub stage: u8,
+    /// ZeRO stage active after the last iteration.
+    pub final_stage: u8,
     /// Global batch size every plan covered.
     pub gbs: usize,
     /// Per-iteration timeline.
@@ -344,11 +363,14 @@ impl Leader {
         unreachable!()
     }
 
-    /// Incremental Alg. 1: profile only `slots`, at a *fixed* stage (the
-    /// elastic runtime never changes the stage mid-job). Results come
-    /// back in `slots` order; `None` means the rank cannot fit a single
-    /// sample at this stage — the caller decides whether that is fatal
-    /// (a survivor) or just grounds for eviction (a hopeful joiner).
+    /// Incremental Alg. 1: profile only `slots`, at an explicit stage —
+    /// the elastic runtime calls this at the job's current stage for
+    /// joins/drift and at *candidate* stages for the stage search's
+    /// missing `(type, stage)` pairs. Results come back in `slots`
+    /// order; `None` means the rank cannot fit a single sample at this
+    /// stage — the caller decides whether that is fatal (a survivor),
+    /// grounds for eviction (a hopeful joiner), or merely disqualifies
+    /// a candidate stage (a speculative probe).
     pub fn profile_slots(
         &mut self,
         slots: &[usize],
@@ -544,12 +566,17 @@ impl Leader {
     /// Per iteration the loop (1) applies due events (losses shut the
     /// worker down, joins spawn one — re-using the curve cache for known
     /// GPU types — and slowdowns are injected silently), (2) profiles
-    /// only ranks without a usable curve, (3) re-runs Algorithm 2 if
-    /// membership or curves changed, charging the measured minimal
-    /// shard-movement cost and snapshotting the shard manifest when
-    /// persistence is on, (4) runs the iteration live and (5) compares observed
-    /// micro-step times against the curves: drifted ranks are re-profiled
-    /// incrementally and the next iteration replans.
+    /// only ranks without a usable curve — and, with
+    /// [`ElasticOptions::allow_stage_change`], the candidate-stage
+    /// `(type, stage)` pairs the stage search still needs —
+    /// (3) re-runs Algorithm 2 if membership or curves changed (the
+    /// replan may migrate the ZeRO stage; the `ckpt::migrate` movement
+    /// is charged exactly like a reshard and logged as a stage-change
+    /// event), charging the measured minimal shard-movement cost and
+    /// snapshotting the shard manifest when persistence is on, (4) runs
+    /// the iteration live and (5) compares observed micro-step times
+    /// against the curves: drifted ranks are re-profiled incrementally
+    /// and the next iteration replans.
     pub fn run_elastic_job(
         &mut self,
         requested_stage: u8,
@@ -565,14 +592,24 @@ impl Leader {
 
         // initial full profile + plan
         let profile = self.profile(requested_stage)?;
-        let stage = profile.stage;
+        let initial_stage = profile.stage;
         let mut planner = ElasticPlanner::new(
-            stage,
+            initial_stage,
             gbs,
             &self.model.name,
             self.model.param_count(),
             opts.cache_cap,
         );
+        if opts.allow_stage_change {
+            // same horizon semantics as autoscale: the expected time
+            // until the next membership event re-prices everything
+            planner.set_stage_policy(Some(elastic::StagePolicy {
+                horizon_s: opts
+                    .autoscale
+                    .as_ref()
+                    .map_or(crate::autoscale::DEFAULT_HORIZON_S, |a| a.horizon_s),
+            }));
+        }
         let curves = fit_curves(&profile)?;
         for (r, c) in profile.ranks.iter().zip(curves) {
             let slot = planner.add_slot(&r.name);
@@ -692,11 +729,14 @@ impl Leader {
             }
 
             // (2a) incremental profiling: only ranks without a usable
-            // curve (fresh joins). A joiner that cannot fit a single
-            // sample at the job's fixed stage is evicted, not fatal.
+            // curve (fresh joins), at the job's *current* stage. A
+            // joiner that cannot fit a single sample there is evicted,
+            // not fatal (stage migration to accommodate a joiner is a
+            // replan-time decision over already-admitted ranks).
+            let stage_now = planner.stage();
             let need = planner.needs_profile();
             if !need.is_empty() {
-                let results = self.profile_slots(&need, stage)?;
+                let results = self.profile_slots(&need, stage_now)?;
                 for (&slot, result) in need.iter().zip(results) {
                     match result {
                         Some(r) => {
@@ -714,7 +754,8 @@ impl Leader {
                             self.remove_rank(slot)?;
                             membership_changed = true;
                             events.push(format!(
-                                "evicted joined slot {slot}: cannot fit a sample at ZeRO-{stage}"
+                                "evicted joined slot {slot}: cannot fit a sample at \
+                                 ZeRO-{stage_now}"
                             ));
                         }
                     }
@@ -732,6 +773,10 @@ impl Leader {
             // and a join in the same iteration leave `n` unchanged but
             // still swap in curves from a different group size.
             let n_now = planner.active_slots().len();
+            // survivors that stopped fitting the incumbent stage: only a
+            // stage migration can rescue them — tracked so a replan that
+            // fails to migrate is a hard error, not a silent OOM-to-be
+            let mut stuck_slots: Vec<usize> = Vec::new();
             if membership_changed {
                 let psi = self.model.param_count();
                 let stale: Vec<usize> = planner
@@ -744,7 +789,7 @@ impl Leader {
                                 != memmodel::true_mbs(
                                     &self.model,
                                     psi,
-                                    stage,
+                                    stage_now,
                                     n_now,
                                     spec.mem_bytes(),
                                 )
@@ -754,14 +799,32 @@ impl Leader {
                     .map(|s| s.slot)
                     .collect();
                 if !stale.is_empty() {
-                    let results = self.profile_slots(&stale, stage)?;
+                    let results = self.profile_slots(&stale, stage_now)?;
                     for (&slot, result) in stale.iter().zip(results) {
-                        let r = result.ok_or_else(|| {
-                            anyhow!(
-                                "survivor slot {slot} cannot fit a sample at ZeRO-{stage} \
-                                 after the membership change"
-                            )
-                        })?;
+                        let r = match result {
+                            Some(r) => r,
+                            // with the stage search on, a survivor that
+                            // no longer fits at the incumbent stage is
+                            // not fatal *yet*: its memory bound is
+                            // broken, and the search below must escalate
+                            // away (the old curve stays as planning
+                            // input until the switch replaces it; if no
+                            // migration happens, the replan below bails)
+                            None if opts.allow_stage_change => {
+                                stuck_slots.push(slot);
+                                events.push(format!(
+                                    "slot {slot} no longer fits at ZeRO-{stage_now}: \
+                                     stage search must migrate"
+                                ));
+                                continue;
+                            }
+                            None => {
+                                bail!(
+                                    "survivor slot {slot} cannot fit a sample at \
+                                     ZeRO-{stage_now} after the membership change"
+                                )
+                            }
+                        };
                         let curve = PerfCurve::fit(r.points.clone(), r.mbs)
                             .map_err(|e| anyhow!("slot {slot} curve: {e}"))?;
                         // a straggler's re-measured curve must stay a
@@ -771,6 +834,61 @@ impl Leader {
                             .install_curve(slot, curve, drifted)
                             .map_err(|e| anyhow!("installing stale slot {slot} curve: {e}"))?;
                         reprofiled.push(slot);
+                    }
+                }
+            }
+
+            // (2c) stage-search inputs: profile only the missing
+            // (type, stage) pairs the search deems worth measuring —
+            // candidate stages that pass the memory bound at the new
+            // group size and whose estimated amortized score beats the
+            // incumbent (or every feasible stage when the incumbent's
+            // own bound broke). Cached pairs cost nothing, so this is
+            // incremental exactly like (2a). Gated on membership events:
+            // they are what re-prices the stage decision (drift replans
+            // still re-run the search over already-measured stages).
+            if opts.allow_stage_change && membership_changed {
+                // batch the requests per candidate stage: one
+                // leader-worker profiling round per stage, not per pair
+                let mut by_stage: std::collections::BTreeMap<u8, Vec<usize>> =
+                    std::collections::BTreeMap::new();
+                for (slot, cand_stage) in planner.stage_profile_requests(&self.net) {
+                    by_stage.entry(cand_stage).or_default().push(slot);
+                }
+                for (cand_stage, slots_for_stage) in by_stage {
+                    let results = self.profile_slots(&slots_for_stage, cand_stage)?;
+                    for (&slot, result) in slots_for_stage.iter().zip(results) {
+                        match result {
+                            // a 1-sample-only result cannot fit a curve:
+                            // the pair stays uncached and the search
+                            // skips the stage — a speculative probe must
+                            // never be fatal
+                            Some(r) => match PerfCurve::fit(r.points.clone(), r.mbs) {
+                                Ok(curve) => {
+                                    let gpu = planner.slots()[slot].gpu.clone();
+                                    planner
+                                        .install_stage_curve(&gpu, cand_stage, curve)
+                                        .map_err(|e| {
+                                            anyhow!("caching {gpu} ZeRO-{cand_stage}: {e}")
+                                        })?;
+                                    reprofiled.push(slot);
+                                    events.push(format!(
+                                        "profiled {gpu} at ZeRO-{cand_stage} for the stage \
+                                         search"
+                                    ));
+                                }
+                                Err(e) => events.push(format!(
+                                    "slot {slot} ZeRO-{cand_stage} curve unusable: {e}"
+                                )),
+                            },
+                            // the memory model over-promised: leave the
+                            // pair uncached, the search skips
+                            // estimate-only stages
+                            None => events.push(format!(
+                                "slot {slot} cannot fit a sample at candidate \
+                                 ZeRO-{cand_stage}"
+                            )),
+                        }
                     }
                 }
             }
@@ -789,13 +907,35 @@ impl Leader {
                 planner
                     .replan(&self.net)
                     .map_err(|e| anyhow!("replan at iter {iter}: {e}"))?;
+                // a survivor stopped fitting the incumbent stage and the
+                // search found nowhere feasible+measured to migrate: the
+                // job cannot run without violating the memory bound —
+                // fail loudly (the pre-stage-search behaviour), never
+                // iterate on a plan the hardware cannot hold
+                if !stuck_slots.is_empty() && planner.last_stage_change().is_none() {
+                    bail!(
+                        "slot(s) {stuck_slots:?} cannot fit a sample at ZeRO-{} after the \
+                         membership change, and the stage search found no feasible \
+                         measured stage to migrate to",
+                        planner.stage()
+                    );
+                }
                 // honest pricing: minimal movement only if the shards are
                 // actually persisted — otherwise a loss forces the
-                // full-restore baseline
+                // full-restore baseline. A stage migration's movement is
+                // folded into the same plan and charged identically.
                 let checkpointed = opts.ckpt_dir.is_some();
                 penalty = planner.reshard_penalty_s(&self.net, checkpointed);
                 reshard_bytes = planner.reshard_bytes(checkpointed);
                 replanned = true;
+                if let Some(ch) = planner.last_stage_change() {
+                    events.push(format!(
+                        "stage ZeRO-{}->ZeRO-{} (migrated {:.1} MB)",
+                        ch.from,
+                        ch.to,
+                        ch.migration_bytes as f64 / 1e6
+                    ));
+                }
                 if let Some(dir) = &opts.ckpt_dir {
                     if let Some(m) = planner.manifest() {
                         m.save(dir).map_err(|e| anyhow!("ckpt snapshot: {e}"))?;
@@ -823,10 +963,13 @@ impl Leader {
                 if !drifted.is_empty() {
                     let slots: Vec<usize> =
                         drifted.iter().map(|&i| planner.slot_map()[i]).collect();
-                    let results = self.profile_slots(&slots, stage)?;
+                    let results = self.profile_slots(&slots, planner.stage())?;
                     for (&slot, result) in slots.iter().zip(results) {
                         let r = result.ok_or_else(|| {
-                            anyhow!("drifted slot {slot} can no longer fit a sample at ZeRO-{stage}")
+                            anyhow!(
+                                "drifted slot {slot} can no longer fit a sample at ZeRO-{}",
+                                planner.stage()
+                            )
                         })?;
                         let curve = PerfCurve::fit(r.points.clone(), r.mbs)
                             .map_err(|e| anyhow!("slot {slot} drift curve: {e}"))?;
@@ -844,6 +987,7 @@ impl Leader {
                 iter,
                 events,
                 n_ranks: n_now,
+                stage: plan.stage,
                 wall_s: wall,
                 tflops: flops::tflops(&self.model, plan.total_samples(), wall),
                 replanned,
@@ -854,7 +998,8 @@ impl Leader {
         }
 
         Ok(ElasticJobReport {
-            stage,
+            stage: initial_stage,
+            final_stage: planner.stage(),
             gbs,
             replans: planner.replans(),
             cache_hits: planner.cache().hits() - hits0,
@@ -1250,6 +1395,75 @@ mod tests {
         assert_eq!(rep.final_plan.ranks.len(), 9);
         assert_eq!(rep.final_plan.total_samples(), 256);
         rep.final_plan.validate().unwrap();
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_stage_change_de_escalates_after_join() {
+        // the job is pinned at ZeRO-3 by the operator; once a join makes
+        // the fleet re-plannable, the stage search measures the other
+        // stages ((2c), incremental per (type, stage) pair) and migrates
+        // to ZeRO-1 — dropping the per-micro-step collective traffic
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "V100S-32G".into() })]);
+        let opts = ElasticOptions { allow_stage_change: true, ..Default::default() };
+        let rep = l.run_elastic_job(3, 2048, 4, &schedule, &opts).unwrap();
+        assert_eq!(rep.stage, 3, "initial escalation result is recorded");
+        assert_eq!(rep.iterations[0].stage, 3);
+        assert_eq!(rep.final_stage, 1, "sync-once stage must win on this fabric");
+        assert!(
+            rep.iterations[1]
+                .events
+                .iter()
+                .any(|e| e.contains("stage ZeRO-3->ZeRO-1")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert!(rep.iterations[1].replanned);
+        assert_eq!(rep.iterations[1].stage, 1);
+        // the candidate stages were measured incrementally, not assumed
+        assert!(
+            rep.iterations[1]
+                .events
+                .iter()
+                .any(|e| e.contains("for the stage search")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        // partitioned -> partitioned migration with a join: bytes move
+        // (the tiling shifted), but far fewer than the full 12ψ state
+        assert!(rep.iterations[1].reshard_bytes > 0);
+        let psi = preset("llama-0.5b").unwrap().param_count();
+        assert!(rep.iterations[1].reshard_bytes < 12 * psi);
+        // post-migration iterations run faster than the pinned stage
+        assert!(
+            rep.iterations[3].tflops > rep.iterations[0].tflops,
+            "{} -> {}",
+            rep.iterations[0].tflops,
+            rep.iterations[3].tflops
+        );
+        rep.final_plan.validate().unwrap();
+        assert_eq!(rep.final_plan.stage, 1);
+        assert_eq!(rep.final_plan.total_samples(), 2048);
+        rep.final_manifest.validate().unwrap();
+        assert_eq!(rep.final_manifest.stage, 1);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_stage_fixed_without_the_flag() {
+        // the default keeps the PR 1-3 contract: the stage never moves
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "V100S-32G".into() })]);
+        let rep = l
+            .run_elastic_job(3, 512, 3, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert_eq!(rep.final_stage, 3);
+        assert!(rep.iterations.iter().all(|it| it.stage == 3));
+        assert!(rep
+            .iterations
+            .iter()
+            .all(|it| it.events.iter().all(|e| !e.contains("stage ZeRO"))));
         l.shutdown();
     }
 

@@ -22,7 +22,12 @@
 //!   shard-movement set against the previous layout, so
 //!   [`ElasticPlanner::reshard_penalty_s`] is *measured* from the bytes
 //!   that actually change owner — not the one-shot `12ψ` constant PR 1
-//!   charged.
+//!   charged;
+//! * [`stage`] — with a [`StagePolicy`] installed, the ZeRO stage itself
+//!   is a replan-time decision: each replan re-checks every stage's
+//!   Alg. 1 memory bound at the new group size and migrates
+//!   (`ckpt::migrate`, charged like a reshard) when the amortized gain
+//!   beats the incumbent.
 //!
 //! The live driver is `coordinator::Leader::run_elastic_job`; the
 //! analytic comparison (static plan vs re-allocation) is
@@ -30,9 +35,11 @@
 
 pub mod cache;
 pub mod events;
+pub mod stage;
 
 pub use cache::{CurveCache, CurveKey};
 pub use events::{parse_schedule, seeded_schedule, ElasticEvent, ScheduledEvent, XorShift};
+pub use stage::{choose_stage, StageCandidate, StageChange, StagePolicy};
 
 use crate::allocator::{self, Plan, PlanError};
 use crate::ckpt::{self, ReshardPlan, ShardManifest};
@@ -111,6 +118,9 @@ pub struct SlotState {
 /// gives the compact-index → slot-id mapping for the current plan.
 #[derive(Debug, Clone)]
 pub struct ElasticPlanner {
+    /// *Current* ZeRO stage: fixed for the whole job unless a
+    /// [`StagePolicy`] is installed, in which case every replan may
+    /// migrate it.
     stage: u8,
     gbs: usize,
     model: String,
@@ -123,6 +133,8 @@ pub struct ElasticPlanner {
     replans: usize,
     manifest: Option<ShardManifest>,
     last_reshard: Option<ReshardPlan>,
+    policy: Option<StagePolicy>,
+    last_stage_change: Option<StageChange>,
 }
 
 impl ElasticPlanner {
@@ -142,12 +154,51 @@ impl ElasticPlanner {
             replans: 0,
             manifest: None,
             last_reshard: None,
+            policy: None,
+            last_stage_change: None,
         }
     }
 
-    /// ZeRO stage the job runs at.
+    /// ZeRO stage the job currently runs at (may move between replans
+    /// when a [`StagePolicy`] is installed).
     pub fn stage(&self) -> u8 {
         self.stage
+    }
+
+    /// Install (or remove) the replan-time stage search.
+    pub fn set_stage_policy(&mut self, policy: Option<StagePolicy>) {
+        self.policy = policy;
+    }
+
+    /// The active stage policy, if any.
+    pub fn stage_policy(&self) -> Option<&StagePolicy> {
+        self.policy.as_ref()
+    }
+
+    /// The stage migration the latest replan performed (`None` when the
+    /// stage was kept).
+    pub fn last_stage_change(&self) -> Option<&StageChange> {
+        self.last_stage_change.as_ref()
+    }
+
+    /// Insert a measured curve for a `(gpu type, stage)` pair into the
+    /// shared cache without touching any slot — the install path for
+    /// [`ElasticPlanner::stage_profile_requests`] results. Does not mark
+    /// the planner dirty: stage-search inputs only matter to a replan
+    /// that is already pending.
+    pub fn install_stage_curve(
+        &mut self,
+        gpu: &str,
+        stage: u8,
+        curve: PerfCurve,
+    ) -> Result<(), ElasticError> {
+        if stage > 3 {
+            return Err(ElasticError::Plan(PlanError::InvalidStage(stage)));
+        }
+        let live = self.live_keys();
+        self.cache
+            .insert(CurveKey::new(gpu, &self.model, stage), curve, &live);
+        Ok(())
     }
 
     /// Global batch size the plans must cover.
@@ -306,18 +357,77 @@ impl ElasticPlanner {
     /// reused as-is — no re-profiling happens here. Also rebuilds the
     /// optimizer-shard layout and computes the minimal shard-movement set
     /// against the previous layout ([`ElasticPlanner::last_reshard`]).
+    ///
+    /// With a [`StagePolicy`] installed the ZeRO stage itself is
+    /// re-decided first: each candidate stage is checked against the
+    /// Alg. 1 memory bound at the new group size and scored with the
+    /// amortized migration stall ([`ElasticPlanner::stage_candidates`]);
+    /// on a strict win over the incumbent the job migrates — the stage,
+    /// every live slot's curve (from the stage-keyed cache; only
+    /// fully-measured stages are eligible) and the shard layout all move
+    /// together, and the movement is priced by [`ckpt::migrate`] exactly
+    /// like a reshard.
     pub fn replan(&mut self, net: &NetSim) -> Result<&Plan, ElasticError> {
-        let curves = self.active_curves()?;
+        let mut curves = self.active_curves()?;
+        self.last_stage_change = None;
+
+        if self.policy.is_some() {
+            let (chosen, cands) = self.select_stage(net)?;
+            if chosen != self.stage {
+                // switch only with full measured coverage: collect every
+                // live slot's cached curve at the new stage up front so a
+                // partial switch can never happen
+                let mut swapped: Vec<(usize, PerfCurve)> = Vec::new();
+                let mut complete = true;
+                for sl in self.slots.iter().filter(|s| s.alive) {
+                    match self.cache.peek(&CurveKey::new(&sl.gpu, &self.model, chosen)) {
+                        Some(c) => swapped.push((sl.slot, c.clone())),
+                        None => {
+                            complete = false;
+                            break;
+                        }
+                    }
+                }
+                if complete {
+                    let c = cands
+                        .iter()
+                        .find(|c| c.stage == chosen)
+                        .expect("chosen stage comes from the candidate set");
+                    let from = self.stage;
+                    self.stage = chosen;
+                    for (slot, curve) in swapped {
+                        let sl = &mut self.slots[slot];
+                        sl.curve = Some(curve);
+                        // drift overrides were measured at the old stage:
+                        // the healthy type curve replaces them, and drift
+                        // detection re-flags stragglers at the new stage
+                        sl.drifted = false;
+                    }
+                    self.last_stage_change = Some(StageChange {
+                        from,
+                        to: chosen,
+                        migration_s: c.migration_s,
+                        migration_bytes: c.migration_bytes,
+                    });
+                    curves = self.active_curves()?;
+                }
+            }
+        }
+
         let plan = match &self.plan {
-            Some(prev) => allocator::replan(prev, &curves, net, self.param_count),
+            Some(prev) => {
+                allocator::replan_with_stage(prev, &curves, self.stage, net, self.param_count)
+            }
             None => allocator::plan(&curves, self.stage, self.gbs, net, self.param_count),
         }
         .map_err(ElasticError::Plan)?;
         self.slot_map = self.active_slots();
 
-        // shard layout for the new membership, and the minimal movement
-        // set from the previous layout (None on the initial plan: the
-        // optimizer state is born sharded, nothing moves)
+        // shard layout for the new membership (at the possibly new
+        // stage), and the movement set from the previous layout (None on
+        // the initial plan: the optimizer state is born sharded, nothing
+        // moves). `migrate` handles same-stage reshards and cross-stage
+        // re-layouts alike.
         let live: Vec<(usize, String)> = self
             .slots
             .iter()
@@ -329,7 +439,7 @@ impl ElasticPlanner {
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
         self.last_reshard = match &self.manifest {
             Some(old) => Some(
-                ckpt::reshard(old, &new_manifest)
+                ckpt::migrate(old, &new_manifest)
                     .map_err(|e| ElasticError::Ckpt(e.to_string()))?,
             ),
             None => None,
@@ -359,17 +469,117 @@ impl ElasticPlanner {
     /// (`JoinPreview::net`). The reshard penalty is measured against the
     /// manifest of the latest replan; any membership events applied
     /// since then are folded into the same hypothetical movement set.
+    ///
+    /// With a [`StagePolicy`] installed the preview also runs the stage
+    /// search over the post-admission fleet: when a fully-measured
+    /// candidate stage amortizes better (a high-memory join letting
+    /// ZeRO-3 de-escalate, say), the returned preview is priced *at that
+    /// stage* (`JoinPreview::stage`), stage-migration movement folded
+    /// into its reshard penalty — which can make offers acceptable that
+    /// are stall-bound rejects at the incumbent stage.
     pub fn preview_join(
         &self,
         gpu: &str,
         fallback: Option<&PerfCurve>,
         net: &NetSim,
     ) -> Result<JoinPreview, ElasticError> {
-        let mut curves = self.active_curves()?;
-        let key = CurveKey::new(gpu, &self.model, self.stage);
+        let base = self.preview_join_at(self.stage, gpu, fallback, net)?;
+        let Some(policy) = &self.policy else {
+            return Ok(base);
+        };
+        let Some(model_spec) = crate::config::model::preset(&self.model) else {
+            return Ok(base);
+        };
+        let horizon = policy.horizon_s;
+        let n_after = self.active_slots().len() + 1;
+        let score = |pv: &JoinPreview| -> f64 {
+            let wall = allocator::predicted_wall_s(
+                &pv.plan,
+                &pv.curves,
+                &pv.net,
+                self.param_count,
+            );
+            match wall {
+                Ok(w) if w > 0.0 && horizon > 0.0 => {
+                    self.gbs as f64 / w * (horizon - pv.reshard_penalty_s).max(0.0) / horizon
+                }
+                _ => 0.0,
+            }
+        };
+        let mut best = base;
+        let mut best_score = score(&best);
+        // descending like choose_stage: exact ties resolve to the higher
+        // (lower-memory) stage; estimate-based stages are never chosen —
+        // every type, joiner included, must be measured at the candidate
+        for s in (0..=3u8).rev() {
+            if s == self.stage {
+                continue;
+            }
+            if !self.stage_feasible(&model_spec, s, n_after, Some(gpu)) {
+                continue;
+            }
+            // cache-only, and only curves measured at the post-admission
+            // group size: a preview can neither profile nor tolerate a
+            // stale mbs (the (2b) staleness rule)
+            let measured = |g: &str| {
+                self.cache
+                    .peek(&CurveKey::new(g, &self.model, s))
+                    .is_some_and(|c| {
+                        !self.stage_curve_stale(Some(&model_spec), g, c, s, n_after)
+                    })
+            };
+            if !self.slots.iter().filter(|sl| sl.alive).all(|sl| measured(&sl.gpu))
+                || !measured(gpu)
+            {
+                continue;
+            }
+            let Ok(pv) = self.preview_join_at(s, gpu, None, net) else {
+                continue;
+            };
+            let sc = score(&pv);
+            if sc > best_score {
+                best_score = sc;
+                best = pv;
+            }
+        }
+        Ok(best)
+    }
+
+    /// The single-stage preview primitive behind
+    /// [`ElasticPlanner::preview_join`]: admit one rank of `gpu` and
+    /// plan at `stage`. For the current stage the live slot curves are
+    /// used as-is and `fallback` may stand in for an uncached joiner;
+    /// for any other stage *every* type must have a cached curve
+    /// (`NoCurve` otherwise — estimates are the caller's policy
+    /// decision, not this primitive's).
+    pub fn preview_join_at(
+        &self,
+        stage: u8,
+        gpu: &str,
+        fallback: Option<&PerfCurve>,
+        net: &NetSim,
+    ) -> Result<JoinPreview, ElasticError> {
+        let mut curves = if stage == self.stage {
+            self.active_curves()?
+        } else {
+            // stage-keyed cache lookup per live slot; missing coverage is
+            // a typed error the stage-search wrapper skips over
+            let _ = self.active_curves()?;
+            self.slots
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| {
+                    self.cache
+                        .peek(&CurveKey::new(&s.gpu, &self.model, stage))
+                        .cloned()
+                        .ok_or_else(|| ElasticError::NoCurve(s.gpu.clone()))
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        let key = CurveKey::new(gpu, &self.model, stage);
         let (curve, curve_cached) = match self.cache.peek(&key) {
             Some(c) => (c.clone(), true),
-            None => match fallback {
+            None => match fallback.filter(|_| stage == self.stage) {
                 Some(c) => (c.clone(), false),
                 None => return Err(ElasticError::NoCurve(gpu.to_string())),
             },
@@ -379,8 +589,10 @@ impl ElasticPlanner {
         let mut net_after = net.clone();
         net_after.n = curves.len();
         let plan = match &self.plan {
-            Some(prev) => allocator::replan(prev, &curves, &net_after, self.param_count),
-            None => allocator::plan(&curves, self.stage, self.gbs, &net_after, self.param_count),
+            Some(prev) => {
+                allocator::replan_with_stage(prev, &curves, stage, &net_after, self.param_count)
+            }
+            None => allocator::plan(&curves, stage, self.gbs, &net_after, self.param_count),
         }
         .map_err(ElasticError::Plan)?;
 
@@ -394,11 +606,13 @@ impl ElasticPlanner {
             .collect();
         live.push((self.slots.len(), gpu.to_string()));
         let manifest =
-            ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
+            ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
         let (reshard_penalty_s, reshard_bytes) = match &self.manifest {
             Some(old) => {
-                let r = ckpt::reshard(old, &manifest)
+                // migrate: folds a cross-stage re-layout and the join's
+                // membership movement into one priced set
+                let r = ckpt::migrate(old, &manifest)
                     .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
                 (r.transfer_time_s(&net_after), r.bytes_moved())
             }
@@ -408,8 +622,10 @@ impl ElasticPlanner {
 
         Ok(JoinPreview {
             gpu: gpu.to_string(),
+            stage,
             curve,
             curve_cached,
+            curves,
             plan,
             net: net_after,
             reshard_penalty_s,
@@ -489,17 +705,27 @@ impl ElasticPlanner {
 pub struct JoinPreview {
     /// Catalog GPU type of the candidate.
     pub gpu: String,
-    /// The curve the prediction used (cached or caller-supplied).
+    /// ZeRO stage the preview is priced at — the planner's current stage
+    /// unless a [`StagePolicy`] found a better one for the
+    /// post-admission fleet.
+    pub stage: u8,
+    /// The candidate's curve the prediction used (cached or
+    /// caller-supplied), at [`JoinPreview::stage`].
     pub curve: PerfCurve,
     /// True when the curve came from the type-level cache — the
     /// candidate could be admitted with zero profiling calls.
     pub curve_cached: bool,
+    /// The full post-admission curve set in plan-rank order (live ranks
+    /// then the candidate), all at [`JoinPreview::stage`] — what wall
+    /// predictions over [`JoinPreview::plan`] must use.
+    pub curves: Vec<PerfCurve>,
     /// The would-be Algorithm 2 plan over live ranks + the candidate.
     pub plan: Plan,
     /// Collective cost model at the post-admission group size.
     pub net: NetSim,
     /// Measured one-shot optimizer-state movement cost of the admission
-    /// (`ckpt::reshard` against the current layout).
+    /// (`ckpt::migrate` against the current layout — any stage change
+    /// the preview selected is folded in).
     pub reshard_penalty_s: f64,
     /// Optimizer-state bytes that movement touches.
     pub reshard_bytes: u64,
@@ -829,6 +1055,48 @@ mod tests {
         assert_eq!((p.cache().hits(), p.cache().misses()), (hits0, misses0));
         assert_eq!(p.cache().lru_order(), lru0.as_slice());
         assert_eq!(p.manifest().unwrap(), &manifest0);
+    }
+
+    #[test]
+    fn preview_join_re_stages_when_policy_allows() {
+        // ZeRO-3 on a 2 GB/s socket link pays three collectives per
+        // micro-step; once ZeRO-1 is measured for every type, a policy'd
+        // preview prices the admission at the better stage
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(3, 2048, &m.name, m.param_count(), 32);
+        for (gpu, mbs) in [("A800-80G", 24), ("V100S-32G", 9)] {
+            let slot = p.add_slot(gpu);
+            p.install_curve(slot, device_curve(gpu, mbs), false).unwrap();
+        }
+        // ZeRO-1 curves as Alg. 1 would measure them at the
+        // post-admission group size (n=3) — anything else is
+        // staleness-disqualified by the preview's (2b) rule
+        for gpu in ["A800-80G", "V100S-32G"] {
+            let c = crate::autoscale::synthesize_curve(gpu, &m, 1, 3).unwrap();
+            p.install_stage_curve(gpu, 1, c).unwrap();
+        }
+        let net = NetSim::from_link(2, crate::cluster::LinkKind::Socket);
+        p.replan(&net).unwrap();
+
+        // without the policy the preview stays at the incumbent stage
+        let pv = p.preview_join("V100S-32G", None, &net).unwrap();
+        assert_eq!(pv.stage, 3);
+        assert_eq!(pv.plan.stage, 3);
+
+        // with it, the post-admission fleet re-stages to ZeRO-1
+        p.set_stage_policy(Some(StagePolicy::default()));
+        let fingerprint = (p.replans(), p.cache().hits(), p.cache().misses());
+        let pv = p.preview_join("V100S-32G", None, &net).unwrap();
+        assert_eq!(pv.stage, 1, "socket link: the sync-once stage must win");
+        assert!(pv.curve_cached, "re-staging requires measured curves");
+        assert_eq!(pv.plan.stage, 1);
+        assert_eq!(pv.plan.ranks.len(), 3);
+        assert_eq!(pv.curves.len(), 3, "curve set matches the plan ranks");
+        assert_eq!(pv.plan.total_samples(), 2048);
+        // still a pure what-if: nothing in the planner moved
+        assert_eq!((p.replans(), p.cache().hits(), p.cache().misses()), fingerprint);
+        assert_eq!(p.stage(), 3);
+        assert!(!p.dirty());
     }
 
     #[test]

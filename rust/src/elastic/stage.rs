@@ -1,0 +1,586 @@
+//! Replan-time ZeRO-stage re-selection (stage migration).
+//!
+//! Poplar's Alg. 1/2 pick a ZeRO stage once (escalating only when batch
+//! 1 OOMs) and never revisit it — but the elastic runtime changes the
+//! fleet underneath that choice. After a membership event the stage the
+//! job escalated to at startup can be either *infeasible* (a loss grows
+//! every survivor's `12ψ/n` optimizer shard past its memory) or
+//! *needlessly slow* (a high-memory join lets ZeRO-3 de-escalate to
+//! ZeRO-1 and drop the per-micro-step collective traffic entirely).
+//!
+//! With a [`StagePolicy`] installed, every replan re-decides the stage:
+//!
+//! * **candidates** — each stage 0..=3 is checked against the Alg. 1
+//!   memory bound at the *new* group size (every live rank must fit at
+//!   least one sample, [`crate::memmodel::true_mbs`]);
+//! * **curves** — the `(gpu, model, stage)` cache is already
+//!   stage-keyed: cached curves are reused as-is, and only missing
+//!   `(type, stage)` pairs need an incremental Alg. 1 run
+//!   ([`ElasticPlanner::stage_profile_requests`] names them; until
+//!   they are measured, a catalog-FLOPs estimate scores the candidate
+//!   — estimate-based stages are never switched to outright, mirroring
+//!   the autoscale defer rule);
+//! * **decision** — the same horizon amortization as `autoscale`: with
+//!   `stall = ckpt::migrate transfer + est. Alg. 1 cost for uncached
+//!   (type, stage) pairs`, each candidate scores
+//!   `rate · max(0, horizon − stall) / horizon` (effective samples/s
+//!   over the candidate's expected tenure) and the job migrates only on
+//!   a strict improvement over the incumbent. Between the partitioned
+//!   stages the optimizer tiling is identical, so a 3→1 de-escalation
+//!   costs only the membership reshard; escalating *to* ZeRO-0 pays the
+//!   full replication broadcast ([`crate::ckpt::migrate`]).
+//!
+//! An infeasible incumbent (the "loss shrank aggregate memory" case)
+//! scores below every feasible candidate, so the search escalates away
+//! from it as soon as any measured alternative exists.
+//!
+//! Straggler caveat: drift overrides are rank-local curves measured at
+//! the *current* stage; candidate stages are scored with healthy
+//! type-level curves, so a heavily drifted rank biases the comparison
+//! in the candidates' favor until its drift is re-measured there.
+
+use crate::allocator::{self, predicted_wall_s};
+use crate::autoscale::{profile_cost_estimate_s, synthesize_curve, DEFAULT_HORIZON_S};
+use crate::ckpt::{self, ShardManifest};
+use crate::cluster::catalog;
+use crate::config::model::{preset, ModelSpec};
+use crate::curves::PerfCurve;
+use crate::memmodel;
+use crate::netsim::NetSim;
+
+use super::{CurveKey, ElasticError, ElasticPlanner};
+
+/// Knobs of the replan-time stage search (`[elastic] allow_stage_change`
+/// turns it on; the horizon follows `[autoscale] horizon_s` when both
+/// are configured).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePolicy {
+    /// Amortization horizon in seconds: the expected time until the next
+    /// membership event re-prices everything (same semantics as
+    /// `[autoscale] horizon_s`).
+    pub horizon_s: f64,
+}
+
+impl Default for StagePolicy {
+    fn default() -> Self {
+        StagePolicy { horizon_s: DEFAULT_HORIZON_S }
+    }
+}
+
+/// A stage migration the latest replan performed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageChange {
+    /// Stage before the replan.
+    pub from: u8,
+    /// Stage after the replan.
+    pub to: u8,
+    /// Priced one-shot migration transfer (seconds, membership movement
+    /// folded in).
+    pub migration_s: f64,
+    /// Optimizer-state bytes the migration moves.
+    pub migration_bytes: u64,
+}
+
+/// One evaluated candidate stage of the replan-time search.
+#[derive(Debug, Clone)]
+pub struct StageCandidate {
+    /// ZeRO stage evaluated.
+    pub stage: u8,
+    /// True for the incumbent (the stage the job currently runs at).
+    pub current: bool,
+    /// Alg. 1 memory bound holds for every live rank at the group size.
+    pub feasible: bool,
+    /// Every live type has a *measured* curve at this stage (the
+    /// incumbent always does); false means the rate is a catalog-FLOPs
+    /// estimate and the stage is never switched to before profiling.
+    pub curves_cached: bool,
+    /// Predicted steady-state samples/s (0 when not plannable).
+    pub rate_sps: f64,
+    /// One-shot `ckpt::migrate` transfer from the current layout (s).
+    pub migration_s: f64,
+    /// Optimizer-state bytes that migration moves.
+    pub migration_bytes: u64,
+    /// Estimated Alg. 1 cost for the uncached `(type, stage)` pairs (0
+    /// when fully cached).
+    pub profile_est_s: f64,
+    /// Effective samples/s over the horizon:
+    /// `rate · max(0, horizon − migration − profiling) / horizon`.
+    pub score: f64,
+}
+
+/// The selection rule over one candidate set: start from the incumbent
+/// and require a *strict* score improvement; a candidate is switchable
+/// only when memory-feasible, plannable and fully measured (cached).
+/// Iteration is stage-descending so an exact tie between two eligible
+/// stages resolves to the higher (lower-memory) one. An infeasible
+/// incumbent scores below everything, so the first eligible candidate
+/// takes over — the escalate-away-from-a-broken-bound case.
+pub fn choose_stage(cands: &[StageCandidate]) -> u8 {
+    let Some(inc) = cands.iter().find(|c| c.current) else {
+        return cands.first().map_or(0, |c| c.stage);
+    };
+    let mut best_stage = inc.stage;
+    let mut best_score = if inc.feasible { inc.score } else { f64::NEG_INFINITY };
+    for c in cands.iter().rev() {
+        if c.current || !c.feasible || !c.curves_cached {
+            continue;
+        }
+        if !(c.rate_sps.is_finite() && c.rate_sps > 0.0) {
+            continue;
+        }
+        if c.score > best_score {
+            best_score = c.score;
+            best_stage = c.stage;
+        }
+    }
+    best_stage
+}
+
+impl ElasticPlanner {
+    /// The resolved model spec behind this job's preset name, if it is a
+    /// known preset — the stage search needs it for the memory bound and
+    /// the catalog-FLOPs curve estimates.
+    fn model_spec(&self) -> Option<ModelSpec> {
+        preset(&self.model)
+    }
+
+    /// The leader's (2b) staleness rule applied to a candidate-stage
+    /// cache entry: a curve whose `mbs` disagrees with the memory model
+    /// at the *current* group size was measured under a different shard
+    /// budget — too big risks OOM after a loss, too small wastes
+    /// throughput after a join — so it must be re-measured before the
+    /// stage is switchable. Unverifiable (non-preset model or
+    /// non-catalog GPU) trusts the cache, matching the (2b) guard.
+    pub(super) fn stage_curve_stale(
+        &self,
+        model_spec: Option<&ModelSpec>,
+        gpu: &str,
+        curve: &PerfCurve,
+        stage: u8,
+        n: usize,
+    ) -> bool {
+        match (model_spec, catalog::spec(gpu)) {
+            (Some(m), Some(spec)) => {
+                curve.mbs()
+                    != memmodel::true_mbs(m, self.param_count, stage, n, spec.mem_bytes())
+            }
+            _ => false,
+        }
+    }
+
+    /// True when every live rank (plus `extra_gpu`, if given) fits at
+    /// least one sample at `stage` with `n` total ranks — the Alg. 1
+    /// memory bound the paper's escalation loop enforces.
+    pub(super) fn stage_feasible(
+        &self,
+        model: &ModelSpec,
+        stage: u8,
+        n: usize,
+        extra_gpu: Option<&str>,
+    ) -> bool {
+        let fits = |gpu: &str| {
+            catalog::spec(gpu).is_some_and(|spec| {
+                memmodel::true_mbs(model, self.param_count, stage, n, spec.mem_bytes()) >= 1
+            })
+        };
+        self.slots.iter().filter(|s| s.alive).all(|s| fits(&s.gpu))
+            && extra_gpu.is_none_or(fits)
+    }
+
+    /// Evaluate every candidate stage 0..=3 for the *current* membership
+    /// against the current layout. Pure: no planner state moves (curve
+    /// lookups go through `CurveCache::peek`). Requires every live slot
+    /// profiled, like `replan` ([`ElasticError::MissingCurves`]).
+    pub fn stage_candidates(&self, net: &NetSim) -> Result<Vec<StageCandidate>, ElasticError> {
+        // same precondition as replan: the incumbent's curves must exist
+        let _ = self.active_curves()?;
+        let horizon = self
+            .policy
+            .as_ref()
+            .map_or(DEFAULT_HORIZON_S, |p| p.horizon_s);
+        let model_spec = self.model_spec();
+        let n = self.active_slots().len();
+        Ok((0..=3u8)
+            .map(|s| self.evaluate_stage(s, net, horizon, model_spec.as_ref(), n))
+            .collect())
+    }
+
+    fn evaluate_stage(
+        &self,
+        stage: u8,
+        net: &NetSim,
+        horizon: f64,
+        model_spec: Option<&ModelSpec>,
+        n: usize,
+    ) -> StageCandidate {
+        let current = stage == self.stage;
+        // unknown (non-preset) model: the bound cannot be verified, so
+        // only the incumbent stands
+        let feasible = match model_spec {
+            Some(m) => self.stage_feasible(m, stage, n, None),
+            None => current,
+        };
+
+        // curve set at this stage: incumbent uses the live slot curves
+        // (drift overrides included); others use cached type curves, and
+        // fall back to catalog-FLOPs estimates priced with the Alg. 1
+        // cost they would have to pay before the first productive step
+        let mut curves: Vec<PerfCurve> = Vec::new();
+        let mut curves_cached = true;
+        let mut profile_est_s = 0.0;
+        let mut estimated: Vec<String> = Vec::new();
+        let mut plannable = true;
+        for sl in self.slots.iter().filter(|s| s.alive) {
+            let curve = if current {
+                sl.curve.clone()
+            } else {
+                match self.cache.peek(&CurveKey::new(&sl.gpu, &self.model, stage)) {
+                    // a cached curve measured at a *different* group size
+                    // counts as missing: its mbs is from another memory
+                    // budget and must be re-measured (the leader's (2b)
+                    // staleness rule, applied to candidate stages)
+                    Some(c) if !self.stage_curve_stale(model_spec, &sl.gpu, c, stage, n) => {
+                        Some(c.clone())
+                    }
+                    _ => {
+                        curves_cached = false;
+                        let synth = model_spec
+                            .and_then(|m| synthesize_curve(&sl.gpu, m, stage, n).ok());
+                        if let Some(c) = &synth {
+                            if !estimated.contains(&sl.gpu) {
+                                profile_est_s += profile_cost_estimate_s(c);
+                                estimated.push(sl.gpu.clone());
+                            }
+                        }
+                        synth
+                    }
+                }
+            };
+            match curve {
+                Some(c) => curves.push(c),
+                None => {
+                    plannable = false;
+                    break;
+                }
+            }
+        }
+
+        let rate_sps = if plannable {
+            allocator::plan(&curves, stage, self.gbs, net, self.param_count)
+                .ok()
+                .and_then(|p| predicted_wall_s(&p, &curves, net, self.param_count).ok())
+                .map_or(0.0, |w| if w > 0.0 { self.gbs as f64 / w } else { 0.0 })
+        } else {
+            0.0
+        };
+
+        // one-shot migration from the current layout (membership
+        // movement folded in; zero on the initial plan)
+        let (migration_s, migration_bytes) = match &self.manifest {
+            Some(old) => {
+                let live: Vec<(usize, String)> = self
+                    .slots
+                    .iter()
+                    .filter(|s| s.alive)
+                    .map(|s| (s.slot, s.gpu.clone()))
+                    .collect();
+                ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
+                    .and_then(|m| ckpt::migrate(old, &m))
+                    .map(|p| (p.transfer_time_s(net), p.bytes_moved()))
+                    // a corrupt layout can never win the search
+                    .unwrap_or((f64::INFINITY, u64::MAX))
+            }
+            None => (0.0, 0),
+        };
+
+        let score = if horizon > 0.0 {
+            rate_sps * (horizon - migration_s - profile_est_s).max(0.0) / horizon
+        } else {
+            0.0
+        };
+        StageCandidate {
+            stage,
+            current,
+            feasible,
+            curves_cached: curves_cached || current,
+            rate_sps,
+            migration_s,
+            migration_bytes,
+            profile_est_s,
+            score,
+        }
+    }
+
+    /// The incremental profiling the stage search is still missing:
+    /// `(slot, stage)` pairs — one representative live slot per uncached
+    /// `(gpu type, stage)` pair — for every candidate stage that passes
+    /// the memory bound and whose *estimated* score beats the incumbent
+    /// (or for every feasible stage when the incumbent's own bound is
+    /// broken and the job must move somewhere). The leader profiles
+    /// these and installs the curves via
+    /// [`ElasticPlanner::install_stage_curve`] before replanning;
+    /// everything already cached costs nothing, so after the first
+    /// migration a stage flip-flop is free of Alg. 1 runs.
+    pub fn stage_profile_requests(&self, net: &NetSim) -> Vec<(usize, u8)> {
+        if self.policy.is_none() {
+            return Vec::new();
+        }
+        let Ok(cands) = self.stage_candidates(net) else {
+            return Vec::new();
+        };
+        let Some(inc) = cands.iter().find(|c| c.current) else {
+            return Vec::new();
+        };
+        let must_move = !inc.feasible;
+        let inc_score = if inc.feasible { inc.score } else { f64::NEG_INFINITY };
+        let model_spec = self.model_spec();
+        let n = self.active_slots().len();
+        let mut reqs: Vec<(usize, u8)> = Vec::new();
+        for c in &cands {
+            if c.current || !c.feasible || c.curves_cached {
+                continue;
+            }
+            if !(c.score > inc_score || must_move) {
+                continue;
+            }
+            let mut seen: Vec<&str> = Vec::new();
+            for sl in self.slots.iter().filter(|s| s.alive) {
+                if seen.iter().any(|g| *g == sl.gpu) {
+                    continue;
+                }
+                seen.push(&sl.gpu);
+                // missing OR stale (measured at another group size):
+                // both need a fresh Alg. 1 run before the switch
+                let usable = self
+                    .cache
+                    .peek(&CurveKey::new(&sl.gpu, &self.model, c.stage))
+                    .is_some_and(|cv| {
+                        !self.stage_curve_stale(model_spec.as_ref(), &sl.gpu, cv, c.stage, n)
+                    });
+                if !usable {
+                    reqs.push((sl.slot, c.stage));
+                }
+            }
+        }
+        reqs
+    }
+
+    /// Run the stage search and return the chosen stage plus the full
+    /// candidate table (diagnostics / `exp::fig_stage_migration`).
+    pub(super) fn select_stage(
+        &self,
+        net: &NetSim,
+    ) -> Result<(u8, Vec<StageCandidate>), ElasticError> {
+        let cands = self.stage_candidates(net)?;
+        let chosen = choose_stage(&cands);
+        Ok((chosen, cands))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::curves::ProfiledPoint;
+    use crate::elastic::ElasticPlanner;
+
+    /// Ground-truth curve for a GPU at the memory-model mbs of
+    /// `(model, stage, n)` — what Alg. 1 would measure noise-free. On
+    /// the simulated substrate the catalog-FLOPs synthesizer IS the
+    /// ground truth (the SimDevice times the same device model).
+    fn truth_curve(gpu: &str, model: &ModelSpec, stage: u8, n: usize) -> Option<PerfCurve> {
+        synthesize_curve(gpu, model, stage, n).ok()
+    }
+
+    /// A z3 planner on a socket link: 2× A800 + 2× V100S, all-stage
+    /// curves cached as measured at group size `seed_n` (the group size
+    /// the test will run the search at — stale entries are ineligible).
+    /// ZeRO-3's per-micro-step collectives are brutal at 2 GB/s, so
+    /// de-escalation is clearly profitable.
+    fn socket_planner(policy: Option<StagePolicy>, seed_n: usize) -> (ElasticPlanner, NetSim) {
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(3, 2048, &m.name, m.param_count(), 32);
+        for gpu in ["A800-80G", "A800-80G", "V100S-32G", "V100S-32G"] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, truth_curve(gpu, &m, 3, 4).unwrap(), false)
+                    .unwrap();
+            }
+        }
+        for s in 0..=3u8 {
+            for gpu in ["A800-80G", "V100S-32G"] {
+                if let Some(c) = truth_curve(gpu, &m, s, seed_n) {
+                    p.install_stage_curve(gpu, s, c).unwrap();
+                }
+            }
+        }
+        p.set_stage_policy(policy);
+        (p, NetSim::from_link(4, LinkKind::Socket))
+    }
+
+    #[test]
+    fn search_de_escalates_z3_to_z1_when_join_makes_it_cheap() {
+        // pin the initial plan at z3 with the policy off — the state a
+        // startup escalation leaves behind — then enable the search and
+        // let a membership event trigger the re-decision (the search
+        // runs at n=5, so the cache is seeded as-measured-at-5)
+        let (mut p, net) = socket_planner(None, 5);
+        p.replan(&net).unwrap();
+        assert_eq!(p.stage(), 3);
+        p.set_stage_policy(Some(StagePolicy::default()));
+        p.add_slot("V100S-32G");
+        let net5 = NetSim::from_link(5, LinkKind::Socket);
+        p.replan(&net5).unwrap();
+        // on a 2 GB/s link ZeRO-1 drops ~all collective traffic: the
+        // search must have de-escalated to the partitioned sync-once stage
+        assert_eq!(p.stage(), 1);
+        let ch = p.last_stage_change().expect("a stage change must be recorded").clone();
+        assert_eq!((ch.from, ch.to), (3, 1));
+        // the plan, the manifest and every slot curve moved with it
+        assert_eq!(p.plan().unwrap().stage, 1);
+        assert_eq!(p.manifest().unwrap().stage, 1);
+        assert_eq!(p.plan().unwrap().total_samples(), 2048);
+        p.plan().unwrap().validate().unwrap();
+        for sl in p.slots().iter().filter(|s| s.alive) {
+            assert!(sl.curve.is_some());
+            assert!(!sl.drifted, "stage switch installs healthy type curves");
+        }
+    }
+
+    #[test]
+    fn candidates_report_rates_and_migration_costs() {
+        // the candidate table is read at n=4: seed the cache at 4 so
+        // nothing is staleness-disqualified
+        let (mut p, net) = socket_planner(Some(StagePolicy::default()), 4);
+        // pin at z3 without policy interference for the candidate table
+        p.set_stage_policy(None);
+        p.replan(&net).unwrap();
+        p.set_stage_policy(Some(StagePolicy::default()));
+        let cands = p.stage_candidates(&net).unwrap();
+        assert_eq!(cands.len(), 4);
+        let by = |s: u8| cands.iter().find(|c| c.stage == s).unwrap();
+        assert!(by(3).current);
+        // llama-0.5b fits every catalog card at every stage
+        assert!(cands.iter().all(|c| c.feasible));
+        // all cached (pre-seeded): no profiling estimates anywhere
+        assert!(cands.iter().all(|c| c.curves_cached));
+        assert!(cands.iter().all(|c| c.profile_est_s == 0.0));
+        // ZeRO-1 beats ZeRO-3 on a socket link by a wide margin
+        assert!(
+            by(1).rate_sps > by(3).rate_sps * 1.5,
+            "z1 {} vs z3 {}",
+            by(1).rate_sps,
+            by(3).rate_sps
+        );
+        // partitioned -> partitioned with unchanged membership: free
+        assert_eq!(by(1).migration_bytes, 0);
+        assert_eq!(by(2).migration_bytes, 0);
+        // partitioned -> replicated: the full broadcast is priced
+        let m = preset("llama-0.5b").unwrap();
+        assert!(by(0).migration_bytes >= 9 * m.param_count());
+        assert!(by(0).migration_s > 0.0);
+    }
+
+    #[test]
+    fn infeasible_incumbent_escalates_to_a_measured_stage() {
+        // bert-1.1b replicated (ZeRO-0) needs 16ψ ≈ 21 GB + reserve: a
+        // T4 (16 GiB) violates the bound outright, so the incumbent must
+        // move — here to the only cached alternative, ZeRO-3
+        let m = preset("bert-1.1b").unwrap();
+        let mut p = ElasticPlanner::new(0, 16, &m.name, m.param_count(), 16);
+        for gpu in ["A100-80G", "T4"] {
+            let slot = p.add_slot(gpu);
+            // fabricated z0 curves: the state machine does not care that
+            // a T4 could never really have produced one
+            let pts = vec![
+                ProfiledPoint { batch: 1, step_time_s: 0.1 },
+                ProfiledPoint { batch: 2, step_time_s: 0.19 },
+            ];
+            p.install_curve(slot, PerfCurve::fit(pts, 2).unwrap(), false).unwrap();
+        }
+        for gpu in ["A100-80G", "T4"] {
+            let c = truth_curve(gpu, &m, 3, 2).expect("z3 fits both cards");
+            p.install_stage_curve(gpu, 3, c).unwrap();
+        }
+        p.set_stage_policy(Some(StagePolicy::default()));
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let cands = p.stage_candidates(&net).unwrap();
+        let z0 = cands.iter().find(|c| c.stage == 0).unwrap();
+        assert!(!z0.feasible, "16ψ must not fit a 16 GiB card");
+        assert!(z0.current);
+        p.replan(&net).unwrap();
+        assert_eq!(p.stage(), 3, "must escalate off the broken bound");
+        assert_eq!(p.last_stage_change().unwrap().from, 0);
+        p.plan().unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn uncached_candidate_is_scored_but_never_switched_to() {
+        // ONLY z3 cached: the de-escalation is visibly better on
+        // estimates, but the planner alone cannot profile, so it must
+        // stay (the leader profiles via stage_profile_requests)
+        let m = preset("llama-0.5b").unwrap();
+        let mut cold = ElasticPlanner::new(3, 2048, &m.name, m.param_count(), 32);
+        for gpu in ["A800-80G", "A800-80G", "V100S-32G", "V100S-32G"] {
+            let slot = cold.add_slot(gpu);
+            if cold.slots()[slot].curve.is_none() {
+                cold.install_curve(slot, truth_curve(gpu, &m, 3, 4).unwrap(), false)
+                    .unwrap();
+            }
+        }
+        cold.set_stage_policy(Some(StagePolicy::default()));
+        let net = NetSim::from_link(4, LinkKind::Socket);
+        cold.replan(&net).unwrap();
+        assert_eq!(cold.stage(), 3, "estimate-based stages are defer-only");
+        let cands = cold.stage_candidates(&net).unwrap();
+        let z1 = cands.iter().find(|c| c.stage == 1).unwrap();
+        assert!(!z1.curves_cached);
+        assert!(z1.profile_est_s > 0.0, "uncached pairs price Alg. 1");
+        assert!(z1.rate_sps > 0.0, "estimate still predicts a rate");
+        // and the work list names exactly the missing (type, stage) pairs
+        let reqs = cold.stage_profile_requests(&net);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|&(_, s)| s != 3), "z3 is already measured");
+        let mut pairs: Vec<(String, u8)> = reqs
+            .iter()
+            .map(|&(slot, s)| (cold.slots()[slot].gpu.clone(), s))
+            .collect();
+        let before = pairs.len();
+        pairs.sort();
+        pairs.dedup();
+        assert_eq!(pairs.len(), before, "one request per (type, stage) pair");
+    }
+
+    #[test]
+    fn short_horizon_keeps_the_stage_when_profiling_cannot_amortize() {
+        // same cold cache, but a 4 s expected tenure: the estimated
+        // Alg. 1 stall zeroes out every uncached candidate's score, so
+        // nothing is even worth profiling — the stall makes staying
+        // optimal although ZeRO-1's raw rate is higher
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(3, 2048, &m.name, m.param_count(), 32);
+        for gpu in ["A800-80G", "A800-80G", "V100S-32G", "V100S-32G"] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, truth_curve(gpu, &m, 3, 4).unwrap(), false)
+                    .unwrap();
+            }
+        }
+        p.set_stage_policy(Some(StagePolicy { horizon_s: 4.0 }));
+        let net = NetSim::from_link(4, LinkKind::Socket);
+        p.replan(&net).unwrap();
+        let cands = p.stage_candidates(&net).unwrap();
+        let (z1, z3) = (
+            cands.iter().find(|c| c.stage == 1).unwrap(),
+            cands.iter().find(|c| c.stage == 3).unwrap(),
+        );
+        assert!(z1.rate_sps > z3.rate_sps, "z1 is genuinely faster…");
+        assert!(z1.score < z3.score, "…but the stall makes staying optimal");
+        assert_eq!(z1.score, 0.0, "profiling alone exceeds the 4 s tenure");
+        assert!(p.stage_profile_requests(&net).is_empty(), "not worth profiling");
+        p.add_slot("A800-80G");
+        p.replan(&NetSim::from_link(5, LinkKind::Socket)).unwrap();
+        assert_eq!(p.stage(), 3, "stays at the incumbent");
+        assert!(p.last_stage_change().is_none());
+    }
+}

@@ -19,6 +19,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig_autoscale;
 pub mod fig_elastic;
+pub mod fig_stage_migration;
 pub mod table2;
 
 use anyhow::{anyhow, Result};
@@ -189,6 +190,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
          fig_elastic::run),
         ("fig_autoscale", "Autoscaling — cost/throughput frontier of candidate offers",
          fig_autoscale::run),
+        ("fig_stage_migration", "Stage migration — replan-time ZeRO-stage re-selection",
+         fig_stage_migration::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

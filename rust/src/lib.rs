@@ -24,12 +24,12 @@
 //! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
 //! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
-//! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan` for elastic re-allocation |
+//! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan`/`replan_with_stage` for elastic re-allocation, `predicted_wall_s` cross-stage rate model |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
-//! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` |
-//! | [`elastic`] | elastic runtime: membership events, curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join` |
-//! | [`autoscale`] | cost-aware admission policy: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), amortizes the measured reshard penalty over a horizon, emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier |
-//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` turns joins into declinable offers) |
+//! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` + cross-stage `migrate` (partition↔partition free, →replicate priced broadcast) |
+//! | [`elastic`] | elastic runtime: membership events, stage-keyed curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`, replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
+//! | [`autoscale`] | cost-aware admission policy: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), amortizes the measured reshard penalty over a horizon, emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier; offers may re-stage under a `StagePolicy` |
+//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` turns joins into declinable offers; `allow_stage_change` migrates the ZeRO stage at replan time) |
 //! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
 //! | [`train`] | real heterogeneous data-parallel training loop |
 //! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |

@@ -11,6 +11,7 @@
 //!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G"]
 //!                  [--seed-schedule 7] [--ckpt-dir artifacts/ckpt]
 //!                  [--horizon 300] [--min-gain 0.02]   # enables the offer policy
+//!                  [--allow-stage-change]   # replan-time ZeRO-stage re-selection
 //! poplar autoscale --offer A800-80G,T4[,...] [--cluster cluster-C]
 //!                  [--model llama-0.5b] [--stage 1] [--gbs-tokens N]
 //!                  [--horizon 300] [--min-gain 0.02] [--noise 0.015]
@@ -19,8 +20,9 @@
 //! poplar ckpt      inspect [--dir artifacts/ckpt | --path FILE]
 //! poplar ckpt      restore --cluster cluster-C --model llama-0.5b
 //!                          [--dir artifacts/ckpt | --path FILE] [--lost 7,3]
-//! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|table2|ablation|all>
-//!                  [--out results]
+//!                          [--stage N]   # != checkpoint stage: cross-stage migration
+//! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|
+//!                   fig_stage_migration|table2|ablation|all> [--out results]
 //! ```
 //!
 //! Arg parsing is hand-rolled: the offline image carries no clap.
@@ -63,6 +65,31 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)
         }
     }
     Ok((pos, flags))
+}
+
+/// Remove a bare boolean flag (one that takes no value) from the arg
+/// list before [`parse_flags`] sees it; returns whether it was present.
+fn take_bare_flag(args: &mut Vec<String>, name: &str) -> bool {
+    let before = args.len();
+    args.retain(|a| a != name);
+    args.len() != before
+}
+
+/// Parse the `--stage` flag with the 0..=3 bound enforced *here* — a
+/// plain `u8` parse accepts 0..=255, and every stage-typed boundary
+/// behind the CLI (planner, profiler, manifest builder) must only ever
+/// see a validated stage.
+fn parse_stage(f: &HashMap<String, String>, default: u8) -> Result<u8> {
+    let stage: u8 = match f.get("stage") {
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow!("--stage must be an integer in 0..=3, got {s:?}"))?,
+        None => default,
+    };
+    if stage > 3 {
+        bail!("invalid ZeRO stage {stage} (want 0..=3)");
+    }
+    Ok(stage)
 }
 
 fn resolve_cluster(name: &str) -> Result<ClusterSpec> {
@@ -108,12 +135,13 @@ fn print_help() {
          \x20 elastic   --cluster C --model M [--stage N] [--iters 12]\n\
          \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G\"] [--seed-schedule 7]\n\
          \x20           [--ckpt-dir artifacts/ckpt] [--horizon 300] [--min-gain 0.02]\n\
+         \x20           [--allow-stage-change]  # replan-time ZeRO-stage re-selection\n\
          \x20 autoscale --offer A800-80G,T4[,...] [--cluster C] [--model M] [--stage N]\n\
          \x20           [--gbs-tokens N] [--horizon 300] [--min-gain 0.02] [--noise S]\n\
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
-         \x20 ckpt      restore --cluster C --model M [--lost 7,3]\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|table2|ablation|all> [--out results]\n"
+         \x20 ckpt      restore --cluster C --model M [--lost 7,3] [--stage N]  # cross-stage migrates\n\
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|table2|ablation|all> [--out results]\n"
     );
 }
 
@@ -122,7 +150,7 @@ fn cmd_profile(args: &[String]) -> Result<()> {
     let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
     let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
         .ok_or_else(|| anyhow!("unknown model preset"))?;
-    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let stage = parse_stage(&f, 0)?;
     let noise: f64 = f.get("noise").map(|s| s.parse()).transpose()?.unwrap_or(0.015);
 
     let mut leader = Leader::new_simulated(&cluster, &model, noise, 42);
@@ -150,7 +178,7 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
     let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
         .ok_or_else(|| anyhow!("unknown model preset"))?;
-    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let stage = parse_stage(&f, 0)?;
     let gbs_tokens: u64 = f
         .get("gbs-tokens")
         .map(|s| s.parse())
@@ -222,7 +250,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let iters: usize = f.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(50);
     let gbs: usize = f.get("gbs").map(|s| s.parse()).transpose()?.unwrap_or(16);
-    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let stage = parse_stage(&f, 1)?;
     let log_every: usize = f.get("log-every").map(|s| s.parse()).transpose()?.unwrap_or(10);
 
     let mut trainer = Trainer::open(&dir).context("opening artifacts (run `make artifacts`)")?;
@@ -258,10 +286,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_elastic(args: &[String]) -> Result<()> {
-    let (_, f) = parse_flags(args)?;
+    // --allow-stage-change is a bare flag (no value): strip it before
+    // the `--key value` parser sees it
+    let mut args = args.to_vec();
+    let stage_change_flag = take_bare_flag(&mut args, "--allow-stage-change");
+    let (_, f) = parse_flags(&args)?;
 
     // config-file path: `[elastic]` section drives everything
-    // (--ckpt-dir still overrides the `[ckpt]` section either way)
+    // (--ckpt-dir still overrides the `[ckpt]` section either way, and
+    // the bare flag turns the stage search on over the config)
     let ckpt_dir_flag = f.get("ckpt-dir").map(PathBuf::from);
     if let Some(path) = f.get("config") {
         let cfg = JobConfig::load(Path::new(path)).map_err(|e| anyhow!("{e}"))?;
@@ -279,6 +312,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
             drift_threshold: ecfg.drift_threshold,
             ckpt_dir: ckpt_dir_flag.or_else(|| cfg.ckpt.as_ref().map(|c| c.dir.clone())),
             autoscale: cfg.autoscale.clone(),
+            allow_stage_change: ecfg.allow_stage_change || stage_change_flag,
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -297,7 +331,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
     let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
     let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
         .ok_or_else(|| anyhow!("unknown model preset"))?;
-    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let stage = parse_stage(&f, 1)?;
     let iters: usize = f.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(12);
     let gbs_tokens: u64 = f
         .get("gbs-tokens")
@@ -332,6 +366,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
         drift_threshold: threshold,
         ckpt_dir: ckpt_dir_flag,
         autoscale,
+        allow_stage_change: stage_change_flag,
         ..Default::default()
     };
     let rep = leader.run_elastic_job(stage, gbs, iters, &schedule, &opts)?;
@@ -341,19 +376,25 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
 }
 
 fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
+    let stage_span = if rep.final_stage == rep.stage {
+        format!("ZeRO-{}", rep.stage)
+    } else {
+        format!("ZeRO-{}->{}", rep.stage, rep.final_stage)
+    };
     println!(
-        "elastic: ZeRO-{} gbs={} — {} replans, curve cache {} hits / {} misses",
-        rep.stage, rep.gbs, rep.replans, rep.cache_hits, rep.cache_misses
+        "elastic: {stage_span} gbs={} — {} replans, curve cache {} hits / {} misses",
+        rep.gbs, rep.replans, rep.cache_hits, rep.cache_misses
     );
     let mut t = Table::new(&[
-        "iter", "events", "ranks", "wall_s", "tflops", "replanned", "reprofiled", "reshard_s",
-        "moved_mb",
+        "iter", "events", "ranks", "stage", "wall_s", "tflops", "replanned", "reprofiled",
+        "reshard_s", "moved_mb",
     ]);
     for it in &rep.iterations {
         t.row(&[
             it.iter.to_string(),
             if it.events.is_empty() { "-".into() } else { it.events.join("; ") },
             it.n_ranks.to_string(),
+            it.stage.to_string(),
             format!("{:.3}", it.wall_s),
             format!("{:.1}", it.tflops),
             if it.replanned { "yes".into() } else { "-".into() },
@@ -401,7 +442,7 @@ fn cmd_autoscale(args: &[String]) -> Result<()> {
     let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
     let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
         .ok_or_else(|| anyhow!("unknown model preset"))?;
-    let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let stage = parse_stage(&f, 1)?;
     let gbs_tokens: u64 = f
         .get("gbs-tokens")
         .map(|s| s.parse())
@@ -490,7 +531,7 @@ fn print_manifest(m: &poplar::ckpt::ShardManifest) {
 }
 
 fn cmd_ckpt(args: &[String]) -> Result<()> {
-    use poplar::ckpt::{reshard, ReshardPlan, ShardManifest};
+    use poplar::ckpt::{migrate, ReshardPlan, ShardManifest};
 
     let Some(sub) = args.first() else {
         bail!("usage: poplar ckpt <save|restore|inspect> …  (see `poplar help`)");
@@ -513,7 +554,7 @@ fn cmd_ckpt(args: &[String]) -> Result<()> {
                 f.get("model").map(String::as_str).unwrap_or("llama-0.5b"),
             )
             .ok_or_else(|| anyhow!("unknown model preset"))?;
-            let stage: u8 = f.get("stage").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let stage = parse_stage(&f, 1)?;
             let snapshot: usize =
                 f.get("snapshot").map(|s| s.parse()).transpose()?.unwrap_or(0);
             let m = ShardManifest::build(
@@ -543,9 +584,13 @@ fn cmd_ckpt(args: &[String]) -> Result<()> {
             let model = model_cfg::preset(model_name).ok_or_else(|| {
                 anyhow!("model {model_name:?} is not a known preset; pass --model")
             })?;
-            // the restored layout keeps the checkpoint's stage: cross-stage
-            // migration is a manifest rewrite, not a reshard (ROADMAP)
-            let stage = old.stage;
+            // the restored layout keeps the checkpoint's stage unless
+            // --stage asks for a cross-stage migration (ckpt::migrate
+            // prices the re-layout; 0..=3 enforced before any builder)
+            let stage = match f.get("stage") {
+                Some(_) => parse_stage(&f, old.stage)?,
+                None => old.stage,
+            };
             let mut slots = cluster_slots(&cluster);
             if let Some(lost) = f.get("lost") {
                 for part in lost.split(',').filter(|s| !s.trim().is_empty()) {
@@ -568,11 +613,17 @@ fn cmd_ckpt(args: &[String]) -> Result<()> {
                 &slots,
             )
             .map_err(|e| anyhow!("{e}"))?;
-            let plan = reshard(&old, &new).map_err(|e| anyhow!("{e}"))?;
+            let plan = migrate(&old, &new).map_err(|e| anyhow!("{e}"))?;
             // transfer pricing is point-to-point: only the bottleneck
             // link's bw/latency matter, not the group size
             let net = poplar::netsim::NetSim::from_cluster(&cluster);
             let recompute = ReshardPlan::full_restore(&new);
+            if plan.is_migration() {
+                println!(
+                    "cross-stage migration ZeRO-{} -> ZeRO-{}",
+                    plan.from_stage, plan.stage
+                );
+            }
             println!(
                 "restore onto {} ranks: {} moves — {:.1} MB moved ({:.1} MB off the checkpoint, \
                  {:.1} MB retained in place)",
@@ -611,6 +662,49 @@ fn cmd_ckpt(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn every_entry_point_rejects_stage_out_of_range() {
+        // `--stage` parses as u8 (accepts 0..=255), so the 0..=3 bound
+        // must be enforced at each entry point before any planner,
+        // profiler or manifest builder sees the value — one check per
+        // CLI entry point that takes the flag
+        let assert_stage_err = |r: Result<()>| {
+            let e = format!("{:#}", r.unwrap_err());
+            assert!(e.contains("ZeRO stage") || e.contains("--stage"), "{e}");
+        };
+        assert_stage_err(cmd_profile(&args(&["--stage", "4"])));
+        assert_stage_err(cmd_plan(&args(&["--stage", "200"])));
+        assert_stage_err(cmd_elastic(&args(&["--stage", "9"])));
+        assert_stage_err(cmd_autoscale(&args(&["--offer", "T4", "--stage", "255"])));
+        assert_stage_err(cmd_train(&args(&["--stage", "17"])));
+        assert_stage_err(cmd_ckpt(&args(&["save", "--stage", "42"])));
+        // non-numeric is rejected with the same guidance
+        assert_stage_err(cmd_profile(&args(&["--stage", "two"])));
+        // and a u8-overflowing value cannot wrap into range
+        assert_stage_err(cmd_plan(&args(&["--stage", "256"])));
+    }
+
+    #[test]
+    fn allow_stage_change_is_a_bare_flag() {
+        let mut a = args(&["--allow-stage-change", "--iters", "2"]);
+        assert!(take_bare_flag(&mut a, "--allow-stage-change"));
+        assert_eq!(a, args(&["--iters", "2"]), "only the bare flag is removed");
+        assert!(!take_bare_flag(&mut a, "--allow-stage-change"));
+        // and parse_flags still sees well-formed pairs afterwards
+        let (pos, f) = parse_flags(&a).unwrap();
+        assert!(pos.is_empty());
+        assert_eq!(f.get("iters").map(String::as_str), Some("2"));
+    }
+}
+
 fn cmd_exp(args: &[String]) -> Result<()> {
     let (pos, f) = parse_flags(args)?;
     let which = pos.first().map(String::as_str).unwrap_or("all");
@@ -640,6 +734,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             "fig_autoscale",
             "Autoscaling — cost/throughput frontier of candidate offers",
             exp::fig_autoscale::run,
+        )?,
+        "fig_stage_migration" => one(
+            "fig_stage_migration",
+            "Stage migration — replan-time ZeRO-stage re-selection",
+            exp::fig_stage_migration::run,
         )?,
         other => bail!("unknown experiment {other:?}"),
     }

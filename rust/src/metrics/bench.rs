@@ -61,7 +61,9 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, target_ms: u64, mut f: F) -> BenchR
         std::hint::black_box(f());
         times.push(t.elapsed().as_nanos() as f64);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: timing samples are always finite, but a comparator that
+    // can panic has no place in a measurement harness
+    times.sort_by(f64::total_cmp);
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let p50 = times[times.len() / 2];
     let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];

@@ -12,6 +12,11 @@
 //! segment plus a Horner step (O(log n)).
 
 /// A natural cubic spline through `n >= 2` strictly-increasing knots.
+///
+/// Invariant: a constructed spline always holds at least two knots —
+/// [`CubicSpline::fit`] is the only constructor and rejects anything
+/// smaller with [`SplineError::TooFewPoints`], so [`CubicSpline::domain`]
+/// and evaluation can never index an empty knot vector.
 #[derive(Debug, Clone)]
 pub struct CubicSpline {
     xs: Vec<f64>,
@@ -86,6 +91,7 @@ impl CubicSpline {
                 m[i] = (rhs[i - 1] - upper[i - 1] * m[i + 1]) / diag[i - 1];
             }
         }
+        debug_assert!(n >= 2, "CubicSpline invariant: >= 2 knots after validation");
         Ok(CubicSpline { xs: xs.to_vec(), ys: ys.to_vec(), m })
     }
 
@@ -95,19 +101,28 @@ impl CubicSpline {
     }
 
     /// True if the spline has no knots (never constructible — kept for API
-    /// completeness).
+    /// completeness; see the `>= 2` knots invariant on the type).
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
 
-    /// Domain `[x_min, x_max]` of the knots.
+    /// Domain `[x_min, x_max]` of the knots. Cannot panic: `fit` is the
+    /// only constructor and guarantees at least two knots.
     pub fn domain(&self) -> (f64, f64) {
-        (self.xs[0], *self.xs.last().unwrap())
+        let first = *self.xs.first().expect("CubicSpline invariant: >= 2 knots");
+        let last = *self.xs.last().expect("CubicSpline invariant: >= 2 knots");
+        (first, last)
     }
 
     fn segment(&self, x: f64) -> usize {
         // Largest i with xs[i] <= x, clamped to the last segment.
-        match self.xs.binary_search_by(|v| v.partial_cmp(&x).unwrap()) {
+        // total_cmp: knots are finite by construction, but `x` is caller
+        // input — a NaN (e.g. a corrupt observed micro-step time flowing
+        // through drift detection into curve prediction) must yield a
+        // NaN result, not panic the comparator mid-replan. Under
+        // total_cmp NaN sorts above every finite knot, so a NaN query
+        // lands in the last segment and Horner propagates the NaN.
+        match self.xs.binary_search_by(|v| v.total_cmp(&x)) {
             Ok(i) => i.min(self.xs.len() - 2),
             Err(0) => 0,
             Err(i) => (i - 1).min(self.xs.len() - 2),
@@ -115,8 +130,12 @@ impl CubicSpline {
     }
 
     /// Evaluate the spline at `x`. Outside the domain, extrapolates the
-    /// boundary cubic (callers in `curves` clamp instead).
+    /// boundary cubic (callers in `curves` clamp instead). A NaN input
+    /// propagates to a NaN output — it never panics.
     pub fn eval(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return f64::NAN;
+        }
         let i = self.segment(x);
         let h = self.xs[i + 1] - self.xs[i];
         let a = (self.xs[i + 1] - x) / h;
@@ -126,8 +145,11 @@ impl CubicSpline {
             + ((a.powi(3) - a) * self.m[i] + (b.powi(3) - b) * self.m[i + 1]) * h * h / 6.0
     }
 
-    /// First derivative at `x`.
+    /// First derivative at `x` (NaN-propagating, like [`CubicSpline::eval`]).
     pub fn deriv(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return f64::NAN;
+        }
         let i = self.segment(x);
         let h = self.xs[i + 1] - self.xs[i];
         let a = (self.xs[i + 1] - x) / h;
@@ -235,6 +257,29 @@ mod tests {
             CubicSpline::fit(&[0.0, f64::NAN], &[1.0, 2.0]).unwrap_err(),
             SplineError::NonFinite
         );
+    }
+
+    #[test]
+    fn nan_eval_propagates_instead_of_panicking() {
+        // regression: segment() used partial_cmp().unwrap(), so a NaN
+        // query (corrupt observed step time through detect_drift / curve
+        // prediction) panicked the whole planner
+        let s = CubicSpline::fit(&[0.0, 1.0, 2.0], &[0.0, 1.0, 4.0]).unwrap();
+        assert!(s.eval(f64::NAN).is_nan());
+        assert!(s.deriv(f64::NAN).is_nan());
+        // infinities extrapolate the boundary cubic without panicking
+        assert!(s.eval(f64::INFINITY).is_infinite() || s.eval(f64::INFINITY).is_nan());
+        let _ = s.eval(f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn domain_never_panics_on_any_constructible_spline() {
+        // regression: domain() indexed xs[0]; the fit-time invariant
+        // (>= 2 knots, the only constructor) makes the panic impossible
+        let s = CubicSpline::fit(&[1.0, 3.0], &[2.0, 6.0]).unwrap();
+        assert!(!s.is_empty(), "fit can never produce an empty spline");
+        assert_eq!(s.domain(), (1.0, 3.0));
+        assert_eq!(s.len(), 2);
     }
 
     #[test]

@@ -12,9 +12,14 @@
 //!    former bytes, only departed owners' bytes come off the checkpoint;
 //! 4. minimality: the reshard never moves more bytes than the
 //!    full-restore recompute baseline, and moves zero when the
-//!    membership is unchanged.
+//!    membership is unchanged;
+//! 5. cross-stage migration (`ckpt::migrate`) keeps 1-3 under ANY
+//!    stage→stage transition: exact destination coverage, correct
+//!    sourcing, zero cost for same-membership stage changes that keep
+//!    the partition rule, and migrate-then-migrate-back never loses a
+//!    byte.
 
-use poplar::ckpt::{reshard, ReshardPlan, ShardManifest, ShardRange};
+use poplar::ckpt::{migrate, reshard, ReshardPlan, ShardManifest, ShardRange};
 use poplar::elastic::XorShift;
 use poplar::zero::OPTIMIZER_BYTES_PER_PARAM;
 
@@ -166,6 +171,163 @@ fn prop_reshard_covers_every_destination_exactly_no_overlap() {
                 "seed {seed} step {step}: reshard moved more than a full restore"
             );
             old = new;
+        }
+    }
+}
+
+/// Assert that `plan` covers every destination of `new` exactly once
+/// (no gap, no overlap) and that every move is sourced correctly.
+fn assert_exact_coverage(
+    plan: &ReshardPlan,
+    old: &ShardManifest,
+    new: &ShardManifest,
+    tag: &str,
+) {
+    for e in &new.shards {
+        let cov = coverage_of(plan, e.slot);
+        let mut cursor = e.range.lo;
+        for r in &cov {
+            assert_eq!(r.lo, cursor, "{tag}: slot {} gap/overlap at {cursor}", e.slot);
+            cursor = r.hi;
+        }
+        assert_eq!(
+            cursor, e.range.hi,
+            "{tag}: slot {} covered to {cursor} of {}",
+            e.slot, e.range.hi
+        );
+    }
+    // accounting: moved + retained equals the total destination volume
+    // (ψ for partitioned destinations, n·ψ for replicated ones)
+    let dest_total: u64 = new.shards.iter().map(|e| e.range.len()).sum();
+    assert_eq!(
+        plan.bytes_moved() + plan.bytes_retained(),
+        dest_total * OPTIMIZER_BYTES_PER_PARAM,
+        "{tag}: byte accounting"
+    );
+    // sourcing: a surviving owner serves its own former bytes; the
+    // checkpoint serves a piece only when EVERY old owner of it departed
+    // (replicated old layouts have many owners per piece)
+    for m in &plan.moves {
+        let owners: Vec<usize> = old
+            .shards
+            .iter()
+            .filter(|o| o.range.intersect(&m.range) == Some(m.range))
+            .map(|o| o.slot)
+            .collect();
+        match m.from_slot {
+            Some(src) => {
+                assert!(new.has_slot(src), "{tag}: dead source {src}");
+                assert!(
+                    owners.contains(&src),
+                    "{tag}: slot {src} never owned {:?}",
+                    m.range
+                );
+            }
+            None => {
+                assert!(!owners.is_empty(), "{tag}: checkpoint move for unowned bytes");
+                assert!(
+                    owners.iter().all(|s| !new.has_slot(*s)),
+                    "{tag}: checkpoint used although an owner survived"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cross_stage_migration_covers_every_destination_exactly() {
+    for seed in 0..80u64 {
+        let mut rng = XorShift::new(seed + 5000);
+        let psi = rng.range(100, 1_000_000_000);
+        let mut stage = (rng.next() % 4) as u8;
+        let n0 = rng.range(1, 8) as usize;
+        let mut slots: Vec<usize> = (0..n0).collect();
+        let mut next_slot = n0;
+        let mut old = manifest(&mut rng, stage, psi, &slots, 0);
+
+        for step in 0..rng.range(1, 8) {
+            // random membership drift (possibly none — a pure stage
+            // change) plus a random, possibly equal, new stage
+            for _ in 0..rng.range(0, 2) {
+                if rng.uniform() < 0.5 && slots.len() > 1 {
+                    let idx = (rng.next() as usize) % slots.len();
+                    slots.remove(idx);
+                } else {
+                    slots.push(next_slot);
+                    next_slot += 1;
+                }
+            }
+            let new_stage = (rng.next() % 4) as u8;
+            let new = manifest(&mut rng, new_stage, psi, &slots, step as usize + 1);
+            let plan = migrate(&old, &new)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(plan.from_stage, stage, "seed {seed} step {step}");
+            assert_eq!(plan.stage, new_stage, "seed {seed} step {step}");
+            assert_eq!(plan.is_migration(), stage != new_stage);
+            assert_exact_coverage(&plan, &old, &new, &format!("seed {seed} step {step}"));
+            old = new;
+            stage = new_stage;
+        }
+    }
+}
+
+#[test]
+fn prop_migrate_then_migrate_back_never_loses_bytes() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed + 7000);
+        let psi = rng.range(100, 1_000_000_000);
+        let stage = (rng.next() % 4) as u8;
+        let back_stage = (rng.next() % 4) as u8;
+        let n = rng.range(1, 9) as usize;
+        let slots: Vec<usize> = (0..n).collect();
+        let a = manifest(&mut rng, stage, psi, &slots, 0);
+
+        let (b, there) = a
+            .migrate(back_stage)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_exact_coverage(&there, &a, &b, &format!("seed {seed} there"));
+        let (c, back) = b
+            .migrate(stage)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_exact_coverage(&back, &b, &c, &format!("seed {seed} back"));
+
+        // the round trip restores the exact original layout: same slots,
+        // same ranges — no byte lost, none duplicated
+        assert_eq!(c.stage, a.stage, "seed {seed}");
+        assert_eq!(c.shards.len(), a.shards.len(), "seed {seed}");
+        for (ca, aa) in c.shards.iter().zip(&a.shards) {
+            assert_eq!(ca.slot, aa.slot, "seed {seed}");
+            assert_eq!(ca.range, aa.range, "seed {seed}: range drifted on round trip");
+        }
+        // nothing ever sources from the checkpoint: membership is stable
+        assert_eq!(there.bytes_from_checkpoint(), 0, "seed {seed}");
+        assert_eq!(back.bytes_from_checkpoint(), 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_same_membership_migration_cost_by_direction() {
+    // with unchanged membership: stage-unchanged and any
+    // partition↔partition or replicate→partition migration move zero
+    // bytes; only partition→replicate pays (the broadcast)
+    for seed in 0..60u64 {
+        let mut rng = XorShift::new(seed + 8000);
+        let psi = rng.range(100, 1_000_000);
+        let from = (rng.next() % 4) as u8;
+        let to = (rng.next() % 4) as u8;
+        let n = rng.range(1, 9) as usize;
+        let slots: Vec<usize> = (0..n).collect();
+        let a = manifest(&mut rng, from, psi, &slots, 0);
+        let (_, plan) = a.migrate(to).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let expect_free = to != 0 || from == 0 || n == 1;
+        assert_eq!(
+            plan.is_noop(),
+            expect_free,
+            "seed {seed}: ZeRO-{from} -> ZeRO-{to} over {n} ranks moved {} bytes",
+            plan.bytes_moved()
+        );
+        if from == to {
+            assert!(plan.is_noop(), "seed {seed}: stage unchanged must cost zero");
         }
     }
 }

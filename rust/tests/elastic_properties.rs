@@ -8,14 +8,18 @@
 //! 3. a re-join of a known `(gpu, model, stage)` skips re-profiling
 //!    (curve-cache hit);
 //! 4. a rank that slows down never gains samples after the replan;
-//! 5. cache eviction never drops a curve backing a live rank.
+//! 5. cache eviction never drops a curve backing a live rank;
+//! 6. with a stage policy installed, the stage chosen by ANY replan
+//!    satisfies the Alg. 1 memory bound for every live rank at the new
+//!    group size, and the plan still validates and covers `gbs`.
 
 use std::collections::HashSet;
 
 use poplar::cluster::catalog;
-use poplar::config::model::preset;
+use poplar::config::model::{preset, ModelSpec};
 use poplar::curves::{PerfCurve, ProfiledPoint};
-use poplar::elastic::{CurveCache, CurveKey, ElasticPlanner, XorShift};
+use poplar::elastic::{CurveCache, CurveKey, ElasticPlanner, StagePolicy, XorShift};
+use poplar::memmodel;
 use poplar::netsim::NetSim;
 use poplar::cluster::LinkKind;
 
@@ -201,6 +205,105 @@ fn prop_slowed_rank_never_gains_samples_after_replan() {
             "seed {seed}: slowed slot {slot} gained samples ({before} -> {after})"
         );
         assert_eq!(p.plan().unwrap().total_samples(), gbs, "seed {seed}");
+    }
+}
+
+/// Ground-truth curve for `gpu` at the memory-model `mbs` of
+/// `(model, stage, n)`; `None` when fewer than two samples fit (no
+/// curve is fittable there). On the simulated substrate the
+/// catalog-FLOPs synthesizer IS the noise-free ground truth.
+fn model_curve(gpu: &str, model: &ModelSpec, stage: u8, n: usize) -> Option<PerfCurve> {
+    poplar::autoscale::synthesize_curve(gpu, model, stage, n).ok()
+}
+
+#[test]
+fn prop_chosen_stage_always_satisfies_memory_bound() {
+    // bert-1.1b makes the search space genuinely constrained: ZeRO-0
+    // replicates 16ψ ≈ 21.5 GB and cannot fit the 16 GiB cards, and the
+    // partitioned stages get tight at small group sizes — so a wrong
+    // feasibility check would surface as a chosen stage whose bound is
+    // broken for some live rank.
+    let m = preset("bert-1.1b").unwrap();
+    let psi = m.param_count();
+    const GPUS4: &[&str] = &["A100-80G", "A800-80G", "V100S-32G", "T4"];
+    for seed in 0..30u64 {
+        let mut rng = XorShift::new(seed + 4000);
+        let mut p = ElasticPlanner::new(3, 64, &m.name, psi, 32);
+        p.set_stage_policy(Some(StagePolicy::default()));
+        for _ in 0..rng.range(2, 4) {
+            p.add_slot(GPUS4[(rng.next() as usize) % GPUS4.len()]);
+        }
+        // profile the initial fleet at the final initial group size
+        // (every card fits ZeRO-3 at n >= 2)
+        let n0 = p.active_slots().len();
+        for slot in p.needs_profile() {
+            let gpu = p.slots()[slot].gpu.clone();
+            let c = model_curve(&gpu, &m, p.stage(), n0)
+                .expect("every card fits ZeRO-3 at n >= 2");
+            p.install_curve(slot, c, false).unwrap();
+        }
+
+        for step in 0..rng.range(2, 10) {
+            // random membership event
+            if rng.uniform() < 0.4 && p.active_slots().len() > 2 {
+                let active = p.active_slots();
+                let victim = active[(rng.next() as usize) % active.len()];
+                let _ = p.lose_slot(victim);
+            } else {
+                let gpu = GPUS4[(rng.next() as usize) % GPUS4.len()];
+                let slot = p.add_slot(gpu);
+                if p.needs_profile().contains(&slot) {
+                    // mimic the leader: a joiner that cannot fit (or fit
+                    // a curve) at the current stage is evicted
+                    let n = p.active_slots().len();
+                    match model_curve(gpu, &m, p.stage(), n) {
+                        Some(c) => p.install_curve(slot, c, false).unwrap(),
+                        None => {
+                            p.lose_slot(slot).unwrap();
+                        }
+                    }
+                }
+            }
+            let n_active = p.active_slots().len();
+            // mimic the leader's (2c): measure every fittable
+            // (type, stage) pair at the CURRENT group size, so the
+            // search is free to move anywhere the memory model allows
+            // (stale-at-another-n entries are re-measured, like (2c)
+            // re-profiles what stage_profile_requests names)
+            for stage in 0..=3u8 {
+                for gpu in GPUS4 {
+                    if let Some(c) = model_curve(gpu, &m, stage, n_active) {
+                        p.install_stage_curve(gpu, stage, c).unwrap();
+                    }
+                }
+            }
+            let net = NetSim::from_link(n_active, LinkKind::Ib);
+            let plan = p
+                .replan(&net)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"))
+                .clone();
+            plan.validate().unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(plan.total_samples(), 64, "seed {seed} step {step}");
+            assert_eq!(plan.stage, p.stage(), "seed {seed} step {step}");
+
+            // THE invariant: whatever stage the search kept or migrated
+            // to, every live rank satisfies the Alg. 1 memory bound at
+            // the new group size
+            for slot in p.active_slots() {
+                let gpu = p.slots()[slot].gpu.clone();
+                let spec = catalog::spec(&gpu).unwrap();
+                let mbs =
+                    memmodel::true_mbs(&m, psi, p.stage(), n_active, spec.mem_bytes());
+                assert!(
+                    mbs >= 1,
+                    "seed {seed} step {step}: ZeRO-{} breaks the bound for {gpu} \
+                     (n={n_active})",
+                    p.stage()
+                );
+            }
+            // and the manifest migrated with the stage
+            assert_eq!(p.manifest().unwrap().stage, p.stage());
+        }
     }
 }
 

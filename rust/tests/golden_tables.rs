@@ -64,3 +64,10 @@ fn golden_fig_autoscale_frontier() {
         poplar::exp::fig_autoscale::run().unwrap().to_markdown()
     });
 }
+
+#[test]
+fn golden_fig_stage_migration_decisions() {
+    check_golden("fig_stage_migration", || {
+        poplar::exp::fig_stage_migration::run().unwrap().to_markdown()
+    });
+}

@@ -194,7 +194,7 @@ fn prop_spline_interpolation_and_smoothness() {
         let mut rng = Rng::new(seed + 6000);
         let n = rng.range(3, 20) as usize;
         let mut xs: Vec<f64> = (0..n).map(|i| i as f64 + rng.uniform() * 0.5).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
         if xs.len() < 3 {
             continue;
