@@ -26,12 +26,15 @@
 //!   triggers it must amortize it too;
 //! * **decision** — the gain is amortized over `[autoscale] horizon_s`
 //!   (the expected tenure of the candidate before the next membership
-//!   change): with `stall = reshard + est. profiling`,
-//!   `gain = post_rate·(horizon − stall) − pre_rate·horizon`, and the
-//!   offer is **accepted** when `gain / (pre_rate·horizon) ≥ min_gain`
-//!   on a cached curve, **deferred** (profile before committing) when
-//!   only the synthesized estimate clears the bar, and **rejected**
-//!   otherwise;
+//!   change) by the shared scoring kernel
+//!   ([`crate::policy::amortized_score`], this module is a thin adapter
+//!   over it) with a reshard + profiling stall ledger; the offer is
+//!   **accepted** when the amortized relative gain clears `min_gain` on
+//!   a cached curve, **deferred** (profile before committing) when only
+//!   the synthesized estimate clears the bar, and **rejected**
+//!   otherwise. Joint multi-offer rounds and scale-down decisions are
+//!   [`crate::policy::decide_round`]'s job — this adapter prices one
+//!   offer at a time;
 //! * **frontier** — every offer is also placed on the cluster-level
 //!   cost/throughput plane (samples/s vs $/sample from per-type $/hr
 //!   prices), and the Pareto-optimal set is reported, so an operator
@@ -101,19 +104,26 @@ impl Default for AutoscaleOptions {
     }
 }
 
+/// Effective $/hr for a GPU type given override pairs: explicit
+/// override, then the built-in table, then $0 (unknown types) — the ONE
+/// price-resolution rule, shared with the round engine's options.
+pub(crate) fn price_lookup(prices: &[(String, f64)], gpu: &str) -> f64 {
+    prices
+        .iter()
+        .find(|(g, _)| g == gpu)
+        .map(|(_, p)| *p)
+        .or_else(|| default_price_per_hour(gpu))
+        .unwrap_or(0.0)
+}
+
 impl AutoscaleOptions {
     /// Effective $/hr for a GPU type: explicit override, then the
     /// built-in table, then $0 (unknown types).
     pub fn price_per_hour(&self, gpu: &str) -> f64 {
-        self.prices
-            .iter()
-            .find(|(g, _)| g == gpu)
-            .map(|(_, p)| *p)
-            .or_else(|| default_price_per_hour(gpu))
-            .unwrap_or(0.0)
+        price_lookup(&self.prices, gpu)
     }
 
-    fn validate(&self) -> Result<(), AutoscaleError> {
+    pub(crate) fn validate(&self) -> Result<(), AutoscaleError> {
         if !self.horizon_s.is_finite() || self.horizon_s <= 0.0 {
             return Err(AutoscaleError::BadOptions(format!(
                 "horizon_s must be finite and > 0, got {}",
@@ -407,11 +417,18 @@ fn decide_offer(
 
     // amortized accounting: the reshard stalls the whole cluster once,
     // and an uncached type additionally pays Algorithm 1 before its
-    // first productive iteration
+    // first productive iteration — scored by the shared kernel
+    // (`policy::amortized_score`) over a typed stall ledger
     let profile_est_s = if pv.curve_cached { 0.0 } else { profile_cost_estimate_s(&pv.curve) };
-    let stall_s = pv.reshard_penalty_s + profile_est_s;
+    let ledger = crate::policy::StallLedger {
+        reshard_transfer_s: pv.reshard_penalty_s,
+        profiling_est_s: profile_est_s,
+        ..Default::default()
+    };
+    let stall_s = ledger.total();
     let horizon = opts.horizon_s;
-    let gain_samples = post_rate * (horizon - stall_s).max(0.0) - pre_rate * horizon;
+    let gain_samples =
+        crate::policy::amortized_gain_samples(pre_rate, post_rate, horizon, &ledger);
     let rel_gain = gain_samples / (pre_rate * horizon);
 
     let (decision, mut reason) = if rel_gain >= opts.min_gain {

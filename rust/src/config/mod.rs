@@ -20,10 +20,16 @@
 //! [ckpt]
 //! dir = "artifacts/ckpt"
 //!
+//! # optional: shared knobs of the unified decision engine — every
+//! # amortized decision (admission, scale-down, stage migration) reads
+//! # the same horizon unless [autoscale] overrides it
+//! [policy]
+//! horizon_s = 300          # expected tenure (amortization window)
+//!
 //! # optional: cost-aware admission policy — `RankJoined` events become
 //! # offers the policy may decline (poplar elastic / poplar autoscale)
 //! [autoscale]
-//! horizon_s = 300          # expected candidate tenure (amortization window)
+//! horizon_s = 300          # defaults to [policy] horizon_s when set
 //! min_gain = 0.02          # minimum amortized relative gain to admit
 //! [[autoscale.prices]]     # $/hr overrides of the built-in price table
 //! gpu = "A800-80G"
@@ -122,6 +128,22 @@ pub struct ElasticConfig {
     pub events: Vec<ScheduledEvent>,
 }
 
+/// Shared knobs of the unified decision engine (`[policy]`): the one
+/// amortization horizon every decision — offer admission, scale-down,
+/// stage migration — reads unless `[autoscale]` overrides it.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Amortization horizon in seconds (expected tenure before the next
+    /// membership event re-prices everything).
+    pub horizon_s: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig { horizon_s: crate::autoscale::DEFAULT_HORIZON_S }
+    }
+}
+
 /// Checkpoint section: where optimizer-shard manifests persist so a
 /// `RankLost` costs resharding, not recomputation.
 #[derive(Debug, Clone)]
@@ -152,6 +174,8 @@ pub struct JobConfig {
     /// Optional cost-aware admission policy (`[autoscale]` section):
     /// when present, elastic `RankJoined` events become offers.
     pub autoscale: Option<AutoscaleOptions>,
+    /// Optional shared decision-engine knobs (`[policy]` section).
+    pub policy: Option<PolicyConfig>,
 }
 
 /// Errors from loading/validating a config.
@@ -355,11 +379,27 @@ impl JobConfig {
             None
         };
 
-        // ---- autoscale (optional) ----
+        // ---- policy (optional, shared) ----
+        let policy = if d.has_table("policy") {
+            let horizon_s =
+                d.float("policy.horizon_s").unwrap_or(crate::autoscale::DEFAULT_HORIZON_S);
+            if !horizon_s.is_finite() || horizon_s <= 0.0 {
+                return Err(invalid("policy.horizon_s must be finite and > 0"));
+            }
+            Some(PolicyConfig { horizon_s })
+        } else {
+            None
+        };
+
+        // ---- autoscale (optional; horizon_s defaults to [policy]'s so
+        // every amortized decision shares one window unless overridden) ----
         let autoscale = if d.has_table("autoscale") {
-            let horizon_s = d
-                .float("autoscale.horizon_s")
-                .unwrap_or(crate::autoscale::DEFAULT_HORIZON_S);
+            let horizon_s = d.float("autoscale.horizon_s").unwrap_or_else(|| {
+                policy
+                    .as_ref()
+                    .map(|p| p.horizon_s)
+                    .unwrap_or(crate::autoscale::DEFAULT_HORIZON_S)
+            });
             if !horizon_s.is_finite() || horizon_s <= 0.0 {
                 return Err(invalid("autoscale.horizon_s must be finite and > 0"));
             }
@@ -403,7 +443,7 @@ impl JobConfig {
             None
         };
 
-        let cfg = JobConfig { model, cluster, training, elastic, ckpt, autoscale };
+        let cfg = JobConfig { model, cluster, training, elastic, ckpt, autoscale, policy };
         if cfg.gbs_samples() == 0 {
             return Err(invalid("global_batch_tokens smaller than one sequence"));
         }
@@ -619,6 +659,31 @@ mod tests {
         assert_eq!(a.price_per_hour("A800-80G"), 2.95);
         // un-overridden types still hit the built-in table
         assert!(a.price_per_hour("T4") > 0.0);
+    }
+
+    #[test]
+    fn policy_section_parses_and_shares_its_horizon() {
+        assert!(JobConfig::from_toml(GOOD).unwrap().policy.is_none());
+        // bare [policy] means the default horizon
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[policy]\n")).unwrap();
+        assert_eq!(
+            cfg.policy.unwrap().horizon_s,
+            crate::autoscale::DEFAULT_HORIZON_S
+        );
+        // [autoscale] without its own horizon inherits [policy]'s…
+        let toml = format!("{GOOD}\n[policy]\nhorizon_s = 120\n[autoscale]\n");
+        let cfg = JobConfig::from_toml(&toml).unwrap();
+        assert_eq!(cfg.policy.as_ref().unwrap().horizon_s, 120.0);
+        assert_eq!(cfg.autoscale.unwrap().horizon_s, 120.0);
+        // …while an explicit [autoscale] horizon_s is still accepted
+        let toml =
+            format!("{GOOD}\n[policy]\nhorizon_s = 120\n[autoscale]\nhorizon_s = 600\n");
+        assert_eq!(JobConfig::from_toml(&toml).unwrap().autoscale.unwrap().horizon_s, 600.0);
+        // invalid horizons are config errors
+        let bad = format!("{GOOD}\n[policy]\nhorizon_s = 0\n");
+        assert!(JobConfig::from_toml(&bad).is_err());
+        let bad = format!("{GOOD}\n[policy]\nhorizon_s = -3\n");
+        assert!(JobConfig::from_toml(&bad).is_err());
     }
 
     #[test]

@@ -86,12 +86,14 @@ pub struct ElasticOptions {
     /// every plan (`[ckpt] dir` in config; `None` disables persistence).
     pub ckpt_dir: Option<std::path::PathBuf>,
     /// Cost-aware admission policy (`[autoscale]` in config). When set,
-    /// `RankJoined` events become *offers*: the policy predicts the
-    /// post-admission throughput (zero profiling for cached curve
-    /// types), amortizes the measured reshard penalty over its horizon,
-    /// and may decline the join — a declined offer never mutates the
-    /// planner or spawns a worker. `None` keeps the PR 1 behaviour:
-    /// every join is admitted.
+    /// `RankJoined` events become *offers* and each iteration's batch
+    /// is priced JOINTLY by the unified engine
+    /// (`crate::policy::decide_round`): one combined reshard stall per
+    /// round, so a weak offer with a positive marginal contribution is
+    /// admitted alongside a strong batch-mate that the old
+    /// one-at-a-time rule would decline. A declined offer never
+    /// mutates the planner or spawns a worker. `None` keeps the PR 1
+    /// behaviour: every join is admitted.
     pub autoscale: Option<crate::autoscale::AutoscaleOptions>,
     /// Make the ZeRO stage a replan-time decision (`[elastic]
     /// allow_stage_change` / `poplar elastic --allow-stage-change`):
@@ -102,6 +104,11 @@ pub struct ElasticOptions {
     /// amortized gain beats the incumbent. `false` keeps the stage
     /// fixed after the initial escalation.
     pub allow_stage_change: bool,
+    /// Shared amortization horizon from the `[policy]` config section.
+    /// Used for the stage search when `[autoscale]` is not configured
+    /// (with `[autoscale]` present, its — possibly `[policy]`-inherited
+    /// — horizon wins, keeping the two searches consistent).
+    pub policy_horizon_s: Option<f64>,
 }
 
 impl Default for ElasticOptions {
@@ -112,6 +119,7 @@ impl Default for ElasticOptions {
             ckpt_dir: None,
             autoscale: None,
             allow_stage_change: false,
+            policy_horizon_s: None,
         }
     }
 }
@@ -603,11 +611,14 @@ impl Leader {
         if opts.allow_stage_change {
             // same horizon semantics as autoscale: the expected time
             // until the next membership event re-prices everything
+            // ([autoscale] horizon wins, then the shared [policy] one)
             planner.set_stage_policy(Some(elastic::StagePolicy {
                 horizon_s: opts
                     .autoscale
                     .as_ref()
-                    .map_or(crate::autoscale::DEFAULT_HORIZON_S, |a| a.horizon_s),
+                    .map(|a| a.horizon_s)
+                    .or(opts.policy_horizon_s)
+                    .unwrap_or(crate::autoscale::DEFAULT_HORIZON_S),
             }));
         }
         let curves = fit_curves(&profile)?;
@@ -638,13 +649,12 @@ impl Leader {
 
             // (1) apply due events. Losses and slowdowns first (in
             // schedule order), then joins as a batch: with `[autoscale]`
-            // configured, each join is an *offer* the policy may decline
-            // (zero profiling when the type's curve is cached, the
-            // measured reshard penalty amortized over its horizon), and
-            // all offers of one iteration are evaluated against the same
-            // pre-admission state — an earlier deferred (not yet
-            // profiled) joiner must not make its batch-mates
-            // unevaluable. Declining touches nothing.
+            // configured the batch is one joint *round*
+            // (`policy::decide_round`) evaluated against the
+            // pre-admission state — one combined reshard stall, so an
+            // earlier deferred (not yet profiled) joiner can neither
+            // make its batch-mates unevaluable nor charge them a second
+            // stall. Declining touches nothing.
             let due: Vec<&ScheduledEvent> =
                 schedule.iter().filter(|e| e.at_iter == iter).collect();
             for ev in &due {
@@ -671,56 +681,122 @@ impl Leader {
                     Err(e) => events.push(format!("skipped {}: {e}", ev.event.label())),
                 }
             }
-            // evaluate every offer of the batch before admitting any
-            let verdicts: Vec<(&ScheduledEvent, Option<Result<_, String>>)> = due
+            // evaluate every offer of the batch before admitting any —
+            // jointly, through the unified round engine
+            // (`policy::decide_round`): the whole batch is priced as ONE
+            // admission paying ONE reshard, so an offer with a positive
+            // marginal contribution is admitted even when the
+            // one-at-a-time rule would decline it solo. Declining still
+            // touches nothing.
+            let join_events: Vec<&ScheduledEvent> = due
                 .iter()
                 .filter(|ev| matches!(ev.event, ElasticEvent::RankJoined { .. }))
-                .map(|ev| {
+                .copied()
+                .collect();
+            let round = match &opts.autoscale {
+                Some(a) if !join_events.is_empty() => {
+                    let offers: Vec<String> = join_events
+                        .iter()
+                        .map(|ev| match &ev.event {
+                            ElasticEvent::RankJoined { gpu } => gpu.clone(),
+                            _ => unreachable!("filtered above"),
+                        })
+                        .collect();
+                    let ropts = crate::policy::RoundOptions::from_autoscale(a);
+                    Some(crate::policy::decide_round(
+                        &planner, &self.net, &self.model, &offers, &ropts,
+                    ))
+                }
+                _ => None,
+            };
+            enum JoinVerdict {
+                Admit(&'static str),
+                Decline(String),
+                Skip(String),
+            }
+            // decide phase (read-only), then act phase (mutating) — the
+            // decisions come from the joint round; if the round itself
+            // could not be priced (e.g. an oversized batch), fall back
+            // to the PR-3 per-offer rule instead of dropping the batch
+            let verdicts: Vec<JoinVerdict> = join_events
+                .iter()
+                .enumerate()
+                .map(|(j, ev)| {
                     let ElasticEvent::RankJoined { gpu } = &ev.event else {
-                        unreachable!("filtered above")
+                        unreachable!("joins only")
                     };
-                    let verdict = opts.autoscale.as_ref().map(|a| {
-                        crate::autoscale::evaluate_offer(
-                            &planner, &self.net, &self.model, gpu, a,
-                        )
-                        .map_err(|e| e.to_string())
-                    });
-                    (*ev, verdict)
+                    match &round {
+                        None => JoinVerdict::Admit(""),
+                        Some(Ok(r)) => match &r.offers[j].action {
+                            crate::policy::Action::Decline { .. } => {
+                                JoinVerdict::Decline(r.offers[j].reason.clone())
+                            }
+                            crate::policy::Action::Defer { .. } => {
+                                JoinVerdict::Admit("deferred->profiling ")
+                            }
+                            _ => JoinVerdict::Admit("accepted "),
+                        },
+                        Some(Err(e)) => {
+                            match crate::autoscale::evaluate_offer(
+                                &planner,
+                                &self.net,
+                                &self.model,
+                                gpu,
+                                opts.autoscale.as_ref().expect("a round implies autoscale"),
+                            ) {
+                                Err(pe) => JoinVerdict::Skip(format!(
+                                    "offer evaluation failed: {e}; solo fallback: {pe}"
+                                )),
+                                Ok(d) => match d.decision {
+                                    crate::autoscale::Decision::Reject => {
+                                        JoinVerdict::Decline(d.reason)
+                                    }
+                                    crate::autoscale::Decision::Defer => {
+                                        JoinVerdict::Admit("deferred->profiling ")
+                                    }
+                                    crate::autoscale::Decision::Accept => {
+                                        JoinVerdict::Admit("accepted ")
+                                    }
+                                },
+                            }
+                        }
+                    }
                 })
                 .collect();
-            for (ev, verdict) in verdicts {
+            if let Some(Ok(r)) = &round {
+                // the round's stage choice is advisory pricing: the
+                // replan below re-runs its own (kernel-identical) stage
+                // search over the admitted membership, and that search
+                // is what actually migrates — surface the divergence
+                // point in the log
+                if r.stage != r.stage_before && !r.admitted.is_empty() {
+                    events.push(format!(
+                        "offer round priced at ZeRO-{} (the replan's stage search \
+                         performs the migration)",
+                        r.stage
+                    ));
+                }
+            }
+            for (ev, verdict) in join_events.iter().zip(verdicts) {
                 let ElasticEvent::RankJoined { gpu } = &ev.event else {
                     unreachable!("joins only")
                 };
                 let outcome: Result<String, String> = match verdict {
-                    Some(Err(e)) => Err(format!("offer evaluation failed: {e}")),
-                    Some(Ok(d)) if d.decision == crate::autoscale::Decision::Reject => {
-                        // declined: no worker spawned, no planner slot,
-                        // no cache traffic
-                        Ok(format!("declined {}: {}", ev.event.label(), d.reason))
+                    // declined: no worker spawned, no planner slot, no
+                    // cache traffic
+                    JoinVerdict::Decline(reason) => {
+                        Ok(format!("declined {}: {reason}", ev.event.label()))
                     }
-                    verdict => {
-                        let prefix = match &verdict {
-                            Some(Ok(d))
-                                if d.decision == crate::autoscale::Decision::Defer =>
-                            {
-                                "deferred->profiling "
-                            }
-                            Some(Ok(_)) => "accepted ",
-                            _ => "",
-                        };
-                        self.add_simulated_rank(gpu).map_err(|e| e.to_string()).map(
-                            |slot| {
-                                let pslot = planner.add_slot(gpu);
-                                debug_assert_eq!(
-                                    slot, pslot,
-                                    "leader/planner slots diverged"
-                                );
-                                membership_changed = true;
-                                format!("{prefix}{}", ev.event.label())
-                            },
-                        )
-                    }
+                    JoinVerdict::Skip(reason) => Err(reason),
+                    JoinVerdict::Admit(prefix) => self
+                        .add_simulated_rank(gpu)
+                        .map_err(|e| e.to_string())
+                        .map(|slot| {
+                            let pslot = planner.add_slot(gpu);
+                            debug_assert_eq!(slot, pslot, "leader/planner slots diverged");
+                            membership_changed = true;
+                            format!("{prefix}{}", ev.event.label())
+                        }),
                 };
                 match outcome {
                     Ok(label) => events.push(label),
@@ -730,11 +806,15 @@ impl Leader {
 
             // (2a) incremental profiling: only ranks without a usable
             // curve (fresh joins), at the job's *current* stage. A
-            // joiner that cannot fit a single sample there is evicted,
-            // not fatal (stage migration to accommodate a joiner is a
-            // replan-time decision over already-admitted ranks).
+            // joiner that cannot fit a single sample there is NOT
+            // evicted up front when the stage search is on — the search
+            // evaluates its admission at every feasible measured stage
+            // and the replan below migrates there (it is evicted only
+            // if no such stage exists). Without the search, eviction as
+            // before.
             let stage_now = planner.stage();
             let need = planner.needs_profile();
+            let mut homeless: Vec<usize> = Vec::new();
             if !need.is_empty() {
                 let results = self.profile_slots(&need, stage_now)?;
                 for (&slot, result) in need.iter().zip(results) {
@@ -746,6 +826,13 @@ impl Leader {
                                 .install_curve(slot, curve, false)
                                 .map_err(|e| anyhow!("installing slot {slot} curve: {e}"))?;
                             reprofiled.push(slot);
+                        }
+                        None if opts.allow_stage_change => {
+                            homeless.push(slot);
+                            events.push(format!(
+                                "slot {slot} cannot fit a sample at ZeRO-{stage_now}: \
+                                 the stage search decides its admission stage"
+                            ));
                         }
                         None => {
                             planner
@@ -772,7 +859,7 @@ impl Leader {
             // Gated on membership events, not `n_now != n_prev`: a loss
             // and a join in the same iteration leave `n` unchanged but
             // still swap in curves from a different group size.
-            let n_now = planner.active_slots().len();
+            let mut n_now = planner.active_slots().len();
             // survivors that stopped fitting the incumbent stage: only a
             // stage migration can rescue them — tracked so a replan that
             // fails to migrate is a hard error, not a silent OOM-to-be
@@ -904,9 +991,35 @@ impl Leader {
             let mut reshard_bytes = 0u64;
             let mut replanned = false;
             if planner.dirty() {
-                planner
-                    .replan(&self.net)
-                    .map_err(|e| anyhow!("replan at iter {iter}: {e}"))?;
+                if let Err(e) = planner.replan(&self.net) {
+                    // the stage search found no feasible measured stage
+                    // for the homeless joiner(s): evict them now — a
+                    // joiner is optional (a survivor in this state is
+                    // fatal below) — and replan over the rest
+                    let evictable = matches!(
+                        &e,
+                        elastic::ElasticError::MissingCurves(slots)
+                            if !homeless.is_empty()
+                                && slots.iter().all(|s| homeless.contains(s))
+                    );
+                    if !evictable {
+                        return Err(anyhow!("replan at iter {iter}: {e}"));
+                    }
+                    for &slot in &homeless {
+                        planner
+                            .lose_slot(slot)
+                            .map_err(|e| anyhow!("evicting slot {slot}: {e}"))?;
+                        self.remove_rank(slot)?;
+                        events.push(format!(
+                            "evicted joined slot {slot}: no feasible measured \
+                             admission stage"
+                        ));
+                    }
+                    n_now = planner.active_slots().len();
+                    planner
+                        .replan(&self.net)
+                        .map_err(|e| anyhow!("replan at iter {iter}: {e}"))?;
+                }
                 // a survivor stopped fitting the incumbent stage and the
                 // search found nowhere feasible+measured to migrate: the
                 // job cannot run without violating the memory bound —
@@ -1447,6 +1560,53 @@ mod tests {
         assert_eq!(rep.final_plan.total_samples(), 2048);
         rep.final_manifest.validate().unwrap();
         assert_eq!(rep.final_manifest.stage, 1);
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_homeless_joiner_migrates_stage_instead_of_eviction() {
+        // bert-1.1b replicated (ZeRO-0) cannot fit a T4: PR 4 evicted
+        // such joiners before the stage search ran. With the search on,
+        // (2c) measures the candidate stages and the replan admits the
+        // joiner at one of them instead.
+        let cluster = cluster::ClusterSpec {
+            name: "homeless-test".into(),
+            groups: vec![cluster::NodeGroup {
+                gpu: "A100-80G".into(),
+                count: 2,
+                intra_link: cluster::LinkKind::Ib,
+            }],
+            inter_link: cluster::LinkKind::Ib,
+        };
+        let mut l = Leader::new_simulated(&cluster, &preset("bert-1.1b").unwrap(), 0.0, 5);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "T4".into() })]);
+        let opts = ElasticOptions { allow_stage_change: true, ..Default::default() };
+        let rep = l.run_elastic_job(0, 32, 3, &schedule, &opts).unwrap();
+        assert_eq!(rep.stage, 0, "the big cards fit replicated ZeRO-0");
+        assert!(rep.final_stage > 0, "must migrate to admit the joiner");
+        assert_eq!(
+            rep.iterations[1].n_ranks, 3,
+            "the joiner is admitted, not evicted: {:?}",
+            rep.iterations[1].events
+        );
+        assert!(
+            rep.iterations[1]
+                .events
+                .iter()
+                .any(|e| e.contains("the stage search decides")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert!(
+            rep.iterations
+                .iter()
+                .all(|it| it.events.iter().all(|e| !e.contains("evicted"))),
+            "no eviction anywhere: {:?}",
+            rep.iterations
+        );
+        assert_eq!(rep.final_plan.ranks.len(), 3);
+        rep.final_plan.validate().unwrap();
+        assert_eq!(rep.final_manifest.stage, rep.final_stage);
         l.shutdown();
     }
 

@@ -43,8 +43,9 @@ pub use stage::{choose_stage, StageCandidate, StageChange, StagePolicy};
 
 use crate::allocator::{self, Plan, PlanError};
 use crate::ckpt::{self, ReshardPlan, ShardManifest};
-use crate::curves::PerfCurve;
+use crate::curves::{PerfCurve, ProfiledPoint};
 use crate::netsim::NetSim;
+use crate::policy::StallLedger;
 
 /// Default relative drift threshold: re-profile a rank when its observed
 /// micro-step time deviates from the curve prediction by more than 15%
@@ -368,9 +369,15 @@ impl ElasticPlanner {
     /// together, and the movement is priced by [`ckpt::migrate`] exactly
     /// like a reshard.
     pub fn replan(&mut self, net: &NetSim) -> Result<&Plan, ElasticError> {
-        let mut curves = self.active_curves()?;
         self.last_stage_change = None;
 
+        // the stage search runs BEFORE the all-curves precondition: a
+        // joiner that cannot fit (and so cannot be profiled) at the
+        // incumbent stage may still be admissible at a measured feasible
+        // stage — the search migrates there and the joiner's curve comes
+        // from the stage-keyed cache. stage_candidates itself only
+        // tolerates missing curves when the incumbent's memory bound is
+        // broken, so a merely-unprofiled fleet still errors below.
         if self.policy.is_some() {
             let (chosen, cands) = self.select_stage(net)?;
             if chosen != self.stage {
@@ -395,13 +402,47 @@ impl ElasticPlanner {
                         .expect("chosen stage comes from the candidate set");
                     let from = self.stage;
                     self.stage = chosen;
-                    for (slot, curve) in swapped {
+                    for (slot, healthy_new) in swapped {
+                        // carry the live drift factor across the switch:
+                        // a straggler's slowdown is a property of the
+                        // rank, not of the ZeRO stage — scale the healthy
+                        // type curve at the new stage by the observed
+                        // factor and keep the override flagged until
+                        // drift detection re-measures it there
+                        let factor = {
+                            let sl = &self.slots[slot];
+                            if sl.drifted {
+                                let healthy_old = self
+                                    .cache
+                                    .peek(&CurveKey::new(&sl.gpu, &self.model, from));
+                                match (&sl.curve, healthy_old) {
+                                    (Some(d), Some(h))
+                                        if d.peak_speed() > 0.0 && h.peak_speed() > 0.0 =>
+                                    {
+                                        h.peak_speed() / d.peak_speed()
+                                    }
+                                    _ => 1.0,
+                                }
+                            } else {
+                                1.0
+                            }
+                        };
+                        let scaled = if (factor - 1.0).abs() > 1e-9 {
+                            scale_curve(&healthy_new, factor)
+                        } else {
+                            None
+                        };
                         let sl = &mut self.slots[slot];
-                        sl.curve = Some(curve);
-                        // drift overrides were measured at the old stage:
-                        // the healthy type curve replaces them, and drift
-                        // detection re-flags stragglers at the new stage
-                        sl.drifted = false;
+                        match scaled {
+                            Some(c) => {
+                                sl.curve = Some(c);
+                                sl.drifted = true;
+                            }
+                            None => {
+                                sl.curve = Some(healthy_new);
+                                sl.drifted = false;
+                            }
+                        }
                     }
                     self.last_stage_change = Some(StageChange {
                         from,
@@ -409,10 +450,10 @@ impl ElasticPlanner {
                         migration_s: c.migration_s,
                         migration_bytes: c.migration_bytes,
                     });
-                    curves = self.active_curves()?;
                 }
             }
         }
+        let curves = self.active_curves()?;
 
         let plan = match &self.plan {
             Some(prev) => {
@@ -492,6 +533,8 @@ impl ElasticPlanner {
         };
         let horizon = policy.horizon_s;
         let n_after = self.active_slots().len() + 1;
+        // the shared amortized-scoring kernel over a reshard-only ledger
+        // (the preview's penalty already folds any stage re-layout in)
         let score = |pv: &JoinPreview| -> f64 {
             let wall = allocator::predicted_wall_s(
                 &pv.plan,
@@ -500,9 +543,11 @@ impl ElasticPlanner {
                 self.param_count,
             );
             match wall {
-                Ok(w) if w > 0.0 && horizon > 0.0 => {
-                    self.gbs as f64 / w * (horizon - pv.reshard_penalty_s).max(0.0) / horizon
-                }
+                Ok(w) if w > 0.0 => crate::policy::amortized_score(
+                    self.gbs as f64 / w,
+                    horizon,
+                    &StallLedger::reshard(pv.reshard_penalty_s),
+                ),
                 _ => 0.0,
             }
         };
@@ -520,14 +565,8 @@ impl ElasticPlanner {
             }
             // cache-only, and only curves measured at the post-admission
             // group size: a preview can neither profile nor tolerate a
-            // stale mbs (the (2b) staleness rule)
-            let measured = |g: &str| {
-                self.cache
-                    .peek(&CurveKey::new(g, &self.model, s))
-                    .is_some_and(|c| {
-                        !self.stage_curve_stale(Some(&model_spec), g, c, s, n_after)
-                    })
-            };
+            // stale mbs (the (2b) staleness rule, via `measured_at`)
+            let measured = |g: &str| self.measured_at(g, s, n_after).is_some();
             if !self.slots.iter().filter(|sl| sl.alive).all(|sl| measured(&sl.gpu))
                 || !measured(gpu)
             {
@@ -547,11 +586,12 @@ impl ElasticPlanner {
 
     /// The single-stage preview primitive behind
     /// [`ElasticPlanner::preview_join`]: admit one rank of `gpu` and
-    /// plan at `stage`. For the current stage the live slot curves are
-    /// used as-is and `fallback` may stand in for an uncached joiner;
-    /// for any other stage *every* type must have a cached curve
-    /// (`NoCurve` otherwise — estimates are the caller's policy
-    /// decision, not this primitive's).
+    /// plan at `stage`. A thin wrapper over the batch primitive
+    /// [`ElasticPlanner::preview_round_at`]; for the current stage the
+    /// live slot curves are used as-is and `fallback` may stand in for
+    /// an uncached joiner; for any other stage *every* type must have a
+    /// cached curve (`NoCurve` otherwise — estimates are the caller's
+    /// policy decision, not this primitive's).
     pub fn preview_join_at(
         &self,
         stage: u8,
@@ -559,6 +599,43 @@ impl ElasticPlanner {
         fallback: Option<&PerfCurve>,
         net: &NetSim,
     ) -> Result<JoinPreview, ElasticError> {
+        let gpus = [gpu.to_string()];
+        let fallbacks = [fallback.cloned()];
+        let rp = self.preview_round_at(stage, &gpus, &fallbacks, net)?;
+        let curve = rp.curves.last().cloned().expect("joiner curve appended");
+        Ok(JoinPreview {
+            gpu: gpu.to_string(),
+            stage,
+            curve,
+            curve_cached: rp.joiner_cached[0],
+            curves: rp.curves,
+            plan: rp.plan,
+            net: rp.net,
+            reshard_penalty_s: rp.reshard_penalty_s,
+            reshard_bytes: rp.reshard_bytes,
+        })
+    }
+
+    /// The batch admission preview: admit one rank of *each* entry of
+    /// `gpus` (duplicates allowed) and plan at `stage` — the primitive
+    /// behind both [`ElasticPlanner::preview_join_at`] and the joint
+    /// round engine (`crate::policy::decide_round`). The whole batch is
+    /// admitted in ONE replan, so the shard movement is priced as a
+    /// single combined `ckpt::migrate` — which is exactly why a joint
+    /// round can afford an offer the sequential rule declines.
+    ///
+    /// `fallbacks` is parallel to `gpus`: an estimate standing in for a
+    /// type uncached at the *current* stage (ignored elsewhere — at a
+    /// non-incumbent stage every type must be cached). Pure like
+    /// `preview_join`: no planner or cache state moves.
+    pub fn preview_round_at(
+        &self,
+        stage: u8,
+        gpus: &[String],
+        fallbacks: &[Option<PerfCurve>],
+        net: &NetSim,
+    ) -> Result<RoundPreview, ElasticError> {
+        debug_assert_eq!(gpus.len(), fallbacks.len(), "fallbacks parallel gpus");
         let mut curves = if stage == self.stage {
             self.active_curves()?
         } else {
@@ -576,15 +653,23 @@ impl ElasticPlanner {
                 })
                 .collect::<Result<Vec<_>, _>>()?
         };
-        let key = CurveKey::new(gpu, &self.model, stage);
-        let (curve, curve_cached) = match self.cache.peek(&key) {
-            Some(c) => (c.clone(), true),
-            None => match fallback.filter(|_| stage == self.stage) {
-                Some(c) => (c.clone(), false),
-                None => return Err(ElasticError::NoCurve(gpu.to_string())),
-            },
-        };
-        curves.push(curve.clone());
+        let mut joiner_cached = Vec::with_capacity(gpus.len());
+        for (i, gpu) in gpus.iter().enumerate() {
+            let key = CurveKey::new(gpu, &self.model, stage);
+            let (curve, cached) = match self.cache.peek(&key) {
+                Some(c) => (c.clone(), true),
+                None => match fallbacks
+                    .get(i)
+                    .and_then(|f| f.as_ref())
+                    .filter(|_| stage == self.stage)
+                {
+                    Some(c) => ((*c).clone(), false),
+                    None => return Err(ElasticError::NoCurve(gpu.to_string())),
+                },
+            };
+            joiner_cached.push(cached);
+            curves.push(curve);
+        }
 
         let mut net_after = net.clone();
         net_after.n = curves.len();
@@ -596,35 +681,112 @@ impl ElasticPlanner {
         }
         .map_err(ElasticError::Plan)?;
 
-        // hypothetical shard layout: the live slots plus the joiner at
-        // the slot id add_slot() would assign
+        // hypothetical shard layout: the live slots plus the joiners at
+        // the slot ids consecutive add_slot() calls would assign
         let mut live: Vec<(usize, String)> = self
             .slots
             .iter()
             .filter(|s| s.alive)
             .map(|s| (s.slot, s.gpu.clone()))
             .collect();
-        live.push((self.slots.len(), gpu.to_string()));
+        for (i, gpu) in gpus.iter().enumerate() {
+            live.push((self.slots.len() + i, gpu.clone()));
+        }
         let manifest =
             ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &self.manifest {
+            Some(old) => {
+                // migrate: folds a cross-stage re-layout and the batch's
+                // membership movement into one priced set
+                let r = ckpt::migrate(old, &manifest)
+                    .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+                let total = r.transfer_time_s(&net_after);
+                // itemize the pure stage re-layout (same membership, new
+                // stage) so the stall ledger can say why the round stalls
+                let mig = if stage != old.stage {
+                    old.migrate(stage)
+                        .map(|(_, p)| p.transfer_time_s(&net_after))
+                        .unwrap_or(0.0)
+                        .min(total)
+                } else {
+                    0.0
+                };
+                (total, r.bytes_moved(), mig)
+            }
+            // no plan yet: the state would be born sharded, nothing moves
+            None => (0.0, 0, 0.0),
+        };
+
+        Ok(RoundPreview {
+            stage,
+            gpus: gpus.to_vec(),
+            joiner_cached,
+            curves,
+            plan,
+            net: net_after,
+            reshard_penalty_s,
+            reshard_bytes,
+            migration_only_s,
+        })
+    }
+
+    /// Pure what-if of *releasing* a live rank (scale-down): the plan
+    /// over the survivors at the current stage, plus the measured cost
+    /// of re-absorbing the released rank's optimizer shard. The round
+    /// engine's `Release` arm prices candidates with this; nothing in
+    /// the planner moves.
+    pub fn preview_release(
+        &self,
+        slot: usize,
+        net: &NetSim,
+    ) -> Result<ReleasePreview, ElasticError> {
+        let s = self.slots.get(slot).ok_or(ElasticError::UnknownSlot(slot))?;
+        if !s.alive {
+            return Err(ElasticError::DeadSlot(slot));
+        }
+        let gpu = s.gpu.clone();
+        let mut curves = Vec::new();
+        let mut live: Vec<(usize, String)> = Vec::new();
+        for sl in self.slots.iter().filter(|x| x.alive && x.slot != slot) {
+            match &sl.curve {
+                Some(c) => curves.push(c.clone()),
+                None => return Err(ElasticError::MissingCurves(vec![sl.slot])),
+            }
+            live.push((sl.slot, sl.gpu.clone()));
+        }
+        if curves.is_empty() {
+            return Err(ElasticError::LastRank);
+        }
+        let mut net_after = net.clone();
+        net_after.n = curves.len();
+        let plan = match &self.plan {
+            Some(prev) => allocator::replan_with_stage(
+                prev,
+                &curves,
+                self.stage,
+                &net_after,
+                self.param_count,
+            ),
+            None => {
+                allocator::plan(&curves, self.stage, self.gbs, &net_after, self.param_count)
+            }
+        }
+        .map_err(ElasticError::Plan)?;
+        let manifest =
+            ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
+                .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
         let (reshard_penalty_s, reshard_bytes) = match &self.manifest {
             Some(old) => {
-                // migrate: folds a cross-stage re-layout and the join's
-                // membership movement into one priced set
                 let r = ckpt::migrate(old, &manifest)
                     .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
                 (r.transfer_time_s(&net_after), r.bytes_moved())
             }
-            // no plan yet: the state would be born sharded, nothing moves
             None => (0.0, 0),
         };
-
-        Ok(JoinPreview {
-            gpu: gpu.to_string(),
-            stage,
-            curve,
-            curve_cached,
+        Ok(ReleasePreview {
+            slot,
+            gpu,
             curves,
             plan,
             net: net_after,
@@ -729,6 +891,71 @@ pub struct JoinPreview {
     pub reshard_penalty_s: f64,
     /// Optimizer-state bytes that movement touches.
     pub reshard_bytes: u64,
+}
+
+/// Everything [`ElasticPlanner::preview_round_at`] predicts about
+/// admitting a batch of candidate ranks in one replan — a pure what-if.
+#[derive(Debug, Clone)]
+pub struct RoundPreview {
+    /// ZeRO stage the preview is priced at.
+    pub stage: u8,
+    /// Catalog GPU types of the batch, input order.
+    pub gpus: Vec<String>,
+    /// Per-joiner: true when the curve came from the type-level cache
+    /// (admissible with zero profiling calls), parallel to `gpus`.
+    pub joiner_cached: Vec<bool>,
+    /// The full post-admission curve set in plan-rank order (live ranks
+    /// then the joiners in batch order).
+    pub curves: Vec<PerfCurve>,
+    /// The would-be Algorithm 2 plan over live ranks + the batch.
+    pub plan: Plan,
+    /// Collective cost model at the post-admission group size.
+    pub net: NetSim,
+    /// Measured one-shot movement cost of the whole batch admission
+    /// (ONE combined `ckpt::migrate`, any stage re-layout folded in).
+    pub reshard_penalty_s: f64,
+    /// Optimizer-state bytes that movement touches.
+    pub reshard_bytes: u64,
+    /// The pure cross-stage re-layout priced alone (0 at the incumbent
+    /// stage) — the stall ledger's migration item; the membership share
+    /// is `reshard_penalty_s - migration_only_s`.
+    pub migration_only_s: f64,
+}
+
+/// Everything [`ElasticPlanner::preview_release`] predicts about
+/// releasing one paid rank — a pure what-if.
+#[derive(Debug, Clone)]
+pub struct ReleasePreview {
+    /// Leader slot id of the released rank.
+    pub slot: usize,
+    /// Catalog GPU type of the released rank.
+    pub gpu: String,
+    /// Survivor curves in plan-rank order.
+    pub curves: Vec<PerfCurve>,
+    /// The would-be Algorithm 2 plan over the survivors.
+    pub plan: Plan,
+    /// Collective cost model at the post-release group size.
+    pub net: NetSim,
+    /// Measured one-shot cost of re-absorbing the released shard.
+    pub reshard_penalty_s: f64,
+    /// Optimizer-state bytes that movement touches.
+    pub reshard_bytes: u64,
+}
+
+/// Scale a performance curve's step times by `factor` (finite, > 0) and
+/// refit — used to carry a rank-local drift override across a stage
+/// switch instead of silently resetting the straggler to the healthy
+/// type curve. `None` when the factor is unusable or the refit fails.
+fn scale_curve(c: &PerfCurve, factor: f64) -> Option<PerfCurve> {
+    if !(factor.is_finite() && factor > 0.0) {
+        return None;
+    }
+    let pts: Vec<ProfiledPoint> = c
+        .points()
+        .iter()
+        .map(|p| ProfiledPoint { batch: p.batch, step_time_s: p.step_time_s * factor })
+        .collect();
+    PerfCurve::fit(pts, c.mbs()).ok()
 }
 
 /// Compare observed per-micro-step compute times against the fitted
@@ -1055,6 +1282,33 @@ mod tests {
         assert_eq!((p.cache().hits(), p.cache().misses()), (hits0, misses0));
         assert_eq!(p.cache().lru_order(), lru0.as_slice());
         assert_eq!(p.manifest().unwrap(), &manifest0);
+    }
+
+    #[test]
+    fn preview_release_predicts_without_mutating() {
+        let mut p = planner_with(&[("A800-80G", 48), ("A800-80G", 48), ("V100S-32G", 16)]);
+        let net = NetSim::from_link(3, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        let manifest0 = p.manifest().unwrap().clone();
+        let (hits0, misses0) = (p.cache().hits(), p.cache().misses());
+        let pv = p.preview_release(2, &net).unwrap();
+        assert_eq!(pv.gpu, "V100S-32G");
+        assert_eq!(pv.slot, 2);
+        assert_eq!(pv.plan.ranks.len(), 2);
+        assert_eq!(pv.plan.total_samples(), 256);
+        assert_eq!(pv.net.n, 2);
+        // the released rank's shard must be re-absorbed: bytes move
+        assert!(pv.reshard_penalty_s > 0.0);
+        assert!(pv.reshard_bytes > 0);
+        // pure: nothing in the planner moved
+        assert!(p.slots()[2].alive);
+        assert!(!p.dirty());
+        assert_eq!(p.manifest().unwrap(), &manifest0);
+        assert_eq!((p.cache().hits(), p.cache().misses()), (hits0, misses0));
+        // typed errors for unknown and departed slots
+        assert_eq!(p.preview_release(9, &net).unwrap_err(), ElasticError::UnknownSlot(9));
+        p.lose_slot(1).unwrap();
+        assert_eq!(p.preview_release(1, &net).unwrap_err(), ElasticError::DeadSlot(1));
     }
 
     #[test]

@@ -20,12 +20,13 @@
 //!   they are measured, a catalog-FLOPs estimate scores the candidate
 //!   — estimate-based stages are never switched to outright, mirroring
 //!   the autoscale defer rule);
-//! * **decision** — the same horizon amortization as `autoscale`: with
-//!   `stall = ckpt::migrate transfer + est. Alg. 1 cost for uncached
-//!   (type, stage) pairs`, each candidate scores
-//!   `rate · max(0, horizon − stall) / horizon` (effective samples/s
-//!   over the candidate's expected tenure) and the job migrates only on
-//!   a strict improvement over the incumbent. Between the partitioned
+//! * **decision** — the shared amortized-scoring kernel
+//!   ([`crate::policy::amortized_score`]): each candidate's stall
+//!   ledger itemizes the `ckpt::migrate` transfer plus the estimated
+//!   Alg. 1 cost of its uncached `(type, stage)` pairs, the kernel
+//!   turns that into effective samples/s over the candidate's expected
+//!   tenure, and the job migrates only on a strict improvement over
+//!   the incumbent. Between the partitioned
 //!   stages the optimizer tiling is identical, so a 3→1 de-escalation
 //!   costs only the membership reshard; escalating *to* ZeRO-0 pays the
 //!   full replication broadcast ([`crate::ckpt::migrate`]).
@@ -37,11 +38,16 @@
 //! Straggler caveat: drift overrides are rank-local curves measured at
 //! the *current* stage; candidate stages are scored with healthy
 //! type-level curves, so a heavily drifted rank biases the comparison
-//! in the candidates' favor until its drift is re-measured there.
+//! in the candidates' favor until its drift is re-measured there. On an
+//! actual switch, though, the live drift factor is carried over: the
+//! straggler's slot gets the new stage's healthy curve scaled by its
+//! observed slowdown (still flagged as an override), not a silent reset
+//! to the healthy type curve.
 
 use crate::allocator::{self, predicted_wall_s};
 use crate::autoscale::{profile_cost_estimate_s, synthesize_curve, DEFAULT_HORIZON_S};
 use crate::ckpt::{self, ShardManifest};
+use crate::policy::{amortized_score, StallLedger};
 use crate::cluster::catalog;
 use crate::config::model::{preset, ModelSpec};
 use crate::curves::PerfCurve;
@@ -103,8 +109,9 @@ pub struct StageCandidate {
     /// Estimated Alg. 1 cost for the uncached `(type, stage)` pairs (0
     /// when fully cached).
     pub profile_est_s: f64,
-    /// Effective samples/s over the horizon:
-    /// `rate · max(0, horizon − migration − profiling) / horizon`.
+    /// Effective samples/s over the horizon — the
+    /// [`crate::policy::amortized_score`] kernel over the migration +
+    /// profiling stall ledger.
     pub score: f64,
 }
 
@@ -178,22 +185,66 @@ impl ElasticPlanner {
         n: usize,
         extra_gpu: Option<&str>,
     ) -> bool {
+        match extra_gpu {
+            Some(g) => self.stage_feasible_with(model, stage, n, &[g]),
+            None => self.stage_feasible_with(model, stage, n, &[]),
+        }
+    }
+
+    /// The batch form of the Alg. 1 memory bound: every live rank plus
+    /// each of `extra_gpus` (an admission batch; duplicates allowed)
+    /// fits at least one sample at `stage` with `n` total ranks. The
+    /// joint round engine (`crate::policy::decide_round`) checks
+    /// candidate `(subset, stage)` points with this.
+    pub fn stage_feasible_with(
+        &self,
+        model: &ModelSpec,
+        stage: u8,
+        n: usize,
+        extra_gpus: &[&str],
+    ) -> bool {
         let fits = |gpu: &str| {
             catalog::spec(gpu).is_some_and(|spec| {
                 memmodel::true_mbs(model, self.param_count, stage, n, spec.mem_bytes()) >= 1
             })
         };
         self.slots.iter().filter(|s| s.alive).all(|s| fits(&s.gpu))
-            && extra_gpu.is_none_or(fits)
+            && extra_gpus.iter().all(|g| fits(g))
+    }
+
+    /// The cached curve for `(gpu, stage)` *usable at group size `n`*:
+    /// a cache hit that also passes the (2b) staleness rule (its `mbs`
+    /// matches the memory model at `n`). `None` when uncached or stale —
+    /// the measured-coverage test every cross-stage decision
+    /// (`preview_join`, the stage search, the joint round engine) runs
+    /// before trusting a curve.
+    pub fn measured_at(&self, gpu: &str, stage: u8, n: usize) -> Option<&PerfCurve> {
+        let model_spec = self.model_spec();
+        self.cache
+            .peek(&CurveKey::new(gpu, &self.model, stage))
+            .filter(|c| !self.stage_curve_stale(model_spec.as_ref(), gpu, c, stage, n))
     }
 
     /// Evaluate every candidate stage 0..=3 for the *current* membership
     /// against the current layout. Pure: no planner state moves (curve
     /// lookups go through `CurveCache::peek`). Requires every live slot
-    /// profiled, like `replan` ([`ElasticError::MissingCurves`]).
+    /// profiled, like `replan` ([`ElasticError::MissingCurves`]) — with
+    /// ONE exception: when the incumbent stage's memory bound is broken
+    /// for the current membership (a joiner that cannot fit — and so
+    /// cannot be profiled — at the current stage), missing curves are
+    /// tolerated and the incumbent simply scores as unplannable, so the
+    /// search can admit the joiner at a feasible measured stage instead
+    /// of the leader evicting it before the search ever runs.
     pub fn stage_candidates(&self, net: &NetSim) -> Result<Vec<StageCandidate>, ElasticError> {
-        // same precondition as replan: the incumbent's curves must exist
-        let _ = self.active_curves()?;
+        let missing = self.needs_profile();
+        if !missing.is_empty() {
+            let incumbent_broken = self.model_spec().is_some_and(|m| {
+                !self.stage_feasible(&m, self.stage, self.active_slots().len(), None)
+            });
+            if !incumbent_broken {
+                return Err(ElasticError::MissingCurves(missing));
+            }
+        }
         let horizon = self
             .policy
             .as_ref()
@@ -293,11 +344,17 @@ impl ElasticPlanner {
             None => (0.0, 0),
         };
 
-        let score = if horizon > 0.0 {
-            rate_sps * (horizon - migration_s - profile_est_s).max(0.0) / horizon
-        } else {
-            0.0
-        };
+        // the shared amortized-scoring kernel over a migration +
+        // profiling ledger (one formula for the whole crate)
+        let score = amortized_score(
+            rate_sps,
+            horizon,
+            &StallLedger {
+                migration_transfer_s: migration_s,
+                profiling_est_s: profile_est_s,
+                ..Default::default()
+            },
+        );
         StageCandidate {
             stage,
             current,
@@ -549,6 +606,110 @@ mod tests {
         pairs.sort();
         pairs.dedup();
         assert_eq!(pairs.len(), before, "one request per (type, stage) pair");
+    }
+
+    #[test]
+    fn drift_override_carries_across_a_stage_switch() {
+        // regression (PR-4 gap): a straggler's slowdown used to be
+        // silently reset to the healthy type curve on migration. Now the
+        // live drift factor is re-applied to the new stage's curve and
+        // the slot stays flagged until drift detection re-measures it.
+        let (mut p, net) = socket_planner(None, 5);
+        p.replan(&net).unwrap();
+        let m = preset("llama-0.5b").unwrap();
+        let healthy = truth_curve("A800-80G", &m, 3, 4).unwrap();
+        let slow: Vec<ProfiledPoint> = healthy
+            .points()
+            .iter()
+            .map(|pt| ProfiledPoint { batch: pt.batch, step_time_s: pt.step_time_s * 2.0 })
+            .collect();
+        let mbs = healthy.mbs();
+        p.install_curve(0, PerfCurve::fit(slow, mbs).unwrap(), true).unwrap();
+        assert!(p.slots()[0].drifted);
+        p.set_stage_policy(Some(StagePolicy::default()));
+        p.add_slot("V100S-32G");
+        let net5 = NetSim::from_link(5, LinkKind::Socket);
+        p.replan(&net5).unwrap();
+        assert_eq!(p.stage(), 1, "the migration itself must still happen");
+        // slot 0 kept its override: still flagged, ~2x slower than the
+        // healthy ZeRO-1 curve its twin (slot 1) received
+        assert!(p.slots()[0].drifted, "drift must survive the migration");
+        assert!(!p.slots()[1].drifted);
+        let s0 = p.slots()[0].curve.as_ref().unwrap().peak_speed();
+        let s1 = p.slots()[1].curve.as_ref().unwrap().peak_speed();
+        let ratio = s1 / s0;
+        assert!(
+            (ratio - 2.0).abs() < 0.3,
+            "carried factor must stay ~2x, got {ratio:.3}"
+        );
+        p.plan().unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn homeless_joiner_is_admitted_at_a_feasible_measured_stage() {
+        // regression (PR-4 gap): bert-1.1b replicated (ZeRO-0) cannot
+        // fit a T4, and such joiners used to be evicted before the
+        // search ran. The search now runs first: with ZeRO-3 measured
+        // for every type at the new group size, the replan migrates and
+        // the joiner's curve comes straight off the stage-keyed cache.
+        let m = preset("bert-1.1b").unwrap();
+        let mut p = ElasticPlanner::new(0, 16, &m.name, m.param_count(), 16);
+        for _ in 0..2 {
+            let slot = p.add_slot("A100-80G");
+            if p.slots()[slot].curve.is_none() {
+                let pts = vec![
+                    ProfiledPoint { batch: 1, step_time_s: 0.1 },
+                    ProfiledPoint { batch: 2, step_time_s: 0.19 },
+                ];
+                p.install_curve(slot, PerfCurve::fit(pts, 2).unwrap(), false).unwrap();
+            }
+        }
+        let net2 = NetSim::from_link(2, LinkKind::Ib);
+        p.replan(&net2).unwrap();
+        p.set_stage_policy(Some(StagePolicy::default()));
+        for gpu in ["A100-80G", "T4"] {
+            let c = truth_curve(gpu, &m, 3, 3).expect("z3 fits both cards at n=3");
+            p.install_stage_curve(gpu, 3, c).unwrap();
+        }
+        let slot = p.add_slot("T4");
+        assert!(p.needs_profile().contains(&slot), "no T4 ZeRO-0 curve can exist");
+        let net3 = NetSim::from_link(3, LinkKind::Ib);
+        p.replan(&net3).unwrap();
+        assert_eq!(p.stage(), 3, "must escalate off the broken bound");
+        assert!(p.needs_profile().is_empty(), "joiner curve came from the cache");
+        assert_eq!(p.plan().unwrap().ranks.len(), 3, "admitted, not evicted");
+        p.plan().unwrap().validate().unwrap();
+        assert_eq!(p.manifest().unwrap().stage, 3);
+        assert_eq!(p.last_stage_change().unwrap().from, 0);
+    }
+
+    #[test]
+    fn merely_unprofiled_fleet_still_errors_missing_curves() {
+        // the homeless-joiner tolerance must NOT swallow the ordinary
+        // precondition: a joiner that FITS the incumbent stage but has
+        // no curve yet still fails replan with MissingCurves (the
+        // leader profiles it first), even with measured alternatives
+        // cached — no overeager migration away from profiling
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(3, 256, &m.name, m.param_count(), 16);
+        for gpu in ["A800-80G", "V100S-32G"] {
+            let slot = p.add_slot(gpu);
+            p.install_curve(slot, truth_curve(gpu, &m, 3, 2).unwrap(), false).unwrap();
+        }
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        p.set_stage_policy(Some(StagePolicy::default()));
+        for gpu in ["A800-80G", "V100S-32G", "T4"] {
+            if let Some(c) = truth_curve(gpu, &m, 1, 3) {
+                p.install_stage_curve(gpu, 1, c).unwrap();
+            }
+        }
+        let slot = p.add_slot("T4"); // fits ZeRO-3 fine, just unprofiled
+        assert!(matches!(
+            p.replan(&NetSim::from_link(3, LinkKind::Ib)),
+            Err(ElasticError::MissingCurves(s)) if s == vec![slot]
+        ));
+        assert_eq!(p.stage(), 3, "no migration happened");
     }
 
     #[test]

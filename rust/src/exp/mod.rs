@@ -19,6 +19,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig_autoscale;
 pub mod fig_elastic;
+pub mod fig_joint_admission;
 pub mod fig_stage_migration;
 pub mod table2;
 
@@ -192,6 +193,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
          fig_autoscale::run),
         ("fig_stage_migration", "Stage migration — replan-time ZeRO-stage re-selection",
          fig_stage_migration::run),
+        ("fig_joint_admission", "Joint admission + scale-down — the unified decision round",
+         fig_joint_admission::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

@@ -27,9 +27,10 @@
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan`/`replan_with_stage` for elastic re-allocation, `predicted_wall_s` cross-stage rate model |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
 //! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` + cross-stage `migrate` (partition↔partition free, →replicate priced broadcast) |
-//! | [`elastic`] | elastic runtime: membership events, stage-keyed curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`, replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
-//! | [`autoscale`] | cost-aware admission policy: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), amortizes the measured reshard penalty over a horizon, emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier; offers may re-stage under a `StagePolicy` |
-//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` turns joins into declinable offers; `allow_stage_change` migrates the ZeRO stage at replan time) |
+//! | [`elastic`] | elastic runtime: membership events, stage-keyed curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`/`preview_round_at`/`preview_release`, replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
+//! | [`policy`] | unified amortized-decision engine: THE scoring kernel (`amortized_score` over a typed `StallLedger`), the shared `Action` vocabulary, and `decide_round` — joint offer-subset × stage admission plus cost-adjusted scale-down (`Release`); every other module scores through it |
+//! | [`autoscale`] | cost-aware admission policy, a thin per-offer adapter over [`policy`]: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier; offers may re-stage under a `StagePolicy` |
+//! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` routes each iteration's offer batch through `policy::decide_round`; `allow_stage_change` migrates the ZeRO stage at replan time) |
 //! | [`runtime`] | PJRT: load HLO-text artifacts, per-batch executable cache |
 //! | [`train`] | real heterogeneous data-parallel training loop |
 //! | [`data`] | dynamic-batch loader, synthetic + tiny-corpus LM data |
@@ -50,6 +51,7 @@ pub mod exp;
 pub mod memmodel;
 pub mod metrics;
 pub mod netsim;
+pub mod policy;
 pub mod profiler;
 pub mod runtime;
 pub mod spline;

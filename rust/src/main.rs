@@ -15,6 +15,8 @@
 //! poplar autoscale --offer A800-80G,T4[,...] [--cluster cluster-C]
 //!                  [--model llama-0.5b] [--stage 1] [--gbs-tokens N]
 //!                  [--horizon 300] [--min-gain 0.02] [--noise 0.015]
+//!                  [--joint]     # joint subset round (policy::decide_round)
+//!                  [--release]   # also consider scale-down (implies round mode)
 //! poplar ckpt      save    --cluster cluster-C --model llama-0.5b [--stage 1]
 //!                          [--dir artifacts/ckpt] [--snapshot 0]
 //! poplar ckpt      inspect [--dir artifacts/ckpt | --path FILE]
@@ -22,7 +24,8 @@
 //!                          [--dir artifacts/ckpt | --path FILE] [--lost 7,3]
 //!                          [--stage N]   # != checkpoint stage: cross-stage migration
 //! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|
-//!                   fig_stage_migration|table2|ablation|all> [--out results]
+//!                   fig_stage_migration|fig_joint_admission|table2|ablation|all>
+//!                  [--out results]
 //! ```
 //!
 //! Arg parsing is hand-rolled: the offline image carries no clap.
@@ -138,10 +141,12 @@ fn print_help() {
          \x20           [--allow-stage-change]  # replan-time ZeRO-stage re-selection\n\
          \x20 autoscale --offer A800-80G,T4[,...] [--cluster C] [--model M] [--stage N]\n\
          \x20           [--gbs-tokens N] [--horizon 300] [--min-gain 0.02] [--noise S]\n\
+         \x20           [--joint]    # joint offer-subset round (one shared stall)\n\
+         \x20           [--release]  # also consider scale-down (implies round mode)\n\
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
          \x20 ckpt      restore --cluster C --model M [--lost 7,3] [--stage N]  # cross-stage migrates\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|table2|ablation|all> [--out results]\n"
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|table2|ablation|all> [--out results]\n"
     );
 }
 
@@ -313,6 +318,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
             ckpt_dir: ckpt_dir_flag.or_else(|| cfg.ckpt.as_ref().map(|c| c.dir.clone())),
             autoscale: cfg.autoscale.clone(),
             allow_stage_change: ecfg.allow_stage_change || stage_change_flag,
+            policy_horizon_s: cfg.policy.as_ref().map(|p| p.horizon_s),
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -428,16 +434,26 @@ fn parse_autoscale_flags(
 }
 
 fn cmd_autoscale(args: &[String]) -> Result<()> {
-    let (_, f) = parse_flags(args)?;
+    // --joint / --release are bare flags (no value): strip them before
+    // the `--key value` parser sees them. --joint prices the offer
+    // batch through the unified round engine (`policy::decide_round`,
+    // one shared stall per round) instead of one offer at a time;
+    // --release additionally considers scale-down.
+    let mut args = args.to_vec();
+    let joint = take_bare_flag(&mut args, "--joint");
+    let release = take_bare_flag(&mut args, "--release");
+    let (_, f) = parse_flags(&args)?;
     let offers: Vec<String> = f
         .get("offer")
-        .ok_or_else(|| anyhow!("--offer GPU[,GPU...] required (e.g. --offer A800-80G,T4)"))?
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
-    if offers.is_empty() {
-        bail!("--offer needs at least one GPU type");
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    if offers.is_empty() && !release {
+        bail!("--offer GPU[,GPU...] required (e.g. --offer A800-80G,T4) unless --release");
     }
     let cluster = resolve_cluster(f.get("cluster").map(String::as_str).unwrap_or("cluster-C"))?;
     let model = model_cfg::preset(f.get("model").map(String::as_str).unwrap_or("llama-0.5b"))
@@ -475,10 +491,57 @@ fn cmd_autoscale(args: &[String]) -> Result<()> {
     planner.replan(&net).map_err(|e| anyhow!("plan: {e}"))?;
     leader.shutdown();
 
+    if joint || release {
+        let ropts = poplar::policy::RoundOptions {
+            consider_release: release,
+            // the operator-facing table shows the greedy replay
+            with_sequential: true,
+            ..poplar::policy::RoundOptions::from_autoscale(&opts)
+        };
+        let round = poplar::policy::decide_round(&planner, &net, &model, &offers, &ropts)
+            .map_err(|e| anyhow!("{e}"))?;
+        print_round_plan(&round, &model.name, &cluster.name, stage);
+        return Ok(());
+    }
     let rep = poplar::autoscale::evaluate_offers(&planner, &net, &model, &offers, &opts)
         .map_err(|e| anyhow!("{e}"))?;
     print_autoscale_report(&rep, &model.name, &cluster.name, stage);
     Ok(())
+}
+
+fn describe_action(a: &poplar::policy::Action) -> String {
+    use poplar::policy::Action;
+    match a {
+        Action::Admit { gpu } => format!("admit {gpu}"),
+        Action::Defer { gpu } => format!("defer {gpu} (profile before committing)"),
+        Action::Decline { gpu } => format!("decline {gpu}"),
+        Action::Release { slot } => format!("release slot {slot}"),
+        Action::StageMigrate { from, to } => format!("migrate ZeRO-{from} -> ZeRO-{to}"),
+        Action::Stay => "stay".to_string(),
+    }
+}
+
+fn print_round_plan(
+    rep: &poplar::policy::RoundPlan,
+    model: &str,
+    cluster: &str,
+    stage: u8,
+) {
+    println!(
+        "autoscale round: {model} on {cluster} at ZeRO-{stage} — horizon {:.0}s, \
+         min gain {:.1}%",
+        rep.horizon_s,
+        rep.min_gain * 100.0
+    );
+    // same rendering as exp::fig_joint_admission — one source of truth
+    let mut t = Table::new(poplar::policy::ROUND_COLUMNS);
+    for row in poplar::policy::round_rows(rep) {
+        t.row(&row);
+    }
+    println!("{}", t.to_markdown());
+    for a in &rep.actions {
+        println!("  -> {}", describe_action(a));
+    }
 }
 
 fn print_autoscale_report(
@@ -693,6 +756,19 @@ mod tests {
     }
 
     #[test]
+    fn autoscale_joint_and_release_are_bare_flags() {
+        let mut a = args(&["--joint", "--release", "--offer", "T4"]);
+        assert!(take_bare_flag(&mut a, "--joint"));
+        assert!(take_bare_flag(&mut a, "--release"));
+        assert_eq!(a, args(&["--offer", "T4"]), "only the bare flags are removed");
+        // without --release, an empty offer list is still an error
+        let e = format!("{:#}", cmd_autoscale(&args(&[])).unwrap_err());
+        assert!(e.contains("--offer"), "{e}");
+        let e = format!("{:#}", cmd_autoscale(&args(&["--joint"])).unwrap_err());
+        assert!(e.contains("--offer"), "{e}");
+    }
+
+    #[test]
     fn allow_stage_change_is_a_bare_flag() {
         let mut a = args(&["--allow-stage-change", "--iters", "2"]);
         assert!(take_bare_flag(&mut a, "--allow-stage-change"));
@@ -739,6 +815,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             "fig_stage_migration",
             "Stage migration — replan-time ZeRO-stage re-selection",
             exp::fig_stage_migration::run,
+        )?,
+        "fig_joint_admission" => one(
+            "fig_joint_admission",
+            "Joint admission + scale-down — the unified decision round",
+            exp::fig_joint_admission::run,
         )?,
         other => bail!("unknown experiment {other:?}"),
     }

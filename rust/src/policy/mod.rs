@@ -1,0 +1,1176 @@
+//! Unified amortized-decision engine: ONE scoring kernel for every
+//! heterogeneity decision the runtime makes.
+//!
+//! Poplar's value is making *every* decision — admit a candidate, evict
+//! or release a paid rank, re-stage the optimizer layout — from measured
+//! curves with honest stall accounting (PAPER.md §Batch Allocation,
+//! Table 2). After PRs 3–4 the repo had three near-duplicate amortized
+//! scorers (`autoscale::decide_offer`, the elastic stage search, the
+//! leader's offer loop), and the two remaining autoscale capabilities —
+//! scale-down and joint multi-offer admission — could not be expressed
+//! in the one-offer-at-a-time shape at all. This module owns:
+//!
+//! * the **scoring kernel** [`amortized_score`] — the one place in the
+//!   crate where the amortization formula lives (CI greps for strays):
+//!   `score = rate · max(0, horizon − stall.total()) / horizon`, i.e.
+//!   the effective samples/s over the decision's expected tenure after
+//!   paying the one-shot stall up front;
+//! * the typed [`StallLedger`] itemizing that stall: reshard transfer
+//!   (membership movement), migration transfer (cross-stage re-layout)
+//!   and Algorithm 1 profiling estimates;
+//! * the [`Action`] vocabulary shared by every caller: `Admit`,
+//!   `Defer`, `Decline`, `Release`, `StageMigrate`, `Stay`;
+//! * the **joint round search** [`decide_round`]: instead of pricing
+//!   offers one at a time against the current state (the PR-3 greedy
+//!   rule), it evaluates offer *subsets* × candidate ZeRO stage
+//!   together — one admission round pays ONE reshard, so a weak offer
+//!   with a positive marginal contribution rides along with a strong
+//!   batch-mate that the sequential rule would have declined — and
+//!   additionally considers [`Action::Release`]-ing a paid rank when
+//!   the cost-adjusted (samples per dollar) frontier says dropping it
+//!   wins.
+//!
+//! `autoscale` and `elastic::stage` keep their public APIs as thin
+//! adapters over this kernel; `Leader::run_elastic_job` evaluates each
+//! iteration's offer batch through [`decide_round`];
+//! `poplar autoscale --joint` / `--release` expose the round search on
+//! the CLI and `exp::fig_joint_admission` snapshots it.
+
+use crate::allocator::{self, predicted_wall_s};
+use crate::autoscale::{
+    self, profile_cost_estimate_s, synthesize_curve, AutoscaleError, AutoscaleOptions,
+    Decision, OfferDecision, DEFAULT_HORIZON_S, DEFAULT_MIN_GAIN,
+};
+use crate::cluster::catalog;
+use crate::config::model::ModelSpec;
+use crate::curves::PerfCurve;
+use crate::elastic::{CurveKey, ElasticPlanner};
+use crate::netsim::NetSim;
+
+/// Upper bound on offers per joint round: the subset search is
+/// exponential in the batch size, and real spot offer batches are tiny.
+pub const MAX_OFFERS_PER_ROUND: usize = 6;
+
+/// Typed itemization of the one-shot stall a decision pays before its
+/// first productive iteration. The kernel only ever consumes
+/// [`StallLedger::total`]; the items exist so reports can say *why* a
+/// decision stalls (membership reshard vs stage re-layout vs Alg. 1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StallLedger {
+    /// Optimizer-shard movement from the membership change (seconds).
+    pub reshard_transfer_s: f64,
+    /// Cross-stage re-layout movement (`ckpt::migrate`), seconds.
+    pub migration_transfer_s: f64,
+    /// Estimated Algorithm 1 cost for uncached `(type, stage)` pairs.
+    pub profiling_est_s: f64,
+}
+
+impl StallLedger {
+    /// Ledger with only a membership-reshard item.
+    pub fn reshard(s: f64) -> Self {
+        StallLedger { reshard_transfer_s: s, ..Default::default() }
+    }
+
+    /// Ledger with only a cross-stage migration item.
+    pub fn migration(s: f64) -> Self {
+        StallLedger { migration_transfer_s: s, ..Default::default() }
+    }
+
+    /// Ledger with only an Alg. 1 profiling estimate.
+    pub fn profiling(s: f64) -> Self {
+        StallLedger { profiling_est_s: s, ..Default::default() }
+    }
+
+    /// Total stall the kernel amortizes.
+    pub fn total(&self) -> f64 {
+        self.reshard_transfer_s + self.migration_transfer_s + self.profiling_est_s
+    }
+}
+
+/// THE scoring kernel: effective samples/s of an operating point over
+/// the amortization horizon, after paying the ledger's one-shot stall.
+/// A stall at or beyond the horizon scores zero (the tenure ends before
+/// the first productive step); a non-positive or non-finite horizon
+/// scores zero. Every amortized decision in the crate — offer
+/// admission, scale-down, stage migration — is a comparison of values
+/// of this function.
+pub fn amortized_score(rate_sps: f64, horizon_s: f64, stall: &StallLedger) -> f64 {
+    if !horizon_s.is_finite() || horizon_s <= 0.0 {
+        return 0.0;
+    }
+    rate_sps * (horizon_s - stall.total()).max(0.0) / horizon_s
+}
+
+/// Net samples gained over the horizon by moving from `pre_rate` (no
+/// stall) to `post_rate` (paying `stall` first) — the quantity the
+/// autoscale adapter reports as `gain_samples`.
+pub fn amortized_gain_samples(
+    pre_rate: f64,
+    post_rate: f64,
+    horizon_s: f64,
+    stall: &StallLedger,
+) -> f64 {
+    (amortized_score(post_rate, horizon_s, stall) - pre_rate) * horizon_s
+}
+
+/// The shared decision vocabulary. Every engine verdict is one of
+/// these; adapters translate to their legacy enums where needed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Admit this offer on a measured curve.
+    Admit {
+        /// Catalog GPU type admitted.
+        gpu: String,
+    },
+    /// Admit looks worthwhile on a catalog estimate: profile first.
+    Defer {
+        /// Catalog GPU type deferred.
+        gpu: String,
+    },
+    /// Decline this offer.
+    Decline {
+        /// Catalog GPU type declined.
+        gpu: String,
+    },
+    /// Release a paid rank (scale-down).
+    Release {
+        /// Leader slot id released.
+        slot: usize,
+    },
+    /// Migrate the ZeRO stage as part of the round.
+    StageMigrate {
+        /// Stage before.
+        from: u8,
+        /// Stage after.
+        to: u8,
+    },
+    /// Keep the cluster exactly as it is.
+    Stay,
+}
+
+impl Action {
+    /// Short display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Action::Admit { .. } => "admit",
+            Action::Defer { .. } => "defer",
+            Action::Decline { .. } => "decline",
+            Action::Release { .. } => "release",
+            Action::StageMigrate { .. } => "migrate",
+            Action::Stay => "stay",
+        }
+    }
+}
+
+/// Knobs of the round engine (`[policy]` + `[autoscale]` in config).
+#[derive(Debug, Clone)]
+pub struct RoundOptions {
+    /// Amortization horizon in seconds (shared `[policy] horizon_s`).
+    pub horizon_s: f64,
+    /// Minimum amortized relative gain for the round to act.
+    pub min_gain: f64,
+    /// Per-type $/hr overrides of the built-in price table.
+    pub prices: Vec<(String, f64)>,
+    /// Consider releasing a paid rank when samples/$ says dropping it
+    /// wins (`poplar autoscale --release`).
+    pub consider_release: bool,
+    /// Also replay the offers through the sequential greedy rule for
+    /// comparison ([`RoundPlan::sequential`]). Report-only and not
+    /// free (a planner clone plus one replan per admitted offer), so
+    /// the leader leaves it off; the CLI and the figure turn it on.
+    pub with_sequential: bool,
+}
+
+impl Default for RoundOptions {
+    fn default() -> Self {
+        RoundOptions {
+            horizon_s: DEFAULT_HORIZON_S,
+            min_gain: DEFAULT_MIN_GAIN,
+            prices: Vec::new(),
+            consider_release: false,
+            with_sequential: false,
+        }
+    }
+}
+
+impl RoundOptions {
+    /// Round options inheriting an autoscale adapter's knobs.
+    pub fn from_autoscale(a: &AutoscaleOptions) -> Self {
+        RoundOptions {
+            horizon_s: a.horizon_s,
+            min_gain: a.min_gain,
+            prices: a.prices.clone(),
+            consider_release: false,
+            with_sequential: false,
+        }
+    }
+
+    /// The equivalent per-offer adapter options (solo verdicts).
+    pub fn to_autoscale(&self) -> AutoscaleOptions {
+        AutoscaleOptions {
+            horizon_s: self.horizon_s,
+            min_gain: self.min_gain,
+            prices: self.prices.clone(),
+        }
+    }
+
+    /// Effective $/hr for a GPU type (override, builtin, then $0) —
+    /// the same resolution rule as the autoscale adapter.
+    pub fn price_per_hour(&self, gpu: &str) -> f64 {
+        autoscale::price_lookup(&self.prices, gpu)
+    }
+}
+
+/// One offer's verdict inside a round, with the greedy one-at-a-time
+/// verdict alongside so reports can show where joint pricing diverges.
+#[derive(Debug, Clone)]
+pub struct OfferVerdict {
+    /// Catalog GPU type offered.
+    pub gpu: String,
+    /// The round engine's verdict for this offer.
+    pub action: Action,
+    /// What the PR-3 greedy rule (each offer priced alone against the
+    /// pre-admission state) decides for the same offer.
+    pub solo: Option<OfferDecision>,
+    /// One-line justification.
+    pub reason: String,
+}
+
+/// A paid rank the round decided to release (scale-down).
+#[derive(Debug, Clone)]
+pub struct ReleaseDecision {
+    /// Leader slot id released.
+    pub slot: usize,
+    /// Catalog GPU type of the released rank.
+    pub gpu: String,
+    /// Steady samples/s after the release.
+    pub rate_after: f64,
+    /// Amortized effective samples/s after the release (kernel value).
+    pub score_after: f64,
+    /// The release's one-shot stall (survivors absorb the shard).
+    pub stall: StallLedger,
+    /// Cluster $/hr before / after.
+    pub price_before_per_hour: f64,
+    /// Cluster $/hr after the release.
+    pub price_after_per_hour: f64,
+    /// $ per 1000 samples before the release.
+    pub cost_per_ksample_before: f64,
+    /// $ per 1000 samples after (amortized rate).
+    pub cost_per_ksample_after: f64,
+    /// Relative samples-per-dollar improvement (strictly positive and
+    /// at least `min_gain` whenever a release fires).
+    pub rel_gain_per_dollar: f64,
+    /// One-line justification.
+    pub reason: String,
+}
+
+/// Outcome of replaying the offers through the *sequential* greedy
+/// rule: admit-or-decline one at a time, each admission re-pricing the
+/// state and paying its own stall. The joint round is never worse.
+#[derive(Debug, Clone)]
+pub struct SequentialOutcome {
+    /// Offers admitted, in evaluation order.
+    pub admitted: Vec<String>,
+    /// Per-offer verdicts in evaluation order.
+    pub decisions: Vec<(String, Action)>,
+    /// Steady samples/s of the sequential end state.
+    pub rate: f64,
+    /// Kernel score of the end state with the summed per-step stalls.
+    pub score: f64,
+    /// `score / pre_rate - 1`.
+    pub rel_gain: f64,
+}
+
+/// Everything one joint decision round concluded.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Horizon the round amortized over.
+    pub horizon_s: f64,
+    /// Acceptance bar used.
+    pub min_gain: f64,
+    /// Steady samples/s of the keep-as-is baseline.
+    pub pre_rate: f64,
+    /// Steady samples/s of the chosen configuration.
+    pub post_rate: f64,
+    /// ZeRO stage before the round.
+    pub stage_before: u8,
+    /// ZeRO stage the chosen configuration runs at.
+    pub stage: u8,
+    /// The chosen configuration's one-shot stall, itemized.
+    pub ledger: StallLedger,
+    /// Kernel score of the chosen configuration.
+    pub score: f64,
+    /// `score / pre_rate - 1`.
+    pub rel_gain: f64,
+    /// Per-offer verdicts, offer order.
+    pub offers: Vec<OfferVerdict>,
+    /// Offers the round admits (measured curves) or defers (estimates),
+    /// i.e. the chosen subset in offer order.
+    pub admitted: Vec<String>,
+    /// Scale-down decision, when one fired.
+    pub release: Option<ReleaseDecision>,
+    /// The sequential greedy replay, for comparison — present only
+    /// when [`RoundOptions::with_sequential`] was set (and the replay
+    /// itself succeeded; it can never veto the round).
+    pub sequential: Option<SequentialOutcome>,
+    /// $ per 1000 samples before the round.
+    pub cost_per_ksample_before: f64,
+    /// $ per 1000 samples of the chosen configuration (amortized rate).
+    pub cost_per_ksample_after: f64,
+    /// Flat action summary (stage change first, then offers, then any
+    /// release; `Stay` when the round changes nothing).
+    pub actions: Vec<Action>,
+}
+
+fn cluster_price_per_hour(planner: &ElasticPlanner, opts: &RoundOptions) -> f64 {
+    planner
+        .slots()
+        .iter()
+        .filter(|s| s.alive)
+        .map(|s| opts.price_per_hour(&s.gpu))
+        .sum()
+}
+
+fn cost_per_ksample(price_per_hour: f64, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    price_per_hour / 3600.0 / rate * 1000.0
+}
+
+/// Baseline steady rate of the planner as it stands.
+fn baseline_rate(planner: &ElasticPlanner, net: &NetSim) -> Result<f64, AutoscaleError> {
+    let curves = planner.active_curves()?;
+    let psi = planner.param_count();
+    let mut net0 = net.clone();
+    net0.n = curves.len();
+    let plan = allocator::plan(&curves, planner.stage(), planner.gbs(), &net0, psi)?;
+    let wall = predicted_wall_s(&plan, &curves, &net0, psi)?;
+    if !(wall.is_finite() && wall > 0.0) {
+        return Err(AutoscaleError::BadOptions(format!(
+            "baseline wall time is not positive: {wall}"
+        )));
+    }
+    Ok(planner.gbs() as f64 / wall)
+}
+
+/// One evaluated `(offer subset, stage)` point of the round search.
+struct Candidate {
+    mask: usize,
+    stage: u8,
+    rate: f64,
+    ledger: StallLedger,
+    score: f64,
+    /// Per-member measured flag, subset order.
+    member_cached: Vec<bool>,
+}
+
+fn validate(opts: &RoundOptions) -> Result<(), AutoscaleError> {
+    // one rule for the whole crate: delegate to the adapter's validator
+    // (prices left empty — they carry no range constraints here)
+    AutoscaleOptions {
+        horizon_s: opts.horizon_s,
+        min_gain: opts.min_gain,
+        prices: Vec::new(),
+    }
+    .validate()
+}
+
+/// The joint decision round: evaluate every offer subset at every
+/// eligible ZeRO stage with ONE combined stall per configuration, pick
+/// the kernel-score maximum, and (with `consider_release`) check
+/// whether releasing a paid rank wins on the samples-per-dollar axis.
+///
+/// Decision rule: the round acts only when the best configuration's
+/// amortized relative gain clears `min_gain` against the keep-as-is
+/// baseline; within an acting round, every subset member with a
+/// positive marginal contribution is admitted — the bar prices the
+/// *round's* disruption, not each member's (that is exactly what the
+/// greedy one-at-a-time rule gets wrong). Candidate stages other than
+/// the incumbent are searched only when the planner carries a
+/// [`crate::elastic::StagePolicy`] and every involved type is measured
+/// there (the defer rule); offers that cannot fit the incumbent stage
+/// are still evaluated at every feasible admission stage instead of
+/// being dropped. A release is considered only in rounds that admit
+/// nothing (one manifest movement per round) and fires only with a
+/// strictly positive amortized samples-per-dollar gain of at least
+/// `min_gain`.
+///
+/// Pure: the planner (cache counters and LRU order included) is
+/// untouched whatever the verdict — previews go through the
+/// non-mutating `preview_round_at` / `preview_release` primitives.
+/// [`RoundPlan::stage`] is therefore *advisory pricing* for callers
+/// that replan with their own [`crate::elastic::StagePolicy`]: the
+/// replan's (kernel-identical) stage search over the post-admission
+/// membership performs any actual migration.
+pub fn decide_round(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    offers: &[String],
+    opts: &RoundOptions,
+) -> Result<RoundPlan, AutoscaleError> {
+    validate(opts)?;
+    if offers.len() > MAX_OFFERS_PER_ROUND {
+        return Err(AutoscaleError::BadOptions(format!(
+            "joint admission supports at most {MAX_OFFERS_PER_ROUND} offers per round, got {}",
+            offers.len()
+        )));
+    }
+    for gpu in offers {
+        if catalog::spec(gpu).is_none() {
+            return Err(AutoscaleError::UnknownGpu(gpu.clone()));
+        }
+    }
+
+    let psi = planner.param_count();
+    let gbs = planner.gbs() as f64;
+    let stage0 = planner.stage();
+    let n_live = planner.active_slots().len();
+    let pre_rate = baseline_rate(planner, net)?;
+    let pre_score = amortized_score(pre_rate, opts.horizon_s, &StallLedger::default());
+    let model_spec = crate::config::model::preset(planner.model());
+
+    // greedy one-at-a-time verdicts (the PR-3 rule) for comparison
+    let aopts = opts.to_autoscale();
+    let mut solo: Vec<Option<OfferDecision>> = Vec::with_capacity(offers.len());
+    for gpu in offers {
+        match autoscale::evaluate_offer(planner, net, model, gpu, &aopts) {
+            Ok(d) => solo.push(Some(d)),
+            // a candidate that cannot fit at the incumbent stage is a
+            // greedy decline, not a round-killing error — the joint
+            // search may still place it at another stage
+            Err(AutoscaleError::NoCapacity(_)) | Err(AutoscaleError::Elastic(_)) => {
+                solo.push(None)
+            }
+            Err(e) => return Err(e),
+        }
+    }
+
+    // ---- subset x stage search ----
+    let k = offers.len();
+    let mut best = Candidate {
+        mask: 0,
+        stage: stage0,
+        rate: pre_rate,
+        ledger: StallLedger::default(),
+        score: pre_score,
+        member_cached: Vec::new(),
+    };
+    for mask in 1usize..(1usize << k) {
+        let subset: Vec<String> = (0..k)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| offers[i].clone())
+            .collect();
+        let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
+        let n_after = n_live + subset.len();
+        for stage in (0..=3u8).rev() {
+            if stage != stage0 {
+                // non-incumbent stages: only under a stage policy, only
+                // when the memory bound holds and every involved type is
+                // measured there at the post-admission group size
+                if planner.stage_policy().is_none() {
+                    continue;
+                }
+                let Some(mspec) = &model_spec else { continue };
+                if !planner.stage_feasible_with(mspec, stage, n_after, &subset_refs) {
+                    continue;
+                }
+                let measured = |g: &str| planner.measured_at(g, stage, n_after).is_some();
+                if !planner
+                    .slots()
+                    .iter()
+                    .filter(|s| s.alive)
+                    .all(|s| measured(&s.gpu))
+                    || !subset_refs.iter().all(|g| measured(g))
+                {
+                    continue;
+                }
+            } else if let Some(mspec) = &model_spec {
+                // incumbent stage: the memory bound must still hold for
+                // the post-admission group (a member that cannot fit here
+                // is evaluated at the other stages instead)
+                if !planner.stage_feasible_with(mspec, stage, n_after, &subset_refs) {
+                    continue;
+                }
+            }
+
+            // fallback estimates for members uncached at the incumbent
+            let mut fallbacks: Vec<Option<PerfCurve>> = Vec::with_capacity(subset.len());
+            let mut admissible = true;
+            for gpu in &subset {
+                let key = CurveKey::new(gpu, planner.model(), stage);
+                if planner.cache().peek(&key).is_some() {
+                    fallbacks.push(None);
+                } else if stage == stage0 {
+                    match synthesize_curve(gpu, model, stage, n_after) {
+                        Ok(c) => fallbacks.push(Some(c)),
+                        Err(_) => {
+                            admissible = false;
+                            break;
+                        }
+                    }
+                } else {
+                    // unreachable given the measured() precheck
+                    admissible = false;
+                    break;
+                }
+            }
+            if !admissible {
+                continue;
+            }
+
+            let Ok(pv) = planner.preview_round_at(stage, &subset, &fallbacks, net) else {
+                continue;
+            };
+            let Ok(wall) = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, psi) else {
+                continue;
+            };
+            if !(wall.is_finite() && wall > 0.0) {
+                continue;
+            }
+            let rate = gbs / wall;
+
+            // one Alg. 1 per uncached member *type* — joint admission
+            // amortizes the reshard, not the profiling
+            let mut profiling = 0.0;
+            let mut priced: Vec<&str> = Vec::new();
+            for (i, gpu) in subset.iter().enumerate() {
+                if !pv.joiner_cached[i] && !priced.contains(&gpu.as_str()) {
+                    let idx = pv.curves.len() - subset.len() + i;
+                    profiling += profile_cost_estimate_s(&pv.curves[idx]);
+                    priced.push(gpu.as_str());
+                }
+            }
+            let migration = pv.migration_only_s.min(pv.reshard_penalty_s);
+            let ledger = StallLedger {
+                reshard_transfer_s: (pv.reshard_penalty_s - migration).max(0.0),
+                migration_transfer_s: migration,
+                profiling_est_s: profiling,
+            };
+            let score = amortized_score(rate, opts.horizon_s, &ledger);
+            if score > best.score {
+                best = Candidate {
+                    mask,
+                    stage,
+                    rate,
+                    ledger,
+                    score,
+                    member_cached: pv.joiner_cached.clone(),
+                };
+            }
+        }
+    }
+
+    // gate: an acting round must clear the bar; otherwise keep as-is
+    let mut rel_gain = if pre_rate > 0.0 { best.score / pre_rate - 1.0 } else { 0.0 };
+    if (best.mask != 0 || best.stage != stage0) && rel_gain < opts.min_gain {
+        best = Candidate {
+            mask: 0,
+            stage: stage0,
+            rate: pre_rate,
+            ledger: StallLedger::default(),
+            score: pre_score,
+            member_cached: Vec::new(),
+        };
+        rel_gain = if pre_rate > 0.0 { best.score / pre_rate - 1.0 } else { 0.0 };
+    }
+
+    // per-offer verdicts
+    let mut verdicts: Vec<OfferVerdict> = Vec::with_capacity(k);
+    let mut admitted: Vec<String> = Vec::new();
+    let mut member_idx = 0usize;
+    for (i, gpu) in offers.iter().enumerate() {
+        let in_best = best.mask & (1 << i) != 0;
+        let (action, reason) = if in_best {
+            let cached = best.member_cached.get(member_idx).copied().unwrap_or(true);
+            member_idx += 1;
+            admitted.push(gpu.clone());
+            if cached {
+                (
+                    Action::Admit { gpu: gpu.clone() },
+                    format!(
+                        "in the round's best batch at ZeRO-{} (round gain {:+.1}% over \
+                         {:.0}s, one shared stall {:.3}s)",
+                        best.stage,
+                        rel_gain * 100.0,
+                        opts.horizon_s,
+                        best.ledger.total()
+                    ),
+                )
+            } else {
+                (
+                    Action::Defer { gpu: gpu.clone() },
+                    "in the round's best batch on a catalog estimate: profile before \
+                     committing"
+                        .to_string(),
+                )
+            }
+        } else {
+            (
+                Action::Decline { gpu: gpu.clone() },
+                "no subset containing this offer beats the round's best configuration"
+                    .to_string(),
+            )
+        };
+        verdicts.push(OfferVerdict { gpu: gpu.clone(), action, solo: solo[i].clone(), reason });
+    }
+
+    // ---- scale-down ----
+    let price_pre = cluster_price_per_hour(planner, opts);
+    let cost_pre = cost_per_ksample(price_pre, pre_rate);
+    let release = if opts.consider_release && best.mask == 0 && best.stage == stage0 {
+        decide_release(planner, net, opts, pre_rate, price_pre, cost_pre)?
+    } else {
+        None
+    };
+
+    let price_post: f64 = price_pre
+        + admitted.iter().map(|g| opts.price_per_hour(g)).sum::<f64>()
+        - release.as_ref().map_or(0.0, |r| opts.price_per_hour(&r.gpu));
+    let (post_rate, score, ledger, stage, cost_post) = match &release {
+        Some(r) => (
+            r.rate_after,
+            r.score_after,
+            r.stall.clone(),
+            stage0,
+            r.cost_per_ksample_after,
+        ),
+        None => (
+            best.rate,
+            best.score,
+            best.ledger.clone(),
+            best.stage,
+            cost_per_ksample(price_post, best.score),
+        ),
+    };
+    let rel_gain = if pre_rate > 0.0 { score / pre_rate - 1.0 } else { 0.0 };
+
+    // the sequential replay is report-only comparison data: opt-in,
+    // skipped for offer-less rounds, and a failure inside it can never
+    // veto an otherwise-successful joint decision
+    let sequential = if opts.with_sequential && !offers.is_empty() {
+        sequential_round_inner(planner, net, model, offers, opts, pre_rate).ok()
+    } else {
+        None
+    };
+
+    let mut actions: Vec<Action> = Vec::new();
+    if stage != stage0 {
+        actions.push(Action::StageMigrate { from: stage0, to: stage });
+    }
+    for v in &verdicts {
+        actions.push(v.action.clone());
+    }
+    if let Some(r) = &release {
+        actions.push(Action::Release { slot: r.slot });
+    }
+    if actions.iter().all(|a| matches!(a, Action::Decline { .. })) {
+        actions.push(Action::Stay);
+    }
+
+    Ok(RoundPlan {
+        horizon_s: opts.horizon_s,
+        min_gain: opts.min_gain,
+        pre_rate,
+        post_rate,
+        stage_before: stage0,
+        stage,
+        ledger,
+        score,
+        rel_gain,
+        offers: verdicts,
+        admitted,
+        release,
+        sequential,
+        cost_per_ksample_before: cost_pre,
+        cost_per_ksample_after: cost_post,
+        actions,
+    })
+}
+
+/// The scale-down arm: release the live rank whose removal most
+/// improves amortized samples per dollar, if any clears `min_gain`.
+fn decide_release(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    opts: &RoundOptions,
+    pre_rate: f64,
+    price_pre: f64,
+    cost_pre: f64,
+) -> Result<Option<ReleaseDecision>, AutoscaleError> {
+    if !(price_pre.is_finite() && price_pre > 0.0 && pre_rate > 0.0) {
+        // unpriced fleet: the cost axis is meaningless, never release
+        return Ok(None);
+    }
+    let psi = planner.param_count();
+    let gbs = planner.gbs() as f64;
+    let value_pre = pre_rate / price_pre;
+    let model_spec = crate::config::model::preset(planner.model());
+    let n_after = planner.active_slots().len().saturating_sub(1);
+    let mut best: Option<ReleaseDecision> = None;
+    for sl in planner.slots().iter().filter(|s| s.alive) {
+        // the Alg. 1 memory bound must hold for every SURVIVOR at the
+        // shrunken group size: optimizer shards grow to 12ψ/(n-1), and
+        // a release that would OOM a survivor can never win — the
+        // survivors' curves were measured at n, so only the memory
+        // model can veto this (the leader's (2b) staleness pass
+        // re-measures them after an actual release)
+        if let Some(m) = &model_spec {
+            let survivors_fit = planner
+                .slots()
+                .iter()
+                .filter(|s| s.alive && s.slot != sl.slot)
+                .all(|s| {
+                    catalog::spec(&s.gpu).is_some_and(|spec| {
+                        crate::memmodel::true_mbs(
+                            m,
+                            psi,
+                            planner.stage(),
+                            n_after,
+                            spec.mem_bytes(),
+                        ) >= 1
+                    })
+                });
+            if !survivors_fit {
+                continue;
+            }
+        }
+        let Ok(pv) = planner.preview_release(sl.slot, net) else { continue };
+        let Ok(wall) = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, psi) else {
+            continue;
+        };
+        if !(wall.is_finite() && wall > 0.0) {
+            continue;
+        }
+        let rate_after = gbs / wall;
+        let stall = StallLedger::reshard(pv.reshard_penalty_s);
+        let score_after = amortized_score(rate_after, opts.horizon_s, &stall);
+        let price_after = price_pre - opts.price_per_hour(&sl.gpu);
+        if !(price_after.is_finite() && price_after > 0.0) {
+            continue;
+        }
+        let rel = (score_after / price_after) / value_pre - 1.0;
+        if rel <= 0.0 || rel < opts.min_gain {
+            continue;
+        }
+        if best.as_ref().is_some_and(|b| b.rel_gain_per_dollar >= rel) {
+            continue;
+        }
+        best = Some(ReleaseDecision {
+            slot: sl.slot,
+            gpu: sl.gpu.clone(),
+            rate_after,
+            score_after,
+            stall,
+            price_before_per_hour: price_pre,
+            price_after_per_hour: price_after,
+            cost_per_ksample_before: cost_pre,
+            cost_per_ksample_after: cost_per_ksample(price_after, score_after),
+            rel_gain_per_dollar: rel,
+            reason: format!(
+                "releasing slot {} ({}) raises amortized samples/$ by {:+.1}% \
+                 (rate {:.1}->{:.1} sps, ${:.2}->${:.2}/hr, stall {:.3}s)",
+                sl.slot,
+                sl.gpu,
+                rel * 100.0,
+                pre_rate,
+                rate_after,
+                price_pre,
+                price_after,
+                pv.reshard_penalty_s
+            ),
+        });
+    }
+    Ok(best)
+}
+
+/// Replay the offers through the sequential greedy rule (public for
+/// tests and the figure; [`decide_round`] embeds the result).
+pub fn sequential_round(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    offers: &[String],
+    opts: &RoundOptions,
+) -> Result<SequentialOutcome, AutoscaleError> {
+    validate(opts)?;
+    let pre_rate = baseline_rate(planner, net)?;
+    sequential_round_inner(planner, net, model, offers, opts, pre_rate)
+}
+
+fn sequential_round_inner(
+    planner: &ElasticPlanner,
+    net: &NetSim,
+    model: &ModelSpec,
+    offers: &[String],
+    opts: &RoundOptions,
+    pre_rate: f64,
+) -> Result<SequentialOutcome, AutoscaleError> {
+    let aopts = opts.to_autoscale();
+    let psi = planner.param_count();
+    let gbs = planner.gbs() as f64;
+    let mut sim = planner.clone();
+    let mut sim_net = net.clone();
+    let mut decisions: Vec<(String, Action)> = Vec::new();
+    let mut admitted: Vec<String> = Vec::new();
+    let mut ledger = StallLedger::default();
+    for gpu in offers {
+        sim_net.n = sim.active_slots().len();
+        let d = match autoscale::evaluate_offer(&sim, &sim_net, model, gpu, &aopts) {
+            Ok(d) => d,
+            Err(AutoscaleError::NoCapacity(_)) | Err(AutoscaleError::Elastic(_)) => {
+                decisions.push((gpu.clone(), Action::Decline { gpu: gpu.clone() }));
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if d.decision == Decision::Reject {
+            decisions.push((gpu.clone(), Action::Decline { gpu: gpu.clone() }));
+            continue;
+        }
+        // admit on the simulation clone, paying this step's own stall.
+        // A deferred (uncached) admission implies an Alg. 1 run before
+        // the next offer is seen — on the simulated substrate the
+        // catalog synthesizer IS what that run would measure, so
+        // installing it as a measured type curve (from_drift=false)
+        // models the post-profiling state; the profiling time itself is
+        // charged to the ledger below.
+        let slot = sim.add_slot(gpu);
+        if sim.needs_profile().contains(&slot) {
+            let n_after = sim.active_slots().len();
+            match synthesize_curve(gpu, model, sim.stage(), n_after) {
+                Ok(c) => sim.install_curve(slot, c, false)?,
+                Err(_) => {
+                    let _ = sim.lose_slot(slot);
+                    decisions.push((gpu.clone(), Action::Decline { gpu: gpu.clone() }));
+                    continue;
+                }
+            }
+        }
+        sim_net.n = sim.active_slots().len();
+        sim.replan(&sim_net)?;
+        ledger.reshard_transfer_s += d.reshard_penalty_s;
+        ledger.profiling_est_s += d.profile_est_s;
+        admitted.push(gpu.clone());
+        decisions.push((
+            gpu.clone(),
+            if d.decision == Decision::Accept {
+                Action::Admit { gpu: gpu.clone() }
+            } else {
+                Action::Defer { gpu: gpu.clone() }
+            },
+        ));
+    }
+    let curves = sim.active_curves()?;
+    sim_net.n = curves.len();
+    let plan = match sim.plan() {
+        Some(p) if !sim.dirty() => p.clone(),
+        _ => allocator::plan(&curves, sim.stage(), sim.gbs(), &sim_net, psi)?,
+    };
+    let wall = predicted_wall_s(&plan, &curves, &sim_net, psi)?;
+    let rate = if wall.is_finite() && wall > 0.0 { gbs / wall } else { 0.0 };
+    let score = amortized_score(rate, opts.horizon_s, &ledger);
+    Ok(SequentialOutcome {
+        admitted,
+        decisions,
+        rate,
+        score,
+        rel_gain: if pre_rate > 0.0 { score / pre_rate - 1.0 } else { 0.0 },
+    })
+}
+
+/// Shared rendering of a round: column headers…
+pub const ROUND_COLUMNS: &[&str] = &[
+    "subject",
+    "solo",
+    "joint",
+    "rate_sps",
+    "gain_pct",
+    "stall_s",
+    "usd_per_ksample",
+    "note",
+];
+
+/// …and one row vector per line — baseline, one per offer, the chosen
+/// round, the sequential replay, and any release. Shared by
+/// `poplar autoscale --joint` and `exp::fig_joint_admission` so the two
+/// can never drift apart.
+pub fn round_rows(rep: &RoundPlan) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    rows.push(vec![
+        "(baseline)".to_string(),
+        "-".to_string(),
+        "keep".to_string(),
+        format!("{:.1}", rep.pre_rate),
+        "-".to_string(),
+        "-".to_string(),
+        format!("{:.4}", rep.cost_per_ksample_before),
+        format!("ZeRO-{}", rep.stage_before),
+    ]);
+    for v in &rep.offers {
+        let (solo_label, solo_gain) = match &v.solo {
+            Some(d) => (d.decision.label().to_string(), format!("{:+.1}", d.rel_gain * 100.0)),
+            None => ("decline".to_string(), "-".to_string()),
+        };
+        rows.push(vec![
+            v.gpu.clone(),
+            format!("{solo_label} ({solo_gain}%)"),
+            v.action.label().to_string(),
+            v.solo
+                .as_ref()
+                .map_or("-".to_string(), |d| format!("{:.1}", d.post_rate)),
+            solo_gain,
+            v.solo
+                .as_ref()
+                .map_or("-".to_string(), |d| {
+                    format!("{:.3}", d.reshard_penalty_s + d.profile_est_s)
+                }),
+            "-".to_string(),
+            v.reason.clone(),
+        ]);
+    }
+    let (joint_label, note) = if let Some(r) = &rep.release {
+        (
+            format!("release slot {}", r.slot),
+            format!("scale-down: releases {} for amortized samples/$", r.gpu),
+        )
+    } else if rep.admitted.is_empty() && rep.stage == rep.stage_before {
+        ("stay".to_string(), "keeps the cluster as-is".to_string())
+    } else {
+        (
+            format!("admit {} @ ZeRO-{}", rep.admitted.len(), rep.stage),
+            format!("jointly admits [{}]", rep.admitted.join(", ")),
+        )
+    };
+    rows.push(vec![
+        "(round)".to_string(),
+        "-".to_string(),
+        joint_label,
+        format!("{:.1}", rep.post_rate),
+        format!("{:+.1}", rep.rel_gain * 100.0),
+        format!("{:.3}", rep.ledger.total()),
+        format!("{:.4}", rep.cost_per_ksample_after),
+        note,
+    ]);
+    if let Some(seq) = &rep.sequential {
+        rows.push(vec![
+            "(sequential)".to_string(),
+            format!("admits [{}]", seq.admitted.join(", ")),
+            "-".to_string(),
+            format!("{:.1}", seq.rate),
+            format!("{:+.1}", seq.rel_gain * 100.0),
+            "-".to_string(),
+            "-".to_string(),
+            "one-at-a-time replay, each admission pays its own stall".to_string(),
+        ]);
+    }
+    if let Some(r) = &rep.release {
+        rows.push(vec![
+            format!("slot {} ({})", r.slot, r.gpu),
+            "-".to_string(),
+            "release".to_string(),
+            format!("{:.1}", r.rate_after),
+            format!("{:+.1}", r.rel_gain_per_dollar * 100.0),
+            format!("{:.3}", r.stall.total()),
+            format!("{:.4}", r.cost_per_ksample_after),
+            r.reason.clone(),
+        ]);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::config::model::preset;
+
+    fn truth(gpu: &str, stage: u8, n: usize) -> PerfCurve {
+        let m = preset("llama-0.5b").unwrap();
+        synthesize_curve(gpu, &m, stage, n).unwrap()
+    }
+
+    fn planner_c() -> (ElasticPlanner, NetSim) {
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(1, 2048, &m.name, m.param_count(), 32);
+        for gpu in [
+            "A800-80G", "A800-80G", "A800-80G", "A800-80G", "V100S-32G", "V100S-32G",
+            "V100S-32G", "V100S-32G",
+        ] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, truth(gpu, 1, 8), false).unwrap();
+            }
+        }
+        let net = NetSim::from_link(8, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        (p, net)
+    }
+
+    #[test]
+    fn kernel_amortizes_the_ledger_total() {
+        let l = StallLedger {
+            reshard_transfer_s: 2.0,
+            migration_transfer_s: 3.0,
+            profiling_est_s: 5.0,
+        };
+        assert_eq!(l.total(), 10.0);
+        assert_eq!(amortized_score(100.0, 100.0, &l), 90.0);
+        // stall at or past the horizon: zero effective throughput
+        assert_eq!(amortized_score(100.0, 10.0, &l), 0.0);
+        assert_eq!(amortized_score(100.0, 5.0, &l), 0.0);
+        // degenerate horizons score zero instead of dividing by zero
+        assert_eq!(amortized_score(100.0, 0.0, &l), 0.0);
+        assert_eq!(amortized_score(100.0, f64::NAN, &l), 0.0);
+        // empty ledger: the steady rate itself
+        let none = StallLedger::default();
+        assert_eq!(amortized_score(7.0, 300.0, &none), 7.0);
+        // the gain helper is the kernel difference scaled by the horizon
+        let g = amortized_gain_samples(90.0, 100.0, 100.0, &l);
+        assert!((g - (90.0 - 90.0) * 100.0).abs() < 1e-9);
+        // constructors itemize
+        assert_eq!(StallLedger::reshard(1.5).total(), 1.5);
+        assert_eq!(StallLedger::migration(2.5).migration_transfer_s, 2.5);
+        assert_eq!(StallLedger::profiling(3.5).profiling_est_s, 3.5);
+    }
+
+    #[test]
+    fn single_offer_round_matches_the_greedy_adapter() {
+        // a one-offer round must agree with the PR-3 per-offer rule:
+        // same accept/decline verdicts, since the joint search over one
+        // offer IS the solo evaluation
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        // bars chosen far from each offer's gain so solo and joint can
+        // never disagree by a rounding ulp exactly at the threshold
+        for (gpu, min_gain) in [("A800-80G", 0.02), ("RTX3060", 0.10)] {
+            let opts = RoundOptions { min_gain, ..Default::default() };
+            let round =
+                decide_round(&p, &net, &m, &[gpu.to_string()], &opts).unwrap();
+            let solo = round.offers[0].solo.as_ref().unwrap();
+            match solo.decision {
+                Decision::Accept => {
+                    assert!(
+                        matches!(round.offers[0].action, Action::Admit { .. }),
+                        "{gpu}: joint must admit what solo accepts"
+                    )
+                }
+                Decision::Reject => assert!(
+                    matches!(round.offers[0].action, Action::Decline { .. }),
+                    "{gpu}: joint must decline what solo rejects"
+                ),
+                Decision::Defer => assert!(
+                    matches!(round.offers[0].action, Action::Defer { .. }),
+                    "{gpu}: joint must defer what solo defers"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn weak_offer_rides_along_with_a_strong_batch_mate() {
+        // T4 cached but tiny: solo it cannot clear a 5% bar; jointly
+        // with an A800 the round pays ONE stall and the T4's marginal
+        // contribution is positive, so both are admitted
+        let (mut p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        p.install_stage_curve("T4", 1, truth("T4", 1, 10)).unwrap();
+        let opts =
+            RoundOptions { min_gain: 0.05, with_sequential: true, ..Default::default() };
+        let offers = vec!["A800-80G".to_string(), "T4".to_string()];
+        let round = decide_round(&p, &net, &m, &offers, &opts).unwrap();
+        // greedy splits: accept the A800, reject the T4
+        assert_eq!(round.offers[0].solo.as_ref().unwrap().decision, Decision::Accept);
+        assert_eq!(round.offers[1].solo.as_ref().unwrap().decision, Decision::Reject);
+        // joint admits both
+        assert!(matches!(round.offers[0].action, Action::Admit { .. }));
+        assert!(
+            matches!(round.offers[1].action, Action::Admit { .. }),
+            "{}",
+            round.offers[1].reason
+        );
+        assert_eq!(round.admitted.len(), 2);
+        assert!(round.rel_gain >= opts.min_gain);
+        // the sequential replay splits too — joint is strictly better
+        let seq = round.sequential.as_ref().expect("with_sequential was set");
+        assert_eq!(seq.admitted, vec!["A800-80G".to_string()]);
+        assert!(round.score > seq.score);
+    }
+
+    #[test]
+    fn round_without_offers_or_release_stays() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let round = decide_round(&p, &net, &m, &[], &RoundOptions::default()).unwrap();
+        assert!(round.admitted.is_empty());
+        assert!(round.release.is_none());
+        assert_eq!(round.actions, vec![Action::Stay]);
+        assert!((round.score - round.pre_rate).abs() < 1e-9);
+        assert_eq!(round.stage, round.stage_before);
+        assert!(round.sequential.is_none(), "replay is opt-in and offer-less here");
+        // rendering covers the baseline + round rows
+        assert_eq!(round_rows(&round).len(), 2);
+    }
+
+    #[test]
+    fn release_fires_only_on_a_dominated_paid_rank() {
+        // 4x A800 + 1x V100S whose spot price spiked: dropping it wins
+        // on samples per dollar even after the reshard stall
+        let m = preset("llama-0.5b").unwrap();
+        let mut p = ElasticPlanner::new(1, 2048, &m.name, m.param_count(), 32);
+        for gpu in ["A800-80G", "A800-80G", "A800-80G", "A800-80G", "V100S-32G"] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, truth(gpu, 1, 5), false).unwrap();
+            }
+        }
+        let net = NetSim::from_link(5, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        let opts = RoundOptions {
+            consider_release: true,
+            prices: vec![("V100S-32G".to_string(), 6.0)],
+            ..Default::default()
+        };
+        let round = decide_round(&p, &net, &m, &[], &opts).unwrap();
+        let r = round.release.as_ref().expect("the spiked rank must be released");
+        assert_eq!(r.gpu, "V100S-32G");
+        assert!(r.rel_gain_per_dollar > 0.0, "release only on strictly positive gain");
+        assert!(r.rel_gain_per_dollar >= opts.min_gain);
+        assert!(r.cost_per_ksample_after < r.cost_per_ksample_before);
+        assert!(r.rate_after < round.pre_rate, "scale-down trades rate for $");
+        assert!(round.actions.contains(&Action::Release { slot: r.slot }));
+
+        // at fair prices the V100S is only marginally per-dollar
+        // dominated (~3%): a 10% bar keeps every rank
+        let fair = RoundOptions {
+            consider_release: true,
+            min_gain: 0.10,
+            ..Default::default()
+        };
+        let round = decide_round(&p, &net, &m, &[], &fair).unwrap();
+        assert!(round.release.is_none(), "no rank is 10% dominated at fair prices");
+        assert_eq!(round.actions, vec![Action::Stay]);
+    }
+
+    #[test]
+    fn bad_options_and_oversized_batches_are_typed_errors() {
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let bad = RoundOptions { horizon_s: 0.0, ..Default::default() };
+        assert!(matches!(
+            decide_round(&p, &net, &m, &[], &bad),
+            Err(AutoscaleError::BadOptions(_))
+        ));
+        let many: Vec<String> =
+            (0..=MAX_OFFERS_PER_ROUND).map(|_| "T4".to_string()).collect();
+        assert!(matches!(
+            decide_round(&p, &net, &m, &many, &RoundOptions::default()),
+            Err(AutoscaleError::BadOptions(_))
+        ));
+        assert!(matches!(
+            decide_round(&p, &net, &m, &["H100".to_string()], &RoundOptions::default()),
+            Err(AutoscaleError::UnknownGpu(_))
+        ));
+    }
+}

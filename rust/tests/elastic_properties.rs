@@ -308,6 +308,70 @@ fn prop_chosen_stage_always_satisfies_memory_bound() {
 }
 
 #[test]
+fn prop_joiner_unfit_at_current_stage_admitted_at_feasible_stage() {
+    // unified-engine satellite: a joiner that cannot fit the *current*
+    // stage is no longer evicted before the stage search runs. Whenever
+    // some feasible stage is measured for every live type at the new
+    // group size, the replan migrates there and admits the joiner off
+    // the stage-keyed cache; the plan stays valid and covers gbs.
+    let m = preset("bert-1.1b").unwrap();
+    const BIG: &[&str] = &["A100-80G", "A800-80G"];
+    const SMALL: &[&str] = &["T4", "V100-16G"];
+    for seed in 0..30u64 {
+        let mut rng = XorShift::new(seed + 9000);
+        let n_big = rng.range(2, 4) as usize;
+        let mut p = ElasticPlanner::new(0, 32, &m.name, m.param_count(), 32);
+        p.set_stage_policy(Some(StagePolicy::default()));
+        for _ in 0..n_big {
+            let gpu = BIG[(rng.next() as usize) % BIG.len()];
+            let slot = p.add_slot(gpu);
+            if p.needs_profile().contains(&slot) {
+                // ZeRO-0 memory is n-independent, so any n works here
+                let c = model_curve(gpu, &m, 0, n_big).expect("big cards fit z0");
+                p.install_curve(slot, c, false).unwrap();
+            }
+        }
+        let n0 = p.active_slots().len();
+        p.replan(&NetSim::from_link(n0, LinkKind::Ib)).unwrap();
+        assert_eq!(p.stage(), 0, "seed {seed}: nothing forces a move yet");
+
+        // a joiner that cannot fit ZeRO-0 (16ψ > 16 GiB), plus full
+        // ZeRO-3 measured coverage at the post-join group size
+        let joiner = SMALL[(rng.next() as usize) % SMALL.len()];
+        let n_after = n0 + 1;
+        for gpu in BIG.iter().chain(SMALL.iter()) {
+            if let Some(c) = model_curve(gpu, &m, 3, n_after) {
+                p.install_stage_curve(gpu, 3, c).unwrap();
+            }
+        }
+        let slot = p.add_slot(joiner);
+        assert!(p.needs_profile().contains(&slot), "seed {seed}");
+        let net = NetSim::from_link(n_after, LinkKind::Ib);
+        let plan = p
+            .replan(&net)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+            .clone();
+        plan.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(plan.total_samples(), 32, "seed {seed}");
+        assert_eq!(plan.ranks.len(), n_after, "seed {seed}: joiner admitted, not evicted");
+        assert!(p.stage() > 0, "seed {seed}: must have migrated off ZeRO-0");
+        assert!(p.slots()[slot].curve.is_some(), "seed {seed}");
+        assert_eq!(p.manifest().unwrap().stage, p.stage(), "seed {seed}");
+        // the chosen stage's memory bound holds for every live rank
+        for s in p.active_slots() {
+            let gpu = p.slots()[s].gpu.clone();
+            let spec = catalog::spec(&gpu).unwrap();
+            assert!(
+                memmodel::true_mbs(&m, m.param_count(), p.stage(), n_after, spec.mem_bytes())
+                    >= 1,
+                "seed {seed}: ZeRO-{} breaks the bound for {gpu}",
+                p.stage()
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_cache_eviction_never_drops_live_keys() {
     for seed in 0..80u64 {
         let mut rng = XorShift::new(seed + 3000);

@@ -71,3 +71,10 @@ fn golden_fig_stage_migration_decisions() {
         poplar::exp::fig_stage_migration::run().unwrap().to_markdown()
     });
 }
+
+#[test]
+fn golden_fig_joint_admission_rounds() {
+    check_golden("fig_joint_admission", || {
+        poplar::exp::fig_joint_admission::run().unwrap().to_markdown()
+    });
+}

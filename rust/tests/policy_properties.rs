@@ -1,0 +1,219 @@
+//! Property tests for the unified decision engine (`poplar::policy`):
+//!
+//! 1. `decide_round`'s joint plan is never worse than the best
+//!    single-offer *sequential* order — the joint subset search
+//!    subsumes every greedy admission sequence;
+//! 2. `Release` never fires with a non-positive amortized
+//!    samples-per-dollar gain (and always clears `min_gain`);
+//! 3. the engine is read-only w.r.t. the planner fingerprint (the PR-3
+//!    harness: slots, replans, dirty flag, cache counters AND LRU
+//!    order), whatever the verdict.
+
+use poplar::autoscale::synthesize_curve;
+use poplar::cluster::LinkKind;
+use poplar::config::model::preset;
+use poplar::curves::PerfCurve;
+use poplar::elastic::{CurveKey, ElasticPlanner};
+use poplar::netsim::NetSim;
+use poplar::policy::{self, Action, RoundOptions};
+
+fn truth(gpu: &str, stage: u8, n: usize) -> PerfCurve {
+    let m = preset("llama-0.5b").unwrap();
+    synthesize_curve(gpu, &m, stage, n).unwrap()
+}
+
+fn planner_with(stage: u8, gbs: usize, fleet: &[&str]) -> (ElasticPlanner, NetSim) {
+    let m = preset("llama-0.5b").unwrap();
+    let mut p = ElasticPlanner::new(stage, gbs, &m.name, m.param_count(), 32);
+    for gpu in fleet {
+        let slot = p.add_slot(gpu);
+        if p.slots()[slot].curve.is_none() {
+            p.install_curve(slot, truth(gpu, stage, fleet.len()), false).unwrap();
+        }
+    }
+    let net = NetSim::from_link(fleet.len(), LinkKind::Ib);
+    p.replan(&net).unwrap();
+    (p, net)
+}
+
+fn cluster_c(stage: u8) -> (ElasticPlanner, NetSim) {
+    planner_with(
+        stage,
+        2048,
+        &[
+            "A800-80G", "A800-80G", "A800-80G", "A800-80G", "V100S-32G", "V100S-32G",
+            "V100S-32G", "V100S-32G",
+        ],
+    )
+}
+
+#[derive(PartialEq, Debug)]
+struct PlannerFingerprint {
+    n_slots: usize,
+    replans: usize,
+    dirty: bool,
+    cache_len: usize,
+    cache_hits: u64,
+    cache_misses: u64,
+    lru: Vec<CurveKey>,
+}
+
+fn fingerprint(p: &ElasticPlanner) -> PlannerFingerprint {
+    PlannerFingerprint {
+        n_slots: p.slots().len(),
+        replans: p.replans(),
+        dirty: p.dirty(),
+        cache_len: p.cache().len(),
+        cache_hits: p.cache().hits(),
+        cache_misses: p.cache().misses(),
+        lru: p.cache().lru_order().to_vec(),
+    }
+}
+
+/// Every permutation of a small slice (naive recursion — fine for the
+/// <= 3-element orders used here).
+fn permutations(items: &[String]) -> Vec<Vec<String>> {
+    match items.len() {
+        0 => vec![vec![]],
+        _ => {
+            let mut out = Vec::new();
+            for (i, x) in items.iter().enumerate() {
+                let mut rest = items.to_vec();
+                rest.remove(i);
+                for mut tail in permutations(&rest) {
+                    let mut v = vec![x.clone()];
+                    v.append(&mut tail);
+                    out.push(v);
+                }
+            }
+            out
+        }
+    }
+}
+
+#[test]
+fn prop_joint_round_never_worse_than_any_sequential_order() {
+    let m = preset("llama-0.5b").unwrap();
+    let offer_sets: &[&[&str]] = &[
+        &["A800-80G"],
+        &["A800-80G", "T4"],
+        &["V100S-32G", "RTX4090"],
+        &["A800-80G", "V100S-32G", "T4"],
+    ];
+    for stage in [1u8, 2] {
+        let (mut p, net) = cluster_c(stage);
+        // a cached T4 makes the weak-offer-rides-along case reachable
+        p.install_stage_curve("T4", stage, truth("T4", stage, 10)).unwrap();
+        for &offers in offer_sets {
+            let offers: Vec<String> = offers.iter().map(|s| s.to_string()).collect();
+            for min_gain in [0.01f64, 0.05] {
+                let opts = RoundOptions { min_gain, ..Default::default() };
+                let round = policy::decide_round(&p, &net, &m, &offers, &opts)
+                    .unwrap_or_else(|e| panic!("stage {stage} {offers:?}: {e}"));
+                for order in permutations(&offers) {
+                    let seq = policy::sequential_round(&p, &net, &m, &order, &opts)
+                        .unwrap_or_else(|e| panic!("stage {stage} {order:?}: {e}"));
+                    assert!(
+                        round.score >= seq.score - 1e-9 * seq.score.abs().max(1.0),
+                        "stage {stage} {offers:?} order {order:?}: joint {:.3} worse \
+                         than sequential {:.3}",
+                        round.score,
+                        seq.score
+                    );
+                }
+                // the round never scores below the keep-as-is baseline
+                assert!(round.score >= round.pre_rate - 1e-9 * round.pre_rate);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_release_never_fires_with_nonpositive_gain() {
+    let m = preset("llama-0.5b").unwrap();
+    let fleets: &[&[&str]] = &[
+        &["A800-80G", "A800-80G", "A800-80G", "A800-80G"],
+        &["A800-80G", "A800-80G", "A800-80G", "A800-80G", "V100S-32G"],
+        &["A800-80G", "A800-80G", "V100S-32G", "T4"],
+    ];
+    let price_sets: &[Vec<(String, f64)>] = &[
+        Vec::new(),
+        vec![("V100S-32G".to_string(), 6.0)],
+        vec![("T4".to_string(), 4.0)],
+        vec![("A800-80G".to_string(), 0.4)],
+    ];
+    for &fleet in fleets {
+        let (p, net) = planner_with(1, 1024, fleet);
+        for prices in price_sets {
+            for horizon in [30.0f64, 300.0, 3600.0] {
+                let opts = RoundOptions {
+                    consider_release: true,
+                    horizon_s: horizon,
+                    prices: prices.clone(),
+                    ..Default::default()
+                };
+                let round = policy::decide_round(&p, &net, &m, &[], &opts)
+                    .unwrap_or_else(|e| panic!("{fleet:?} {prices:?}: {e}"));
+                if let Some(r) = &round.release {
+                    // THE invariant: a release only ever fires with a
+                    // strictly positive amortized per-dollar gain that
+                    // clears the bar
+                    assert!(
+                        r.rel_gain_per_dollar > 0.0,
+                        "{fleet:?} {prices:?} h={horizon}: released {} at gain {}",
+                        r.gpu,
+                        r.rel_gain_per_dollar
+                    );
+                    assert!(r.rel_gain_per_dollar >= opts.min_gain);
+                    // the per-dollar arithmetic is consistent: amortized
+                    // value strictly improves
+                    let value_pre = round.pre_rate / r.price_before_per_hour;
+                    let value_post = r.score_after / r.price_after_per_hour;
+                    assert!(value_post > value_pre, "{fleet:?} {prices:?}");
+                    assert!(r.cost_per_ksample_after.is_finite());
+                    // a release is mutually exclusive with admissions
+                    assert!(round.admitted.is_empty());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_decide_round_is_read_only_whatever_the_verdict() {
+    let m = preset("llama-0.5b").unwrap();
+    for stage in [1u8, 3] {
+        let (mut p, net) = cluster_c(stage);
+        p.install_stage_curve("T4", stage, truth("T4", stage, 10)).unwrap();
+        let manifest0 = p.manifest().unwrap().clone();
+        let plan0 = p.plan().unwrap().predicted_iter_s;
+        let fp0 = fingerprint(&p);
+        let offers: Vec<String> = ["A800-80G", "T4", "RTX4090", "RTX3060"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for consider_release in [false, true] {
+            for min_gain in [0.01f64, 0.05, 0.2] {
+                let opts = RoundOptions {
+                    min_gain,
+                    consider_release,
+                    ..Default::default()
+                };
+                let round = policy::decide_round(&p, &net, &m, &offers, &opts)
+                    .unwrap_or_else(|e| panic!("stage {stage}: {e}"));
+                assert_eq!(round.offers.len(), offers.len());
+                // actions vocabulary: every offer maps to exactly one of
+                // the three admission verdicts
+                for v in &round.offers {
+                    assert!(matches!(
+                        v.action,
+                        Action::Admit { .. } | Action::Defer { .. } | Action::Decline { .. }
+                    ));
+                }
+            }
+        }
+        assert_eq!(fingerprint(&p), fp0, "stage {stage}: the engine must be read-only");
+        assert_eq!(p.manifest().unwrap(), &manifest0);
+        assert_eq!(p.plan().unwrap().predicted_iter_s, plan0);
+    }
+}
