@@ -1,0 +1,115 @@
+//! Benchmarks for the joint-round decision engine (`policy::decide_round`)
+//! across fleet size x offer-batch size — the scalability claim behind
+//! the greedy marginal-contribution search: the exponential mask loop
+//! capped real deployments at 6 offers, the greedy path must price a
+//! 100-offer batch against a 1000-rank fleet in one call.
+//!
+//! Built with the in-crate harness (no criterion on this offline image);
+//! run with `cargo bench --bench policy`. Pass `--fast` / `--test` (or
+//! set `POPLAR_BENCH_FAST`) for the CI smoke subset.
+//!
+//! Results are written to `BENCH_policy.json` (package root, committed):
+//!
+//! ```json
+//! {
+//!   "format": "poplar-bench-policy/v1",
+//!   "mode": "full" | "fast",
+//!   "points": [
+//!     { "ranks": 8, "offers": 2, "search": "exhaustive",
+//!       "mean_ms": 0.8, "p50_ms": 0.7, "p95_ms": 1.1, "samples": 240 }
+//!   ]
+//! }
+//! ```
+//!
+//! `search` records which path `SearchMode::Auto` dispatched to at that
+//! batch size (exhaustive for k <= MAX_EXHAUSTIVE_OFFERS, greedy above).
+//! The committed seed may carry an empty `points` list (the build image
+//! has no local toolchain and CI regenerates the file on every run); the
+//! format line is the contract.
+
+use poplar::autoscale::synthesize_curve;
+use poplar::cluster::LinkKind;
+use poplar::config::model::preset;
+use poplar::elastic::ElasticPlanner;
+use poplar::metrics::bench::{bench, section, BenchResult};
+use poplar::netsim::NetSim;
+use poplar::policy::{self, RoundOptions, MAX_EXHAUSTIVE_OFFERS};
+
+const OFFER_POOL: &[&str] = &["A800-80G", "V100S-32G", "T4", "RTX4090"];
+
+/// An alternating A800/V100S fleet of `n` ranks, profiled and planned at
+/// ZeRO-1, with every offer-pool type pre-cached at the stage (the bench
+/// measures the search, not profiling round-trips).
+fn fleet(n: usize) -> (ElasticPlanner, NetSim) {
+    let m = preset("llama-0.5b").unwrap();
+    let stage = 1u8;
+    let mut p = ElasticPlanner::new(stage, 8 * n, &m.name, m.param_count(), 64);
+    for i in 0..n {
+        let gpu = if i % 2 == 0 { "A800-80G" } else { "V100S-32G" };
+        let slot = p.add_slot(gpu);
+        if p.slots()[slot].curve.is_none() {
+            let c = synthesize_curve(gpu, &m, stage, n).unwrap();
+            p.install_curve(slot, c, false).unwrap();
+        }
+    }
+    for gpu in OFFER_POOL {
+        let c = synthesize_curve(gpu, &m, stage, n).unwrap();
+        p.install_stage_curve(gpu, stage, c).unwrap();
+    }
+    let net = NetSim::from_link(n, LinkKind::Ib);
+    p.replan(&net).unwrap();
+    (p, net)
+}
+
+fn offer_batch(k: usize) -> Vec<String> {
+    (0..k).map(|i| OFFER_POOL[i % OFFER_POOL.len()].to_string()).collect()
+}
+
+fn json_point(ranks: usize, offers: usize, search: &str, r: &BenchResult) -> String {
+    format!(
+        "    {{ \"ranks\": {ranks}, \"offers\": {offers}, \"search\": \"{search}\", \
+         \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \"samples\": {} }}",
+        r.mean_ns / 1e6,
+        r.p50_ns / 1e6,
+        r.p95_ns / 1e6,
+        r.samples
+    )
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--test" || a == "--fast")
+        || std::env::var("POPLAR_BENCH_FAST").is_ok();
+    let mode = if fast { "fast" } else { "full" };
+    let (sizes, batches, target_ms): (&[usize], &[usize], u64) = if fast {
+        (&[8, 64], &[2, 6, 32], 30)
+    } else {
+        (&[8, 64, 1000], &[2, 6, 32, 100], 200)
+    };
+
+    let m = preset("llama-0.5b").unwrap();
+    let mut points = Vec::new();
+    for &n in sizes {
+        section(&format!("decide_round @ {n} ranks"));
+        let (p, net) = fleet(n);
+        for &k in batches {
+            let offers = offer_batch(k);
+            let search = if k <= MAX_EXHAUSTIVE_OFFERS { "exhaustive" } else { "greedy" };
+            let opts = RoundOptions::default();
+            let name = format!("decide_round/{n}ranks/{k}offers/{search}");
+            let r = bench(&name, target_ms, || {
+                policy::decide_round(&p, &net, &m, &offers, &opts).unwrap()
+            });
+            println!("{}", r.line());
+            assert!(r.mean_ns > 0.0);
+            points.push(json_point(n, k, search, &r));
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"format\": \"poplar-bench-policy/v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        points.join(",\n")
+    );
+    std::fs::write("BENCH_policy.json", &json).expect("write BENCH_policy.json");
+    println!("\nwrote BENCH_policy.json ({} points, {mode} mode)", points.len());
+}

@@ -388,30 +388,18 @@ impl ReshardPlan {
     /// `bytes / bw` plus a per-transfer latency — not a full-volume
     /// collective. Checkpoint restores are charged to the receiving rank
     /// at the same link bandwidth (the checkpoint store sits on the same
-    /// fabric).
+    /// fabric). Thin wrapper over [`EndpointLoads`], which incremental
+    /// callers (the round engine's delta previews) can also fold moves
+    /// into one at a time.
     pub fn transfer_time_s(&self, net: &NetSim) -> f64 {
         if self.moves.is_empty() {
             return 0.0;
         }
-        let bw = net.bw_gbs * 1e9;
-        // per-slot (bytes sent, bytes received, transfer count)
-        let mut load: BTreeMap<usize, (u64, u64, u64)> = BTreeMap::new();
+        let mut loads = EndpointLoads::default();
         for m in &self.moves {
-            let bytes = m.range.len() * OPTIMIZER_BYTES_PER_PARAM;
-            let d = load.entry(m.to_slot).or_insert((0, 0, 0));
-            d.1 += bytes;
-            d.2 += 1;
-            if let Some(src) = m.from_slot {
-                let s = load.entry(src).or_insert((0, 0, 0));
-                s.0 += bytes;
-                s.2 += 1;
-            }
+            loads.add(m);
         }
-        load.values()
-            .map(|&(sent, recv, count)| {
-                sent.max(recv) as f64 / bw + count as f64 * net.alpha_s
-            })
-            .fold(0.0, f64::max)
+        loads.time_s(net)
     }
 
     /// The recompute baseline: every rank of `new` refetches its entire
@@ -430,6 +418,45 @@ impl ReshardPlan {
                 .collect(),
             retained: Vec::new(),
         }
+    }
+}
+
+/// Per-endpoint transfer-load accumulator behind
+/// [`ReshardPlan::transfer_time_s`]: fold [`ShardMove`]s in one at a
+/// time, read the wall time whenever needed. Exists as its own type so
+/// incremental pricing (the round engine's delta previews) updates
+/// endpoint loads move-by-move instead of re-walking the whole plan.
+#[derive(Debug, Clone, Default)]
+pub struct EndpointLoads {
+    /// Per-slot `(bytes sent, bytes received, transfer count)`.
+    load: BTreeMap<usize, (u64, u64, u64)>,
+}
+
+impl EndpointLoads {
+    /// Fold one move into the per-endpoint loads.
+    pub fn add(&mut self, m: &ShardMove) {
+        let bytes = m.range.len() * OPTIMIZER_BYTES_PER_PARAM;
+        let d = self.load.entry(m.to_slot).or_insert((0, 0, 0));
+        d.1 += bytes;
+        d.2 += 1;
+        if let Some(src) = m.from_slot {
+            let s = self.load.entry(src).or_insert((0, 0, 0));
+            s.0 += bytes;
+            s.2 += 1;
+        }
+    }
+
+    /// Wall time of the folded moves: the most-loaded endpoint's
+    /// `bytes / bw` plus a per-transfer latency (0 when nothing was
+    /// folded).
+    pub fn time_s(&self, net: &NetSim) -> f64 {
+        let bw = net.bw_gbs * 1e9;
+        self.load
+            .values()
+            .map(|&(sent, recv, count)| {
+                sent.max(recv) as f64 / bw + count as f64 * net.alpha_s
+            })
+            .fold(0.0, f64::max)
     }
 }
 
@@ -520,9 +547,15 @@ pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
                 };
                 moves.push(ShardMove { to_slot: e.slot, from_slot, range: gap });
             } else {
-                // partitioned source tiles [0, ψ): every sub-interval has
-                // exactly one old owner
-                for o in &old.shards {
+                // partitioned source tiles [0, ψ) contiguously in shard
+                // order (validate() enforced it), so binary-search the
+                // first overlapping owner and sweep linearly from there —
+                // emission order is identical to the full scan
+                let start = old.shards.partition_point(|o| o.range.hi <= gap.lo);
+                for o in &old.shards[start..] {
+                    if o.range.lo >= gap.hi {
+                        break;
+                    }
                     if let Some(piece) = o.range.intersect(&gap) {
                         let from_slot = if new.has_slot(o.slot) {
                             Some(o.slot)

@@ -25,6 +25,7 @@
 //! # the same horizon unless [autoscale] overrides it
 //! [policy]
 //! horizon_s = 300          # expected tenure (amortization window)
+//! max_offers_per_round = 64  # soft cap on offers admitted per round
 //!
 //! # optional: cost-aware admission policy — `RankJoined` events become
 //! # offers the policy may decline (poplar elastic / poplar autoscale)
@@ -136,11 +137,18 @@ pub struct PolicyConfig {
     /// Amortization horizon in seconds (expected tenure before the next
     /// membership event re-prices everything).
     pub horizon_s: f64,
+    /// Soft cap on offers one joint round may admit (at least 1).
+    /// Batches of any size are priced; the cap only bounds the chosen
+    /// admission subset.
+    pub max_offers_per_round: usize,
 }
 
 impl Default for PolicyConfig {
     fn default() -> Self {
-        PolicyConfig { horizon_s: crate::autoscale::DEFAULT_HORIZON_S }
+        PolicyConfig {
+            horizon_s: crate::autoscale::DEFAULT_HORIZON_S,
+            max_offers_per_round: crate::policy::DEFAULT_MAX_OFFERS_PER_ROUND,
+        }
     }
 }
 
@@ -386,7 +394,13 @@ impl JobConfig {
             if !horizon_s.is_finite() || horizon_s <= 0.0 {
                 return Err(invalid("policy.horizon_s must be finite and > 0"));
             }
-            Some(PolicyConfig { horizon_s })
+            let max_offers = d
+                .int("policy.max_offers_per_round")
+                .unwrap_or(crate::policy::DEFAULT_MAX_OFFERS_PER_ROUND as i64);
+            if max_offers < 1 {
+                return Err(invalid("policy.max_offers_per_round must be at least 1"));
+            }
+            Some(PolicyConfig { horizon_s, max_offers_per_round: max_offers as usize })
         } else {
             None
         };
@@ -683,6 +697,23 @@ mod tests {
         let bad = format!("{GOOD}\n[policy]\nhorizon_s = 0\n");
         assert!(JobConfig::from_toml(&bad).is_err());
         let bad = format!("{GOOD}\n[policy]\nhorizon_s = -3\n");
+        assert!(JobConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn policy_round_cap_parses_and_validates() {
+        // bare [policy] carries the engine default soft cap
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[policy]\n")).unwrap();
+        assert_eq!(
+            cfg.policy.unwrap().max_offers_per_round,
+            crate::policy::DEFAULT_MAX_OFFERS_PER_ROUND
+        );
+        // explicit value parses
+        let toml = format!("{GOOD}\n[policy]\nmax_offers_per_round = 8\n");
+        let cfg = JobConfig::from_toml(&toml).unwrap();
+        assert_eq!(cfg.policy.unwrap().max_offers_per_round, 8);
+        // a cap below 1 is a config error, not a silent clamp
+        let bad = format!("{GOOD}\n[policy]\nmax_offers_per_round = 0\n");
         assert!(JobConfig::from_toml(&bad).is_err());
     }
 

@@ -109,6 +109,11 @@ pub struct ElasticOptions {
     /// (with `[autoscale]` present, its — possibly `[policy]`-inherited
     /// — horizon wins, keeping the two searches consistent).
     pub policy_horizon_s: Option<f64>,
+    /// Soft cap on offers admitted per joint round (`[policy]
+    /// max_offers_per_round`); `None` keeps the engine default
+    /// (`crate::policy::DEFAULT_MAX_OFFERS_PER_ROUND`). Batches of any
+    /// size are priced — the cap only bounds the chosen subset.
+    pub max_offers_per_round: Option<usize>,
 }
 
 impl Default for ElasticOptions {
@@ -120,6 +125,7 @@ impl Default for ElasticOptions {
             autoscale: None,
             allow_stage_change: false,
             policy_horizon_s: None,
+            max_offers_per_round: None,
         }
     }
 }
@@ -702,13 +708,23 @@ impl Leader {
                             _ => unreachable!("filtered above"),
                         })
                         .collect();
-                    let ropts = crate::policy::RoundOptions::from_autoscale(a);
+                    let mut ropts = crate::policy::RoundOptions::from_autoscale(a);
+                    if let Some(cap) = opts.max_offers_per_round {
+                        ropts.max_offers_per_round = cap;
+                    }
                     Some(crate::policy::decide_round(
                         &planner, &self.net, &self.model, &offers, &ropts,
                     ))
                 }
                 _ => None,
             };
+            // a round that could not be priced at all degrades to the
+            // PR-3 per-offer rule below — label it loudly so a degraded
+            // round is never indistinguishable from a deliberate greedy
+            // one in the event log
+            if let Some(Err(e)) = &round {
+                events.push(format!("round-fallback:{e}"));
+            }
             enum JoinVerdict {
                 Admit(&'static str),
                 Decline(String),
@@ -716,8 +732,9 @@ impl Leader {
             }
             // decide phase (read-only), then act phase (mutating) — the
             // decisions come from the joint round; if the round itself
-            // could not be priced (e.g. an oversized batch), fall back
-            // to the PR-3 per-offer rule instead of dropping the batch
+            // could not be priced (e.g. a planner state the baseline
+            // cannot rate, or an unknown offer type), fall back to the
+            // PR-3 per-offer rule instead of dropping the batch
             let verdicts: Vec<JoinVerdict> = join_events
                 .iter()
                 .enumerate()
@@ -1508,6 +1525,37 @@ mod tests {
         assert_eq!(rep.final_plan.ranks.len(), 9);
         assert_eq!(rep.final_plan.total_samples(), 256);
         rep.final_plan.validate().unwrap();
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_degraded_round_is_labeled_round_fallback() {
+        // an offer type outside the catalog makes the joint round
+        // unpriceable; the leader degrades to the per-offer rule but
+        // must say so in the event log — a degraded round may never
+        // masquerade as a deliberate greedy one
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![(1, ElasticEvent::RankJoined { gpu: "H100".into() })]);
+        let opts = ElasticOptions {
+            autoscale: Some(crate::autoscale::AutoscaleOptions {
+                horizon_s: 30.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let rep = l.run_elastic_job(1, 256, 3, &schedule, &opts).unwrap();
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.starts_with("round-fallback:")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        // the solo fallback cannot price it either: skipped, fleet intact
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.starts_with("skipped")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert_eq!(rep.iterations[1].n_ranks, 8);
         l.shutdown();
     }
 

@@ -67,6 +67,16 @@ pub enum ElasticError {
     /// A join preview needs a curve, but the type-level cache has none
     /// and the caller supplied no estimate.
     NoCurve(String),
+    /// A round preview was called with a `fallbacks` slice whose length
+    /// does not match `gpus` — a caller bug that in release builds used
+    /// to silently read missing entries as "no fallback" and flip a
+    /// priced estimate into [`ElasticError::NoCurve`].
+    FallbackLen {
+        /// Number of joiner GPU types passed.
+        gpus: usize,
+        /// Number of fallback entries passed.
+        fallbacks: usize,
+    },
     /// The allocator rejected the surviving curve set.
     Plan(PlanError),
     /// The checkpoint subsystem rejected the shard layout (message form:
@@ -86,6 +96,10 @@ impl std::fmt::Display for ElasticError {
             ElasticError::NoCurve(gpu) => {
                 write!(f, "no cached curve for GPU type {gpu:?} and no estimate supplied")
             }
+            ElasticError::FallbackLen { gpus, fallbacks } => write!(
+                f,
+                "fallbacks must be parallel to gpus: got {fallbacks} entries for {gpus} joiners"
+            ),
             ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
             ElasticError::Ckpt(e) => write!(f, "shard layout: {e}"),
         }
@@ -635,7 +649,12 @@ impl ElasticPlanner {
         fallbacks: &[Option<PerfCurve>],
         net: &NetSim,
     ) -> Result<RoundPreview, ElasticError> {
-        debug_assert_eq!(gpus.len(), fallbacks.len(), "fallbacks parallel gpus");
+        if gpus.len() != fallbacks.len() {
+            return Err(ElasticError::FallbackLen {
+                gpus: gpus.len(),
+                fallbacks: fallbacks.len(),
+            });
+        }
         let mut curves = if stage == self.stage {
             self.active_curves()?
         } else {
@@ -725,6 +744,98 @@ impl ElasticPlanner {
             curves,
             plan,
             net: net_after,
+            manifest,
+            reshard_penalty_s,
+            reshard_bytes,
+            migration_only_s,
+        })
+    }
+
+    /// Extend a prior [`RoundPreview`] by ONE more joiner — the delta
+    /// path behind the round engine's greedy search. Instead of
+    /// re-walking the slot table, re-peeking every prior joiner's curve
+    /// and re-deriving the predicted slot list, it reuses the prior
+    /// preview's curves, joiner flags and manifest slot order, appends
+    /// the one new member (at the next predicted slot id), and re-prices
+    /// the movement set. The result is *identical* to calling
+    /// [`ElasticPlanner::preview_round_at`] on the grown batch — the
+    /// equivalence property tests pin bytes, seconds and the manifest —
+    /// because shard tiling boundaries shift for every rank when the
+    /// group grows, so the plan, manifest and movement set are recomputed
+    /// from the reused inputs rather than patched.
+    ///
+    /// `prev` must come from this planner in its current state with the
+    /// same `stage` semantics (callers re-evaluate from scratch across
+    /// planner mutations); `fallback` plays the same role as one
+    /// `fallbacks` entry of the batch primitive.
+    pub fn preview_round_extend(
+        &self,
+        prev: &RoundPreview,
+        gpu: &str,
+        fallback: Option<&PerfCurve>,
+        net: &NetSim,
+    ) -> Result<RoundPreview, ElasticError> {
+        let stage = prev.stage;
+        let key = CurveKey::new(gpu, &self.model, stage);
+        let (curve, cached) = match self.cache.peek(&key) {
+            Some(c) => (c.clone(), true),
+            None => match fallback.filter(|_| stage == self.stage) {
+                Some(c) => ((*c).clone(), false),
+                None => return Err(ElasticError::NoCurve(gpu.to_string())),
+            },
+        };
+        let mut gpus = prev.gpus.clone();
+        gpus.push(gpu.to_string());
+        let mut joiner_cached = prev.joiner_cached.clone();
+        joiner_cached.push(cached);
+        let mut curves = prev.curves.clone();
+        curves.push(curve);
+
+        let mut net_after = net.clone();
+        net_after.n = curves.len();
+        let plan = match &self.plan {
+            Some(p) => {
+                allocator::replan_with_stage(p, &curves, stage, &net_after, self.param_count)
+            }
+            None => allocator::plan(&curves, stage, self.gbs, &net_after, self.param_count),
+        }
+        .map_err(ElasticError::Plan)?;
+
+        // the prior preview's manifest already lists live slots + prior
+        // joiners in slot order; the new joiner takes the next id the
+        // batch path would predict
+        let mut live: Vec<(usize, String)> =
+            prev.manifest.shards.iter().map(|e| (e.slot, e.gpu.clone())).collect();
+        live.push((self.slots.len() + prev.gpus.len(), gpu.to_string()));
+        let manifest =
+            ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
+                .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &self.manifest {
+            Some(old) => {
+                let r = ckpt::migrate(old, &manifest)
+                    .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+                let total = r.transfer_time_s(&net_after);
+                let mig = if stage != old.stage {
+                    old.migrate(stage)
+                        .map(|(_, p)| p.transfer_time_s(&net_after))
+                        .unwrap_or(0.0)
+                        .min(total)
+                } else {
+                    0.0
+                };
+                (total, r.bytes_moved(), mig)
+            }
+            None => (0.0, 0, 0.0),
+        };
+
+        Ok(RoundPreview {
+            stage,
+            gpus,
+            joiner_cached,
+            curves,
+            plan,
+            net: net_after,
+            manifest,
             reshard_penalty_s,
             reshard_bytes,
             migration_only_s,
@@ -911,6 +1022,12 @@ pub struct RoundPreview {
     pub plan: Plan,
     /// Collective cost model at the post-admission group size.
     pub net: NetSim,
+    /// The predicted post-admission shard layout (live slots, then the
+    /// joiners at the slot ids consecutive `add_slot()` calls would
+    /// assign) — the layout `reshard_penalty_s` was priced against, and
+    /// exactly what the planner builds after admitting this batch (a
+    /// property test pins the equality).
+    pub manifest: ShardManifest,
     /// Measured one-shot movement cost of the whole batch admission
     /// (ONE combined `ckpt::migrate`, any stage re-layout folded in).
     pub reshard_penalty_s: f64,

@@ -17,6 +17,7 @@
 //!                  [--horizon 300] [--min-gain 0.02] [--noise 0.015]
 //!                  [--joint]     # joint subset round (policy::decide_round)
 //!                  [--release]   # also consider scale-down (implies round mode)
+//!                  [--max-admit N]  # soft cap on offers admitted per round
 //! poplar ckpt      save    --cluster cluster-C --model llama-0.5b [--stage 1]
 //!                          [--dir artifacts/ckpt] [--snapshot 0]
 //! poplar ckpt      inspect [--dir artifacts/ckpt | --path FILE]
@@ -319,6 +320,7 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
             autoscale: cfg.autoscale.clone(),
             allow_stage_change: ecfg.allow_stage_change || stage_change_flag,
             policy_horizon_s: cfg.policy.as_ref().map(|p| p.horizon_s),
+            max_offers_per_round: cfg.policy.as_ref().map(|p| p.max_offers_per_round),
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -466,6 +468,7 @@ fn cmd_autoscale(args: &[String]) -> Result<()> {
         .unwrap_or(2 * 1024 * 1024);
     let gbs = (gbs_tokens / model.seq) as usize;
     let noise: f64 = f.get("noise").map(|s| s.parse()).transpose()?.unwrap_or(0.015);
+    let max_admit: Option<usize> = f.get("max-admit").map(|s| s.parse()).transpose()?;
     let opts = parse_autoscale_flags(&f)?.unwrap_or_default();
 
     // profile the running cluster once (Alg. 1), then every offer is
@@ -492,12 +495,15 @@ fn cmd_autoscale(args: &[String]) -> Result<()> {
     leader.shutdown();
 
     if joint || release {
-        let ropts = poplar::policy::RoundOptions {
+        let mut ropts = poplar::policy::RoundOptions {
             consider_release: release,
             // the operator-facing table shows the greedy replay
             with_sequential: true,
             ..poplar::policy::RoundOptions::from_autoscale(&opts)
         };
+        if let Some(cap) = max_admit {
+            ropts.max_offers_per_round = cap;
+        }
         let round = poplar::policy::decide_round(&planner, &net, &model, &offers, &ropts)
             .map_err(|e| anyhow!("{e}"))?;
         print_round_plan(&round, &model.name, &cluster.name, stage);

@@ -28,7 +28,15 @@
 //!   batch-mate that the sequential rule would have declined — and
 //!   additionally considers [`Action::Release`]-ing a paid rank when
 //!   the cost-adjusted (samples per dollar) frontier says dropping it
-//!   wins.
+//!   wins. Batches of at most [`MAX_EXHAUSTIVE_OFFERS`] offers are
+//!   enumerated exactly (`2^k` subsets); larger batches go through a
+//!   **marginal-contribution greedy search** (seed from the best
+//!   singleton, repeatedly add the offer with the highest marginal
+//!   amortized gain against an incrementally extended round preview,
+//!   stop when no addition improves the score), bounded by the
+//!   config-validated soft cap [`RoundOptions::max_offers_per_round`].
+//!   The equivalence suite pins the greedy result to the exhaustive
+//!   optimum on every batch small enough to enumerate.
 //!
 //! `autoscale` and `elastic::stage` keep their public APIs as thin
 //! adapters over this kernel; `Leader::run_elastic_job` evaluates each
@@ -44,12 +52,48 @@ use crate::autoscale::{
 use crate::cluster::catalog;
 use crate::config::model::ModelSpec;
 use crate::curves::PerfCurve;
-use crate::elastic::{CurveKey, ElasticPlanner};
+use crate::elastic::{CurveKey, ElasticPlanner, RoundPreview};
 use crate::netsim::NetSim;
 
-/// Upper bound on offers per joint round: the subset search is
-/// exponential in the batch size, and real spot offer batches are tiny.
-pub const MAX_OFFERS_PER_ROUND: usize = 6;
+/// Batch size at or below which [`decide_round`] enumerates every offer
+/// subset exactly (`2^k` masks). Above this bound the greedy
+/// marginal-contribution search takes over (see [`SearchMode`]); the
+/// equivalence tests assert the greedy score stays within
+/// [`GREEDY_BOUND`] of the exhaustive optimum on every batch this bound
+/// still covers.
+pub const MAX_EXHAUSTIVE_OFFERS: usize = 6;
+
+/// Documented quality bound of the greedy search: on every batch small
+/// enough to enumerate, `greedy_score >= GREEDY_BOUND *
+/// exhaustive_score` (the equivalence suite asserts this; in practice
+/// the two agree almost everywhere because offers of one GPU type price
+/// identically).
+pub const GREEDY_BOUND: f64 = 0.9;
+
+/// Default soft cap on how many offers one joint round may admit
+/// (`[policy] max_offers_per_round`,
+/// [`RoundOptions::max_offers_per_round`]). Unlike the PR-5 hard
+/// `MAX_OFFERS_PER_ROUND` error this caps the *chosen subset*, never
+/// the batch: any number of offers is priced, the round just stops
+/// growing its admission set at the cap.
+pub const DEFAULT_MAX_OFFERS_PER_ROUND: usize = 64;
+
+/// Which subset-search strategy [`decide_round`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Exhaustive enumeration for batches of at most
+    /// [`MAX_EXHAUSTIVE_OFFERS`] offers, greedy above — the only mode
+    /// callers normally want.
+    #[default]
+    Auto,
+    /// Force the exact `2^k` enumeration; batches above
+    /// [`MAX_EXHAUSTIVE_OFFERS`] are a typed `BadOptions` error (the
+    /// equivalence tests use this arm).
+    Exhaustive,
+    /// Force the greedy marginal-contribution search regardless of
+    /// batch size (the equivalence tests use this arm).
+    Greedy,
+}
 
 /// Typed itemization of the one-shot stall a decision pays before its
 /// first productive iteration. The kernel only ever consumes
@@ -179,6 +223,13 @@ pub struct RoundOptions {
     /// free (a planner clone plus one replan per admitted offer), so
     /// the leader leaves it off; the CLI and the figure turn it on.
     pub with_sequential: bool,
+    /// Soft cap on the offers one round may admit (`[policy]
+    /// max_offers_per_round`). Validated to be at least 1; batches of
+    /// any size are priced, the chosen subset just never exceeds this.
+    pub max_offers_per_round: usize,
+    /// Subset-search strategy ([`SearchMode::Auto`] unless a test pins
+    /// one arm).
+    pub search: SearchMode,
 }
 
 impl Default for RoundOptions {
@@ -189,6 +240,8 @@ impl Default for RoundOptions {
             prices: Vec::new(),
             consider_release: false,
             with_sequential: false,
+            max_offers_per_round: DEFAULT_MAX_OFFERS_PER_ROUND,
+            search: SearchMode::Auto,
         }
     }
 }
@@ -200,8 +253,7 @@ impl RoundOptions {
             horizon_s: a.horizon_s,
             min_gain: a.min_gain,
             prices: a.prices.clone(),
-            consider_release: false,
-            with_sequential: false,
+            ..Default::default()
         }
     }
 
@@ -230,7 +282,11 @@ pub struct OfferVerdict {
     /// The round engine's verdict for this offer.
     pub action: Action,
     /// What the PR-3 greedy rule (each offer priced alone against the
-    /// pre-admission state) decides for the same offer.
+    /// pre-admission state) decides for the same offer. `None` when the
+    /// solo evaluation is inapplicable (the offer cannot fit the
+    /// incumbent stage) or skipped — batches above
+    /// [`MAX_EXHAUSTIVE_OFFERS`] omit the comparison data rather than
+    /// pay one full preview per offer.
     pub solo: Option<OfferDecision>,
     /// One-line justification.
     pub reason: String,
@@ -355,14 +411,30 @@ fn baseline_rate(planner: &ElasticPlanner, net: &NetSim) -> Result<f64, Autoscal
 }
 
 /// One evaluated `(offer subset, stage)` point of the round search.
+/// `members` indexes into the offer batch (any size — no bitmask, so no
+/// 64-offer ceiling) in *evaluation* order; `member_cached` is parallel
+/// to it.
 struct Candidate {
-    mask: usize,
+    members: Vec<usize>,
     stage: u8,
     rate: f64,
     ledger: StallLedger,
     score: f64,
-    /// Per-member measured flag, subset order.
+    /// Per-member measured flag, `members` order.
     member_cached: Vec<bool>,
+}
+
+impl Candidate {
+    fn keep(stage0: u8, pre_rate: f64, pre_score: f64) -> Self {
+        Candidate {
+            members: Vec::new(),
+            stage: stage0,
+            rate: pre_rate,
+            ledger: StallLedger::default(),
+            score: pre_score,
+            member_cached: Vec::new(),
+        }
+    }
 }
 
 fn validate(opts: &RoundOptions) -> Result<(), AutoscaleError> {
@@ -373,13 +445,278 @@ fn validate(opts: &RoundOptions) -> Result<(), AutoscaleError> {
         min_gain: opts.min_gain,
         prices: Vec::new(),
     }
-    .validate()
+    .validate()?;
+    if opts.max_offers_per_round == 0 {
+        return Err(AutoscaleError::BadOptions(
+            "max_offers_per_round must be at least 1".to_string(),
+        ));
+    }
+    Ok(())
 }
 
-/// The joint decision round: evaluate every offer subset at every
-/// eligible ZeRO stage with ONE combined stall per configuration, pick
-/// the kernel-score maximum, and (with `consider_release`) check
-/// whether releasing a paid rank wins on the samples-per-dollar axis.
+/// Immutable inputs shared by every subset evaluation of one round.
+struct RoundCtx<'a> {
+    planner: &'a ElasticPlanner,
+    net: &'a NetSim,
+    model: &'a ModelSpec,
+    offers: &'a [String],
+    opts: &'a RoundOptions,
+    /// The planner's model preset, when it names one (stage-feasibility
+    /// checks need the memory model).
+    model_spec: Option<ModelSpec>,
+    psi: u64,
+    gbs: f64,
+    stage0: u8,
+    n_live: usize,
+}
+
+/// One priced subset: the preview is kept so the greedy search can
+/// extend it by one joiner instead of re-evaluating from scratch.
+struct SubsetEval {
+    rate: f64,
+    ledger: StallLedger,
+    score: f64,
+    member_cached: Vec<bool>,
+    preview: RoundPreview,
+}
+
+/// Stage-eligibility rules of the round search (identical for the
+/// exhaustive and greedy paths): non-incumbent stages need a stage
+/// policy, a model preset, the memory bound, and measured-at-`n_after`
+/// coverage of every involved type; the incumbent stage needs only the
+/// memory bound.
+fn stage_eligible(ctx: &RoundCtx, stage: u8, n_after: usize, subset_refs: &[&str]) -> bool {
+    if stage != ctx.stage0 {
+        if ctx.planner.stage_policy().is_none() {
+            return false;
+        }
+        let Some(mspec) = &ctx.model_spec else { return false };
+        if !ctx.planner.stage_feasible_with(mspec, stage, n_after, subset_refs) {
+            return false;
+        }
+        let measured = |g: &str| ctx.planner.measured_at(g, stage, n_after).is_some();
+        ctx.planner.slots().iter().filter(|s| s.alive).all(|s| measured(&s.gpu))
+            && subset_refs.iter().all(|g| measured(g))
+    } else if let Some(mspec) = &ctx.model_spec {
+        // incumbent stage: the memory bound must still hold for the
+        // post-admission group (a member that cannot fit here is
+        // evaluated at the other stages instead)
+        ctx.planner.stage_feasible_with(mspec, stage, n_after, subset_refs)
+    } else {
+        true
+    }
+}
+
+/// Catalog fallback estimate for one member uncached at `stage`
+/// (`Ok(None)` = cached; `Err(())` = not admissible at this stage).
+fn member_fallback(
+    ctx: &RoundCtx,
+    stage: u8,
+    n_after: usize,
+    gpu: &str,
+) -> Result<Option<PerfCurve>, ()> {
+    let key = CurveKey::new(gpu, ctx.planner.model(), stage);
+    if ctx.planner.cache().peek(&key).is_some() {
+        Ok(None)
+    } else if stage == ctx.stage0 {
+        synthesize_curve(gpu, ctx.model, stage, n_after).map(Some).map_err(|_| ())
+    } else {
+        // unreachable given the measured() precheck
+        Err(())
+    }
+}
+
+/// Score one priced preview: steady rate, itemized stall ledger, kernel
+/// score. `None` when the wall prediction is unusable.
+fn score_preview(
+    ctx: &RoundCtx,
+    pv: &RoundPreview,
+    subset: &[String],
+) -> Option<(f64, StallLedger, f64)> {
+    let wall = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, ctx.psi).ok()?;
+    if !(wall.is_finite() && wall > 0.0) {
+        return None;
+    }
+    let rate = ctx.gbs / wall;
+    // one Alg. 1 per uncached member *type* — joint admission amortizes
+    // the reshard, not the profiling
+    let mut profiling = 0.0;
+    let mut priced: Vec<&str> = Vec::new();
+    for (i, gpu) in subset.iter().enumerate() {
+        if !pv.joiner_cached[i] && !priced.contains(&gpu.as_str()) {
+            let idx = pv.curves.len() - subset.len() + i;
+            profiling += profile_cost_estimate_s(&pv.curves[idx]);
+            priced.push(gpu.as_str());
+        }
+    }
+    let migration = pv.migration_only_s.min(pv.reshard_penalty_s);
+    let ledger = StallLedger {
+        reshard_transfer_s: (pv.reshard_penalty_s - migration).max(0.0),
+        migration_transfer_s: migration,
+        profiling_est_s: profiling,
+    };
+    let score = amortized_score(rate, ctx.opts.horizon_s, &ledger);
+    Some((rate, ledger, score))
+}
+
+/// Price one `(subset, stage)` configuration from scratch. `None` when
+/// the configuration is ineligible or unplannable — the search just
+/// skips it, exactly like the PR-5 mask loop's `continue`s.
+fn eval_subset(ctx: &RoundCtx, stage: u8, members: &[usize]) -> Option<SubsetEval> {
+    let subset: Vec<String> = members.iter().map(|&i| ctx.offers[i].clone()).collect();
+    let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
+    let n_after = ctx.n_live + subset.len();
+    if !stage_eligible(ctx, stage, n_after, &subset_refs) {
+        return None;
+    }
+    let mut fallbacks: Vec<Option<PerfCurve>> = Vec::with_capacity(subset.len());
+    for gpu in &subset {
+        fallbacks.push(member_fallback(ctx, stage, n_after, gpu).ok()?);
+    }
+    let pv = ctx.planner.preview_round_at(stage, &subset, &fallbacks, ctx.net).ok()?;
+    let (rate, ledger, score) = score_preview(ctx, &pv, &subset)?;
+    Some(SubsetEval { rate, ledger, score, member_cached: pv.joiner_cached.clone(), preview: pv })
+}
+
+/// Price `prev ∪ {new_member}` by extending the prior preview one
+/// joiner at a time (`ElasticPlanner::preview_round_extend`) instead of
+/// rebuilding it — the delta path that makes the greedy search cheap.
+/// Falls back to a from-scratch evaluation when the prior subset
+/// carries a synthesized fallback curve (those are sized at the
+/// admission-time group size, so the cached prefix would be stale).
+fn eval_extend(
+    ctx: &RoundCtx,
+    stage: u8,
+    prev: &SubsetEval,
+    prev_members: &[usize],
+    new_member: usize,
+) -> Option<SubsetEval> {
+    let mut members = prev_members.to_vec();
+    members.push(new_member);
+    if prev.member_cached.iter().any(|c| !c) {
+        return eval_subset(ctx, stage, &members);
+    }
+    let subset: Vec<String> = members.iter().map(|&i| ctx.offers[i].clone()).collect();
+    let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
+    let n_after = ctx.n_live + subset.len();
+    if !stage_eligible(ctx, stage, n_after, &subset_refs) {
+        return None;
+    }
+    let gpu = &ctx.offers[new_member];
+    let fallback = member_fallback(ctx, stage, n_after, gpu).ok()?;
+    let pv = ctx
+        .planner
+        .preview_round_extend(&prev.preview, gpu, fallback.as_ref(), ctx.net)
+        .ok()?;
+    let (rate, ledger, score) = score_preview(ctx, &pv, &subset)?;
+    Some(SubsetEval { rate, ledger, score, member_cached: pv.joiner_cached.clone(), preview: pv })
+}
+
+/// The exact `2^k` enumeration (batches of at most
+/// [`MAX_EXHAUSTIVE_OFFERS`] offers): every subset × every eligible
+/// stage, best kernel score wins.
+fn search_exhaustive(ctx: &RoundCtx, best: &mut Candidate) {
+    let k = ctx.offers.len();
+    for mask in 1usize..(1usize << k) {
+        let members: Vec<usize> = (0..k).filter(|i| mask & (1 << i) != 0).collect();
+        if members.len() > ctx.opts.max_offers_per_round {
+            continue;
+        }
+        for stage in (0..=3u8).rev() {
+            if let Some(ev) = eval_subset(ctx, stage, &members) {
+                if ev.score > best.score {
+                    *best = Candidate {
+                        members: members.clone(),
+                        stage,
+                        rate: ev.rate,
+                        ledger: ev.ledger,
+                        score: ev.score,
+                        member_cached: ev.member_cached,
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// The marginal-contribution greedy search, per candidate stage: seed
+/// from the best singleton, then repeatedly add the unused offer with
+/// the highest marginal amortized gain against the incrementally
+/// extended preview, stopping when no addition strictly improves the
+/// score or the soft cap is reached. Offers of one GPU type price
+/// identically, so each growth step evaluates one representative per
+/// distinct unused type — `O(cap · T)` previews per stage, `T` =
+/// distinct offer types, instead of `2^k`.
+fn search_greedy(ctx: &RoundCtx, best: &mut Candidate) {
+    let k = ctx.offers.len();
+    let cap = ctx.opts.max_offers_per_round.min(k);
+    for stage in (0..=3u8).rev() {
+        // representative offer index per distinct type: the singleton
+        // seeds, and (filtered to unused) the growth candidates
+        let mut members: Vec<usize> = Vec::new();
+        let mut cur: Option<SubsetEval> = None;
+        for _ in 0..cap {
+            let mut step: Option<(usize, SubsetEval)> = None;
+            let mut seen_types: Vec<&str> = Vec::new();
+            for i in 0..k {
+                if members.contains(&i) {
+                    continue;
+                }
+                let ty = ctx.offers[i].as_str();
+                if seen_types.contains(&ty) {
+                    continue;
+                }
+                seen_types.push(ty);
+                let ev = match &cur {
+                    None => eval_subset(ctx, stage, &[i]),
+                    Some(prev) => eval_extend(ctx, stage, prev, &members, i),
+                };
+                if let Some(ev) = ev {
+                    // must strictly beat both the incumbent subset and
+                    // the best addition found so far this step
+                    let bar = cur
+                        .as_ref()
+                        .map(|c| c.score)
+                        .unwrap_or(f64::NEG_INFINITY)
+                        .max(step.as_ref().map(|(_, s)| s.score).unwrap_or(f64::NEG_INFINITY));
+                    if ev.score > bar {
+                        step = Some((i, ev));
+                    }
+                }
+            }
+            // stop when no addition strictly improves the score
+            let Some((i, ev)) = step else { break };
+            members.push(i);
+            cur = Some(ev);
+            let cur_ref = cur.as_ref().expect("just set");
+            if cur_ref.score > best.score {
+                *best = Candidate {
+                    members: members.clone(),
+                    stage,
+                    rate: cur_ref.rate,
+                    ledger: cur_ref.ledger.clone(),
+                    score: cur_ref.score,
+                    member_cached: cur_ref.member_cached.clone(),
+                };
+            }
+        }
+    }
+}
+
+/// The joint decision round: search offer subsets × eligible ZeRO
+/// stages with ONE combined stall per configuration, pick the
+/// kernel-score maximum, and (with `consider_release`) check whether
+/// releasing a paid rank wins on the samples-per-dollar axis.
+///
+/// Batches of at most [`MAX_EXHAUSTIVE_OFFERS`] offers are enumerated
+/// exactly; larger batches (any size — the PR-5 hard error is gone) go
+/// through the marginal-contribution greedy search, which admits at
+/// most [`RoundOptions::max_offers_per_round`] offers per round and is
+/// pinned by tests to within [`GREEDY_BOUND`] of the exhaustive optimum
+/// wherever both run. Greedy previews are priced incrementally
+/// ([`ElasticPlanner::preview_round_extend`]), so a 100-offer round
+/// over a 1000-rank fleet completes in one planner pass per growth
+/// step.
 ///
 /// Decision rule: the round acts only when the best configuration's
 /// amortized relative gain clears `min_gain` against the keep-as-is
@@ -411,180 +748,91 @@ pub fn decide_round(
     opts: &RoundOptions,
 ) -> Result<RoundPlan, AutoscaleError> {
     validate(opts)?;
-    if offers.len() > MAX_OFFERS_PER_ROUND {
-        return Err(AutoscaleError::BadOptions(format!(
-            "joint admission supports at most {MAX_OFFERS_PER_ROUND} offers per round, got {}",
-            offers.len()
-        )));
-    }
     for gpu in offers {
         if catalog::spec(gpu).is_none() {
             return Err(AutoscaleError::UnknownGpu(gpu.clone()));
         }
     }
 
-    let psi = planner.param_count();
-    let gbs = planner.gbs() as f64;
     let stage0 = planner.stage();
-    let n_live = planner.active_slots().len();
     let pre_rate = baseline_rate(planner, net)?;
     let pre_score = amortized_score(pre_rate, opts.horizon_s, &StallLedger::default());
-    let model_spec = crate::config::model::preset(planner.model());
+    let ctx = RoundCtx {
+        planner,
+        net,
+        model,
+        offers,
+        opts,
+        model_spec: crate::config::model::preset(planner.model()),
+        psi: planner.param_count(),
+        gbs: planner.gbs() as f64,
+        stage0,
+        n_live: planner.active_slots().len(),
+    };
 
-    // greedy one-at-a-time verdicts (the PR-3 rule) for comparison
+    // which search runs: exact enumeration for small batches, greedy
+    // above (a forced-exhaustive large batch is the one BadOptions left)
+    let k = offers.len();
+    let exhaustive = match opts.search {
+        SearchMode::Exhaustive => {
+            if k > MAX_EXHAUSTIVE_OFFERS {
+                return Err(AutoscaleError::BadOptions(format!(
+                    "exhaustive subset search is capped at {MAX_EXHAUSTIVE_OFFERS} offers, \
+                     got {k}; use SearchMode::Auto or SearchMode::Greedy"
+                )));
+            }
+            true
+        }
+        SearchMode::Greedy => false,
+        SearchMode::Auto => k <= MAX_EXHAUSTIVE_OFFERS,
+    };
+
+    // greedy one-at-a-time verdicts (the PR-3 rule) for comparison —
+    // comparison data only, so large batches skip it rather than pay
+    // one full preview per offer
     let aopts = opts.to_autoscale();
     let mut solo: Vec<Option<OfferDecision>> = Vec::with_capacity(offers.len());
-    for gpu in offers {
-        match autoscale::evaluate_offer(planner, net, model, gpu, &aopts) {
-            Ok(d) => solo.push(Some(d)),
-            // a candidate that cannot fit at the incumbent stage is a
-            // greedy decline, not a round-killing error — the joint
-            // search may still place it at another stage
-            Err(AutoscaleError::NoCapacity(_)) | Err(AutoscaleError::Elastic(_)) => {
-                solo.push(None)
+    if k <= MAX_EXHAUSTIVE_OFFERS {
+        for gpu in offers {
+            match autoscale::evaluate_offer(planner, net, model, gpu, &aopts) {
+                Ok(d) => solo.push(Some(d)),
+                // a candidate that cannot fit at the incumbent stage is a
+                // greedy decline, not a round-killing error — the joint
+                // search may still place it at another stage
+                Err(AutoscaleError::NoCapacity(_)) | Err(AutoscaleError::Elastic(_)) => {
+                    solo.push(None)
+                }
+                Err(e) => return Err(e),
             }
-            Err(e) => return Err(e),
         }
+    } else {
+        solo.resize(k, None);
     }
 
     // ---- subset x stage search ----
-    let k = offers.len();
-    let mut best = Candidate {
-        mask: 0,
-        stage: stage0,
-        rate: pre_rate,
-        ledger: StallLedger::default(),
-        score: pre_score,
-        member_cached: Vec::new(),
-    };
-    for mask in 1usize..(1usize << k) {
-        let subset: Vec<String> = (0..k)
-            .filter(|i| mask & (1 << i) != 0)
-            .map(|i| offers[i].clone())
-            .collect();
-        let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
-        let n_after = n_live + subset.len();
-        for stage in (0..=3u8).rev() {
-            if stage != stage0 {
-                // non-incumbent stages: only under a stage policy, only
-                // when the memory bound holds and every involved type is
-                // measured there at the post-admission group size
-                if planner.stage_policy().is_none() {
-                    continue;
-                }
-                let Some(mspec) = &model_spec else { continue };
-                if !planner.stage_feasible_with(mspec, stage, n_after, &subset_refs) {
-                    continue;
-                }
-                let measured = |g: &str| planner.measured_at(g, stage, n_after).is_some();
-                if !planner
-                    .slots()
-                    .iter()
-                    .filter(|s| s.alive)
-                    .all(|s| measured(&s.gpu))
-                    || !subset_refs.iter().all(|g| measured(g))
-                {
-                    continue;
-                }
-            } else if let Some(mspec) = &model_spec {
-                // incumbent stage: the memory bound must still hold for
-                // the post-admission group (a member that cannot fit here
-                // is evaluated at the other stages instead)
-                if !planner.stage_feasible_with(mspec, stage, n_after, &subset_refs) {
-                    continue;
-                }
-            }
-
-            // fallback estimates for members uncached at the incumbent
-            let mut fallbacks: Vec<Option<PerfCurve>> = Vec::with_capacity(subset.len());
-            let mut admissible = true;
-            for gpu in &subset {
-                let key = CurveKey::new(gpu, planner.model(), stage);
-                if planner.cache().peek(&key).is_some() {
-                    fallbacks.push(None);
-                } else if stage == stage0 {
-                    match synthesize_curve(gpu, model, stage, n_after) {
-                        Ok(c) => fallbacks.push(Some(c)),
-                        Err(_) => {
-                            admissible = false;
-                            break;
-                        }
-                    }
-                } else {
-                    // unreachable given the measured() precheck
-                    admissible = false;
-                    break;
-                }
-            }
-            if !admissible {
-                continue;
-            }
-
-            let Ok(pv) = planner.preview_round_at(stage, &subset, &fallbacks, net) else {
-                continue;
-            };
-            let Ok(wall) = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, psi) else {
-                continue;
-            };
-            if !(wall.is_finite() && wall > 0.0) {
-                continue;
-            }
-            let rate = gbs / wall;
-
-            // one Alg. 1 per uncached member *type* — joint admission
-            // amortizes the reshard, not the profiling
-            let mut profiling = 0.0;
-            let mut priced: Vec<&str> = Vec::new();
-            for (i, gpu) in subset.iter().enumerate() {
-                if !pv.joiner_cached[i] && !priced.contains(&gpu.as_str()) {
-                    let idx = pv.curves.len() - subset.len() + i;
-                    profiling += profile_cost_estimate_s(&pv.curves[idx]);
-                    priced.push(gpu.as_str());
-                }
-            }
-            let migration = pv.migration_only_s.min(pv.reshard_penalty_s);
-            let ledger = StallLedger {
-                reshard_transfer_s: (pv.reshard_penalty_s - migration).max(0.0),
-                migration_transfer_s: migration,
-                profiling_est_s: profiling,
-            };
-            let score = amortized_score(rate, opts.horizon_s, &ledger);
-            if score > best.score {
-                best = Candidate {
-                    mask,
-                    stage,
-                    rate,
-                    ledger,
-                    score,
-                    member_cached: pv.joiner_cached.clone(),
-                };
-            }
-        }
+    let mut best = Candidate::keep(stage0, pre_rate, pre_score);
+    if exhaustive {
+        search_exhaustive(&ctx, &mut best);
+    } else {
+        search_greedy(&ctx, &mut best);
     }
 
     // gate: an acting round must clear the bar; otherwise keep as-is
     let mut rel_gain = if pre_rate > 0.0 { best.score / pre_rate - 1.0 } else { 0.0 };
-    if (best.mask != 0 || best.stage != stage0) && rel_gain < opts.min_gain {
-        best = Candidate {
-            mask: 0,
-            stage: stage0,
-            rate: pre_rate,
-            ledger: StallLedger::default(),
-            score: pre_score,
-            member_cached: Vec::new(),
-        };
+    if (!best.members.is_empty() || best.stage != stage0) && rel_gain < opts.min_gain {
+        best = Candidate::keep(stage0, pre_rate, pre_score);
         rel_gain = if pre_rate > 0.0 { best.score / pre_rate - 1.0 } else { 0.0 };
     }
 
     // per-offer verdicts
     let mut verdicts: Vec<OfferVerdict> = Vec::with_capacity(k);
     let mut admitted: Vec<String> = Vec::new();
-    let mut member_idx = 0usize;
     for (i, gpu) in offers.iter().enumerate() {
-        let in_best = best.mask & (1 << i) != 0;
-        let (action, reason) = if in_best {
-            let cached = best.member_cached.get(member_idx).copied().unwrap_or(true);
-            member_idx += 1;
+        // `members` is in evaluation order (greedy insertion order), so
+        // look the offer up by position to index `member_cached`
+        let member_pos = best.members.iter().position(|&m| m == i);
+        let (action, reason) = if let Some(pos) = member_pos {
+            let cached = best.member_cached.get(pos).copied().unwrap_or(true);
             admitted.push(gpu.clone());
             if cached {
                 (
@@ -619,7 +867,7 @@ pub fn decide_round(
     // ---- scale-down ----
     let price_pre = cluster_price_per_hour(planner, opts);
     let cost_pre = cost_per_ksample(price_pre, pre_rate);
-    let release = if opts.consider_release && best.mask == 0 && best.stage == stage0 {
+    let release = if opts.consider_release && best.members.is_empty() && best.stage == stage0 {
         decide_release(planner, net, opts, pre_rate, price_pre, cost_pre)?
     } else {
         None
@@ -1154,7 +1402,7 @@ mod tests {
     }
 
     #[test]
-    fn bad_options_and_oversized_batches_are_typed_errors() {
+    fn bad_options_and_unknown_types_are_typed_errors() {
         let (p, net) = planner_c();
         let m = preset("llama-0.5b").unwrap();
         let bad = RoundOptions { horizon_s: 0.0, ..Default::default() };
@@ -1162,15 +1410,48 @@ mod tests {
             decide_round(&p, &net, &m, &[], &bad),
             Err(AutoscaleError::BadOptions(_))
         ));
-        let many: Vec<String> =
-            (0..=MAX_OFFERS_PER_ROUND).map(|_| "T4".to_string()).collect();
+        let no_cap = RoundOptions { max_offers_per_round: 0, ..Default::default() };
         assert!(matches!(
-            decide_round(&p, &net, &m, &many, &RoundOptions::default()),
+            decide_round(&p, &net, &m, &[], &no_cap),
+            Err(AutoscaleError::BadOptions(_))
+        ));
+        // forcing exhaustive enumeration past its bound is the one
+        // oversize error left
+        let forced = RoundOptions { search: SearchMode::Exhaustive, ..Default::default() };
+        let many: Vec<String> =
+            (0..=MAX_EXHAUSTIVE_OFFERS).map(|_| "T4".to_string()).collect();
+        assert!(matches!(
+            decide_round(&p, &net, &m, &many, &forced),
             Err(AutoscaleError::BadOptions(_))
         ));
         assert!(matches!(
             decide_round(&p, &net, &m, &["H100".to_string()], &RoundOptions::default()),
             Err(AutoscaleError::UnknownGpu(_))
         ));
+    }
+
+    #[test]
+    fn oversized_batches_route_through_the_greedy_search() {
+        // the PR-5 hard error is gone: a batch past the exhaustive bound
+        // gets a verdict per offer (solo comparisons skipped), and the
+        // strong members are still admitted
+        let (mut p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        p.install_stage_curve("T4", 1, truth("T4", 1, 12)).unwrap();
+        let offers: Vec<String> = ["A800-80G", "T4", "A800-80G", "T4", "A800-80G", "T4", "A800-80G"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let round =
+            decide_round(&p, &net, &m, &offers, &RoundOptions::default()).unwrap();
+        assert_eq!(round.offers.len(), offers.len());
+        assert!(round.offers.iter().all(|v| v.solo.is_none()), "solo skipped on big batches");
+        assert!(!round.admitted.is_empty(), "strong A800 offers must be admitted");
+        assert!(round.rel_gain >= round.min_gain);
+        // the soft cap bounds the admission set, never errors
+        let capped = RoundOptions { max_offers_per_round: 2, ..Default::default() };
+        let round = decide_round(&p, &net, &m, &offers, &capped).unwrap();
+        assert!(round.admitted.len() <= 2);
+        assert!(!round.admitted.is_empty());
     }
 }

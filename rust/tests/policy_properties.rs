@@ -13,9 +13,9 @@ use poplar::autoscale::synthesize_curve;
 use poplar::cluster::LinkKind;
 use poplar::config::model::preset;
 use poplar::curves::PerfCurve;
-use poplar::elastic::{CurveKey, ElasticPlanner};
+use poplar::elastic::{CurveKey, ElasticPlanner, XorShift};
 use poplar::netsim::NetSim;
-use poplar::policy::{self, Action, RoundOptions};
+use poplar::policy::{self, Action, RoundOptions, SearchMode};
 
 fn truth(gpu: &str, stage: u8, n: usize) -> PerfCurve {
     let m = preset("llama-0.5b").unwrap();
@@ -123,6 +123,61 @@ fn prop_joint_round_never_worse_than_any_sequential_order() {
                 }
                 // the round never scores below the keep-as-is baseline
                 assert!(round.score >= round.pre_rate - 1e-9 * round.pre_rate);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_greedy_matches_exhaustive_on_small_batches() {
+    // tentpole acceptance: on every batch the exhaustive search can
+    // still afford (k <= MAX_EXHAUSTIVE_OFFERS) the greedy
+    // marginal-contribution search must (a) never beat the exhaustive
+    // optimum, (b) stay within the documented GREEDY_BOUND of it, and
+    // (c) never fall below any singleton round — the singletons are its
+    // seeds, so losing to one would mean the search is broken, not
+    // merely approximate.
+    let m = preset("llama-0.5b").unwrap();
+    const POOL: &[&str] = &["A800-80G", "V100S-32G", "T4", "RTX4090"];
+    for stage in [1u8, 2] {
+        let (mut p, net) = cluster_c(stage);
+        p.install_stage_curve("T4", stage, truth("T4", stage, 10)).unwrap();
+        let mut rng = XorShift::new(42 + stage as u64);
+        for case in 0..16 {
+            let k = rng.range(1, policy::MAX_EXHAUSTIVE_OFFERS as u64) as usize;
+            let offers: Vec<String> = (0..k)
+                .map(|_| POOL[(rng.next() as usize) % POOL.len()].to_string())
+                .collect();
+            let ex_opts = RoundOptions { search: SearchMode::Exhaustive, ..Default::default() };
+            let gr_opts = RoundOptions { search: SearchMode::Greedy, ..Default::default() };
+            let ex = policy::decide_round(&p, &net, &m, &offers, &ex_opts)
+                .unwrap_or_else(|e| panic!("stage {stage} case {case} {offers:?}: {e}"));
+            let gr = policy::decide_round(&p, &net, &m, &offers, &gr_opts)
+                .unwrap_or_else(|e| panic!("stage {stage} case {case} {offers:?}: {e}"));
+            let eps = 1e-9 * ex.score.abs().max(1.0);
+            assert!(
+                gr.score <= ex.score + eps,
+                "stage {stage} case {case} {offers:?}: greedy {} beat exhaustive {}",
+                gr.score,
+                ex.score
+            );
+            assert!(
+                gr.score >= policy::GREEDY_BOUND * ex.score - eps,
+                "stage {stage} case {case} {offers:?}: greedy {} fell below \
+                 {} x exhaustive {}",
+                gr.score,
+                policy::GREEDY_BOUND,
+                ex.score
+            );
+            for g in &offers {
+                let solo = policy::decide_round(&p, &net, &m, &[g.clone()], &ex_opts)
+                    .unwrap_or_else(|e| panic!("stage {stage} solo {g}: {e}"));
+                assert!(
+                    gr.score >= solo.score - eps,
+                    "stage {stage} case {case}: greedy {} lost to singleton {g} at {}",
+                    gr.score,
+                    solo.score
+                );
             }
         }
     }
