@@ -2,7 +2,10 @@
 //! across fleet size x offer-batch size — the scalability claim behind
 //! the greedy marginal-contribution search: the exponential mask loop
 //! capped real deployments at 6 offers, the greedy path must price a
-//! 100-offer batch against a 1000-rank fleet in one call.
+//! 100-offer batch against a 1000-rank fleet in one call. A trailing
+//! case times the measured-fabric loop (`netsim::BwMonitor` warm-up +
+//! sustained congestion shift + the replan it triggers) — the leader
+//! pays it inline every iteration, so it must stay cheap at fleet scale.
 //!
 //! Built with the in-crate harness (no criterion on this offline image);
 //! run with `cargo bench --bench policy`. Pass `--fast` / `--test` (or
@@ -32,7 +35,7 @@ use poplar::cluster::LinkKind;
 use poplar::config::model::preset;
 use poplar::elastic::ElasticPlanner;
 use poplar::metrics::bench::{bench, section, BenchResult};
-use poplar::netsim::NetSim;
+use poplar::netsim::{BwMonitor, NetSim};
 use poplar::policy::{self, RoundOptions, MAX_EXHAUSTIVE_OFFERS};
 
 const OFFER_POOL: &[&str] = &["A800-80G", "V100S-32G", "T4", "RTX4090"];
@@ -103,6 +106,33 @@ fn main() {
             assert!(r.mean_ns > 0.0);
             points.push(json_point(n, k, search, &r));
         }
+    }
+
+    // the measured-fabric hot path: one monitor warm-up, a sustained
+    // congestion shift, and the replan it triggers — the latency budget
+    // of the leader's per-iteration step (5b) plus the next replan
+    section("bw monitor + replan trigger");
+    {
+        let n = if fast { 64 } else { 1000 };
+        let (mut p, net) = fleet(n);
+        let name = format!("bw_monitor_replan/{n}ranks");
+        let r = bench(&name, target_ms, || {
+            let mut mon = BwMonitor::new(LinkKind::Ib);
+            for _ in 0..3 {
+                mon.observe(net.bw_gbs);
+            }
+            let mut shifted = false;
+            for _ in 0..4 {
+                shifted |= mon.observe(net.bw_gbs * 0.2).is_some();
+            }
+            assert!(shifted, "sustained congestion must signal");
+            let snap = mon.snapshot(n);
+            p.mark_dirty();
+            p.replan(&snap).unwrap().total_samples()
+        });
+        println!("{}", r.line());
+        assert!(r.mean_ns > 0.0);
+        points.push(json_point(n, 0, "bw-monitor", &r));
     }
 
     let json = format!(

@@ -47,6 +47,29 @@ impl LinkKind {
             LinkKind::Socket => 5e-5,
         }
     }
+
+    /// Stable lowercase name, the wire/config spelling (`parse` inverts it).
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkKind::Nvlink => "nvlink",
+            LinkKind::NvlinkCapped => "nvlink-capped",
+            LinkKind::Pcie => "pcie",
+            LinkKind::Ib => "ib",
+            LinkKind::Socket => "socket",
+        }
+    }
+
+    /// Parse the config/CLI spelling produced by [`LinkKind::name`].
+    pub fn parse(s: &str) -> Option<LinkKind> {
+        match s {
+            "nvlink" => Some(LinkKind::Nvlink),
+            "nvlink-capped" => Some(LinkKind::NvlinkCapped),
+            "pcie" => Some(LinkKind::Pcie),
+            "ib" => Some(LinkKind::Ib),
+            "socket" => Some(LinkKind::Socket),
+            _ => None,
+        }
+    }
 }
 
 /// A homogeneous group of GPUs forming one node of the cluster.
@@ -237,6 +260,21 @@ mod tests {
     fn unknown_gpu_rejected() {
         let c = ClusterSpec::new("x", &[("H100", 2, LinkKind::Pcie)], LinkKind::Ib);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn link_names_roundtrip() {
+        for l in [
+            LinkKind::Nvlink,
+            LinkKind::NvlinkCapped,
+            LinkKind::Pcie,
+            LinkKind::Ib,
+            LinkKind::Socket,
+        ] {
+            assert_eq!(LinkKind::parse(l.name()), Some(l));
+        }
+        assert_eq!(LinkKind::parse("ethernet"), None);
+        assert_eq!(LinkKind::parse(""), None);
     }
 
     #[test]

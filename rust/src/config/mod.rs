@@ -42,7 +42,7 @@
 //! allow_stage_change = true   # replan-time ZeRO-stage re-selection
 //! [[elastic.events]]
 //! at = 4
-//! kind = "lost"                # lost | joined | slowed
+//! kind = "lost"                # lost | joined | slowed | bw
 //! rank = 7
 //! [[elastic.events]]
 //! at = 6
@@ -53,6 +53,11 @@
 //! at = 8
 //! kind = "joined"
 //! gpu = "A800-80G"
+//! [[elastic.events]]
+//! at = 10
+//! kind = "bw"                  # fabric congestion: link drops to
+//! link = "socket"              # factor x spec bandwidth (recovery: 1.0)
+//! factor = 0.25
 //! ```
 //!
 //! Parsed with the in-crate [`toml_mini`] subset parser (offline image —
@@ -214,14 +219,7 @@ fn invalid(msg: impl Into<String>) -> ConfigError {
 }
 
 fn parse_link(s: &str) -> Result<LinkKind, ConfigError> {
-    match s {
-        "nvlink" => Ok(LinkKind::Nvlink),
-        "nvlink-capped" => Ok(LinkKind::NvlinkCapped),
-        "pcie" => Ok(LinkKind::Pcie),
-        "ib" => Ok(LinkKind::Ib),
-        "socket" => Ok(LinkKind::Socket),
-        _ => Err(invalid(format!("unknown link kind {s:?}"))),
-    }
+    LinkKind::parse(s).ok_or_else(|| invalid(format!("unknown link kind {s:?}")))
 }
 
 impl JobConfig {
@@ -373,9 +371,24 @@ impl JobConfig {
                         }
                         ElasticEvent::RankJoined { gpu: gpu.to_string() }
                     }
+                    "bw" => {
+                        let link = d
+                            .str(&format!("elastic.events.{i}.link"))
+                            .ok_or_else(|| invalid(format!("elastic.events.{i}.link")))?;
+                        parse_link(link)?;
+                        let factor = d
+                            .float(&format!("elastic.events.{i}.factor"))
+                            .ok_or_else(|| invalid(format!("elastic.events.{i}.factor")))?;
+                        // validated exactly like slowdown factors: a zero or
+                        // NaN factor would poison every collective price
+                        if !factor.is_finite() || factor <= 0.0 {
+                            return Err(invalid("elastic bandwidth factor must be finite and > 0"));
+                        }
+                        ElasticEvent::BwDrift { link: link.to_string(), factor }
+                    }
                     other => {
                         return Err(invalid(format!(
-                            "elastic.events.{i}.kind {other:?} (want lost|joined|slowed)"
+                            "elastic.events.{i}.kind {other:?} (want lost|joined|slowed|bw)"
                         )))
                     }
                 };
@@ -577,12 +590,17 @@ mod tests {
              [[elastic.events]]\n\
              at = 6\n\
              kind = \"joined\"\n\
-             gpu = \"A800-80G\"\n"
+             gpu = \"A800-80G\"\n\
+             [[elastic.events]]\n\
+             at = 9\n\
+             kind = \"bw\"\n\
+             link = \"socket\"\n\
+             factor = 0.25\n"
         );
         let cfg = JobConfig::from_toml(&toml).unwrap();
         let e = cfg.elastic.unwrap();
         assert_eq!(e.drift_threshold, 0.2);
-        assert_eq!(e.events.len(), 3);
+        assert_eq!(e.events.len(), 4);
         // sorted by iteration
         assert_eq!(e.events[0].at_iter, 2);
         assert_eq!(
@@ -591,6 +609,10 @@ mod tests {
         );
         assert_eq!(e.events[2].event,
                    crate::elastic::ElasticEvent::RankJoined { gpu: "A800-80G".into() });
+        assert_eq!(
+            e.events[3].event,
+            crate::elastic::ElasticEvent::BwDrift { link: "socket".into(), factor: 0.25 }
+        );
     }
 
     #[test]
@@ -646,6 +668,30 @@ mod tests {
         assert!(JobConfig::from_toml(&bad_gpu).is_err());
         let bad_thresh = format!("{GOOD}\n[elastic]\ndrift_threshold = 1.5\n");
         assert!(JobConfig::from_toml(&bad_thresh).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_bw_events() {
+        // bandwidth factors are validated exactly like slowdown factors
+        for factor in ["0", "-0.5", "nan", "inf"] {
+            let bad = format!(
+                "{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"bw\"\n\
+                 link = \"socket\"\nfactor = {factor}\n"
+            );
+            assert!(JobConfig::from_toml(&bad).is_err(), "factor {factor} must be rejected");
+        }
+        let bad_link = format!(
+            "{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"bw\"\n\
+             link = \"ethernet\"\nfactor = 0.5\n"
+        );
+        assert!(JobConfig::from_toml(&bad_link).is_err());
+        let no_link =
+            format!("{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"bw\"\nfactor = 0.5\n");
+        assert!(JobConfig::from_toml(&no_link).is_err());
+        let no_factor = format!(
+            "{GOOD}\n[elastic]\n[[elastic.events]]\nat = 1\nkind = \"bw\"\nlink = \"socket\"\n"
+        );
+        assert!(JobConfig::from_toml(&no_factor).is_err());
     }
 
     #[test]

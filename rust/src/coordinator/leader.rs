@@ -38,7 +38,7 @@ use crate::curves::PerfCurve;
 use crate::elastic::{self, ElasticEvent, ElasticPlanner, ScheduledEvent};
 use crate::memmodel;
 use crate::metrics::flops;
-use crate::netsim::NetSim;
+use crate::netsim::{BwMonitor, NetSim};
 use crate::profiler::{ClusterProfile, Device, ProfileResult, SimDevice};
 
 /// Live (worker-measured) timing of one iteration.
@@ -52,6 +52,12 @@ pub struct LiveIteration {
     pub idle_s: Vec<f64>,
     /// Collective seconds.
     pub comm_s: f64,
+    /// What the collectives *would* have cost at spec bandwidth — the
+    /// prediction baseline the comm-drift detector and the bandwidth
+    /// monitor's sample inversion compare `comm_s` against.
+    pub comm_pred_spec_s: f64,
+    /// Bandwidth-independent (α-term) share of the collective time.
+    pub comm_alpha_s: f64,
     /// Cluster TFLOP/s for this iteration.
     pub tflops: f64,
     /// Raw per-rank micro-step compute times (compact rank order) — the
@@ -155,6 +161,9 @@ pub struct ElasticIterationReport {
     pub reshard_penalty_s: f64,
     /// Optimizer-state bytes that changed owner in that reshard.
     pub reshard_bytes: u64,
+    /// Fabric bandwidth estimate (GB/s) after this iteration's
+    /// observation — the next replan prices collectives with it.
+    pub bw_gbs: f64,
 }
 
 /// Everything `run_elastic_job` produces.
@@ -198,7 +207,17 @@ pub struct Leader {
     replies: Receiver<WorkerReply>,
     rep_tx: Sender<WorkerReply>,
     model: ModelSpec,
+    /// The planner-facing cost model: bandwidth is the *monitor's
+    /// current estimate* (refreshed from `fabric` on sustained shifts),
+    /// `n` tracks membership.
     net: NetSim,
+    /// Measured-bandwidth estimator for the bottleneck link. The sim
+    /// substrate's ground-truth fabric is `fabric.ground_truth(n,
+    /// bw_factor)`; the monitor only ever sees collective times.
+    fabric: BwMonitor,
+    /// Ground-truth bandwidth multiplier injected by `bw:<link>:<factor>`
+    /// events — like a `RankSlowed` factor, the planner is never told.
+    bw_factor: f64,
     noise_sigma: f64,
     seed: u64,
 }
@@ -211,7 +230,8 @@ impl Leader {
         noise_sigma: f64,
         seed: u64,
     ) -> Self {
-        let net = NetSim::from_cluster(cluster);
+        let fabric = BwMonitor::new(cluster.bottleneck_link());
+        let net = fabric.snapshot(cluster.n_gpus());
         let instances = cluster.instances();
         let devices: Vec<Box<dyn Device>> = instances
             .iter()
@@ -228,6 +248,7 @@ impl Leader {
             })
             .collect();
         let mut leader = Self::with_devices(devices, model.clone(), net);
+        leader.fabric = fabric; // cluster-aware monitor (named link)
         leader.noise_sigma = noise_sigma;
         leader.seed = seed;
         leader
@@ -246,7 +267,18 @@ impl Leader {
                 WorkerHandle { cmd: cmd_tx, thread: Some(thread), alive: true }
             })
             .collect();
-        Leader { workers, replies: rep_rx, rep_tx, model, net, noise_sigma: 0.0, seed: 0 }
+        let fabric = BwMonitor::from_netsim(&net);
+        Leader {
+            workers,
+            replies: rep_rx,
+            rep_tx,
+            model,
+            net,
+            fabric,
+            bw_factor: 1.0,
+            noise_sigma: 0.0,
+            seed: 0,
+        }
     }
 
     /// Number of live ranks.
@@ -264,9 +296,35 @@ impl Leader {
             .collect()
     }
 
-    /// The collective cost model in use (its `n` tracks membership).
+    /// The collective cost model in use: its `n` tracks membership and
+    /// its bandwidth is the monitor's current *estimate*, not the spec.
     pub fn net(&self) -> &NetSim {
         &self.net
+    }
+
+    /// The measured-bandwidth estimator for the bottleneck link.
+    pub fn fabric(&self) -> &BwMonitor {
+        &self.fabric
+    }
+
+    /// Inject a ground-truth fabric bandwidth shift (elastic `BwDrift`):
+    /// the named link's effective bandwidth becomes `factor × spec`.
+    /// Symmetric to [`Leader::set_slowdown`], the planner is *not* told —
+    /// only the monitor's observed collective times can discover it. An
+    /// event naming a link other than the fabric bottleneck is rejected
+    /// (nothing in this job's ring crosses it).
+    pub fn set_bw_factor(&mut self, link: &str, factor: f64) -> Result<()> {
+        if !factor.is_finite() || factor <= 0.0 {
+            bail!("bandwidth factor must be finite and > 0, got {factor}");
+        }
+        if link != self.fabric.link_name() {
+            bail!(
+                "link {link:?} is not this job's bottleneck fabric ({:?})",
+                self.fabric.link_name()
+            );
+        }
+        self.bw_factor = factor;
+        Ok(())
     }
 
     /// Receive one worker reply. The leader holds a clone of the reply
@@ -499,6 +557,14 @@ impl Leader {
         let mut idle = vec![0.0f64; n];
         let mut wall = 0.0f64;
         let mut comm = 0.0f64;
+        let mut comm_pred_spec = 0.0f64;
+        let mut comm_alpha = 0.0f64;
+        // the collectives run on the *ground-truth* fabric (spec bandwidth
+        // × injected drift factor); the spec-priced twin and its α-only
+        // share are accumulated alongside so the bandwidth monitor can
+        // invert the observed time back into an effective-bandwidth sample
+        let truth = self.fabric.ground_truth(n, self.bw_factor);
+        let spec = self.fabric.spec_snapshot(n);
         match plan.stage {
             0 | 1 => {
                 // one sync point at the end
@@ -509,17 +575,27 @@ impl Leader {
                     busy[i] = totals[i];
                     idle[i] = t_max - totals[i];
                 }
-                let c = self
-                    .net
+                let c = truth
                     .iteration_comm_time(plan.stage, psi)
                     .map_err(|e| anyhow!("{e}"))?;
                 comm += c;
                 wall = t_max + c;
+                comm_pred_spec += spec
+                    .iteration_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
+                comm_alpha += spec
+                    .iteration_comm_time(plan.stage, 0)
+                    .map_err(|e| anyhow!("{e}"))?;
             }
             2 | 3 => {
-                let c_step = self
-                    .net
+                let c_step = truth
                     .per_microstep_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let c_step_spec = spec
+                    .per_microstep_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let c_step_alpha = spec
+                    .per_microstep_comm_time(plan.stage, 0)
                     .map_err(|e| anyhow!("{e}"))?;
                 for step in 0..gas {
                     let times: Vec<f64> = per_rank
@@ -533,13 +609,20 @@ impl Leader {
                     }
                     wall += t_max + c_step;
                     comm += c_step;
+                    comm_pred_spec += c_step_spec;
+                    comm_alpha += c_step_alpha;
                 }
-                let c = self
-                    .net
+                let c = truth
                     .iteration_comm_time(plan.stage, psi)
                     .map_err(|e| anyhow!("{e}"))?;
                 comm += c;
                 wall += c;
+                comm_pred_spec += spec
+                    .iteration_comm_time(plan.stage, psi)
+                    .map_err(|e| anyhow!("{e}"))?;
+                comm_alpha += spec
+                    .iteration_comm_time(plan.stage, 0)
+                    .map_err(|e| anyhow!("{e}"))?;
             }
             s => bail!("invalid stage {s}"),
         }
@@ -549,6 +632,8 @@ impl Leader {
             busy_s: busy,
             idle_s: idle,
             comm_s: comm,
+            comm_pred_spec_s: comm_pred_spec,
+            comm_alpha_s: comm_alpha,
             tflops: flops::tflops(&self.model, samples, wall),
             per_rank_steps: per_rank,
         })
@@ -590,7 +675,11 @@ impl Leader {
     /// snapshotting the shard manifest when persistence is on, (4) runs
     /// the iteration live and (5) compares observed micro-step times
     /// against the curves: drifted ranks are re-profiled incrementally
-    /// and the next iteration replans.
+    /// and the next iteration replans. A fabric twin (5b) checks the
+    /// observed collective time the same way and feeds the bandwidth
+    /// monitor: sustained shifts (never a single sample) log a
+    /// `bw-drift:<link>:<factor>` event, refresh the cost-model snapshot
+    /// to the new estimate and mark the plan stale.
     pub fn run_elastic_job(
         &mut self,
         requested_stage: u8,
@@ -679,6 +768,16 @@ impl Leader {
                         .map_err(|e| e.to_string())
                         .and_then(|()| {
                             self.set_slowdown(*slot, *factor).map_err(|e| e.to_string())
+                        })
+                        .map(|()| ev.event.label()),
+                    // ground-truth fabric shift: validated no-op on the
+                    // planner (symmetric to RankSlowed — the monitor, not
+                    // an announcement, must discover it from collectives)
+                    ElasticEvent::BwDrift { link, factor } => planner
+                        .apply(&ev.event)
+                        .map_err(|e| e.to_string())
+                        .and_then(|()| {
+                            self.set_bw_factor(link, *factor).map_err(|e| e.to_string())
                         })
                         .map(|()| ev.event.label()),
                 };
@@ -1113,6 +1212,48 @@ impl Leader {
                 }
             }
 
+            // (5b) comm-drift — the fabric twin of (5). The quick check
+            // compares this iteration's observed collective time against
+            // the prediction at the *current estimate* (symmetric to the
+            // compute path, same threshold); every iteration's
+            // effective-bandwidth sample then feeds the monitor, whose
+            // Startup/Degrade/Steady/Probe machine decides when a shift
+            // is sustained — a single noisy collective never replans.
+            // Skipped on the final iteration like (5): the replan it
+            // would arm can never run.
+            if iter + 1 < iterations {
+                let pred_est_s = if live.comm_pred_spec_s > live.comm_alpha_s
+                    && self.net.bw_gbs > 0.0
+                {
+                    live.comm_alpha_s
+                        + (live.comm_pred_spec_s - live.comm_alpha_s)
+                            * (self.fabric.spec_gbs() / self.net.bw_gbs)
+                } else {
+                    live.comm_pred_spec_s
+                };
+                if let Some(ratio) =
+                    elastic::detect_comm_drift(pred_est_s, live.comm_s, opts.drift_threshold)
+                {
+                    events.push(format!("comm-drift:observed/predicted={ratio:.2}"));
+                }
+                if let Some(sample) = self.fabric.sample_from_comm_times(
+                    live.comm_pred_spec_s,
+                    live.comm_alpha_s,
+                    live.comm_s,
+                ) {
+                    if let Some(shift) = self.fabric.observe(sample) {
+                        events.push(format!("bw-drift:{}:{:.2}", shift.link, shift.factor));
+                        // re-price everything at the new estimate: the
+                        // next iteration's replan, reshard/migration
+                        // stalls and offer rounds all consume this
+                        // snapshot, so a reshard that was cheap at spec
+                        // bandwidth is correctly vetoed mid-congestion
+                        self.net = self.fabric.snapshot(self.net.n);
+                        planner.mark_dirty();
+                    }
+                }
+            }
+
             reports.push(ElasticIterationReport {
                 iter,
                 events,
@@ -1124,6 +1265,7 @@ impl Leader {
                 reprofiled_slots: reprofiled,
                 reshard_penalty_s: penalty,
                 reshard_bytes,
+                bw_gbs: self.fabric.estimate_gbs(),
             });
         }
 
@@ -1706,6 +1848,127 @@ mod tests {
             .unwrap();
         assert!(rep.iterations[1].events.iter().all(|e| e.starts_with("skipped")));
         assert_eq!(rep.iterations[2].n_ranks, 4);
+        l.shutdown();
+    }
+
+    // ---------------- measured fabric (bw drift) ----------------
+
+    #[test]
+    fn elastic_bw_congestion_detected_and_replanned() {
+        // ZeRO-2 on cluster_c: per-micro-step reduce-scatters make the
+        // collective share large enough to dominate the iteration
+        let mut l = leader_c(0.0);
+        let schedule =
+            sched(vec![(1, ElasticEvent::BwDrift { link: "ib".into(), factor: 0.1 })]);
+        let rep = l
+            .run_elastic_job(2, 256, 8, &schedule, &ElasticOptions::default())
+            .unwrap();
+        // the ground-truth event is announced (a validated no-op)...
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e == "bw:ib:0.10"),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        // ...and the observed collective time immediately looks wrong
+        // against the current-estimate prediction...
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.starts_with("comm-drift:")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        // ...but the *plan* only moves once the monitor calls the shift
+        // sustained — never on the event or a single sample
+        assert!(!rep.iterations[1].replanned);
+        let drift_iter = rep
+            .iterations
+            .iter()
+            .position(|it| it.events.iter().any(|e| e.starts_with("bw-drift:ib:")))
+            .unwrap_or_else(|| panic!("no bw-drift signal: {:?}", rep.iterations));
+        assert!(drift_iter > 1, "a signal needs more than one observed sample");
+        assert!(
+            rep.iterations[drift_iter + 1].replanned,
+            "a signalled shift must replan: {:?}",
+            rep.iterations[drift_iter + 1]
+        );
+        // the estimate converges onto the congested truth (0.1 x spec)
+        // and the congested iterations really are slower end to end
+        let spec = l.fabric().spec_gbs();
+        let last = rep.iterations.last().unwrap();
+        assert!(last.bw_gbs < 0.25 * spec, "estimate {} still near spec", last.bw_gbs);
+        assert!(
+            last.wall_s > 2.0 * rep.iterations[0].wall_s,
+            "congestion must show in wall time: {} vs {}",
+            rep.iterations[0].wall_s,
+            last.wall_s
+        );
+        assert_eq!(rep.final_plan.total_samples(), 256);
+        rep.final_plan.validate().unwrap();
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_bw_recovery_probes_back_to_spec() {
+        // full round trip: congestion at iter 1, fabric recovers at iter
+        // 8; the monitor must signal both directions and end near spec
+        let mut l = leader_c(0.0);
+        let schedule = sched(vec![
+            (1, ElasticEvent::BwDrift { link: "ib".into(), factor: 0.1 }),
+            (8, ElasticEvent::BwDrift { link: "ib".into(), factor: 1.0 }),
+        ]);
+        let rep = l
+            .run_elastic_job(2, 256, 18, &schedule, &ElasticOptions::default())
+            .unwrap();
+        let factors: Vec<f64> = rep
+            .iterations
+            .iter()
+            .flat_map(|it| {
+                it.events
+                    .iter()
+                    .filter_map(|e| e.strip_prefix("bw-drift:ib:").and_then(|f| f.parse().ok()))
+            })
+            .collect();
+        let down = factors
+            .iter()
+            .position(|&f| f < 0.25)
+            .unwrap_or_else(|| panic!("no congestion signal: {factors:?}"));
+        assert!(
+            factors[down..].iter().any(|&f| f > 0.8),
+            "no recovery signal after the congested one: {factors:?}"
+        );
+        // pricing is restored: the final estimate is back near spec
+        let last = rep.iterations.last().unwrap();
+        assert!(
+            last.bw_gbs > 0.9 * l.fabric().spec_gbs(),
+            "probe never climbed back, estimate stuck at {}",
+            last.bw_gbs
+        );
+        assert_eq!(rep.final_plan.total_samples(), 256);
+        rep.final_plan.validate().unwrap();
+        l.shutdown();
+    }
+
+    #[test]
+    fn elastic_bw_event_on_non_bottleneck_link_is_skipped() {
+        // cluster_c's whole-group collectives price at the IB inter-node
+        // link; congesting the (unused) socket kind must change nothing
+        let mut l = leader_c(0.0);
+        let schedule =
+            sched(vec![(1, ElasticEvent::BwDrift { link: "socket".into(), factor: 0.5 })]);
+        let rep = l
+            .run_elastic_job(2, 256, 4, &schedule, &ElasticOptions::default())
+            .unwrap();
+        assert!(
+            rep.iterations[1].events.iter().any(|e| e.starts_with("skipped bw:socket:")),
+            "events: {:?}",
+            rep.iterations[1].events
+        );
+        assert!(rep.iterations.iter().skip(1).all(|it| !it.replanned));
+        let spec = l.fabric().spec_gbs();
+        assert!(
+            rep.iterations.iter().all(|it| (it.bw_gbs - spec).abs() < 1e-9),
+            "estimate must stay at spec: {:?}",
+            rep.iterations.iter().map(|it| it.bw_gbs).collect::<Vec<_>>()
+        );
         l.shutdown();
     }
 }

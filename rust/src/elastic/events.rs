@@ -1,11 +1,13 @@
 //! Elastic cluster events and deterministic schedules.
 //!
-//! Events model the three membership/behaviour changes a heterogeneous
-//! fleet actually exhibits mid-training: preemption (`RankLost`),
-//! capacity arriving (`RankJoined`) and stragglers (`RankSlowed`).
-//! Schedules are either written explicitly (config / CLI) or generated
-//! from a seed — both paths are fully deterministic so every elastic run
-//! is replayable.
+//! Events model the membership/behaviour changes a heterogeneous fleet
+//! actually exhibits mid-training: preemption (`RankLost`), capacity
+//! arriving (`RankJoined`), stragglers (`RankSlowed`) and fabric
+//! congestion (`BwDrift`). Schedules are either written explicitly
+//! (config / CLI) or generated from a seed — both paths are fully
+//! deterministic so every elastic run is replayable.
+
+use crate::cluster::LinkKind;
 
 /// One elastic cluster event.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,6 +31,17 @@ pub enum ElasticEvent {
         /// Compute-time multiplier, `> 1.0` means slower.
         factor: f64,
     },
+    /// The named fabric link's effective bandwidth shifts to
+    /// `factor × spec` (congestion when `< 1.0`, recovery when back at
+    /// `1.0`). Like `RankSlowed`, this is ground truth the planner is
+    /// *not* told about: only the `netsim::BwMonitor`'s observed
+    /// collective times can discover it.
+    BwDrift {
+        /// Link name per `LinkKind::name`, e.g. `"socket"`.
+        link: String,
+        /// Bandwidth multiplier vs spec, `(0, 1]` in practice.
+        factor: f64,
+    },
 }
 
 impl ElasticEvent {
@@ -40,6 +53,7 @@ impl ElasticEvent {
             ElasticEvent::RankSlowed { slot, factor } => {
                 format!("slowed(slot={slot},x{factor:.2})")
             }
+            ElasticEvent::BwDrift { link, factor } => format!("bw:{link}:{factor:.2}"),
         }
     }
 }
@@ -134,12 +148,18 @@ pub fn seeded_schedule(
 }
 
 /// Parse a compact CLI schedule: comma-separated
-/// `ITER:lost:SLOT | ITER:join:GPU | ITER:slow:SLOT:FACTOR`.
+/// `ITER:lost:SLOT | ITER:join:GPU | ITER:slow:SLOT:FACTOR |
+/// ITER:bw:LINK:FACTOR`.
 pub fn parse_schedule(s: &str) -> Result<Vec<ScheduledEvent>, String> {
     let mut out = Vec::new();
     for item in s.split(',').filter(|x| !x.trim().is_empty()) {
         let parts: Vec<&str> = item.trim().split(':').collect();
-        let bad = || format!("bad event {item:?} (want ITER:lost:SLOT, ITER:join:GPU or ITER:slow:SLOT:FACTOR)");
+        let bad = || {
+            format!(
+                "bad event {item:?} (want ITER:lost:SLOT, ITER:join:GPU, \
+                 ITER:slow:SLOT:FACTOR or ITER:bw:LINK:FACTOR)"
+            )
+        };
         if parts.len() < 3 {
             return Err(bad());
         }
@@ -156,6 +176,23 @@ pub fn parse_schedule(s: &str) -> Result<Vec<ScheduledEvent>, String> {
                     return Err(format!("slowdown factor must be finite and > 0, got {factor}"));
                 }
                 ElasticEvent::RankSlowed { slot: parts[2].parse().map_err(|_| bad())?, factor }
+            }
+            "bw" => {
+                if parts.len() != 4 {
+                    return Err(bad());
+                }
+                if LinkKind::parse(parts[2]).is_none() {
+                    return Err(format!(
+                        "unknown link kind {:?} in bw event (want nvlink, nvlink-capped, \
+                         pcie, ib or socket)",
+                        parts[2]
+                    ));
+                }
+                let factor: f64 = parts[3].parse().map_err(|_| bad())?;
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(format!("bandwidth factor must be finite and > 0, got {factor}"));
+                }
+                ElasticEvent::BwDrift { link: parts[2].to_string(), factor }
             }
             _ => return Err(bad()),
         };
@@ -213,5 +250,36 @@ mod tests {
         assert!(parse_schedule("1:slow:0:-2").is_err());
         assert!(parse_schedule("1:slow:0:nan").is_err());
         assert!(parse_schedule("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_schedule_bw_events() {
+        let s = parse_schedule("3:bw:socket:0.25, 9:bw:ib:1.0").unwrap();
+        assert_eq!(
+            s[0],
+            ScheduledEvent {
+                at_iter: 3,
+                event: ElasticEvent::BwDrift { link: "socket".into(), factor: 0.25 }
+            }
+        );
+        assert_eq!(
+            s[1],
+            ScheduledEvent {
+                at_iter: 9,
+                event: ElasticEvent::BwDrift { link: "ib".into(), factor: 1.0 }
+            }
+        );
+        assert_eq!(s[0].event.label(), "bw:socket:0.25");
+    }
+
+    #[test]
+    fn parse_schedule_rejects_bad_bw_events() {
+        // bandwidth factors validated exactly like slowdown factors
+        assert!(parse_schedule("1:bw:socket:0").is_err());
+        assert!(parse_schedule("1:bw:socket:-0.5").is_err());
+        assert!(parse_schedule("1:bw:socket:nan").is_err());
+        assert!(parse_schedule("1:bw:socket:inf").is_err());
+        assert!(parse_schedule("1:bw:socket").is_err(), "missing factor");
+        assert!(parse_schedule("1:bw:ethernet:0.5").is_err(), "unknown link kind");
     }
 }

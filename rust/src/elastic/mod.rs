@@ -17,6 +17,10 @@
 //! * [`detect_drift`] — compares observed micro-step times against the
 //!   fitted curves; ranks beyond the threshold are re-profiled (only
 //!   them — the rest of the cluster keeps training on known curves);
+//! * [`detect_comm_drift`] — the symmetric *fabric* check: observed vs
+//!   predicted collective time per iteration. A flagged iteration feeds
+//!   the `netsim::BwMonitor`, whose sustained-shift state machine (not
+//!   the single sample) decides when the incumbent plan goes stale;
 //! * every replan also rebuilds the optimizer-shard layout
 //!   ([`crate::ckpt::ShardManifest`]) and computes the minimal
 //!   shard-movement set against the previous layout, so
@@ -82,6 +86,8 @@ pub enum ElasticError {
     /// The checkpoint subsystem rejected the shard layout (message form:
     /// `CkptError` is not `PartialEq`).
     Ckpt(String),
+    /// A `BwDrift` event carried an unusable link name or factor.
+    BwDrift(String),
 }
 
 impl std::fmt::Display for ElasticError {
@@ -102,6 +108,7 @@ impl std::fmt::Display for ElasticError {
             ),
             ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
             ElasticError::Ckpt(e) => write!(f, "shard layout: {e}"),
+            ElasticError::BwDrift(e) => write!(f, "bw drift event: {e}"),
         }
     }
 }
@@ -248,8 +255,11 @@ impl ElasticPlanner {
         slot
     }
 
-    /// Apply a membership event. `RankSlowed` is deliberately a no-op
-    /// here: stragglers are *not announced* — drift detection finds them.
+    /// Apply a membership event. `RankSlowed` and `BwDrift` are
+    /// deliberately validated no-ops here: stragglers and fabric
+    /// congestion are *not announced* — compute-drift detection and the
+    /// `netsim::BwMonitor` respectively must discover them from
+    /// observations.
     pub fn apply(&mut self, event: &ElasticEvent) -> Result<(), ElasticError> {
         match event {
             ElasticEvent::RankLost { slot } => self.lose_slot(*slot),
@@ -261,6 +271,17 @@ impl ElasticPlanner {
                 let s = self.slots.get(*slot).ok_or(ElasticError::UnknownSlot(*slot))?;
                 if !s.alive {
                     return Err(ElasticError::DeadSlot(*slot));
+                }
+                Ok(())
+            }
+            ElasticEvent::BwDrift { link, factor } => {
+                if crate::cluster::LinkKind::parse(link).is_none() {
+                    return Err(ElasticError::BwDrift(format!("unknown link kind {link:?}")));
+                }
+                if !factor.is_finite() || *factor <= 0.0 {
+                    return Err(ElasticError::BwDrift(format!(
+                        "factor must be finite and > 0, got {factor}"
+                    )));
                 }
                 Ok(())
             }
@@ -1125,6 +1146,25 @@ pub fn detect_drift(
     drifted
 }
 
+/// The fabric-side twin of [`detect_drift`]: compare one iteration's
+/// *observed* collective time against the prediction at the planner's
+/// current bandwidth estimate. Returns `Some(observed / predicted)` when
+/// the relative deviation exceeds `threshold` (use
+/// [`DEFAULT_DRIFT_THRESHOLD`] for symmetry with the compute path).
+///
+/// A flagged iteration is a *hint*, not a replan: callers feed the
+/// sample to `netsim::BwMonitor::observe`, whose Startup/Degrade/Steady/
+/// Probe state machine only marks the plan stale on a sustained shift —
+/// a single noisy collective never replans.
+pub fn detect_comm_drift(predicted_s: f64, observed_s: f64, threshold: f64) -> Option<f64> {
+    if !predicted_s.is_finite() || !observed_s.is_finite() || predicted_s <= 0.0 || observed_s < 0.0
+    {
+        return None;
+    }
+    let ratio = observed_s / predicted_s;
+    ((ratio - 1.0).abs() > threshold).then_some(ratio)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1132,6 +1172,47 @@ mod tests {
     use crate::cluster::LinkKind;
     use crate::config::model::preset;
     use crate::curves::ProfiledPoint;
+
+    #[test]
+    fn comm_drift_fires_symmetrically_and_guards_degenerates() {
+        // congestion (slower than predicted) and recovery (faster than the
+        // degraded prediction) both flag — the detector is symmetric
+        let r = detect_comm_drift(1.0, 1.5, DEFAULT_DRIFT_THRESHOLD).unwrap();
+        assert!((r - 1.5).abs() < 1e-12);
+        let r = detect_comm_drift(1.0, 0.5, DEFAULT_DRIFT_THRESHOLD).unwrap();
+        assert!((r - 0.5).abs() < 1e-12);
+        // inside the band: quiet
+        assert_eq!(detect_comm_drift(1.0, 1.1, DEFAULT_DRIFT_THRESHOLD), None);
+        assert_eq!(detect_comm_drift(1.0, 0.9, DEFAULT_DRIFT_THRESHOLD), None);
+        // degenerate inputs never flag (ZeRO-3 has zero sync-point comm)
+        assert_eq!(detect_comm_drift(0.0, 1.0, DEFAULT_DRIFT_THRESHOLD), None);
+        assert_eq!(detect_comm_drift(-1.0, 1.0, DEFAULT_DRIFT_THRESHOLD), None);
+        assert_eq!(detect_comm_drift(f64::NAN, 1.0, DEFAULT_DRIFT_THRESHOLD), None);
+        assert_eq!(detect_comm_drift(1.0, f64::INFINITY, DEFAULT_DRIFT_THRESHOLD), None);
+    }
+
+    #[test]
+    fn bw_drift_event_is_validated_noop_on_planner() {
+        let mut p = ElasticPlanner::new(1, 64, "llama-0.5b", 500_000_000, 16);
+        p.add_slot("A800-80G");
+        p.add_slot("V100S-32G");
+        let before_dirty = p.dirty();
+        // valid event: accepted, membership untouched, does not re-dirty
+        p.apply(&ElasticEvent::BwDrift { link: "socket".into(), factor: 0.25 }).unwrap();
+        assert_eq!(p.active_slots().len(), 2);
+        assert_eq!(p.dirty(), before_dirty);
+        // invalid factor / link: typed errors
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(matches!(
+                p.apply(&ElasticEvent::BwDrift { link: "socket".into(), factor: bad }),
+                Err(ElasticError::BwDrift(_))
+            ));
+        }
+        assert!(matches!(
+            p.apply(&ElasticEvent::BwDrift { link: "ethernet".into(), factor: 0.5 }),
+            Err(ElasticError::BwDrift(_))
+        ));
+    }
 
     fn device_curve(gpu: &str, mbs: usize) -> PerfCurve {
         let g = catalog::spec_or_panic(gpu);

@@ -18,6 +18,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig_autoscale;
+pub mod fig_bw_adaptation;
 pub mod fig_elastic;
 pub mod fig_joint_admission;
 pub mod fig_stage_migration;
@@ -195,6 +196,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
          fig_stage_migration::run),
         ("fig_joint_admission", "Joint admission + scale-down — the unified decision round",
          fig_joint_admission::run),
+        ("fig_bw_adaptation", "Bandwidth adaptation — measured fabric flips and restores a replan",
+         fig_bw_adaptation::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

@@ -20,14 +20,14 @@
 //! |---|---|
 //! | [`spline`] | natural cubic spline (tridiagonal solve) |
 //! | [`cluster`] | GPU catalog + calibrated device performance model |
-//! | [`netsim`] | link topology + ring collective cost models |
+//! | [`netsim`] | link topology + ring collective cost models; `BwMonitor` — measured per-link bandwidth (EWMA estimator, Startup/Degrade/Steady/Probe state machine) from which every planner-facing `NetSim` snapshot derives |
 //! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
 //! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan`/`replan_with_stage` for elastic re-allocation, `predicted_wall_s` cross-stage rate model |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
 //! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` + cross-stage `migrate` (`partition_point` overlap sweep, per-endpoint `EndpointLoads` pricing; partition↔partition free, →replicate priced broadcast) |
-//! | [`elastic`] | elastic runtime: membership events, stage-keyed curve cache, drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`/`preview_round_at`/`preview_release` + the delta path `preview_round_extend` (one-joiner extension of a prior preview, bit-equal to the batch path), replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
+//! | [`elastic`] | elastic runtime: membership + bandwidth-drift events, stage-keyed curve cache, compute- and comm-drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`/`preview_round_at`/`preview_release` + the delta path `preview_round_extend` (one-joiner extension of a prior preview, bit-equal to the batch path), replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
 //! | [`policy`] | unified amortized-decision engine: THE scoring kernel (`amortized_score` over a typed `StallLedger`), the shared `Action` vocabulary, and `decide_round` — joint offer-subset × stage admission plus cost-adjusted scale-down (`Release`); exhaustive subset search ≤ 6 offers, marginal-contribution greedy above (any batch size, `max_offers_per_round` soft cap); every other module scores through it |
 //! | [`autoscale`] | cost-aware admission policy, a thin per-offer adapter over [`policy`]: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier; offers may re-stage under a `StagePolicy` |
 //! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` routes each iteration's offer batch through `policy::decide_round`; `allow_stage_change` migrates the ZeRO stage at replan time) |

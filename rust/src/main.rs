@@ -8,7 +8,7 @@
 //! poplar train     --artifacts artifacts/tiny --iters 100 [--gbs 16]
 //!                  [--cluster-sim 2xfast+2xslow]  # real PJRT training
 //! poplar elastic   --cluster cluster-C --model llama-0.5b [--stage 1]
-//!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G"]
+//!                  [--iters 12] [--events "4:lost:7,6:slow:0:2.5,8:join:A800-80G,9:bw:ib:0.2"]
 //!                  [--seed-schedule 7] [--ckpt-dir artifacts/ckpt]
 //!                  [--horizon 300] [--min-gain 0.02]   # enables the offer policy
 //!                  [--allow-stage-change]   # replan-time ZeRO-stage re-selection
@@ -25,7 +25,8 @@
 //!                          [--dir artifacts/ckpt | --path FILE] [--lost 7,3]
 //!                          [--stage N]   # != checkpoint stage: cross-stage migration
 //! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|
-//!                   fig_stage_migration|fig_joint_admission|table2|ablation|all>
+//!                   fig_stage_migration|fig_joint_admission|fig_bw_adaptation|
+//!                   table2|ablation|all>
 //!                  [--out results]
 //! ```
 //!
@@ -137,7 +138,9 @@ fn print_help() {
          \x20 simulate  --config job.toml\n\
          \x20 train     --artifacts artifacts/tiny [--iters 100] [--gbs 16] [--stage 1]\n\
          \x20 elastic   --cluster C --model M [--stage N] [--iters 12]\n\
-         \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G\"] [--seed-schedule 7]\n\
+         \x20           [--events \"4:lost:7,6:slow:0:2.5,8:join:A800-80G,9:bw:ib:0.2\"]\n\
+         \x20           # event kinds: ITER:lost:SLOT | ITER:join:GPU | ITER:slow:SLOT:FACTOR | ITER:bw:LINK:FACTOR\n\
+         \x20           [--seed-schedule 7]\n\
          \x20           [--ckpt-dir artifacts/ckpt] [--horizon 300] [--min-gain 0.02]\n\
          \x20           [--allow-stage-change]  # replan-time ZeRO-stage re-selection\n\
          \x20 autoscale --offer A800-80G,T4[,...] [--cluster C] [--model M] [--stage N]\n\
@@ -147,7 +150,7 @@ fn print_help() {
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
          \x20 ckpt      restore --cluster C --model M [--lost 7,3] [--stage N]  # cross-stage migrates\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|table2|ablation|all> [--out results]\n"
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|fig_bw_adaptation|table2|ablation|all> [--out results]\n"
     );
 }
 
@@ -394,8 +397,8 @@ fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
         rep.gbs, rep.replans, rep.cache_hits, rep.cache_misses
     );
     let mut t = Table::new(&[
-        "iter", "events", "ranks", "stage", "wall_s", "tflops", "replanned", "reprofiled",
-        "reshard_s", "moved_mb",
+        "iter", "events", "ranks", "stage", "wall_s", "tflops", "bw_gbs", "replanned",
+        "reprofiled", "reshard_s", "moved_mb",
     ]);
     for it in &rep.iterations {
         t.row(&[
@@ -405,6 +408,7 @@ fn print_elastic_report(rep: &poplar::coordinator::ElasticJobReport) {
             it.stage.to_string(),
             format!("{:.3}", it.wall_s),
             format!("{:.1}", it.tflops),
+            format!("{:.2}", it.bw_gbs),
             if it.replanned { "yes".into() } else { "-".into() },
             if it.reprofiled_slots.is_empty() {
                 "-".into()
@@ -821,6 +825,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             "fig_stage_migration",
             "Stage migration — replan-time ZeRO-stage re-selection",
             exp::fig_stage_migration::run,
+        )?,
+        "fig_bw_adaptation" => one(
+            "fig_bw_adaptation",
+            "Bandwidth adaptation — measured fabric flips and restores a replan",
+            exp::fig_bw_adaptation::run,
         )?,
         "fig_joint_admission" => one(
             "fig_joint_admission",

@@ -9,9 +9,20 @@
 //! `Comm_volume = 24 d h^2` (all-gather fwd + all-gather bwd +
 //! reduce-scatter bwd over the two h×4h matrices) is reproduced by
 //! [`zero3_ffn_comm_volume`] and unit-tested below.
+//!
+//! Bandwidth is a *measured* quantity, not a construction-time constant:
+//! [`BwMonitor`] (see [`monitor`]) owns a drifting per-link estimate fed
+//! by observed collective times, and `NetSim` is the snapshot consumers
+//! price with ([`BwMonitor::snapshot`]). Construct `NetSim` only through
+//! `from_cluster` / `from_link` / the monitor — CI rejects raw literals
+//! outside this directory.
 
 use crate::allocator::PlanError;
 use crate::cluster::{ClusterSpec, LinkKind};
+
+pub mod monitor;
+
+pub use monitor::{BwMonitor, BwShift, BwState};
 
 
 /// Collective operation kinds used by ZeRO stages.
@@ -39,7 +50,15 @@ pub struct NetSim {
 }
 
 impl NetSim {
-    /// Build the cost model from a cluster spec (bottleneck-link rule).
+    /// Build the cost model from a cluster spec.
+    ///
+    /// **Bottleneck-link rule** (paper appendix): a ring collective over
+    /// the whole data-parallel group crosses every link on the ring, so
+    /// the *slowest* one prices the collective — the inter-node link
+    /// when the cluster spans ≥ 2 non-empty groups (regardless of how
+    /// fast any intra-node NVLink is), else the single group's
+    /// intra-node link. See [`ClusterSpec::bottleneck_link`]; pinned by
+    /// `mixed_nvlink_socket_prices_at_socket` below.
     pub fn from_cluster(cluster: &ClusterSpec) -> Self {
         let link = cluster.bottleneck_link();
         NetSim::from_link(cluster.n_gpus(), link)
@@ -71,7 +90,8 @@ impl NetSim {
                 2.0 * (n - 1.0) / n * v / bw + 2.0 * (n - 1.0) * self.alpha_s
             }
             Collective::Broadcast => {
-                let hops = (n).log2().ceil();
+                // tree depth, computed once for both the byte and α terms
+                let hops = n.log2().ceil();
                 v / bw * hops + self.alpha_s * hops
             }
         }
@@ -205,6 +225,27 @@ mod tests {
         let net = NetSim::from_cluster(&cluster::cluster_a());
         assert_eq!(net.n, 8);
         assert_eq!(net.bw_gbs, LinkKind::Ib.bandwidth_gbs());
+    }
+
+    #[test]
+    fn mixed_nvlink_socket_prices_at_socket() {
+        // The bottleneck-link rule: two NVLink islands joined by sockets
+        // price every whole-group collective at the socket link — 300 GB/s
+        // inside the nodes buys nothing on the ring.
+        let c = ClusterSpec::new(
+            "nvlink-islands",
+            &[("A100-80G", 4, LinkKind::Nvlink), ("A100-80G", 4, LinkKind::Nvlink)],
+            LinkKind::Socket,
+        );
+        assert_eq!(c.bottleneck_link(), LinkKind::Socket);
+        let net = NetSim::from_cluster(&c);
+        assert_eq!(net.bw_gbs, LinkKind::Socket.bandwidth_gbs());
+        assert_eq!(net.alpha_s, LinkKind::Socket.latency_s());
+        // and the pricing really is socket-grade: ~150x slower than the
+        // same collective would be at NVLink bandwidth
+        let v = 1 << 30;
+        let nv = NetSim::from_link(8, LinkKind::Nvlink).time(Collective::AllGather, v);
+        assert!(net.time(Collective::AllGather, v) > 100.0 * nv);
     }
 
     #[test]

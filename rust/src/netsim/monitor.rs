@@ -1,0 +1,459 @@
+//! Measured fabric bandwidth: EWMA per-link estimator + adaptation
+//! state machine (AWStream-style Startup/Degrade/Steady/Probe).
+//!
+//! The spec sheet ([`LinkKind::bandwidth_gbs`]) is only a *prior*: real
+//! clusters see contention, and a plan optimal at 10 GB/s is wrong at
+//! 2 GB/s. [`BwMonitor`] owns the live estimate. It is fed one
+//! effective-bandwidth sample per iteration, inverted from the observed
+//! collective wall time via the α-β model (the α terms are
+//! bandwidth-independent, so `bw = β_seconds_at_spec * spec / (observed
+//! - α)` is exact, not a ratio heuristic — see
+//! [`BwMonitor::sample_from_comm_times`]).
+//!
+//! State machine:
+//!
+//! * **Startup** — the first [`STARTUP_SAMPLES`] observations converge
+//!   the estimate quickly off the spec prior (fast EWMA).
+//! * **Steady** — in-band samples track with a slow EWMA. A single
+//!   out-of-band sample moves *nothing*: only [`SUSTAIN_STREAK`]
+//!   consecutive low samples count as congestion.
+//! * **Degrade** — entered on sustained congestion; the estimate snaps
+//!   down to the observed level immediately (stalls priced at stale
+//!   bandwidth are how replans go wrong, so degrading is urgent).
+//! * **Probe** — entered when sustained high samples say the fabric is
+//!   recovering, or periodically (every [`PROBE_INTERVAL`] steady
+//!   ticks) while the estimate sits below spec; climbs back toward
+//!   spec with a fast EWMA, falling back to Degrade if contradicted.
+//!
+//! The estimate is invariant-bounded to `[min observed, spec]` — the
+//! monitor never prices the fabric above the spec sheet and never below
+//! the worst sample it has actually seen.
+//!
+//! Consumers never read the estimate directly on the replan path: they
+//! take a [`NetSim`] snapshot via [`BwMonitor::snapshot`] (CI greps
+//! that no raw `NetSim` literal exists outside `src/netsim/`).
+
+use super::NetSim;
+use crate::cluster::LinkKind;
+
+/// Samples consumed by the fast-converging startup phase.
+pub const STARTUP_SAMPLES: usize = 3;
+/// Relative tolerance band around the estimate; a sample inside the band
+/// is "in agreement". Matches `elastic::DEFAULT_DRIFT_THRESHOLD` so the
+/// comm path reacts at the same sensitivity as the compute path.
+pub const BW_TOLERANCE: f64 = 0.15;
+/// Consecutive out-of-band samples required before the state machine
+/// reacts — one noisy sample never moves the estimate or triggers a replan.
+pub const SUSTAIN_STREAK: usize = 3;
+/// Steady ticks below spec between optimistic upward probes.
+pub const PROBE_INTERVAL: usize = 4;
+/// Slow EWMA weight of the newest sample (Steady/Degrade tracking).
+pub const EWMA_ALPHA: f64 = 0.3;
+/// Fast EWMA weight (Startup convergence, Probe climb).
+pub const FAST_ALPHA: f64 = 0.5;
+/// Relative estimate shift (vs the last-signalled value) that emits a
+/// [`BwShift`] — i.e. asks the consumer to replan.
+pub const SHIFT_THRESHOLD: f64 = 0.15;
+
+/// Adaptation state of the bandwidth estimator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BwState {
+    /// Converging off the spec prior (first few samples).
+    Startup,
+    /// Estimate agrees with recent samples; slow tracking.
+    Steady,
+    /// Sustained congestion detected; estimate snapped down, watching.
+    Degrade,
+    /// Optimistically climbing back toward spec bandwidth.
+    Probe,
+}
+
+impl BwState {
+    /// Stable lowercase name for tables and event logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            BwState::Startup => "startup",
+            BwState::Steady => "steady",
+            BwState::Degrade => "degrade",
+            BwState::Probe => "probe",
+        }
+    }
+}
+
+/// A sustained bandwidth shift the consumer should replan on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BwShift {
+    /// Link name ([`LinkKind::name`]) the estimate belongs to.
+    pub link: String,
+    /// New estimate relative to spec bandwidth (1.0 = at spec).
+    pub factor: f64,
+    /// New estimate in GB/s.
+    pub est_gbs: f64,
+}
+
+/// EWMA bandwidth estimator + Startup/Degrade/Steady/Probe state machine
+/// for one (bottleneck) link. See the module docs for the semantics.
+#[derive(Debug, Clone)]
+pub struct BwMonitor {
+    link: String,
+    spec_gbs: f64,
+    alpha_s: f64,
+    est_gbs: f64,
+    min_observed_gbs: f64,
+    state: BwState,
+    samples: usize,
+    low_streak: usize,
+    high_streak: usize,
+    in_band_streak: usize,
+    steady_ticks: usize,
+    signalled_gbs: f64,
+}
+
+impl BwMonitor {
+    /// Monitor a link, seeding the estimate from its spec bandwidth.
+    pub fn new(link: LinkKind) -> Self {
+        Self::from_parts(link.bandwidth_gbs(), link.latency_s(), link.name())
+    }
+
+    /// Monitor an anonymous fabric given explicit spec numbers (the
+    /// real-device path, where no `LinkKind` is known).
+    pub fn from_parts(spec_gbs: f64, alpha_s: f64, link: &str) -> Self {
+        BwMonitor {
+            link: link.to_string(),
+            spec_gbs,
+            alpha_s,
+            est_gbs: spec_gbs,
+            min_observed_gbs: spec_gbs,
+            state: BwState::Startup,
+            samples: 0,
+            low_streak: 0,
+            high_streak: 0,
+            in_band_streak: 0,
+            steady_ticks: 0,
+            signalled_gbs: spec_gbs,
+        }
+    }
+
+    /// Derive a monitor from an existing cost-model snapshot (treats its
+    /// bandwidth as the spec prior).
+    pub fn from_netsim(net: &NetSim) -> Self {
+        Self::from_parts(net.bw_gbs, net.alpha_s, "fabric")
+    }
+
+    /// Name of the monitored link (matches `bw:<link>:<factor>` events).
+    pub fn link_name(&self) -> &str {
+        &self.link
+    }
+
+    /// Spec-sheet bandwidth (the prior and the upper bound), GB/s.
+    pub fn spec_gbs(&self) -> f64 {
+        self.spec_gbs
+    }
+
+    /// Current bandwidth estimate, GB/s.
+    pub fn estimate_gbs(&self) -> f64 {
+        self.est_gbs
+    }
+
+    /// Lowest effective bandwidth ever observed (the lower bound), GB/s.
+    pub fn min_observed_gbs(&self) -> f64 {
+        self.min_observed_gbs
+    }
+
+    /// Current adaptation state.
+    pub fn state(&self) -> BwState {
+        self.state
+    }
+
+    /// Samples consumed so far.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// The planner-facing cost model at the *current estimate*.
+    pub fn snapshot(&self, n: usize) -> NetSim {
+        NetSim { n, bw_gbs: self.est_gbs, alpha_s: self.alpha_s }
+    }
+
+    /// The cost model at spec bandwidth (prediction baseline for sample
+    /// inversion, and the sim substrate's pre-drift ground truth).
+    pub fn spec_snapshot(&self, n: usize) -> NetSim {
+        NetSim { n, bw_gbs: self.spec_gbs, alpha_s: self.alpha_s }
+    }
+
+    /// The sim substrate's ground-truth fabric: spec bandwidth scaled by
+    /// the injected drift factor. Lives here so the sim never constructs
+    /// a raw `NetSim` literal outside `src/netsim/`.
+    pub fn ground_truth(&self, n: usize, factor: f64) -> NetSim {
+        NetSim { n, bw_gbs: self.spec_gbs * factor, alpha_s: self.alpha_s }
+    }
+
+    /// Invert one iteration's collective wall time into an effective
+    /// bandwidth sample. `pred_spec_s` is the predicted collective time
+    /// at spec bandwidth, `alpha_s` its bandwidth-independent α share
+    /// (both from [`BwMonitor::spec_snapshot`] pricing), `observed_s`
+    /// the measured time. Exact under the α-β model:
+    /// `observed = β/bw + α` with `β = (pred_spec - α) * spec`.
+    ///
+    /// Returns `None` when the iteration carries no byte term (ZeRO-3
+    /// single rank, degenerate timings) — nothing to learn from.
+    pub fn sample_from_comm_times(
+        &self,
+        pred_spec_s: f64,
+        alpha_s: f64,
+        observed_s: f64,
+    ) -> Option<f64> {
+        if !pred_spec_s.is_finite() || !alpha_s.is_finite() || !observed_s.is_finite() {
+            return None;
+        }
+        let beta_s = pred_spec_s - alpha_s; // seconds the bytes take at spec
+        let stretched = observed_s - alpha_s;
+        if beta_s <= 0.0 || stretched <= 0.0 {
+            return None;
+        }
+        Some(self.spec_gbs * beta_s / stretched)
+    }
+
+    /// Feed one effective-bandwidth sample (GB/s). Returns a [`BwShift`]
+    /// when the estimate has moved enough (sustained, per the state
+    /// machine) that incumbent plans should be re-priced.
+    pub fn observe(&mut self, sample_gbs: f64) -> Option<BwShift> {
+        if !sample_gbs.is_finite() || sample_gbs <= 0.0 {
+            return None;
+        }
+        // the spec sheet is a hard ceiling: a "faster than spec" sample is
+        // measurement noise, not capacity
+        let sample = sample_gbs.min(self.spec_gbs);
+        self.min_observed_gbs = self.min_observed_gbs.min(sample);
+        self.samples += 1;
+
+        let low = sample < self.est_gbs * (1.0 - BW_TOLERANCE);
+        let high = sample > self.est_gbs * (1.0 + BW_TOLERANCE);
+        self.low_streak = if low { self.low_streak + 1 } else { 0 };
+        self.high_streak = if high { self.high_streak + 1 } else { 0 };
+        self.in_band_streak = if low || high { 0 } else { self.in_band_streak + 1 };
+
+        match self.state {
+            BwState::Startup => {
+                self.est_gbs = ewma(self.est_gbs, sample, FAST_ALPHA);
+                if self.samples >= STARTUP_SAMPLES {
+                    self.state = BwState::Steady;
+                }
+            }
+            BwState::Steady => {
+                if self.low_streak >= SUSTAIN_STREAK {
+                    // sustained congestion: degrade to the observed level now
+                    self.state = BwState::Degrade;
+                    self.est_gbs = sample;
+                    self.steady_ticks = 0;
+                } else if !low && !high {
+                    self.est_gbs = ewma(self.est_gbs, sample, EWMA_ALPHA);
+                }
+                // while parked below spec, probe upward on a fixed cadence
+                if self.state == BwState::Steady
+                    && self.est_gbs < self.spec_gbs * (1.0 - BW_TOLERANCE)
+                {
+                    self.steady_ticks += 1;
+                    if self.steady_ticks >= PROBE_INTERVAL {
+                        self.state = BwState::Probe;
+                        self.steady_ticks = 0;
+                    }
+                } else {
+                    self.steady_ticks = 0;
+                }
+            }
+            BwState::Degrade => {
+                self.est_gbs = ewma(self.est_gbs, sample, EWMA_ALPHA);
+                if self.high_streak >= SUSTAIN_STREAK {
+                    self.state = BwState::Probe; // fabric is recovering
+                } else if self.in_band_streak >= SUSTAIN_STREAK {
+                    self.state = BwState::Steady; // converged on the new level
+                }
+            }
+            BwState::Probe => {
+                // climb fast toward what the samples support…
+                self.est_gbs = ewma(self.est_gbs, sample, FAST_ALPHA);
+                if self.low_streak >= SUSTAIN_STREAK {
+                    // …but a contradicted probe degrades right back
+                    self.state = BwState::Degrade;
+                    self.est_gbs = sample;
+                } else if self.in_band_streak >= SUSTAIN_STREAK {
+                    self.state = BwState::Steady;
+                }
+            }
+        }
+
+        // invariant: spec prior above, worst observation below
+        self.est_gbs = self.est_gbs.clamp(self.min_observed_gbs, self.spec_gbs);
+
+        // signal only when the estimate moved materially since the last
+        // signal — the replan trigger, decoupled from per-sample jitter
+        let rel = (self.est_gbs - self.signalled_gbs).abs() / self.signalled_gbs;
+        if rel > SHIFT_THRESHOLD && self.state != BwState::Startup {
+            self.signalled_gbs = self.est_gbs;
+            return Some(BwShift {
+                link: self.link.clone(),
+                factor: self.est_gbs / self.spec_gbs,
+                est_gbs: self.est_gbs,
+            });
+        }
+        None
+    }
+}
+
+fn ewma(prev: f64, sample: f64, alpha: f64) -> f64 {
+    (1.0 - alpha) * prev + alpha * sample
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> f64 {
+        LinkKind::Socket.bandwidth_gbs()
+    }
+
+    fn warmed() -> BwMonitor {
+        let mut m = BwMonitor::new(LinkKind::Socket);
+        for _ in 0..STARTUP_SAMPLES {
+            m.observe(spec());
+        }
+        assert_eq!(m.state(), BwState::Steady);
+        m
+    }
+
+    #[test]
+    fn single_outlier_never_moves_estimate_or_signals() {
+        let mut m = warmed();
+        let before = m.estimate_gbs();
+        assert!(m.observe(spec() * 0.1).is_none(), "one noisy sample must not signal");
+        assert_eq!(m.estimate_gbs(), before, "one noisy sample must not move the estimate");
+        assert!(m.observe(spec()).is_none());
+        assert_eq!(m.state(), BwState::Steady);
+    }
+
+    #[test]
+    fn sustained_congestion_degrades_and_signals() {
+        let mut m = warmed();
+        let mut shift = None;
+        for _ in 0..SUSTAIN_STREAK {
+            if let Some(s) = m.observe(spec() * 0.2) {
+                shift = Some(s);
+            }
+        }
+        let s = shift.expect("sustained congestion must signal a shift");
+        assert_eq!(m.state(), BwState::Degrade);
+        assert_eq!(s.link, "socket");
+        assert!((s.factor - 0.2).abs() < 1e-9, "snap to observed level, got {}", s.factor);
+        assert!((m.estimate_gbs() - spec() * 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_probes_back_to_spec() {
+        let mut m = warmed();
+        for _ in 0..SUSTAIN_STREAK {
+            m.observe(spec() * 0.2);
+        }
+        assert_eq!(m.state(), BwState::Degrade);
+        // recovery: spec-level samples drive Degrade -> Probe -> Steady
+        let mut signalled_up = false;
+        for _ in 0..12 {
+            if let Some(s) = m.observe(spec()) {
+                signalled_up = signalled_up || s.factor > 0.2;
+            }
+        }
+        assert!(signalled_up, "recovery must signal a replan");
+        assert_eq!(m.state(), BwState::Steady);
+        assert!(
+            m.estimate_gbs() > spec() * (1.0 - BW_TOLERANCE),
+            "probe should climb back near spec, got {}",
+            m.estimate_gbs()
+        );
+    }
+
+    #[test]
+    fn steady_below_spec_probes_on_cadence() {
+        let mut m = warmed();
+        for _ in 0..SUSTAIN_STREAK {
+            m.observe(spec() * 0.3);
+        }
+        // settle into Steady at the congested level
+        for _ in 0..SUSTAIN_STREAK {
+            m.observe(spec() * 0.3);
+        }
+        assert_eq!(m.state(), BwState::Steady);
+        // keep feeding the congested level: the cadence alone must re-probe
+        let mut probed = false;
+        for _ in 0..(2 * PROBE_INTERVAL) {
+            m.observe(spec() * 0.3);
+            probed = probed || m.state() == BwState::Probe;
+        }
+        assert!(probed, "steady-below-spec must probe every {PROBE_INTERVAL} ticks");
+    }
+
+    #[test]
+    fn estimate_bounded_by_min_observed_and_spec() {
+        let mut m = BwMonitor::new(LinkKind::Ib);
+        for s in [25.0, 3.0, 0.5, 40.0, 1.0, 19.0, 2.0, 0.7, 20.0] {
+            m.observe(s);
+            assert!(
+                m.estimate_gbs() <= m.spec_gbs() + 1e-12
+                    && m.estimate_gbs() >= m.min_observed_gbs() - 1e-12,
+                "estimate {} outside [{}, {}]",
+                m.estimate_gbs(),
+                m.min_observed_gbs(),
+                m.spec_gbs()
+            );
+        }
+        // above-spec samples clamp: min_observed never exceeds spec
+        assert!(m.min_observed_gbs() <= m.spec_gbs());
+    }
+
+    #[test]
+    fn bad_samples_are_ignored() {
+        let mut m = warmed();
+        let before = m.estimate_gbs();
+        for s in [f64::NAN, f64::INFINITY, -1.0, 0.0] {
+            assert!(m.observe(s).is_none());
+        }
+        assert_eq!(m.estimate_gbs(), before);
+        assert_eq!(m.samples(), STARTUP_SAMPLES);
+    }
+
+    #[test]
+    fn sample_inversion_recovers_true_bandwidth() {
+        let m = BwMonitor::new(LinkKind::Socket);
+        let spec_net = m.spec_snapshot(8);
+        let truth = m.ground_truth(8, 0.25);
+        let p = 500_000_000u64;
+        let pred = spec_net.iteration_comm_time(1, p).unwrap();
+        let alpha = spec_net.iteration_comm_time(1, 0).unwrap(); // α-only share
+        let obs = truth.iteration_comm_time(1, p).unwrap();
+        let est = m.sample_from_comm_times(pred, alpha, obs).unwrap();
+        assert!(
+            (est - m.spec_gbs() * 0.25).abs() < 1e-9,
+            "α-β inversion must be exact, got {est}"
+        );
+    }
+
+    #[test]
+    fn sample_inversion_rejects_degenerate_inputs() {
+        let m = BwMonitor::new(LinkKind::Ib);
+        assert_eq!(m.sample_from_comm_times(0.0, 0.0, 1.0), None); // no byte term
+        assert_eq!(m.sample_from_comm_times(1.0, 0.1, 0.05), None); // obs < α
+        assert_eq!(m.sample_from_comm_times(f64::NAN, 0.0, 1.0), None);
+    }
+
+    #[test]
+    fn snapshot_carries_estimate_not_spec() {
+        let mut m = warmed();
+        for _ in 0..SUSTAIN_STREAK {
+            m.observe(spec() * 0.2);
+        }
+        let snap = m.snapshot(8);
+        assert_eq!(snap.n, 8);
+        assert!((snap.bw_gbs - spec() * 0.2).abs() < 1e-9);
+        assert_eq!(snap.alpha_s, LinkKind::Socket.latency_s());
+        assert_eq!(m.spec_snapshot(8).bw_gbs, spec());
+    }
+}

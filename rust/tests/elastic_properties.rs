@@ -11,7 +11,14 @@
 //! 5. cache eviction never drops a curve backing a live rank;
 //! 6. with a stage policy installed, the stage chosen by ANY replan
 //!    satisfies the Alg. 1 memory bound for every live rank at the new
-//!    group size, and the plan still validates and covers `gbs`.
+//!    group size, and the plan still validates and covers `gbs`;
+//! 7. ANY interleaving of bandwidth-drift and membership events keeps
+//!    every replanned plan valid, covering `gbs`, memory-bound-clean —
+//!    and a `BwDrift` event alone never dirties the plan (only the
+//!    monitor's sustained observations may);
+//! 8. the `BwMonitor` estimate stays inside `[min observed, spec]`
+//!    under ANY sample stream, and a single outlier between steady
+//!    spec-level samples never moves it or signals.
 
 use std::collections::HashSet;
 
@@ -516,6 +523,133 @@ fn prop_extend_chain_matches_batch_preview() {
             acc.plan.predicted_iter_s, full.plan.predicted_iter_s,
             "seed {seed}: plans diverge"
         );
+    }
+}
+
+#[test]
+fn prop_bw_drift_interleaved_with_membership_keeps_plans_valid() {
+    // invariant 7: bandwidth drift is just another event stream — no
+    // interleaving with losses/joins may produce an invalid plan, a
+    // short-covered batch, or a rank whose memory bound breaks; and the
+    // announcement itself (ground truth, like RankSlowed) never replans
+    use poplar::elastic::ElasticEvent;
+    use poplar::netsim::BwMonitor;
+    let m = preset("llama-0.5b").unwrap();
+    for seed in 0..50u64 {
+        let mut rng = XorShift::new(seed + 11_000);
+        let stage = (seed % 4) as u8;
+        let n = rng.range(2, 5) as usize;
+        let gbs = rng.range(32, 512) as usize;
+        let mut p = random_planner(&mut rng, n, stage, gbs);
+        let mut monitor = BwMonitor::new(LinkKind::Ib);
+        let spec = monitor.spec_gbs();
+        let mut true_factor = 1.0f64;
+
+        for step in 0..rng.range(2, 12) {
+            match rng.range(0, 3) {
+                0 => {
+                    let active = p.active_slots();
+                    let victim = active[(rng.next() as usize) % active.len()];
+                    let _ = p.lose_slot(victim);
+                }
+                1 => {
+                    let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+                    p.add_slot(gpu);
+                    profile_missing(&mut rng, &mut p);
+                }
+                2 => {
+                    // ground-truth fabric shift: the planner sees only a
+                    // validated no-op — the monitor must discover it
+                    true_factor = 0.05 + rng.uniform() * 0.95;
+                    let ev =
+                        ElasticEvent::BwDrift { link: "ib".into(), factor: true_factor };
+                    let dirty_before = p.dirty();
+                    p.apply(&ev).unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+                    assert_eq!(
+                        p.dirty(),
+                        dirty_before,
+                        "seed {seed} step {step}: the event alone dirtied the plan"
+                    );
+                }
+                _ => {} // calm iteration: just another sample below
+            }
+            monitor.observe(spec * true_factor);
+            assert!(
+                monitor.estimate_gbs() <= monitor.spec_gbs() + 1e-9
+                    && monitor.estimate_gbs() >= monitor.min_observed_gbs() - 1e-9,
+                "seed {seed} step {step}: estimate {} outside [{}, {}]",
+                monitor.estimate_gbs(),
+                monitor.min_observed_gbs(),
+                monitor.spec_gbs()
+            );
+
+            let n_active = p.active_slots().len();
+            let net = monitor.snapshot(n_active);
+            let plan = p
+                .replan(&net)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"))
+                .clone();
+            plan.validate().unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(plan.total_samples(), gbs, "seed {seed} step {step}");
+            assert_eq!(plan.ranks.len(), n_active, "seed {seed} step {step}");
+            for slot in p.active_slots() {
+                let gpu = p.slots()[slot].gpu.clone();
+                let spec_gpu = catalog::spec(&gpu).unwrap();
+                assert!(
+                    memmodel::true_mbs(
+                        &m,
+                        m.param_count(),
+                        plan.stage,
+                        n_active,
+                        spec_gpu.mem_bytes()
+                    ) >= 1,
+                    "seed {seed} step {step}: ZeRO-{} breaks the bound for {gpu}",
+                    plan.stage
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_monitor_estimate_always_within_min_observed_and_spec() {
+    // invariant 8, on raw sample streams: congestion, recovery,
+    // above-spec noise and extreme outliers in any order
+    use poplar::netsim::{BwMonitor, BwState};
+    for seed in 0..80u64 {
+        let mut rng = XorShift::new(seed + 12_000);
+        let mut m = BwMonitor::new(LinkKind::Ib);
+        let spec = m.spec_gbs();
+        for step in 0..rng.range(5, 60) {
+            let sample = match rng.range(0, 3) {
+                0 => spec * (0.02 + rng.uniform()),       // plausible drift
+                1 => spec * (1.0 + 2.0 * rng.uniform()),  // above spec: clamps
+                2 => spec * 0.01 * rng.uniform().max(1e-3), // extreme low
+                _ => spec,
+            };
+            m.observe(sample);
+            assert!(
+                m.estimate_gbs() <= spec + 1e-9
+                    && m.estimate_gbs() >= m.min_observed_gbs() - 1e-9,
+                "seed {seed} step {step}: estimate {} outside [{}, {}]",
+                m.estimate_gbs(),
+                m.min_observed_gbs(),
+                spec
+            );
+            assert!(m.min_observed_gbs() <= spec + 1e-9, "seed {seed} step {step}");
+        }
+
+        // and a single outlier between steady spec-level samples never
+        // moves the estimate or signals a replan
+        let mut m2 = BwMonitor::new(LinkKind::Ib);
+        for _ in 0..5 {
+            m2.observe(spec);
+        }
+        assert_eq!(m2.state(), BwState::Steady, "seed {seed}");
+        let before = m2.estimate_gbs();
+        let outlier = spec * (0.01 + rng.uniform() * 0.5);
+        assert!(m2.observe(outlier).is_none(), "seed {seed}: outlier {outlier} signalled");
+        assert_eq!(m2.estimate_gbs(), before, "seed {seed}: outlier moved the estimate");
     }
 }
 

@@ -78,3 +78,10 @@ fn golden_fig_joint_admission_rounds() {
         poplar::exp::fig_joint_admission::run().unwrap().to_markdown()
     });
 }
+
+#[test]
+fn golden_fig_bw_adaptation_decisions() {
+    check_golden("fig_bw_adaptation", || {
+        poplar::exp::fig_bw_adaptation::run().unwrap().to_markdown()
+    });
+}
