@@ -190,7 +190,9 @@ pub fn plan_zero01(
                 let tb = (gmbs[b] + 1) as f64 / speeds[b];
                 ta.total_cmp(&tb)
             })
-            .unwrap();
+            // n >= 1 (NoRanks is rejected on entry), so min_by over 0..n
+            // always yields a candidate
+            .unwrap_or(0);
         gmbs[i] += 1;
         remaining -= 1;
     }

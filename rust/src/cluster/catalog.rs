@@ -115,6 +115,7 @@ pub fn spec(name: &str) -> Option<GpuSpec> {
 /// should have caught unknown names earlier).
 pub fn spec_or_panic(name: &str) -> GpuSpec {
     spec(name).unwrap_or_else(|| {
+        // lint:allow(panic-path) -- documented contract; Result-returning callers use spec()
         panic!("unknown GPU type {name:?}; known: {NAMES:?}")
     })
 }

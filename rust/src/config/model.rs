@@ -104,6 +104,13 @@ pub fn preset(name: &str) -> Option<ModelSpec> {
     Some(m)
 }
 
+/// Like [`preset`] but with a typed error — the no-panic entry point
+/// for exp runners and the CLI.
+pub fn require(name: &str) -> Result<ModelSpec, super::ConfigError> {
+    preset(name)
+        .ok_or_else(|| super::ConfigError::Invalid(format!("unknown model preset {name:?}")))
+}
+
 /// All preset names usable with [`preset`].
 pub const PRESET_NAMES: &[&str] = &[
     "tiny", "e2e-28m", "e2e-110m", "llama-0.5b", "llama-1.1b", "bert-1.1b",

@@ -858,6 +858,7 @@ impl Leader {
                                 &self.net,
                                 &self.model,
                                 gpu,
+                                // lint:allow(panic-path) -- a round ran, so autoscale is Some
                                 opts.autoscale.as_ref().expect("a round implies autoscale"),
                             ) {
                                 Err(pe) => JoinVerdict::Skip(format!(

@@ -73,7 +73,8 @@ impl PerfCurve {
         let ys: Vec<f64> = points.iter().map(|p| p.batch as f64 / p.step_time_s).collect();
         let speed = CubicSpline::fit(&xs, &ys).map_err(|_| CurveError::InvalidPoint)?;
 
-        let mbs = mbs.max(points.last().unwrap().batch);
+        // len >= 2 is checked above, so last() always yields a point
+        let mbs = mbs.max(points.last().map_or(0, |p| p.batch));
         let mut peak_speed: f64 = 0.0;
         for b in 1..=mbs {
             peak_speed = peak_speed.max(Self::eval_speed(&speed, b as f64));

@@ -18,7 +18,7 @@ use super::{gbs_samples, plan_with, profile, score, NOISE_SIGMA};
 use crate::allocator::{self, Plan, RankPlan};
 use crate::cluster::{self, ClusterSpec};
 use crate::config::model::ModelSpec;
-use crate::config::{model::preset, Strategy};
+use crate::config::{model::preset, model::require, Strategy};
 use crate::coordinator::fit_curves;
 use crate::curves::{PerfCurve, ProfiledPoint};
 use crate::metrics::Table;
@@ -133,7 +133,7 @@ pub fn column(cluster: &ClusterSpec, model: &ModelSpec, stage: u8) -> Result<Vec
 /// Run the ablation on cluster C, stages 1 and 3.
 pub fn run() -> Result<Table> {
     let cluster = cluster::cluster_c();
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let mut table = Table::new(&["stage", "variant", "tflops", "vs_full"]);
     for stage in [1u8, 3] {
         let col = column(&cluster, &model, stage)?;

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use super::{gbs_samples, plan_with, profile, score, NOISE_SIGMA};
 use crate::cluster;
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::config::Strategy;
 use crate::metrics::Table;
 use crate::netsim::NetSim;
@@ -16,7 +16,7 @@ use crate::netsim::NetSim;
 /// Run the experiment.
 pub fn run() -> Result<Table> {
     let cluster = cluster::cluster_c();
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let gbs = gbs_samples(&model);
     let net = NetSim::from_cluster(&cluster);
 

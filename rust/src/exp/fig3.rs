@@ -6,11 +6,11 @@
 //! 1.02-3.92x over DeepSpeed; Whale ≈ DeepSpeed on cluster A (equal
 //! FLOPs ratings hide the memory gap); biggest wins in ZeRO-2/3.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::{eval_system, gbs_samples, homogeneous_subcluster};
 use crate::cluster::{self, ClusterSpec};
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::config::Strategy;
 use crate::metrics::Table;
 
@@ -19,7 +19,7 @@ pub const SYSTEMS: &[&str] = &["weak-homog", "strong-homog", "deepspeed", "whale
 
 /// Evaluate one (cluster, stage) column: TFLOPs of the five systems.
 pub fn column(cluster: &ClusterSpec, stage: u8, seed: u64) -> Result<Vec<(String, f64)>> {
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let gbs = gbs_samples(&model);
     let mut out = Vec::new();
 
@@ -45,7 +45,11 @@ pub fn run() -> Result<Table> {
     for cluster in [cluster::cluster_a(), cluster::cluster_b(), cluster::cluster_c()] {
         for stage in 0..4u8 {
             let col = column(&cluster, stage, 1000 + stage as u64)?;
-            let ds = col.iter().find(|(s, _)| s == "deepspeed").unwrap().1;
+            let ds = col
+                .iter()
+                .find(|(s, _)| s == "deepspeed")
+                .ok_or_else(|| anyhow!("column is missing the deepspeed baseline"))?
+                .1;
             for (system, tflops) in &col {
                 table.row(&[
                     cluster.name.clone(),

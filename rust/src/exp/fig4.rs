@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use super::{eval_system, gbs_samples};
 use crate::cluster;
-use crate::config::model::preset;
+use crate::config::model::{preset, require};
 use crate::config::Strategy;
 use crate::metrics::Table;
 
@@ -22,7 +22,7 @@ pub fn run() -> Result<Table> {
     let mut table =
         Table::new(&["model", "stage_req", "stage_used", "system", "tflops", "vs_deepspeed"]);
     for model_name in MODELS {
-        let model = preset(model_name).unwrap();
+        let model = require(model_name)?;
         let gbs = gbs_samples(&model);
         for stage in 0..4u8 {
             let mut cells = Vec::new();

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use super::{eval_system, gbs_samples};
 use crate::cluster::cluster_c_counts;
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::config::Strategy;
 use crate::metrics::Table;
 
@@ -32,7 +32,7 @@ pub const GROUPS: &[(&str, usize, usize)] = &[
 
 /// TFLOPs of one group at one stage.
 pub fn cell(label: &str, n_a: usize, n_v: usize, stage: u8) -> Result<f64> {
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let gbs = gbs_samples(&model);
     let cluster = cluster_c_counts(n_a, n_v);
     let r = eval_system(&cluster, &model, stage, Strategy::Poplar, gbs,

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::cluster::catalog;
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::metrics::Table;
 
 /// GPUs of the figure.
@@ -25,7 +25,7 @@ pub fn run() -> Result<Table> {
     for gpu in GPUS {
         let spec = catalog::spec_or_panic(gpu);
         for model_name in MODELS {
-            let model = preset(model_name).unwrap();
+            let model = require(model_name)?;
             let mut speeds = Vec::new();
             for b in [1usize, 2, 4, 8, 12, 16, 24, 32, 48, 64] {
                 let t = spec.compute_time(

@@ -9,13 +9,13 @@ use anyhow::Result;
 
 use super::{profile, NOISE_SIGMA};
 use crate::cluster::{catalog, ClusterSpec, LinkKind};
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::coordinator::fit_curves;
 use crate::metrics::Table;
 
 /// Run the accuracy check.
 pub fn run() -> Result<Table> {
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let cluster = ClusterSpec::new("a800-solo", &[("A800-80G", 1, LinkKind::Nvlink)],
                                    LinkKind::Ib);
     let prof = profile(&cluster, &model, 1, NOISE_SIGMA, 77)?;

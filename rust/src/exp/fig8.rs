@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use super::{profile, NOISE_SIGMA};
 use crate::cluster::{catalog, ClusterSpec, LinkKind};
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::coordinator::fit_curves;
 use crate::metrics::Table;
 
@@ -20,7 +20,7 @@ pub const GPUS: &[&str] = &["T4", "V100-16G", "V100S-32G", "A100-40G", "A100-80G
 
 /// Run the comparison.
 pub fn run() -> Result<Table> {
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
 
     // actual + poplar-measured peak speeds per GPU (each at its own mbs,
     // exactly the paper's protocol: "each GPU performs five iterations

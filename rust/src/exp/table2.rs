@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use super::{gbs_samples, plan_with, profile, NOISE_SIGMA};
 use crate::cluster::{ClusterSpec, LinkKind};
-use crate::config::model::preset;
+use crate::config::model::require;
 use crate::config::Strategy;
 use crate::metrics::{Table, Timer};
 use crate::netsim::NetSim;
@@ -20,7 +20,7 @@ pub const GPUS: &[&str] = &["T4", "V100-16G", "A800-80G"];
 
 /// Run the overhead measurement.
 pub fn run() -> Result<Table> {
-    let model = preset("llama-0.5b").unwrap();
+    let model = require("llama-0.5b")?;
     let mut table = Table::new(&["stage", "gpu", "profile_steps", "online_profile_s",
                                  "offline_analyze_s"]);
     for stage in 0..4u8 {

@@ -37,6 +37,7 @@
 //! | [`metrics`] | FLOPs accounting, timers, report tables |
 //! | [`config`] | TOML config system + paper presets |
 //! | [`exp`] | experiment harness: one runner per paper table/figure |
+//! | [`lint`] | in-crate invariant analyzer: masks comments/literals, tracks `#[cfg(test)]` spans, enforces panic-path / float-ordering / netsim-literal / amortized-formula / determinism with reasoned `lint:allow` directives and the `lint-baseline.txt` ratchet (`poplar lint`, `tests/lint_gate.rs`, CI) |
 
 pub mod allocator;
 pub mod autoscale;
@@ -48,6 +49,7 @@ pub mod curves;
 pub mod data;
 pub mod elastic;
 pub mod exp;
+pub mod lint;
 pub mod memmodel;
 pub mod metrics;
 pub mod netsim;

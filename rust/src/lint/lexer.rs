@@ -1,0 +1,420 @@
+//! Line-oriented Rust lexer for the invariant analyzer.
+//!
+//! Produces, per source line, the *code-only* text — `//` and nested
+//! `/* */` comment bodies, string / raw-string / byte-string payloads
+//! and char literals are blanked out — plus the comment text (where
+//! `lint:allow` directives live, see `parse_allows`) and whether the
+//! line sits inside a `#[cfg(test)]` item. Rules then run as plain
+//! substring checks over the code text without ever seeing prose or
+//! literal payloads, which is exactly what the old shell greps could
+//! not do.
+//!
+//! This is *not* a full Rust lexer: it understands just enough of the
+//! token grammar (escapes, raw-string hash fences, nested block
+//! comments, lifetimes vs char literals) to make substring rules sound
+//! on this crate. Known limitations are listed in `README.md`.
+
+/// One analyzed line of a source file.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// Source text with comments and literal payloads blanked out.
+    pub code: String,
+    /// Concatenated comment text carried by the line.
+    pub comment: String,
+    /// True when the line lies inside a `#[cfg(test)]` item (or the
+    /// whole file is test code, e.g. under `tests/`).
+    pub in_test: bool,
+}
+
+/// A `lint:allow` directive found in a comment: the rule id sits in
+/// parentheses and a non-empty ` -- reason` is mandatory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allow {
+    /// 1-based line the directive sits on.
+    pub line: usize,
+    /// Rule id named between the parentheses (empty when unclosed).
+    pub rule: String,
+    /// True when a non-empty reason follows `--`.
+    pub has_reason: bool,
+    /// True when the directive shares its line with code (and applies
+    /// to that line); false for a standalone comment line, which
+    /// applies to the next line.
+    pub inline: bool,
+}
+
+/// A fully lexed source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Crate-root-relative path with `/` separators.
+    pub path: String,
+    /// Per-line analysis; index 0 is line 1.
+    pub lines: Vec<LineInfo>,
+    /// Every allow directive in the file, in line order.
+    pub allows: Vec<Allow>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+}
+
+/// Lex `text` into masked lines, test spans and allow directives.
+/// `all_test` marks every line as test code (files under `tests/` or
+/// `benches/` compile only into test binaries).
+pub fn lex(path: &str, text: &str, all_test: bool) -> SourceFile {
+    let raw: Vec<char> = text.chars().collect();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comment_lines: Vec<String> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+
+    while i < raw.len() {
+        let c = raw[i];
+        if c == '\n' {
+            // newlines are never consumed by a multi-char token below,
+            // so line accounting stays exact across every state
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = raw.get(i + 1).copied();
+                let prev_ident = i
+                    .checked_sub(1)
+                    .and_then(|p| raw.get(p))
+                    .is_some_and(|p| p.is_alphanumeric() || *p == '_');
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    if let Some((skip, hashes)) = raw_string_open(&raw, i) {
+                        for _ in 0..skip {
+                            code.push(' ');
+                        }
+                        i += skip;
+                        state = State::RawStr(hashes);
+                        continue;
+                    }
+                }
+                if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == '/' && next == Some('/') {
+                    code.push_str("  ");
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    code.push_str("  ");
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '\'' {
+                    i = lex_quote(&raw, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = raw.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && raw.get(i + 1).is_some_and(|n| *n != '\n') {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let fence_closed = c == '"'
+                    && raw[i + 1..].iter().take(hashes).filter(|h| **h == '#').count() == hashes;
+                if fence_closed {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes;
+                    state = State::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        code_lines.push(code);
+        comment_lines.push(comment);
+    }
+
+    let mut lines = mark_test_spans(&code_lines, all_test);
+    let mut allows = Vec::new();
+    for (idx, ctext) in comment_lines.iter().enumerate() {
+        let inline = lines.get(idx).is_some_and(|l| !l.code.trim().is_empty());
+        parse_allows(ctext, idx + 1, inline, &mut allows);
+        if let Some(l) = lines.get_mut(idx) {
+            l.comment = ctext.clone();
+        }
+    }
+    SourceFile { path: path.to_string(), lines, allows }
+}
+
+/// Handle a `'` in code position: char literal (payload masked) or
+/// lifetime tick. Returns the index to resume at.
+fn lex_quote(raw: &[char], i: usize, code: &mut String) -> usize {
+    let next = raw.get(i + 1).copied();
+    if next == Some('\\') {
+        // escaped char literal like '\n' or '\u{41}': mask to the
+        // closing quote, never crossing a newline
+        code.push('\'');
+        let mut j = i + 1;
+        while j < raw.len() && raw[j] != '\'' && raw[j] != '\n' {
+            code.push(' ');
+            j += 1;
+        }
+        if j < raw.len() && raw[j] == '\'' {
+            code.push('\'');
+            j += 1;
+        }
+        return j;
+    }
+    if next.is_some() && next != Some('\'') && raw.get(i + 2).copied() == Some('\'') {
+        // one-char literal like 'x' (including '{' and '}', which must
+        // not disturb brace-depth tracking)
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        return i + 3;
+    }
+    // lifetime tick
+    code.push('\'');
+    i + 1
+}
+
+/// Detect a raw-string opener at `i`: `r"`, `r#"`, `br"`, … Returns
+/// (chars consumed through the opening quote, hash-fence length).
+fn raw_string_open(raw: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if raw.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if raw.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while raw.get(j + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if raw.get(j + hashes) == Some(&'"') {
+        Some((j + hashes + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Walk the masked lines tracking brace depth to mark `#[cfg(test)]`
+/// item bodies. An attribute followed by `;` before any `{` (e.g. on a
+/// `use` item) is cancelled.
+fn mark_test_spans(code_lines: &[String], all_test: bool) -> Vec<LineInfo> {
+    let mut lines = Vec::with_capacity(code_lines.len());
+    let mut depth: usize = 0;
+    let mut pending_attr: Option<usize> = None;
+    let mut test_close: Option<usize> = None;
+    for code in code_lines {
+        let mut in_test = test_close.is_some();
+        if test_close.is_none() && code.contains("#[cfg(test)]") {
+            pending_attr = Some(depth);
+        }
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if test_close.is_none() && pending_attr.is_some() {
+                        test_close = Some(depth);
+                        pending_attr = None;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if test_close == Some(depth) {
+                        test_close = None;
+                    }
+                }
+                ';' => {
+                    if pending_attr == Some(depth) {
+                        pending_attr = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        lines.push(LineInfo {
+            code: code.clone(),
+            comment: String::new(),
+            in_test: in_test || all_test,
+        });
+    }
+    lines
+}
+
+/// Scan one line's comment text for allow directives. The grammar is
+/// `lint:allow` + `(` rule `)` + ` -- ` + reason; the reason must be
+/// non-empty for the directive to suppress anything.
+fn parse_allows(comment: &str, line: usize, inline: bool, out: &mut Vec<Allow>) {
+    let marker = "lint:allow(";
+    let mut rest = comment;
+    while let Some(pos) = rest.find(marker) {
+        let after = &rest[pos + marker.len()..];
+        let Some(close) = after.find(')') else {
+            out.push(Allow { line, rule: String::new(), has_reason: false, inline });
+            return;
+        };
+        let rule = after[..close].trim().to_string();
+        let tail = after[close + 1..].trim_start();
+        let has_reason = tail.strip_prefix("--").is_some_and(|r| !r.trim().is_empty());
+        out.push(Allow { line, rule, has_reason, inline });
+        rest = &after[close + 1..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        lex("src/x.rs", text, false).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_masked_and_captured() {
+        let f = lex("src/x.rs", "let a = 1; // then .unwrap() it\n", false);
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.contains("let a = 1;"));
+        assert!(f.lines[0].comment.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_counts() {
+        let c = codes("a /* x /* y */ z\nstill comment */ b\nc\n");
+        assert_eq!(c.len(), 3);
+        assert!(c[0].starts_with('a'));
+        assert!(!c[0].contains('x'));
+        assert!(!c[1].contains("still"));
+        assert!(c[1].contains('b'));
+        assert_eq!(c[2].trim(), "c");
+    }
+
+    #[test]
+    fn string_payloads_masked_quotes_kept() {
+        let c = codes("let s = \".unwrap()\";\nlet t = \"a\\\"b\";\n");
+        assert!(!c[0].contains("unwrap"));
+        assert!(c[0].contains('"'));
+        assert!(c[1].ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_span_lines_without_confusing_state() {
+        let c = codes("let s = r#\"panic!(\" x \")\"#;\nlet p = q.unwrap();\n");
+        assert!(!c[0].contains("panic!"));
+        // the `"` inside the raw string does not terminate it early
+        assert!(c[1].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn char_literals_do_not_disturb_brace_depth() {
+        let text = "fn f() { let c = '{'; }\n#[cfg(test)]\nmod t {\n    fn g() {}\n}\nfn h() {}\n";
+        let f = lex("src/x.rs", text, false);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test, "inside the cfg(test) mod");
+        assert!(!f.lines[5].in_test, "code after the test mod is live again");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let c = codes("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(c[0].contains("str"), "code survives: {:?}", c[0]);
+        assert!(c[0].contains('{') && c[0].contains('}'));
+    }
+
+    #[test]
+    fn cfg_test_on_a_use_item_is_cancelled_by_semicolon() {
+        let text = "#[cfg(test)]\nuse foo::bar;\nfn f() { x.unwrap(); }\n";
+        let f = lex("src/x.rs", text, false);
+        assert!(!f.lines[2].in_test, "the fn after the attributed use is live code");
+    }
+
+    #[test]
+    fn all_test_marks_every_line() {
+        let f = lex("tests/x.rs", "fn f() { x.unwrap(); }\n", true);
+        assert!(f.lines[0].in_test);
+    }
+
+    #[test]
+    fn allow_directive_parsing() {
+        let f = lex(
+            "src/x.rs",
+            "// lint:allow(panic-path) -- proven invariant\nx.unwrap();\n",
+            false,
+        );
+        assert_eq!(f.allows.len(), 1);
+        let a = &f.allows[0];
+        assert_eq!(a.rule, "panic-path");
+        assert!(a.has_reason);
+        assert!(!a.inline, "standalone comment line applies to the next line");
+        assert_eq!(a.line, 1);
+    }
+
+    #[test]
+    fn inline_allow_and_missing_reason() {
+        let f = lex("src/x.rs", "x.unwrap(); // lint:allow(panic-path)\n", false);
+        assert_eq!(f.allows.len(), 1);
+        assert!(f.allows[0].inline);
+        assert!(!f.allows[0].has_reason);
+        let f = lex("src/x.rs", "x.unwrap(); // lint:allow(panic-path) --   \n", false);
+        assert!(!f.allows[0].has_reason, "whitespace-only reason rejected");
+    }
+
+    #[test]
+    fn directives_inside_string_literals_are_ignored() {
+        let f = lex("src/x.rs", "let s = \"lint:allow(panic-path) -- no\";\n", false);
+        assert!(f.allows.is_empty());
+    }
+}

@@ -1,0 +1,500 @@
+//! `poplar lint` — in-crate invariant analyzer.
+//!
+//! Replaces the CI shell greps with a real pass over the crate's own
+//! source: [`lexer`] masks comments / literal payloads and tracks
+//! `#[cfg(test)]` spans, [`rules`] runs substring checks over the
+//! masked code, and this module owns file walking, the allow
+//! mechanism (`lint:allow` + `(rule)` + ` -- reason`, reason
+//! mandatory), the `lint-baseline.txt` ratchet, and the JSON report.
+//!
+//! Wired three ways so it cannot rot: the `poplar lint` CLI
+//! subcommand, the `tests/lint_gate.rs` tier-1 integration test, and
+//! the CI lint step (which uploads `lint-report.json` as an artifact).
+//!
+//! The ratchet is exact-match per `(rule, path)`: more diagnostics
+//! than the frozen count fail as new violations, and *fewer* fail as
+//! stale entries — the fix is rerunning `--write-baseline`, so the
+//! committed baseline only ever shrinks.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lexer::SourceFile;
+
+/// Committed ratchet file, relative to the crate root.
+pub const BASELINE_FILE: &str = "lint-baseline.txt";
+
+/// Scanned roots and whether their files compile only into test
+/// binaries (which exempts them from `panic-path`).
+const ROOTS: &[(&str, bool)] = &[("src", false), ("tests", true), ("benches", true)];
+
+/// Frozen `(rule, path) -> count` entries from [`BASELINE_FILE`].
+pub type Baseline = BTreeMap<(String, String), usize>;
+
+/// One finding, rendered as `path:line: rule: message`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Crate-root-relative path with `/` separators.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule id from [`rules::ALL`].
+    pub rule: &'static str,
+    /// Human-facing explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// A baseline entry whose frozen count no longer matches reality.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StaleEntry {
+    pub rule: String,
+    pub path: String,
+    /// Count frozen in the committed baseline.
+    pub frozen: usize,
+    /// Count the analyzer actually sees now.
+    pub actual: usize,
+}
+
+/// Analyzer failure: not a diagnostic, the run itself broke.
+#[derive(Debug)]
+pub enum LintError {
+    /// Filesystem failure while walking or reading sources.
+    Io(String),
+    /// Malformed [`BASELINE_FILE`].
+    Baseline(String),
+}
+
+impl fmt::Display for LintError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LintError::Io(m) => write!(f, "lint i/o error: {m}"),
+            LintError::Baseline(m) => write!(f, "lint baseline error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LintError {}
+
+/// Raw scan output, before the baseline is applied.
+#[derive(Debug)]
+pub struct Scan {
+    /// Number of `.rs` files lexed.
+    pub files_scanned: usize,
+    /// Every diagnostic that survived the allow mechanism.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// Final verdict after the baseline ratchet.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Diagnostics not absorbed by the baseline — the build breakers.
+    pub new: Vec<Diagnostic>,
+    /// Diagnostics absorbed as frozen debt.
+    pub baselined: usize,
+    /// Baseline entries that over- or under-count reality.
+    pub stale: Vec<StaleEntry>,
+}
+
+impl LintReport {
+    /// Clean means mergeable: no new violations, no stale entries.
+    pub fn is_clean(&self) -> bool {
+        self.new.is_empty() && self.stale.is_empty()
+    }
+
+    /// Render the machine-readable report uploaded by CI.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"clean\": {},\n", self.is_clean()));
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"baselined\": {},\n", self.baselined));
+        out.push_str("  \"new_violations\": [");
+        for (i, d) in self.new.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!(
+                "    {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                json_escape(&d.path),
+                d.line,
+                d.rule,
+                json_escape(&d.message)
+            ));
+        }
+        out.push_str(if self.new.is_empty() { "],\n" } else { "\n  ],\n" });
+        out.push_str("  \"stale_baseline\": [");
+        for (i, e) in self.stale.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"path\": \"{}\", \"frozen\": {}, \"actual\": {}}}",
+                json_escape(&e.rule),
+                json_escape(&e.path),
+                e.frozen,
+                e.actual
+            ));
+        }
+        out.push_str(if self.stale.is_empty() { "]\n" } else { "\n  ]\n" });
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Lex + rule-check one source text. Entry point for fixture tests;
+/// `tests/` and `benches/` path prefixes mark the whole file as test
+/// code, mirroring [`scan_crate`].
+pub fn check_source(path: &str, text: &str) -> Vec<Diagnostic> {
+    let all_test = path.starts_with("tests/") || path.starts_with("benches/");
+    check_with_allows(&lexer::lex(path, text, all_test))
+}
+
+/// Run the rules over a lexed file, then apply its allow directives.
+/// A reasoned allow naming a known rule suppresses that rule on its
+/// own line (inline) or the next line (standalone comment). Malformed
+/// directives become `allow-directive` diagnostics and are themselves
+/// unsuppressable.
+pub fn check_with_allows(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut diags = rules::check_file(f);
+    let mut suppressed: Vec<(usize, &str)> = Vec::new();
+    for a in &f.allows {
+        if rules::is_known(&a.rule) && a.has_reason {
+            let target = if a.inline { a.line } else { a.line + 1 };
+            suppressed.push((target, a.rule.as_str()));
+        }
+    }
+    diags.retain(|d| !suppressed.iter().any(|(l, r)| *l == d.line && *r == d.rule));
+    for a in &f.allows {
+        if !rules::is_known(&a.rule) {
+            diags.push(Diagnostic {
+                path: f.path.clone(),
+                line: a.line,
+                rule: rules::ALLOW_DIRECTIVE,
+                message: format!("allow directive names unknown rule {:?}", a.rule),
+            });
+        } else if !a.has_reason {
+            diags.push(Diagnostic {
+                path: f.path.clone(),
+                line: a.line,
+                rule: rules::ALLOW_DIRECTIVE,
+                message: format!(
+                    "allow for `{}` has no reason — append `-- <why this is sound>`",
+                    a.rule
+                ),
+            });
+        }
+    }
+    diags.sort();
+    diags
+}
+
+/// Walk every scanned root under `root` and rule-check each `.rs`
+/// file. Deterministic: files are visited in sorted path order.
+pub fn scan_crate(root: &Path) -> Result<Scan, LintError> {
+    let mut files_scanned = 0;
+    let mut diagnostics = Vec::new();
+    for (dir, all_test) in ROOTS {
+        let base = root.join(dir);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&base, &mut files)?;
+        files.sort();
+        for path in files {
+            let text = fs::read_to_string(&path)
+                .map_err(|e| LintError::Io(format!("read {}: {e}", path.display())))?;
+            let rel = rel_path(root, &path);
+            diagnostics.extend(check_with_allows(&lexer::lex(&rel, &text, *all_test)));
+            files_scanned += 1;
+        }
+    }
+    Ok(Scan { files_scanned, diagnostics })
+}
+
+/// Scan, load the committed baseline, and apply the ratchet. What the
+/// CLI subcommand and the `lint_gate` test both call.
+pub fn run_crate(root: &Path) -> Result<LintReport, LintError> {
+    let scan = scan_crate(root)?;
+    let baseline = load_baseline(root)?;
+    Ok(apply_baseline(scan, &baseline))
+}
+
+/// Apply the exact-match ratchet: per `(rule, path)`, actual == frozen
+/// absorbs, actual < frozen is stale (regenerate to shrink), actual >
+/// frozen resurfaces the whole group as new violations.
+/// `allow-directive` diagnostics are never baselinable.
+pub fn apply_baseline(scan: Scan, baseline: &Baseline) -> LintReport {
+    let mut groups: BTreeMap<(String, String), Vec<Diagnostic>> = BTreeMap::new();
+    let mut new = Vec::new();
+    for d in scan.diagnostics {
+        if d.rule == rules::ALLOW_DIRECTIVE {
+            new.push(d);
+        } else {
+            groups.entry((d.rule.to_string(), d.path.clone())).or_default().push(d);
+        }
+    }
+    let present: Vec<(String, String)> = groups.keys().cloned().collect();
+    let mut baselined = 0;
+    let mut stale = Vec::new();
+    for (key, diags) in groups {
+        let frozen = baseline.get(&key).copied().unwrap_or(0);
+        let actual = diags.len();
+        if actual == frozen {
+            baselined += actual;
+        } else if actual < frozen {
+            baselined += actual;
+            stale.push(StaleEntry { rule: key.0, path: key.1, frozen, actual });
+        } else {
+            new.extend(diags);
+        }
+    }
+    for (key, frozen) in baseline {
+        if *frozen > 0 && !present.contains(key) {
+            stale.push(StaleEntry {
+                rule: key.0.clone(),
+                path: key.1.clone(),
+                frozen: *frozen,
+                actual: 0,
+            });
+        }
+    }
+    new.sort();
+    stale.sort_by(|a, b| (&a.rule, &a.path).cmp(&(&b.rule, &b.path)));
+    LintReport { files_scanned: scan.files_scanned, new, baselined, stale }
+}
+
+/// Parse baseline text: `# comment` and blank lines skipped, data
+/// lines are `<rule> <path> <count>`.
+pub fn parse_baseline(text: &str) -> Result<Baseline, LintError> {
+    let mut map = Baseline::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(path), Some(count), None) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            return Err(LintError::Baseline(format!(
+                "line {}: expected `<rule> <path> <count>`, got {line:?}",
+                idx + 1
+            )));
+        };
+        if !rules::is_known(rule) {
+            return Err(LintError::Baseline(format!("line {}: unknown rule {rule:?}", idx + 1)));
+        }
+        let count: usize = count
+            .parse()
+            .map_err(|_| LintError::Baseline(format!("line {}: bad count {count:?}", idx + 1)))?;
+        map.insert((rule.to_string(), path.to_string()), count);
+    }
+    Ok(map)
+}
+
+/// Load [`BASELINE_FILE`] from the crate root; a missing file is an
+/// empty baseline.
+pub fn load_baseline(root: &Path) -> Result<Baseline, LintError> {
+    let path = root.join(BASELINE_FILE);
+    match fs::read_to_string(&path) {
+        Ok(text) => parse_baseline(&text),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::new()),
+        Err(e) => Err(LintError::Io(format!("read {}: {e}", path.display()))),
+    }
+}
+
+/// Render the baseline text for the given diagnostics (grouped and
+/// counted; `allow-directive` findings are excluded — fix those, do
+/// not freeze them).
+pub fn format_baseline(diags: &[Diagnostic]) -> String {
+    let mut counts: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+    for d in diags {
+        if d.rule != rules::ALLOW_DIRECTIVE {
+            *counts.entry((d.rule, d.path.as_str())).or_default() += 1;
+        }
+    }
+    let mut out = String::from(
+        "# poplar lint baseline — frozen panic-path debt, one `rule path count` per line.\n\
+         # Regenerate with `cargo run --bin poplar -- lint --write-baseline` after burning\n\
+         # entries down; tests/lint_gate.rs pins that this file only ever shrinks.\n",
+    );
+    for ((rule, path), count) in counts {
+        out.push_str(&format!("{rule} {path} {count}\n"));
+    }
+    out
+}
+
+/// Regenerate [`BASELINE_FILE`] from a fresh scan's diagnostics.
+/// Returns the number of entries written.
+pub fn write_baseline(root: &Path, diags: &[Diagnostic]) -> Result<usize, LintError> {
+    let text = format_baseline(diags);
+    let entries = text.lines().filter(|l| !l.starts_with('#')).count();
+    fs::write(root.join(BASELINE_FILE), &text)
+        .map_err(|e| LintError::Io(format!("write {BASELINE_FILE}: {e}")))?;
+    Ok(entries)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), LintError> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| LintError::Io(format!("read_dir {}: {e}", dir.display())))?;
+    for entry in entries {
+        let entry =
+            entry.map_err(|e| LintError::Io(format!("read_dir {}: {e}", dir.display())))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative path with `/` separators, so diagnostics and baseline
+/// entries are portable across hosts.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components().map(|c| c.as_os_str().to_string_lossy()).collect::<Vec<_>>().join("/")
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(rule: &'static str, path: &str, line: usize) -> Diagnostic {
+        Diagnostic { path: path.to_string(), line, rule, message: String::from("m") }
+    }
+
+    fn scan_of(diags: Vec<Diagnostic>) -> Scan {
+        Scan { files_scanned: 2, diagnostics: diags }
+    }
+
+    #[test]
+    fn baseline_parse_and_format_roundtrip() {
+        let d = vec![
+            diag(rules::PANIC_PATH, "src/a.rs", 3),
+            diag(rules::PANIC_PATH, "src/a.rs", 9),
+            diag(rules::PANIC_PATH, "src/b.rs", 1),
+        ];
+        let text = format_baseline(&d);
+        let map = parse_baseline(&text).expect("roundtrip parses");
+        assert_eq!(map.get(&("panic-path".into(), "src/a.rs".into())), Some(&2));
+        assert_eq!(map.get(&("panic-path".into(), "src/b.rs".into())), Some(&1));
+        assert_eq!(map.len(), 2);
+    }
+
+    #[test]
+    fn baseline_rejects_garbage() {
+        assert!(parse_baseline("panic-path src/a.rs").is_err(), "missing count");
+        assert!(parse_baseline("panic-path src/a.rs two").is_err(), "bad count");
+        assert!(parse_baseline("panic-path src/a.rs 1 extra").is_err(), "trailing token");
+        assert!(parse_baseline("bogus-rule src/a.rs 1").is_err(), "unknown rule");
+        assert!(parse_baseline("# comment\n\npanic-path src/a.rs 1\n").is_ok());
+    }
+
+    #[test]
+    fn apply_baseline_exact_match_is_clean() {
+        let mut b = Baseline::new();
+        b.insert(("panic-path".into(), "src/a.rs".into()), 2);
+        let scan = scan_of(vec![
+            diag(rules::PANIC_PATH, "src/a.rs", 3),
+            diag(rules::PANIC_PATH, "src/a.rs", 9),
+        ]);
+        let r = apply_baseline(scan, &b);
+        assert!(r.is_clean(), "{r:?}");
+        assert_eq!(r.baselined, 2);
+        assert_eq!(r.files_scanned, 2);
+    }
+
+    #[test]
+    fn apply_baseline_flags_growth_as_new() {
+        let mut b = Baseline::new();
+        b.insert(("panic-path".into(), "src/a.rs".into()), 1);
+        let scan = scan_of(vec![
+            diag(rules::PANIC_PATH, "src/a.rs", 3),
+            diag(rules::PANIC_PATH, "src/a.rs", 9),
+        ]);
+        let r = apply_baseline(scan, &b);
+        assert!(!r.is_clean());
+        assert_eq!(r.new.len(), 2, "the whole group resurfaces so the dev sees every site");
+        assert_eq!(r.baselined, 0);
+    }
+
+    #[test]
+    fn apply_baseline_flags_shrinkage_and_dead_entries_as_stale() {
+        let mut b = Baseline::new();
+        b.insert(("panic-path".into(), "src/a.rs".into()), 3);
+        b.insert(("panic-path".into(), "src/gone.rs".into()), 2);
+        let r = apply_baseline(scan_of(vec![diag(rules::PANIC_PATH, "src/a.rs", 3)]), &b);
+        assert!(!r.is_clean(), "shrinkage forces a --write-baseline regen");
+        assert_eq!(r.new.len(), 0);
+        assert_eq!(r.stale.len(), 2);
+        assert_eq!((r.stale[0].frozen, r.stale[0].actual), (3, 1));
+        assert_eq!((r.stale[1].frozen, r.stale[1].actual), (2, 0));
+    }
+
+    #[test]
+    fn allow_directive_findings_are_never_baselined() {
+        let mut b = Baseline::new();
+        b.insert(("allow-directive".into(), "src/a.rs".into()), 1);
+        let r = apply_baseline(scan_of(vec![diag(rules::ALLOW_DIRECTIVE, "src/a.rs", 3)]), &b);
+        assert_eq!(r.new.len(), 1, "stays a hard error");
+        // and format_baseline refuses to freeze them
+        let text = format_baseline(&[diag(rules::ALLOW_DIRECTIVE, "src/a.rs", 3)]);
+        assert!(!text.contains("allow-directive"));
+    }
+
+    #[test]
+    fn json_report_shape_and_escaping() {
+        let mut d = diag(rules::PANIC_PATH, "src/a.rs", 3);
+        d.message = String::from("quote \" backslash \\ tab \t");
+        let r = LintReport {
+            files_scanned: 1,
+            new: vec![d],
+            baselined: 0,
+            stale: vec![StaleEntry {
+                rule: "panic-path".into(),
+                path: "src/b.rs".into(),
+                frozen: 2,
+                actual: 1,
+            }],
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"clean\": false"));
+        assert!(j.contains("\\\" backslash \\\\ tab \\t"));
+        assert!(j.contains("\"frozen\": 2"));
+        let clean = LintReport { files_scanned: 1, new: vec![], baselined: 0, stale: vec![] };
+        assert!(clean.to_json().contains("\"new_violations\": []"));
+    }
+
+    #[test]
+    fn diagnostic_display_matches_contract() {
+        let mut d = diag(rules::PANIC_PATH, "src/a.rs", 3);
+        d.message = String::from("boom");
+        assert_eq!(d.to_string(), "src/a.rs:3: panic-path: boom");
+    }
+}

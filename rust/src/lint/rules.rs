@@ -1,0 +1,316 @@
+//! Rule definitions for the invariant analyzer.
+//!
+//! Every rule is a substring check over [`lexer::SourceFile`] code
+//! lines — the lexer has already removed comments, literal payloads
+//! and (for `panic-path`) `#[cfg(test)]` spans, so a match here is a
+//! real token in live code, not prose. Path-based confinement (which
+//! module *owns* a pattern) is part of each rule.
+
+use super::lexer::SourceFile;
+use super::Diagnostic;
+
+/// `unwrap()` / `expect(` / `panic!` / `unimplemented!` / `todo!` in
+/// non-test library code. Ratcheted by `lint-baseline.txt`.
+pub const PANIC_PATH: &str = "panic-path";
+
+/// `partial_cmp` anywhere — NaN must not panic or destabilize an
+/// ordering; use `total_cmp`.
+pub const FLOAT_ORDERING: &str = "float-ordering";
+
+/// Raw `NetSim { .. }` struct literal outside `src/netsim/` — snapshots
+/// derive from the `BwMonitor` or a `NetSim` constructor.
+pub const NETSIM_LITERAL: &str = "netsim-literal";
+
+/// The amortized-score formula shape outside `src/policy/` — adapters
+/// call `policy::amortized_score` instead of re-deriving it.
+pub const AMORTIZED_FORMULA: &str = "amortized-formula";
+
+/// Wall-clock reads outside `metrics`/`profiler`/benches, and
+/// iteration-order-unstable maps in `src/exp/` (golden tables).
+pub const DETERMINISM: &str = "determinism";
+
+/// Malformed `lint:allow` directives (unknown rule, missing reason).
+/// Not suppressible.
+pub const ALLOW_DIRECTIVE: &str = "allow-directive";
+
+/// Every rule id the analyzer knows, in reporting order.
+pub const ALL: &[&str] = &[
+    PANIC_PATH,
+    FLOAT_ORDERING,
+    NETSIM_LITERAL,
+    AMORTIZED_FORMULA,
+    DETERMINISM,
+    ALLOW_DIRECTIVE,
+];
+
+/// True when `rule` is a known id (allow directives must name one).
+pub fn is_known(rule: &str) -> bool {
+    ALL.contains(&rule)
+}
+
+/// First banned panic token on a code line, if any. `unwrap_or*` and
+/// `expect_err` deliberately do not match.
+fn panic_token(code: &str) -> Option<&'static str> {
+    const TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!", "unimplemented!", "todo!"];
+    TOKENS.iter().copied().find(|t| code.contains(t))
+}
+
+/// `NetSim` followed (modulo spaces) by `{`, with an identifier
+/// boundary on the left. Lines carrying `fn ` or `->` are signature
+/// positions (`-> NetSim {`), not literals.
+fn netsim_literal(code: &str) -> bool {
+    if code.contains("fn ") || code.contains("->") {
+        return false;
+    }
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("NetSim") {
+        let at = start + pos;
+        let boundary = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let mut j = at + "NetSim".len();
+        while j < bytes.len() && (bytes[j] == b' ' || bytes[j] == b'\t') {
+            j += 1;
+        }
+        if boundary && j < bytes.len() && bytes[j] == b'{' {
+            return true;
+        }
+        start = at + "NetSim".len();
+    }
+    false
+}
+
+/// Run every rule over one lexed file. Allow directives are applied by
+/// the caller (`lint::check_with_allows`), not here.
+pub fn check_file(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let in_src = f.path.starts_with("src/");
+    let in_exp = f.path.starts_with("src/exp/");
+    let netsim_owner = f.path.starts_with("src/netsim/");
+    let policy_owner = f.path.starts_with("src/policy/");
+    let time_owner = f.path.starts_with("src/metrics/")
+        || f.path.starts_with("src/profiler/")
+        || f.path.starts_with("benches/");
+    let push = |line: usize, rule: &'static str, message: String, out: &mut Vec<Diagnostic>| {
+        out.push(Diagnostic { path: f.path.clone(), line, rule, message });
+    };
+
+    for (idx, l) in f.lines.iter().enumerate() {
+        let line = idx + 1;
+        let code = l.code.as_str();
+
+        if in_src && !l.in_test {
+            if let Some(tok) = panic_token(code) {
+                push(
+                    line,
+                    PANIC_PATH,
+                    format!("`{tok}` in non-test library code — return a typed error instead"),
+                    &mut out,
+                );
+            }
+        }
+        if code.contains("partial_cmp") {
+            push(
+                line,
+                FLOAT_ORDERING,
+                "`partial_cmp` is banned — use `total_cmp` so NaN cannot panic or \
+                 destabilize an ordering"
+                    .to_string(),
+                &mut out,
+            );
+        }
+        if !netsim_owner && netsim_literal(code) {
+            push(
+                line,
+                NETSIM_LITERAL,
+                "raw `NetSim { .. }` literal outside src/netsim/ — derive snapshots from \
+                 the BwMonitor or a NetSim constructor"
+                    .to_string(),
+                &mut out,
+            );
+        }
+        if !policy_owner
+            && code.contains("horizon")
+            && (code.contains(".max(0.0)") || code.contains("max(0,"))
+        {
+            push(
+                line,
+                AMORTIZED_FORMULA,
+                "amortized-score formula shape outside src/policy/ — call \
+                 policy::amortized_score"
+                    .to_string(),
+                &mut out,
+            );
+        }
+        if !time_owner && (code.contains("SystemTime::now") || code.contains("Instant::now")) {
+            push(
+                line,
+                DETERMINISM,
+                "wall-clock read outside metrics/profiler/benches — replans and golden \
+                 tables must be reproducible"
+                    .to_string(),
+                &mut out,
+            );
+        }
+        if in_exp && (code.contains("HashMap") || code.contains("HashSet")) {
+            push(
+                line,
+                DETERMINISM,
+                "hash map in src/exp/ — iteration order feeds golden tables; use \
+                 BTreeMap/BTreeSet"
+                    .to_string(),
+                &mut out,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check_source;
+    use super::*;
+
+    fn rules_of(path: &str, text: &str) -> Vec<&'static str> {
+        check_source(path, text).into_iter().map(|d| d.rule).collect()
+    }
+
+    // -- panic-path ------------------------------------------------------
+
+    #[test]
+    fn panic_path_fires_on_each_token() {
+        for snippet in [
+            "fn f() { x.unwrap(); }",
+            "fn f() { x.expect(\"msg\"); }",
+            "fn f() { panic!(\"boom\"); }",
+            "fn f() { unimplemented!(); }",
+            "fn f() { todo!(); }",
+        ] {
+            assert_eq!(rules_of("src/a.rs", snippet), vec![PANIC_PATH], "{snippet}");
+        }
+    }
+
+    #[test]
+    fn panic_path_ignores_prose_strings_tests_and_fallbacks() {
+        // comment
+        assert!(rules_of("src/a.rs", "// fix the .unwrap() later\nfn f() {}\n").is_empty());
+        // string literal
+        assert!(rules_of("src/a.rs", "fn f() { let s = \".unwrap()\"; }\n").is_empty());
+        // cfg(test) module
+        let t = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(rules_of("src/a.rs", t).is_empty());
+        // tests/ and benches/ roots are all-test
+        assert!(rules_of("tests/a.rs", "fn f() { x.unwrap(); }").is_empty());
+        assert!(rules_of("benches/a.rs", "fn f() { x.unwrap(); }").is_empty());
+        // non-panicking cousins
+        assert!(rules_of("src/a.rs", "fn f() { x.unwrap_or(0); }").is_empty());
+        assert!(rules_of("src/a.rs", "fn f() { x.unwrap_or_else(|| 0); }").is_empty());
+        assert!(rules_of("src/a.rs", "fn f() { x.expect_err; }").is_empty());
+    }
+
+    #[test]
+    fn panic_path_resumes_after_test_mod() {
+        let t = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n\
+                 fn live() { y.unwrap(); }\n";
+        let d = check_source("src/a.rs", t);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 5, "only the post-mod line fires: {d:?}");
+    }
+
+    #[test]
+    fn reasoned_allow_suppresses_reasonless_is_rejected() {
+        // standalone reasoned allow covers the next line
+        let ok = "fn f() {\n    // lint:allow(panic-path) -- len checked above\n    x.unwrap();\n}";
+        assert!(rules_of("src/a.rs", ok).is_empty());
+        // inline reasoned allow covers its own line
+        let inline = "fn f() { x.unwrap() } // lint:allow(panic-path) -- proven non-empty";
+        assert!(rules_of("src/a.rs", inline).is_empty());
+        // a reason-less allow suppresses nothing and is itself flagged
+        let bad = "fn f() { x.unwrap(); } // lint:allow(panic-path)";
+        let got = rules_of("src/a.rs", bad);
+        assert!(got.contains(&PANIC_PATH), "{got:?}");
+        assert!(got.contains(&ALLOW_DIRECTIVE), "{got:?}");
+        // unknown rule ids are flagged too
+        let unk = "fn f() {} // lint:allow(bogus-rule) -- whatever";
+        assert_eq!(rules_of("src/a.rs", unk), vec![ALLOW_DIRECTIVE]);
+    }
+
+    // -- float-ordering --------------------------------------------------
+
+    #[test]
+    fn float_ordering_bans_partial_compare_everywhere() {
+        let t = "fn f() { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        let got = rules_of("src/a.rs", t);
+        assert!(got.contains(&FLOAT_ORDERING), "{got:?}");
+        // also inside test code and test roots
+        let t = "#[cfg(test)]\nmod tests {\n    fn f() { a.partial_cmp(&b); }\n}\n";
+        assert_eq!(rules_of("src/a.rs", t), vec![FLOAT_ORDERING]);
+        assert_eq!(rules_of("tests/a.rs", "fn f() { a.partial_cmp(&b); }"), vec![FLOAT_ORDERING]);
+        // prose does not fire
+        assert!(rules_of("src/a.rs", "// partial_cmp was removed in PR 4\n").is_empty());
+        // total_cmp does not fire
+        assert!(rules_of("src/a.rs", "fn f() { a.total_cmp(&b); }").is_empty());
+    }
+
+    // -- netsim-literal --------------------------------------------------
+
+    #[test]
+    fn netsim_literal_confined_to_owner() {
+        let lit = "fn f() { let n = NetSim { links: vec![] }; }";
+        // `fn ` on the same line is a signature filter, so split lines
+        let lit2 = "let n = NetSim {\n    links: vec![],\n};\n";
+        assert_eq!(rules_of("src/zero/mod.rs", lit2), vec![NETSIM_LITERAL]);
+        assert!(rules_of("src/netsim/mod.rs", lit2).is_empty(), "owner module is exempt");
+        assert!(rules_of("src/zero/mod.rs", lit).is_empty(), "fn-signature lines skipped");
+        // constructor calls and return types do not fire
+        assert!(rules_of("src/a.rs", "let n = NetSim::from_link(4, kind);\n").is_empty());
+        assert!(rules_of("src/a.rs", ") -> NetSim {\n").is_empty());
+        // identifier boundary: MyNetSim is a different type
+        assert!(rules_of("src/a.rs", "let n = MyNetSim { x: 1 };\n").is_empty());
+        // comments and strings do not fire
+        assert!(rules_of("src/a.rs", "// a raw NetSim { .. } would freeze bw\n").is_empty());
+        assert!(rules_of("src/a.rs", "let s = \"NetSim { }\";\n").is_empty());
+    }
+
+    // -- amortized-formula -----------------------------------------------
+
+    #[test]
+    fn amortized_formula_confined_to_policy() {
+        let t = "let score = rate * (horizon_s - stall).max(0.0) / horizon_s;\n";
+        assert_eq!(rules_of("src/autoscale/mod.rs", t), vec![AMORTIZED_FORMULA]);
+        assert!(rules_of("src/policy/mod.rs", t).is_empty(), "owner module is exempt");
+        let int_form = "let s = r * max(0, horizon - stall) / horizon;\n";
+        assert_eq!(rules_of("src/elastic/mod.rs", int_form), vec![AMORTIZED_FORMULA]);
+        // unrelated max over a horizon-free expression is fine
+        assert!(rules_of("src/a.rs", "let x = (a - b).max(0.0);\n").is_empty());
+        // a clamped horizon without the formula shape is fine
+        assert!(rules_of("src/a.rs", "let h = horizon.max(0.1);\n").is_empty());
+        // prose does not fire
+        assert!(rules_of("src/a.rs", "// max(0, horizon - stall) lives in policy\n").is_empty());
+    }
+
+    // -- determinism -----------------------------------------------------
+
+    #[test]
+    fn determinism_time_and_hash_rules() {
+        let clock = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules_of("src/zero/mod.rs", clock), vec![DETERMINISM]);
+        assert_eq!(rules_of("tests/a.rs", clock), vec![DETERMINISM]);
+        assert!(rules_of("src/metrics/bench.rs", clock).is_empty(), "metrics owns timers");
+        assert!(rules_of("src/profiler/mod.rs", clock).is_empty(), "profiler owns timers");
+        assert!(rules_of("benches/a.rs", clock).is_empty(), "benches measure time");
+        let sys = "fn f() { let t = SystemTime::now(); }";
+        assert_eq!(rules_of("src/zero/mod.rs", sys), vec![DETERMINISM]);
+
+        let hash = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of("src/exp/fig9.rs", hash), vec![DETERMINISM]);
+        assert!(rules_of("src/zero/mod.rs", hash).is_empty(), "only exp feeds golden tables");
+        assert!(rules_of("src/exp/fig9.rs", "use std::collections::BTreeMap;\n").is_empty());
+        assert_eq!(
+            rules_of("src/exp/fig9.rs", "let s: HashSet<u32> = HashSet::new();\n"),
+            vec![DETERMINISM]
+        );
+    }
+}

@@ -28,6 +28,7 @@
 //!                   fig_stage_migration|fig_joint_admission|fig_bw_adaptation|
 //!                   table2|ablation|all>
 //!                  [--out results]
+//! poplar lint      [--format json] [--write-baseline]   # in-crate invariant analyzer
 //! ```
 //!
 //! Arg parsing is hand-rolled: the offline image carries no clap.
@@ -121,6 +122,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "autoscale" => cmd_autoscale(rest),
         "ckpt" => cmd_ckpt(rest),
         "exp" => cmd_exp(rest),
+        "lint" => cmd_lint(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -150,7 +152,8 @@ fn print_help() {
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
          \x20 ckpt      restore --cluster C --model M [--lost 7,3] [--stage N]  # cross-stage migrates\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|fig_bw_adaptation|table2|ablation|all> [--out results]\n"
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|fig_bw_adaptation|table2|ablation|all> [--out results]\n\
+         \x20 lint      [--format json] [--write-baseline]  # invariant analyzer (src/lint/README.md)\n"
     );
 }
 
@@ -270,7 +273,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
 
     // virtual heterogeneous cluster: 2 fast + 2 slow (DESIGN.md §6)
-    let max_b = *meta.batch_variants.iter().max().unwrap();
+    let max_b = *meta
+        .batch_variants
+        .iter()
+        .max()
+        .ok_or_else(|| anyhow!("artifact metadata lists no batch variants"))?;
     let vgpus = vec![
         VirtualGpu { name: "fast-0".into(), slowdown: 1.0, max_batch: max_b },
         VirtualGpu { name: "fast-1".into(), slowdown: 1.0, max_batch: max_b },
@@ -733,6 +740,73 @@ fn cmd_ckpt(args: &[String]) -> Result<()> {
         other => bail!("unknown ckpt subcommand {other:?} (want save|restore|inspect)"),
     }
     Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    // --write-baseline is a bare flag (no value): strip it before the
+    // `--key value` parser sees it
+    let mut args = args.to_vec();
+    let write = take_bare_flag(&mut args, "--write-baseline");
+    let (_, f) = parse_flags(&args)?;
+    let json = match f.get("format").map(String::as_str) {
+        None | Some("text") => false,
+        Some("json") => true,
+        Some(other) => bail!("unknown --format {other:?} (want text|json)"),
+    };
+    let root = lint_root()?;
+
+    if write {
+        let scan = poplar::lint::scan_crate(&root)?;
+        let entries = poplar::lint::write_baseline(&root, &scan.diagnostics)?;
+        println!(
+            "wrote {} ({entries} entries from {} files)",
+            root.join(poplar::lint::BASELINE_FILE).display(),
+            scan.files_scanned
+        );
+        return Ok(());
+    }
+
+    let report = poplar::lint::run_crate(&root)?;
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        for d in &report.new {
+            println!("{d}");
+        }
+        for s in &report.stale {
+            println!(
+                "stale baseline: {} {} freezes {} but {} remain — rerun with --write-baseline",
+                s.rule, s.path, s.frozen, s.actual
+            );
+        }
+        println!(
+            "lint: {} files scanned, {} new, {} baselined, {} stale",
+            report.files_scanned,
+            report.new.len(),
+            report.baselined,
+            report.stale.len()
+        );
+    }
+    if !report.is_clean() {
+        bail!(
+            "lint failed: {} new violation(s), {} stale baseline entries",
+            report.new.len(),
+            report.stale.len()
+        );
+    }
+    Ok(())
+}
+
+/// Crate-root autodetection so `poplar lint` works both from `rust/`
+/// (the cargo working dir) and from the repo root.
+fn lint_root() -> Result<PathBuf> {
+    for cand in [".", "rust"] {
+        let root = PathBuf::from(cand);
+        if root.join("src").join("lib.rs").is_file() {
+            return Ok(root);
+        }
+    }
+    bail!("cannot find the crate root (run from rust/ or the repo root)")
 }
 
 #[cfg(test)]

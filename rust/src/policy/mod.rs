@@ -688,6 +688,7 @@ fn search_greedy(ctx: &RoundCtx, best: &mut Candidate) {
             let Some((i, ev)) = step else { break };
             members.push(i);
             cur = Some(ev);
+            // lint:allow(panic-path) -- `cur` is set to Some on the line above
             let cur_ref = cur.as_ref().expect("just set");
             if cur_ref.score > best.score {
                 *best = Candidate {

@@ -130,7 +130,9 @@ impl Engine {
                 .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
             self.cache.insert(key, exe);
         }
-        Ok(self.cache.get(&key).unwrap())
+        self.cache
+            .get(&key)
+            .ok_or_else(|| anyhow!("executable cache lost freshly inserted entry"))
     }
 
     /// Upload one parameter set as device buffers (owned by rust).

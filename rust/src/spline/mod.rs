@@ -109,7 +109,9 @@ impl CubicSpline {
     /// Domain `[x_min, x_max]` of the knots. Cannot panic: `fit` is the
     /// only constructor and guarantees at least two knots.
     pub fn domain(&self) -> (f64, f64) {
+        // lint:allow(panic-path) -- fit() is the only constructor and guarantees >= 2 knots
         let first = *self.xs.first().expect("CubicSpline invariant: >= 2 knots");
+        // lint:allow(panic-path) -- fit() is the only constructor and guarantees >= 2 knots
         let last = *self.xs.last().expect("CubicSpline invariant: >= 2 knots");
         (first, last)
     }
@@ -261,7 +263,7 @@ mod tests {
 
     #[test]
     fn nan_eval_propagates_instead_of_panicking() {
-        // regression: segment() used partial_cmp().unwrap(), so a NaN
+        // regression: segment() once unwrapped a partial float compare, so a NaN
         // query (corrupt observed step time through detect_drift / curve
         // prediction) panicked the whole planner
         let s = CubicSpline::fit(&[0.0, 1.0, 2.0], &[0.0, 1.0, 4.0]).unwrap();

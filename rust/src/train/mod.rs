@@ -126,7 +126,8 @@ impl Trainer {
                 if pts.len() < 2 {
                     bail!("vgpu {} has fewer than 2 feasible variants", g.name);
                 }
-                let mbs = pts.iter().map(|p| p.batch).max().unwrap();
+                // non-empty (checked above), so max() always yields
+                let mbs = pts.iter().map(|p| p.batch).max().unwrap_or(0);
                 PerfCurve::fit(pts, mbs).map_err(|e| anyhow!("{}: {e}", g.name))
             })
             .collect()

@@ -1,0 +1,55 @@
+//! Tier-1 gate for the in-crate invariant analyzer.
+//!
+//! `poplar lint` replaced the CI shell greps; this test makes the same
+//! pass part of `cargo test`, so the invariants hold even for workflows
+//! that never touch CI. A failure message tells you exactly which site
+//! to fix, allow (with a reason), or — for stale baseline entries —
+//! which command regenerates the shrunken baseline.
+
+use std::path::Path;
+
+use poplar::lint;
+
+fn crate_root() -> &'static Path {
+    // anchored to the manifest, not the cwd: `cargo test` may run from
+    // the workspace root or from rust/
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn lint_runs_clean_on_the_tree() {
+    let report = lint::run_crate(crate_root()).expect("analyzer must run");
+    assert!(report.files_scanned > 50, "walk found only {} files", report.files_scanned);
+    if !report.is_clean() {
+        let mut msg = String::new();
+        for d in &report.new {
+            msg.push_str(&format!("{d}\n"));
+        }
+        for s in &report.stale {
+            msg.push_str(&format!(
+                "stale baseline: {} {} freezes {} but {} remain — run \
+                 `cargo run --bin poplar -- lint --write-baseline` and commit the shrink\n",
+                s.rule, s.path, s.frozen, s.actual
+            ));
+        }
+        panic!("poplar lint failed ({} baselined):\n{msg}", report.baselined);
+    }
+}
+
+#[test]
+fn baseline_only_ever_shrinks() {
+    // the ratchet pin: the frozen total may go DOWN over time, never up.
+    // When you burn debt down, lower FROZEN_TOTAL in the same PR.
+    const FROZEN_TOTAL: usize = 7;
+    let baseline = lint::load_baseline(crate_root()).expect("baseline parses");
+    let total: usize = baseline.values().sum();
+    assert!(
+        total <= FROZEN_TOTAL,
+        "lint-baseline.txt grew to {total} frozen diagnostics (max {FROZEN_TOTAL}); \
+         a new panic path must be fixed or carry a reasoned allow, never baselined"
+    );
+    // only panic-path may carry frozen debt — every other rule ships clean
+    for (rule, path) in baseline.keys() {
+        assert_eq!(rule, "panic-path", "{rule} {path} must not carry frozen debt");
+    }
+}
