@@ -6,6 +6,9 @@
 //! case times the measured-fabric loop (`netsim::BwMonitor` warm-up +
 //! sustained congestion shift + the replan it triggers) — the leader
 //! pays it inline every iteration, so it must stay cheap at fleet scale.
+//! A second trailing case times the pipeline-grouping search
+//! (`policy::decide_round` with `allow_pipeline` over an all-starved
+//! offer pool) — the virtual-rank arm rides the same round call.
 //!
 //! Built with the in-crate harness (no criterion on this offline image);
 //! run with `cargo bench --bench policy`. Pass `--fast` / `--test` (or
@@ -133,6 +136,41 @@ fn main() {
         println!("{}", r.line());
         assert!(r.mean_ns > 0.0);
         points.push(json_point(n, 0, "bw-monitor", &r));
+    }
+
+    // the virtual-rank arm: every offer is memory-starved at every ZeRO
+    // stage, so decide_round runs the full grouping search (starvation
+    // scan, anchor-first packing, per-group layer partition + composed
+    // curve, delta-priced preview) on top of the ordinary per-offer
+    // pricing — the leader pays this inline whenever `allow_pipeline`
+    // is armed, so it must stay in the same budget as a plain round
+    section("grouping search (pipeline virtual ranks)");
+    {
+        let lm = preset("longctx-0.4b").unwrap();
+        let gbs = poplar::exp::gbs_samples(&lm);
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let plans = poplar::exp::fig_pipeline::bootstrap_groups(&net).unwrap();
+        let mut p = ElasticPlanner::new(3, gbs, &lm.name, lm.param_count(), 32);
+        for gp in &plans {
+            p.add_group_slot(gp);
+        }
+        p.replan(&net).unwrap();
+        let offers: Vec<String> = poplar::exp::fig_pipeline::POOL
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let k = offers.len();
+        let opts =
+            RoundOptions { allow_pipeline: true, min_gain: 0.01, ..Default::default() };
+        let name = format!("grouping_search/{}vranks/{k}offers", plans.len());
+        let r = bench(&name, target_ms, || {
+            let round = policy::decide_round(&p, &net, &lm, &offers, &opts).unwrap();
+            assert!(round.grouping.is_some(), "starved pool must yield a group");
+            round.offers.len()
+        });
+        println!("{}", r.line());
+        assert!(r.mean_ns > 0.0);
+        points.push(json_point(plans.len(), k, "grouping", &r));
     }
 
     let json = format!(

@@ -27,6 +27,11 @@
 //! horizon_s = 300          # expected tenure (amortization window)
 //! max_offers_per_round = 64  # soft cap on offers admitted per round
 //!
+//! # optional: arm pipeline grouping — offers no ZeRO stage can host
+//! # solo may join as ONE virtual DP rank (a layer-split group)
+//! [pipeline]
+//! max_group_size = 4       # at least 2
+//!
 //! # optional: cost-aware admission policy — `RankJoined` events become
 //! # offers the policy may decline (poplar elastic / poplar autoscale)
 //! [autoscale]
@@ -157,6 +162,25 @@ impl Default for PolicyConfig {
     }
 }
 
+/// Pipeline-grouping section (`[pipeline]`): presence of the table arms
+/// the decision engine's virtual-rank arm — offers that no ZeRO stage
+/// can host solo may be combined into one pipeline-grouped DP rank
+/// ([`crate::pipeline`]; `poplar elastic --allow-pipeline` is the flag
+/// equivalent).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Largest group the planner may propose (at least
+    /// [`crate::pipeline::MIN_GROUP_SIZE`]; longer pipelines amortize
+    /// badly — the bubble term grows with group depth).
+    pub max_group_size: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { max_group_size: crate::pipeline::DEFAULT_MAX_GROUP_SIZE }
+    }
+}
+
 /// Checkpoint section: where optimizer-shard manifests persist so a
 /// `RankLost` costs resharding, not recomputation.
 #[derive(Debug, Clone)]
@@ -189,6 +213,9 @@ pub struct JobConfig {
     pub autoscale: Option<AutoscaleOptions>,
     /// Optional shared decision-engine knobs (`[policy]` section).
     pub policy: Option<PolicyConfig>,
+    /// Optional pipeline-grouping arm (`[pipeline]` section): `Some`
+    /// arms virtual-rank admission for memory-starved offers.
+    pub pipeline: Option<PipelineConfig>,
 }
 
 /// Errors from loading/validating a config.
@@ -459,6 +486,22 @@ impl JobConfig {
             None
         };
 
+        // ---- pipeline (optional) ----
+        let pipeline = if d.has_table("pipeline") {
+            let max_group_size = d
+                .int("pipeline.max_group_size")
+                .unwrap_or(crate::pipeline::DEFAULT_MAX_GROUP_SIZE as i64);
+            if max_group_size < crate::pipeline::MIN_GROUP_SIZE as i64 {
+                return Err(invalid(format!(
+                    "pipeline.max_group_size must be at least {}, got {max_group_size}",
+                    crate::pipeline::MIN_GROUP_SIZE
+                )));
+            }
+            Some(PipelineConfig { max_group_size: max_group_size as usize })
+        } else {
+            None
+        };
+
         // ---- ckpt (optional) ----
         let ckpt = if d.has_table("ckpt") {
             let dir = d.str("ckpt.dir").unwrap_or("artifacts/ckpt");
@@ -470,7 +513,8 @@ impl JobConfig {
             None
         };
 
-        let cfg = JobConfig { model, cluster, training, elastic, ckpt, autoscale, policy };
+        let cfg =
+            JobConfig { model, cluster, training, elastic, ckpt, autoscale, policy, pipeline };
         if cfg.gbs_samples() == 0 {
             return Err(invalid("global_batch_tokens smaller than one sequence"));
         }
@@ -761,6 +805,26 @@ mod tests {
         // a cap below 1 is a config error, not a silent clamp
         let bad = format!("{GOOD}\n[policy]\nmax_offers_per_round = 0\n");
         assert!(JobConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn pipeline_section_parses_and_rejects_tiny_groups() {
+        // absent table: the arm stays off
+        assert!(JobConfig::from_toml(GOOD).unwrap().pipeline.is_none());
+        // bare [pipeline] arms the default cap
+        let cfg = JobConfig::from_toml(&format!("{GOOD}\n[pipeline]\n")).unwrap();
+        assert_eq!(
+            cfg.pipeline.unwrap().max_group_size,
+            crate::pipeline::DEFAULT_MAX_GROUP_SIZE
+        );
+        // explicit cap parses
+        let toml = format!("{GOOD}\n[pipeline]\nmax_group_size = 3\n");
+        assert_eq!(JobConfig::from_toml(&toml).unwrap().pipeline.unwrap().max_group_size, 3);
+        // a singleton "group" can never pipeline — parse-time rejection
+        for cap in ["1", "0", "-2"] {
+            let bad = format!("{GOOD}\n[pipeline]\nmax_group_size = {cap}\n");
+            assert!(JobConfig::from_toml(&bad).is_err(), "cap {cap} must be rejected");
+        }
     }
 
     #[test]

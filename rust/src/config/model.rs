@@ -99,6 +99,14 @@ pub fn preset(name: &str) -> Option<ModelSpec> {
             name: "llama-7b".into(), arch: "llama".into(),
             vocab: 32000, d_model: 4096, n_layers: 32, n_heads: 32, d_ff: 11008, seq: 2048,
         },
+        // long-context stressor for the pipeline-grouping figure: a
+        // modest parameter count whose seq-4096 activations overflow
+        // every mid-tier card at ANY ZeRO stage — only a layer split
+        // across a pipeline group (or an 80G card) can host it
+        "longctx-0.4b" => ModelSpec {
+            name: "longctx-0.4b".into(), arch: "llama".into(),
+            vocab: 32000, d_model: 1024, n_layers: 21, n_heads: 16, d_ff: 4096, seq: 4096,
+        },
         _ => return None,
     };
     Some(m)
@@ -114,7 +122,7 @@ pub fn require(name: &str) -> Result<ModelSpec, super::ConfigError> {
 /// All preset names usable with [`preset`].
 pub const PRESET_NAMES: &[&str] = &[
     "tiny", "e2e-28m", "e2e-110m", "llama-0.5b", "llama-1.1b", "bert-1.1b",
-    "gpt2-345m", "llama-7b",
+    "gpt2-345m", "llama-7b", "longctx-0.4b",
 ];
 
 #[cfg(test)]

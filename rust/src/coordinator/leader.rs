@@ -120,6 +120,20 @@ pub struct ElasticOptions {
     /// (`crate::policy::DEFAULT_MAX_OFFERS_PER_ROUND`). Batches of any
     /// size are priced — the cap only bounds the chosen subset.
     pub max_offers_per_round: Option<usize>,
+    /// Let the round engine propose *pipeline groupings* (`[pipeline]`
+    /// config section / `poplar elastic --allow-pipeline`): offer
+    /// batches whose members are infeasible at EVERY ZeRO stage solo
+    /// are packed into virtual DP ranks (`crate::pipeline`) and priced
+    /// as one composed-curve admission in the same round
+    /// (`RoundPlan::grouping`). Pricing-only in this runtime for now:
+    /// the sim leader spawns one worker per *physical replica*, so a
+    /// priced grouping is reported as advisory rather than spawned as
+    /// a live pipeline — `exp::fig_pipeline` realizes admissions on
+    /// the planner directly via `ElasticPlanner::add_group_slot`.
+    pub allow_pipeline: bool,
+    /// Ceiling on members per proposed pipeline group (`[pipeline]
+    /// max_group_size`, CLI `--max-group-size`; parse enforces >= 2).
+    pub pipeline_max_group_size: usize,
 }
 
 impl Default for ElasticOptions {
@@ -132,6 +146,8 @@ impl Default for ElasticOptions {
             allow_stage_change: false,
             policy_horizon_s: None,
             max_offers_per_round: None,
+            allow_pipeline: false,
+            pipeline_max_group_size: crate::pipeline::DEFAULT_MAX_GROUP_SIZE,
         }
     }
 }
@@ -811,6 +827,8 @@ impl Leader {
                     if let Some(cap) = opts.max_offers_per_round {
                         ropts.max_offers_per_round = cap;
                     }
+                    ropts.allow_pipeline = opts.allow_pipeline;
+                    ropts.max_group_size = opts.pipeline_max_group_size;
                     Some(crate::policy::decide_round(
                         &planner, &self.net, &self.model, &offers, &ropts,
                     ))
@@ -823,6 +841,18 @@ impl Leader {
             // one in the event log
             if let Some(Err(e)) = &round {
                 events.push(format!("round-fallback:{e}"));
+            }
+            // a priced pipeline grouping is surfaced in the event log —
+            // membership ops stay physical (per-GPU verdicts below),
+            // the plan-level virtual rank is advisory here (see
+            // `ElasticOptions::allow_pipeline`)
+            if let Some(Ok(r)) = &round {
+                if let Some(g) = &r.grouping {
+                    events.push(format!(
+                        "pipeline-group:{} rate {:.2} samples/s",
+                        g.label, g.rate
+                    ));
+                }
             }
             enum JoinVerdict {
                 Admit(&'static str),
@@ -1174,7 +1204,10 @@ impl Leader {
             }
 
             // (4) run the iteration live
-            let plan = planner.plan().expect("planned above").clone();
+            let plan = planner
+                .plan()
+                .ok_or_else(|| anyhow!("iteration {iter}: replan left the planner with no plan"))?
+                .clone();
             let live = self.run_iteration(&plan)?;
             let wall = live.wall_s + penalty;
 
@@ -1270,6 +1303,17 @@ impl Leader {
             });
         }
 
+        // the loop above replans (or reuses a plan) every iteration, but
+        // a zero-iteration job or a future refactor could get here
+        // planless — that is a typed failure, not a crash
+        let final_plan = planner
+            .plan()
+            .ok_or_else(|| anyhow!("job finished without a final plan"))?
+            .clone();
+        let final_manifest = planner
+            .manifest()
+            .ok_or_else(|| anyhow!("job finished without a shard manifest"))?
+            .clone();
         Ok(ElasticJobReport {
             stage: initial_stage,
             final_stage: planner.stage(),
@@ -1277,8 +1321,8 @@ impl Leader {
             replans: planner.replans(),
             cache_hits: planner.cache().hits() - hits0,
             cache_misses: planner.cache().misses() - misses0,
-            final_plan: planner.plan().expect("planned").clone(),
-            final_manifest: planner.manifest().expect("planned").clone(),
+            final_plan,
+            final_manifest,
             iterations: reports,
         })
     }

@@ -88,6 +88,10 @@ pub enum ElasticError {
     Ckpt(String),
     /// A `BwDrift` event carried an unusable link name or factor.
     BwDrift(String),
+    /// A pipeline-group operation failed (message form:
+    /// `pipeline::PipelineError` semantics, e.g. an op on a slot that
+    /// carries no members, or a model with no preset to bound against).
+    Pipeline(String),
 }
 
 impl std::fmt::Display for ElasticError {
@@ -109,27 +113,38 @@ impl std::fmt::Display for ElasticError {
             ElasticError::Plan(e) => write!(f, "replan failed: {e}"),
             ElasticError::Ckpt(e) => write!(f, "shard layout: {e}"),
             ElasticError::BwDrift(e) => write!(f, "bw drift event: {e}"),
+            ElasticError::Pipeline(e) => write!(f, "pipeline group: {e}"),
         }
     }
 }
 
 impl std::error::Error for ElasticError {}
 
-/// Per-slot planner state.
+/// Per-slot planner state. A slot is one *virtual DP rank*: either a
+/// single physical GPU (`members` empty — every pre-pipeline path) or a
+/// pipeline group of physical GPUs acting as one participant
+/// (`members` lists them in stage order and `gpu` carries the
+/// `pipeline::group_label`).
 #[derive(Debug, Clone)]
 pub struct SlotState {
     /// Leader slot id (stable across membership changes).
     pub slot: usize,
-    /// Catalog GPU name.
+    /// Catalog GPU name — or the group label for a pipeline group.
     pub gpu: String,
     /// False once the slot left the job.
     pub alive: bool,
-    /// Fitted performance curve, if known.
+    /// Fitted performance curve, if known (the composed group curve for
+    /// a pipeline group).
     pub curve: Option<PerfCurve>,
     /// True when the current curve is a rank-local drift override (a
     /// straggler's curve) rather than the healthy type-level curve — such
     /// curves are kept out of the shared cache.
     pub drifted: bool,
+    /// Physical members of a pipeline group, in pipeline-stage order
+    /// (ascending memory). Empty for an ordinary single-GPU slot. Plans
+    /// address the *slot*; membership events address these GPUs — losing
+    /// one degrades this group, not the fleet.
+    pub members: Vec<String>,
 }
 
 /// Membership/curve state machine behind the elastic runtime.
@@ -250,9 +265,94 @@ impl ElasticPlanner {
             alive: true,
             curve,
             drifted: false,
+            members: Vec::new(),
         });
         self.dirty = true;
         slot
+    }
+
+    /// Register a *pipeline group* as one virtual DP rank; returns its
+    /// slot id. The slot's `gpu` is the group label, its curve is the
+    /// composed group curve from [`crate::pipeline::plan_group`], and
+    /// `members` records the physical GPUs in stage order. The curve is
+    /// slot-local (never inserted into the type-level cache): a composed
+    /// curve is a property of this exact membership, not of a GPU type.
+    pub fn add_group_slot(&mut self, plan: &crate::pipeline::GroupPlan) -> usize {
+        let slot = self.slots.len();
+        self.slots.push(SlotState {
+            slot,
+            gpu: plan.label.clone(),
+            alive: true,
+            curve: Some(plan.curve.clone()),
+            drifted: false,
+            members: plan.members.clone(),
+        });
+        self.dirty = true;
+        slot
+    }
+
+    /// A physical member of a pipeline group died. The group — not the
+    /// fleet — degrades: the survivors are re-planned as a smaller
+    /// pipeline at the current stage and virtual-rank count. When the
+    /// smaller group still satisfies every member's memory bound, the
+    /// slot stays alive with a freshly composed curve (and possibly a
+    /// new layer partition) and `Ok(Some(new_plan))` reports the new
+    /// shape; when it cannot, the whole slot is dissolved via
+    /// [`ElasticPlanner::lose_slot`] and `Ok(None)` reports the
+    /// eviction. `member` indexes [`SlotState::members`].
+    pub fn lose_group_member(
+        &mut self,
+        slot: usize,
+        member: usize,
+        net: &NetSim,
+    ) -> Result<Option<crate::pipeline::GroupPlan>, ElasticError> {
+        let n_virtual = self.active_slots().len();
+        let s = self.slots.get(slot).ok_or(ElasticError::UnknownSlot(slot))?;
+        if !s.alive {
+            return Err(ElasticError::DeadSlot(slot));
+        }
+        if s.members.is_empty() {
+            return Err(ElasticError::Pipeline(format!(
+                "slot {slot} ({}) is not a pipeline group",
+                s.gpu
+            )));
+        }
+        if member >= s.members.len() {
+            return Err(ElasticError::Pipeline(format!(
+                "slot {slot} has {} members, no index {member}",
+                s.members.len()
+            )));
+        }
+        let mut survivors = s.members.clone();
+        survivors.remove(member);
+        let model_spec = crate::config::model::preset(&self.model).ok_or_else(|| {
+            ElasticError::Pipeline(format!("no model preset {:?} to bound against", self.model))
+        })?;
+        match crate::pipeline::plan_group(
+            &survivors,
+            &model_spec,
+            self.param_count,
+            self.stage,
+            n_virtual,
+            net,
+        ) {
+            Ok(plan) => {
+                let s = &mut self.slots[slot];
+                s.gpu = plan.label.clone();
+                s.members = plan.members.clone();
+                s.curve = Some(plan.curve.clone());
+                s.drifted = false;
+                self.dirty = true;
+                Ok(Some(plan))
+            }
+            // the shrunken group no longer holds the model (too few
+            // members, or the bound breaks): the virtual rank leaves the
+            // job as one unit
+            Err(_) => {
+                self.lose_slot(slot)?;
+                Ok(None)
+            }
+        }
     }
 
     /// Apply a membership event. `RankSlowed` and `BwDrift` are

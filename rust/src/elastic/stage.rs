@@ -196,6 +196,12 @@ impl ElasticPlanner {
     /// fits at least one sample at `stage` with `n` total ranks. The
     /// joint round engine (`crate::policy::decide_round`) checks
     /// candidate `(subset, stage)` points with this.
+    ///
+    /// A *virtual* rank (a slot carrying pipeline-group members) is
+    /// checked with the group form of the bound — every member's layer
+    /// share must fit at its 1F1B in-flight depth
+    /// (`pipeline::group_feasible`) — while single-GPU slots and the
+    /// extras keep the whole-model `true_mbs` check.
     pub fn stage_feasible_with(
         &self,
         model: &ModelSpec,
@@ -208,7 +214,14 @@ impl ElasticPlanner {
                 memmodel::true_mbs(model, self.param_count, stage, n, spec.mem_bytes()) >= 1
             })
         };
-        self.slots.iter().filter(|s| s.alive).all(|s| fits(&s.gpu))
+        let slot_fits = |s: &super::SlotState| {
+            if s.members.is_empty() {
+                fits(&s.gpu)
+            } else {
+                crate::pipeline::group_feasible(&s.members, model, self.param_count, stage, n)
+            }
+        };
+        self.slots.iter().filter(|s| s.alive).all(|s| slot_fits(s))
             && extra_gpus.iter().all(|g| fits(g))
     }
 

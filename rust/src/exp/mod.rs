@@ -21,6 +21,7 @@ pub mod fig_autoscale;
 pub mod fig_bw_adaptation;
 pub mod fig_elastic;
 pub mod fig_joint_admission;
+pub mod fig_pipeline;
 pub mod fig_stage_migration;
 pub mod table2;
 
@@ -198,6 +199,8 @@ pub fn run_all(out_dir: &std::path::Path) -> Result<()> {
          fig_joint_admission::run),
         ("fig_bw_adaptation", "Bandwidth adaptation — measured fabric flips and restores a replan",
          fig_bw_adaptation::run),
+        ("fig_pipeline", "Pipeline grouping — virtual DP ranks from memory-starved GPUs",
+         fig_pipeline::run),
     ];
     for (name, title, f) in runners {
         eprintln!("[exp] running {name}…");

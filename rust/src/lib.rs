@@ -23,6 +23,7 @@
 //! | [`netsim`] | link topology + ring collective cost models; `BwMonitor` — measured per-link bandwidth (EWMA estimator, Startup/Degrade/Steady/Probe state machine) from which every planner-facing `NetSim` snapshot derives |
 //! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
 //! | [`curves`] | profiled points -> performance curve -> `find(g, t)` |
+//! | [`pipeline`] | virtual DP ranks: contiguous layer partitioning of a model over a *group* of small-memory GPUs (per-member Alg. 1 bound at the member's layer share + 1F1B in-flight depth), `(m + g − 1)/m` bubble pricing over `netsim` p2p hops, and a composed group `PerfCurve` consumed through the same interface as a physical GPU — the bubble formula is lint-confined here (`bubble-formula`) |
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan`/`replan_with_stage` for elastic re-allocation, `predicted_wall_s` cross-stage rate model |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
@@ -37,7 +38,7 @@
 //! | [`metrics`] | FLOPs accounting, timers, report tables |
 //! | [`config`] | TOML config system + paper presets |
 //! | [`exp`] | experiment harness: one runner per paper table/figure |
-//! | [`lint`] | in-crate invariant analyzer: masks comments/literals, tracks `#[cfg(test)]` spans, enforces panic-path / float-ordering / netsim-literal / amortized-formula / determinism with reasoned `lint:allow` directives and the `lint-baseline.txt` ratchet (`poplar lint`, `tests/lint_gate.rs`, CI) |
+//! | [`lint`] | in-crate invariant analyzer: masks comments/literals, tracks `#[cfg(test)]` spans, enforces panic-path / float-ordering / netsim-literal / amortized-formula / bubble-formula / determinism with reasoned `lint:allow` directives and the `lint-baseline.txt` ratchet (`poplar lint`, `tests/lint_gate.rs`, CI) |
 
 pub mod allocator;
 pub mod autoscale;
@@ -53,6 +54,7 @@ pub mod lint;
 pub mod memmodel;
 pub mod metrics;
 pub mod netsim;
+pub mod pipeline;
 pub mod policy;
 pub mod profiler;
 pub mod runtime;

@@ -25,6 +25,12 @@ pub const NETSIM_LITERAL: &str = "netsim-literal";
 /// call `policy::amortized_score` instead of re-deriving it.
 pub const AMORTIZED_FORMULA: &str = "amortized-formula";
 
+/// The pipeline bubble/efficiency formula shape outside `src/pipeline/`
+/// — the `(m + g - 1)/m` term is owned by `pipeline::bubble_efficiency`;
+/// consumers call it (or price through a composed `PerfCurve`) instead
+/// of re-deriving the bubble.
+pub const BUBBLE_FORMULA: &str = "bubble-formula";
+
 /// Wall-clock reads outside `metrics`/`profiler`/benches, and
 /// iteration-order-unstable maps in `src/exp/` (golden tables).
 pub const DETERMINISM: &str = "determinism";
@@ -39,6 +45,7 @@ pub const ALL: &[&str] = &[
     FLOAT_ORDERING,
     NETSIM_LITERAL,
     AMORTIZED_FORMULA,
+    BUBBLE_FORMULA,
     DETERMINISM,
     ALLOW_DIRECTIVE,
 ];
@@ -90,6 +97,7 @@ pub fn check_file(f: &SourceFile) -> Vec<Diagnostic> {
     let in_exp = f.path.starts_with("src/exp/");
     let netsim_owner = f.path.starts_with("src/netsim/");
     let policy_owner = f.path.starts_with("src/policy/");
+    let pipeline_owner = f.path.starts_with("src/pipeline/");
     let time_owner = f.path.starts_with("src/metrics/")
         || f.path.starts_with("src/profiler/")
         || f.path.starts_with("benches/");
@@ -140,6 +148,20 @@ pub fn check_file(f: &SourceFile) -> Vec<Diagnostic> {
                 AMORTIZED_FORMULA,
                 "amortized-score formula shape outside src/policy/ — call \
                  policy::amortized_score"
+                    .to_string(),
+                &mut out,
+            );
+        }
+        if !pipeline_owner
+            && (code.contains("+ g - 1")
+                || code.contains("+ group_size - 1")
+                || (code.contains("bubble") && (code.contains("/ (") || code.contains("* ("))))
+        {
+            push(
+                line,
+                BUBBLE_FORMULA,
+                "pipeline bubble/efficiency formula shape outside src/pipeline/ — call \
+                 pipeline::bubble_efficiency"
                     .to_string(),
                 &mut out,
             );
@@ -289,6 +311,31 @@ mod tests {
         assert!(rules_of("src/a.rs", "let h = horizon.max(0.1);\n").is_empty());
         // prose does not fire
         assert!(rules_of("src/a.rs", "// max(0, horizon - stall) lives in policy\n").is_empty());
+    }
+
+    // -- bubble-formula --------------------------------------------------
+
+    #[test]
+    fn bubble_formula_confined_to_pipeline() {
+        // the raw bubble step count
+        let steps = "let steps = (m + g - 1) as f64;\n";
+        assert_eq!(rules_of("src/policy/mod.rs", steps), vec![BUBBLE_FORMULA]);
+        assert_eq!(rules_of("src/allocator/mod.rs", steps), vec![BUBBLE_FORMULA]);
+        assert!(rules_of("src/pipeline/mod.rs", steps).is_empty(), "owner module is exempt");
+        // the spelled-out variant
+        let spelled = "let steps = batches + group_size - 1;\n";
+        assert_eq!(rules_of("src/elastic/mod.rs", spelled), vec![BUBBLE_FORMULA]);
+        // a re-derived efficiency ratio around a bubble-named quantity
+        let ratio = "let bubble_eff = m as f64 / (m + k) as f64;\n";
+        assert_eq!(rules_of("src/exp/fig9.rs", ratio), vec![BUBBLE_FORMULA]);
+        assert!(rules_of("src/pipeline/mod.rs", ratio).is_empty());
+        // CALLING the owner is exactly what consumers should do
+        let call = "let eff = pipeline::bubble_efficiency(m, g);\n";
+        assert!(rules_of("src/exp/fig9.rs", call).is_empty(), "calls are fine");
+        // an unrelated subtraction and prose do not fire
+        assert!(rules_of("src/a.rs", "let last = n + group - 1;\n").is_empty());
+        assert!(rules_of("src/a.rs", "// pays the m + g - 1 bubble\n").is_empty());
+        assert!(rules_of("src/a.rs", "let s = \"(m + g - 1)/m bubble\";\n").is_empty());
     }
 
     // -- determinism -----------------------------------------------------

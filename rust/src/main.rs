@@ -12,6 +12,7 @@
 //!                  [--seed-schedule 7] [--ckpt-dir artifacts/ckpt]
 //!                  [--horizon 300] [--min-gain 0.02]   # enables the offer policy
 //!                  [--allow-stage-change]   # replan-time ZeRO-stage re-selection
+//!                  [--allow-pipeline] [--max-group-size 4]  # virtual-rank pipeline groups
 //! poplar autoscale --offer A800-80G,T4[,...] [--cluster cluster-C]
 //!                  [--model llama-0.5b] [--stage 1] [--gbs-tokens N]
 //!                  [--horizon 300] [--min-gain 0.02] [--noise 0.015]
@@ -26,7 +27,7 @@
 //!                          [--stage N]   # != checkpoint stage: cross-stage migration
 //! poplar exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|
 //!                   fig_stage_migration|fig_joint_admission|fig_bw_adaptation|
-//!                   table2|ablation|all>
+//!                   fig_pipeline|table2|ablation|all>
 //!                  [--out results]
 //! poplar lint      [--format json] [--write-baseline]   # in-crate invariant analyzer
 //! ```
@@ -145,6 +146,7 @@ fn print_help() {
          \x20           [--seed-schedule 7]\n\
          \x20           [--ckpt-dir artifacts/ckpt] [--horizon 300] [--min-gain 0.02]\n\
          \x20           [--allow-stage-change]  # replan-time ZeRO-stage re-selection\n\
+         \x20           [--allow-pipeline] [--max-group-size 4]  # group memory-starved offers\n\
          \x20 autoscale --offer A800-80G,T4[,...] [--cluster C] [--model M] [--stage N]\n\
          \x20           [--gbs-tokens N] [--horizon 300] [--min-gain 0.02] [--noise S]\n\
          \x20           [--joint]    # joint offer-subset round (one shared stall)\n\
@@ -152,7 +154,7 @@ fn print_help() {
          \x20 ckpt      save --cluster C --model M [--stage N] [--dir artifacts/ckpt]\n\
          \x20 ckpt      inspect [--dir artifacts/ckpt | --path FILE]\n\
          \x20 ckpt      restore --cluster C --model M [--lost 7,3] [--stage N]  # cross-stage migrates\n\
-         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|fig_bw_adaptation|table2|ablation|all> [--out results]\n\
+         \x20 exp       <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig_elastic|fig_autoscale|fig_stage_migration|fig_joint_admission|fig_bw_adaptation|fig_pipeline|table2|ablation|all> [--out results]\n\
          \x20 lint      [--format json] [--write-baseline]  # invariant analyzer (src/lint/README.md)\n"
     );
 }
@@ -302,11 +304,24 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_elastic(args: &[String]) -> Result<()> {
-    // --allow-stage-change is a bare flag (no value): strip it before
-    // the `--key value` parser sees it
+    // --allow-stage-change / --allow-pipeline are bare flags (no
+    // value): strip them before the `--key value` parser sees them
     let mut args = args.to_vec();
     let stage_change_flag = take_bare_flag(&mut args, "--allow-stage-change");
+    let pipeline_flag = take_bare_flag(&mut args, "--allow-pipeline");
     let (_, f) = parse_flags(&args)?;
+    // validated here, before any simulation: a singleton "group" can
+    // never pipeline, so the knob is rejected at the entry point
+    let max_group_size: Option<usize> =
+        f.get("max-group-size").map(|s| s.parse()).transpose()?;
+    if let Some(cap) = max_group_size {
+        if cap < poplar::pipeline::MIN_GROUP_SIZE {
+            bail!(
+                "--max-group-size must be at least {}, got {cap}",
+                poplar::pipeline::MIN_GROUP_SIZE
+            );
+        }
+    }
 
     // config-file path: `[elastic]` section drives everything
     // (--ckpt-dir still overrides the `[ckpt]` section either way, and
@@ -331,6 +346,12 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
             allow_stage_change: ecfg.allow_stage_change || stage_change_flag,
             policy_horizon_s: cfg.policy.as_ref().map(|p| p.horizon_s),
             max_offers_per_round: cfg.policy.as_ref().map(|p| p.max_offers_per_round),
+            // presence of [pipeline] arms the grouping arm; the CLI
+            // flag can arm it over a config that lacks the table
+            allow_pipeline: cfg.pipeline.is_some() || pipeline_flag,
+            pipeline_max_group_size: max_group_size
+                .or_else(|| cfg.pipeline.as_ref().map(|p| p.max_group_size))
+                .unwrap_or(poplar::pipeline::DEFAULT_MAX_GROUP_SIZE),
             ..Default::default()
         };
         let rep = leader.run_elastic_job(
@@ -385,6 +406,9 @@ fn cmd_elastic(args: &[String]) -> Result<()> {
         ckpt_dir: ckpt_dir_flag,
         autoscale,
         allow_stage_change: stage_change_flag,
+        allow_pipeline: pipeline_flag,
+        pipeline_max_group_size: max_group_size
+            .unwrap_or(poplar::pipeline::DEFAULT_MAX_GROUP_SIZE),
         ..Default::default()
     };
     let rep = leader.run_elastic_job(stage, gbs, iters, &schedule, &opts)?;
@@ -853,6 +877,22 @@ mod tests {
     }
 
     #[test]
+    fn allow_pipeline_is_a_bare_flag_with_a_validated_cap() {
+        let mut a = args(&["--allow-pipeline", "--iters", "2"]);
+        assert!(take_bare_flag(&mut a, "--allow-pipeline"));
+        assert_eq!(a, args(&["--iters", "2"]), "only the bare flag is removed");
+        // a singleton "group" is rejected before any simulation runs
+        for cap in ["1", "0"] {
+            let e = format!(
+                "{:#}",
+                cmd_elastic(&args(&["--allow-pipeline", "--max-group-size", cap]))
+                    .unwrap_err()
+            );
+            assert!(e.contains("max-group-size"), "cap {cap}: {e}");
+        }
+    }
+
+    #[test]
     fn allow_stage_change_is_a_bare_flag() {
         let mut a = args(&["--allow-stage-change", "--iters", "2"]);
         assert!(take_bare_flag(&mut a, "--allow-stage-change"));
@@ -909,6 +949,11 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             "fig_joint_admission",
             "Joint admission + scale-down — the unified decision round",
             exp::fig_joint_admission::run,
+        )?,
+        "fig_pipeline" => one(
+            "fig_pipeline",
+            "Pipeline grouping — virtual DP ranks from memory-starved GPUs",
+            exp::fig_pipeline::run,
         )?,
         other => bail!("unknown experiment {other:?}"),
     }

@@ -69,6 +69,16 @@ impl NetSim {
         NetSim { n, bw_gbs: link.bandwidth_gbs(), alpha_s: link.latency_s() }
     }
 
+    /// Time (seconds) for a point-to-point transfer of `bytes` between
+    /// two adjacent ranks: one link crossing, one α. This is the hop
+    /// cost the `pipeline` module charges for forwarding boundary
+    /// activations between adjacent pipeline stages inside a virtual
+    /// rank — no ring term, because a pipeline hop is a single edge,
+    /// not a whole-group collective.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.bw_gbs * 1e9) + self.alpha_s
+    }
+
     /// Time (seconds) for a collective moving `bytes` of payload.
     ///
     /// Ring costs for n ranks (V = payload bytes):
@@ -177,6 +187,20 @@ mod tests {
         let rs = net.time(Collective::ReduceScatter, v);
         let ag = net.time(Collective::AllGather, v);
         assert!((ar - (rs + ag)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2p_is_one_link_crossing() {
+        // a pipeline hop pays exactly bytes/BW + one α — no (n-1)/n ring
+        // term, and no dependence on the group size at all
+        let v: u64 = 1 << 30;
+        let net2 = NetSim::from_link(2, LinkKind::Ib);
+        let net8 = NetSim::from_link(8, LinkKind::Ib);
+        assert_eq!(net2.p2p_time(v), net8.p2p_time(v));
+        let expect = v as f64 / (LinkKind::Ib.bandwidth_gbs() * 1e9) + LinkKind::Ib.latency_s();
+        assert!((net2.p2p_time(v) - expect).abs() < 1e-12);
+        // and it undercuts the same payload's all-gather on the ring
+        assert!(net8.p2p_time(v) < net8.time(Collective::AllGather, v));
     }
 
     #[test]

@@ -1,0 +1,609 @@
+//! Virtual DP ranks: pipeline groups of small-memory GPUs acting as ONE
+//! data-parallel participant.
+//!
+//! Poplar's Alg. 1 assumes every DP rank is a single GPU that can hold
+//! the model at *some* ZeRO stage; a card whose per-sample activation
+//! footprint alone exceeds its memory is a hard reject at every stage
+//! and the leader evicts it. HetPipe and Zorse (PAPERS.md) show that
+//! scenario is recoverable throughput: partition the model's layers
+//! *within* a group of such cards (intra-group pipeline parallelism),
+//! treat the group as one **virtual rank** with one composed performance
+//! curve, and let the existing batch allocator schedule it like any
+//! other heterogeneous participant. This module owns everything
+//! group-shaped:
+//!
+//! * **per-member memory bound** ([`member_max_layers`]) — the Alg. 1
+//!   bound applied to a member's layer share: model-state bytes of its
+//!   layer shard at the group's ZeRO stage and *virtual* group size,
+//!   plus the in-flight activation working set of 1F1B scheduling
+//!   (earlier pipeline stages keep more micro-batches alive);
+//! * **layer partitioning** ([`partition_layers`]) — contiguous layer
+//!   ranges proportional to each member's bound, weakest member first:
+//!   the largest-memory card anchors the LAST pipeline stage, where
+//!   exactly one micro-batch is in flight;
+//! * **bubble pricing** ([`bubble_efficiency`], [`compose_curve`]) — a
+//!   group of `g` members running `m` micro-batches spends `m + g - 1`
+//!   slot times per step (the classic pipeline-fill bubble); the
+//!   composed curve prices each batch as the *slowest* member's slot
+//!   time (stage imbalance is priced, never assumed away) times the
+//!   bubble steps, plus [`crate::netsim::NetSim::p2p_time`] activation
+//!   hops — and comes out as an ordinary [`PerfCurve`], so the
+//!   allocator, the elastic planner and the policy engine consume
+//!   groups through the exact same curve interface as physical GPUs;
+//! * **grouping proposals** ([`plan_group`], [`pack_groups`]) — the
+//!   bounded candidate rule the planner searches: singletons always
+//!   stand unchanged, groups are proposed only for cards infeasible at
+//!   every ZeRO stage solo, packed anchor-first (largest remaining card
+//!   anchors, weakest cards fill) up to `[pipeline] max_group_size`.
+//!
+//! The `(m + g - 1)/m` bubble/efficiency formula lives HERE and nowhere
+//! else — `poplar lint`'s `bubble-formula` rule rejects the shape
+//! outside this directory, exactly like the amortized-score confinement
+//! in `policy` and the `NetSim` literal confinement in `netsim`.
+
+use crate::cluster::catalog;
+use crate::cluster::gpu::GpuSpec;
+use crate::config::model::ModelSpec;
+use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::memmodel;
+use crate::netsim::NetSim;
+
+/// A pipeline group needs at least two members — a "group" of one IS the
+/// singleton path and must go through the ordinary per-GPU machinery.
+pub const MIN_GROUP_SIZE: usize = 2;
+
+/// Default ceiling on members per group (`[pipeline] max_group_size`).
+/// Deeper pipelines buy little: the bubble term grows with `g` while the
+/// per-member layer share shrinks, and four memory-starved cards already
+/// cover every catalog scenario.
+pub const DEFAULT_MAX_GROUP_SIZE: usize = 4;
+
+/// Micro-batch slots per chunk in the composed curve: the group's `mbs`
+/// is `chunk * MAX_MICRO_BATCHES`, i.e. the curve is profiled out to the
+/// point where the bubble is amortized to `MAX_MICRO_BATCHES` fills.
+pub const MAX_MICRO_BATCHES: usize = 8;
+
+/// Largest micro-batch chunk size [`plan_group`] searches (descending —
+/// the largest feasible chunk wins because bigger micro-batches saturate
+/// each member's matmuls; chunk 1 is the most memory-lenient fallback).
+pub const MAX_CHUNK: usize = 4;
+
+/// Typed errors of the grouping machinery.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineError {
+    /// A proposed member is not in the GPU catalog.
+    UnknownGpu(String),
+    /// Fewer than [`MIN_GROUP_SIZE`] members.
+    TooSmall(usize),
+    /// No contiguous layer partition satisfies every member's Alg. 1
+    /// bound at any chunk size.
+    Infeasible {
+        /// Display label of the rejected group.
+        label: String,
+        /// ZeRO stage the bound was checked at.
+        stage: u8,
+        /// Virtual group size the bound was checked at.
+        n_virtual: usize,
+    },
+    /// Composing the group curve failed (degenerate points).
+    Curve(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::UnknownGpu(g) => write!(f, "unknown GPU type {g:?}"),
+            PipelineError::TooSmall(n) => {
+                write!(f, "pipeline group needs >= {MIN_GROUP_SIZE} members, got {n}")
+            }
+            PipelineError::Infeasible { label, stage, n_virtual } => write!(
+                f,
+                "{label}: no layer partition satisfies the per-member memory bound \
+                 at ZeRO-{stage} with {n_virtual} virtual ranks"
+            ),
+            PipelineError::Curve(e) => write!(f, "composing group curve: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// One planned pipeline group: the virtual rank the planner addresses.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    /// Display label, e.g. `pg(T4+T4+T4+V100S-32G)` — doubles as the
+    /// virtual rank's `gpu` name in slots and manifests.
+    pub label: String,
+    /// Physical members in pipeline-stage order (ascending memory: the
+    /// weakest card runs the first stage with the deepest in-flight
+    /// window, the largest anchors the last).
+    pub members: Vec<String>,
+    /// Contiguous layer count per member, `members` order (sums to the
+    /// model's layer count).
+    pub ks: Vec<u64>,
+    /// Micro-batch chunk size (samples per pipeline micro-batch).
+    pub chunk: usize,
+    /// ZeRO stage the bound was planned at.
+    pub stage: u8,
+    /// Virtual group size the bound was planned at.
+    pub n_virtual: usize,
+    /// The composed speed-vs-batch curve the allocator consumes.
+    pub curve: PerfCurve,
+}
+
+/// Display label of a member list: `pg(a+b+c)`.
+pub fn group_label(members: &[String]) -> String {
+    format!("pg({})", members.join("+"))
+}
+
+/// True when a slot's `gpu` name denotes a pipeline group rather than a
+/// catalog card (labels are minted only by [`group_label`]).
+pub fn is_group_label(gpu: &str) -> bool {
+    gpu.starts_with("pg(") && gpu.ends_with(')')
+}
+
+/// Pipeline efficiency of `m` micro-batches over `g` stages: the share
+/// of slot times doing useful work once the fill/drain bubble is paid.
+/// THE formula — every bubble-shaped expression in the crate must route
+/// through here (`bubble-formula` lint rule).
+pub fn bubble_efficiency(micro_batches: usize, group_size: usize) -> f64 {
+    if micro_batches == 0 || group_size == 0 {
+        return 0.0;
+    }
+    micro_batches as f64 / (micro_batches + group_size - 1) as f64
+}
+
+/// Micro-batch count of `batch` samples at `chunk` samples per
+/// micro-batch (the `m` of the bubble term).
+pub fn micro_batches(batch: usize, chunk: usize) -> usize {
+    batch.div_ceil(chunk.max(1))
+}
+
+/// Resolve and order a member list for pipeline staging: ascending
+/// device memory (ties broken by name for determinism), so the weakest
+/// card lands on the first stage and the largest anchors the last.
+fn sort_members(gpus: &[String]) -> Result<Vec<GpuSpec>, PipelineError> {
+    let mut specs = Vec::with_capacity(gpus.len());
+    for g in gpus {
+        specs.push(catalog::spec(g).ok_or_else(|| PipelineError::UnknownGpu(g.clone()))?);
+    }
+    specs.sort_by(|a, b| (a.mem_bytes(), &a.name).cmp(&(b.mem_bytes(), &b.name)));
+    Ok(specs)
+}
+
+/// The per-member Alg. 1 memory bound: the largest contiguous layer
+/// count this member can hold at the group's operating point. The bound
+/// charges (a) the model-state bytes of the member's layer shard at
+/// `stage`, partitioned across `n_virtual` virtual DP ranks, (b) the
+/// framework reserve, and (c) the member's activation working set —
+/// `chunk * in_flight` micro-batch samples of its layer share, with the
+/// same transient factor Alg. 1's binary search discovers. `in_flight`
+/// is the member's 1F1B window: `g` micro-batches on the first pipeline
+/// stage down to 1 on the last, which is exactly why the largest card
+/// anchors the final stage.
+pub fn member_max_layers(
+    spec: &GpuSpec,
+    model: &ModelSpec,
+    param_count: u64,
+    stage: u8,
+    n_virtual: usize,
+    chunk: usize,
+    in_flight: usize,
+) -> u64 {
+    let total_layers = model.n_layers;
+    let act_per_sample = model.activation_bytes_per_sample() as f64;
+    let cap = spec.mem_bytes();
+    let mut best = 0u64;
+    for k in 1..=total_layers {
+        let share = k as f64 / total_layers as f64;
+        let shard_params = (param_count as f64 * share) as u64;
+        let state = memmodel::model_state_bytes(shard_params, stage, n_virtual);
+        let act = act_per_sample
+            * share
+            * (chunk * in_flight) as f64
+            * (1.0 + memmodel::TRANSIENT_FACTOR);
+        let need = state + memmodel::FRAMEWORK_RESERVE_BYTES + act as u64;
+        if need <= cap {
+            best = k;
+        } else {
+            break; // the bound is monotone in k
+        }
+    }
+    best
+}
+
+/// Contiguous layer partition proportional to each member's bound.
+/// `None` when no partition exists: a member bound of zero, more members
+/// than layers, or bounds summing below the layer count. Otherwise every
+/// member gets at least one layer, no member exceeds its bound, and the
+/// counts sum exactly to `total_layers` (slack granted to the member
+/// with the most headroom — in an ascending-memory group that is the
+/// last-stage anchor).
+pub fn partition_layers(maxes: &[u64], total_layers: u64) -> Option<Vec<u64>> {
+    let g = maxes.len() as u64;
+    if g == 0 || g > total_layers || maxes.iter().any(|&m| m == 0) {
+        return None;
+    }
+    let sum: u64 = maxes.iter().sum();
+    if sum < total_layers {
+        return None;
+    }
+    let mut ks: Vec<u64> =
+        maxes.iter().map(|&m| (total_layers * m / sum).clamp(1, m)).collect();
+    loop {
+        let cur: u64 = ks.iter().sum();
+        if cur == total_layers {
+            return Some(ks);
+        }
+        if cur < total_layers {
+            // grant the deficit to the largest headroom (last index wins
+            // ties — the ascending order's last-stage anchor)
+            let i = (0..ks.len()).max_by_key(|&i| maxes[i] - ks[i])?;
+            if maxes[i] == ks[i] {
+                return None; // no headroom anywhere (sum >= total rules this out)
+            }
+            ks[i] += 1;
+        } else {
+            // the >=1 clamp overshot on a tiny model: shave the largest
+            let i = (0..ks.len()).max_by_key(|&i| ks[i])?;
+            if ks[i] == 1 {
+                return None;
+            }
+            ks[i] -= 1;
+        }
+    }
+}
+
+/// Compose the group's speed-vs-batch curve. For each batch `b` the
+/// group runs `m = ceil(b / chunk)` micro-batches; one *slot* is the
+/// slowest member's compute over its layer share plus the p2p hop that
+/// forwards boundary activations (fp16 `seq x d_model` per sample,
+/// forward + backward), and a step costs `m + g - 1` slots — the
+/// pipeline-fill bubble. Imbalanced partitions price at the straggler
+/// stage's slot time, so a group with one overloaded member is honestly
+/// slow rather than optimistically averaged.
+pub fn compose_curve(
+    specs: &[GpuSpec],
+    ks: &[u64],
+    model: &ModelSpec,
+    chunk: usize,
+    net: &NetSim,
+) -> Result<PerfCurve, PipelineError> {
+    if specs.len() < MIN_GROUP_SIZE {
+        return Err(PipelineError::TooSmall(specs.len()));
+    }
+    if specs.len() != ks.len() || chunk == 0 {
+        return Err(PipelineError::Curve(format!(
+            "{} members vs {} layer counts (chunk {chunk})",
+            specs.len(),
+            ks.len()
+        )));
+    }
+    let g = specs.len();
+    let total_layers = model.n_layers as f64;
+    let fpt = model.flops_per_token();
+    let mbs = chunk * MAX_MICRO_BATCHES;
+    let mut points = Vec::with_capacity(mbs);
+    for b in 1..=mbs {
+        let m = micro_batches(b, chunk);
+        let per = b.div_ceil(m);
+        let tokens = (per as u64 * model.seq) as f64;
+        // fp16 boundary activations, forward + backward: 2 bytes x 2
+        let hop_bytes = 4 * per as u64 * model.seq * model.d_model;
+        let mut slot = 0.0f64;
+        for (spec, &k) in specs.iter().zip(ks) {
+            let mut t = spec.compute_time(tokens, fpt * k as f64 / total_layers, k as usize);
+            t += net.p2p_time(hop_bytes);
+            slot = slot.max(t);
+        }
+        let steps = (m + g - 1) as f64;
+        points.push(ProfiledPoint { batch: b, step_time_s: steps * slot });
+    }
+    PerfCurve::fit(points, mbs).map_err(|e| PipelineError::Curve(e.to_string()))
+}
+
+/// Plan one pipeline group at an operating point: order the members for
+/// staging, search chunk sizes descending ([`MAX_CHUNK`]`..=1`), take
+/// the first chunk with a feasible layer partition, and compose the
+/// group curve. The largest feasible chunk wins — bigger micro-batches
+/// saturate each member's matmuls — and chunk 1 is the memory floor.
+pub fn plan_group(
+    gpus: &[String],
+    model: &ModelSpec,
+    param_count: u64,
+    stage: u8,
+    n_virtual: usize,
+    net: &NetSim,
+) -> Result<GroupPlan, PipelineError> {
+    if gpus.len() < MIN_GROUP_SIZE {
+        return Err(PipelineError::TooSmall(gpus.len()));
+    }
+    let specs = sort_members(gpus)?;
+    let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let g = specs.len();
+    for chunk in (1..=MAX_CHUNK).rev() {
+        let maxes: Vec<u64> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                member_max_layers(spec, model, param_count, stage, n_virtual, chunk, g - i)
+            })
+            .collect();
+        let Some(ks) = partition_layers(&maxes, model.n_layers) else { continue };
+        let curve = compose_curve(&specs, &ks, model, chunk, net)?;
+        return Ok(GroupPlan {
+            label: group_label(&names),
+            members: names,
+            ks,
+            chunk,
+            stage,
+            n_virtual,
+            curve,
+        });
+    }
+    Err(PipelineError::Infeasible { label: group_label(&names), stage, n_virtual })
+}
+
+/// The feasibility half of [`plan_group`] without curve composition:
+/// true when a layer partition satisfying every member's bound exists at
+/// chunk 1 (the most lenient chunk). This is the group-aware arm of the
+/// Alg. 1 memory bound — `ElasticPlanner::stage_feasible_with` and the
+/// release guard call it for slots that carry members.
+pub fn group_feasible(
+    gpus: &[String],
+    model: &ModelSpec,
+    param_count: u64,
+    stage: u8,
+    n_virtual: usize,
+) -> bool {
+    let Ok(specs) = sort_members(gpus) else { return false };
+    if specs.len() < MIN_GROUP_SIZE {
+        return false;
+    }
+    let g = specs.len();
+    let maxes: Vec<u64> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| member_max_layers(spec, model, param_count, stage, n_virtual, 1, g - i))
+        .collect();
+    partition_layers(&maxes, model.n_layers).is_some()
+}
+
+/// Anchor-first packing of a card pool into candidate groups — THE
+/// grouping decision rule (recorded in ROADMAP item 3): sort ascending
+/// by memory, then repeatedly let the **largest remaining card anchor**
+/// a group (it takes the last pipeline stage, where one micro-batch is
+/// in flight) and fill the remaining seats with the **weakest** cards
+/// (they take the early stages with deep in-flight windows, so weak
+/// cards carry few layers). Groups that fail [`group_feasible`] at the
+/// resulting virtual group count are dissolved back into the leftover
+/// pool until a fixed point. Returns `(groups, leftovers)`; members
+/// inside each group are in pipeline-stage order.
+pub fn pack_groups(
+    offers: &[String],
+    model: &ModelSpec,
+    param_count: u64,
+    stage: u8,
+    max_group_size: usize,
+) -> (Vec<Vec<String>>, Vec<String>) {
+    let cap = max_group_size.max(MIN_GROUP_SIZE);
+    let Ok(specs) = sort_members(offers) else {
+        return (Vec::new(), offers.to_vec());
+    };
+    let mut pool: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+    let mut groups: Vec<Vec<String>> = Vec::new();
+    while pool.len() >= MIN_GROUP_SIZE {
+        let anchor = match pool.pop() {
+            Some(a) => a,
+            None => break,
+        };
+        let take = (cap - 1).min(pool.len());
+        let mut group: Vec<String> = pool.drain(0..take).collect();
+        group.push(anchor);
+        groups.push(group);
+    }
+    let mut leftovers = pool;
+    loop {
+        let n_virtual = groups.len();
+        if n_virtual == 0 {
+            break;
+        }
+        let before = groups.len();
+        let mut keep = Vec::with_capacity(before);
+        for g in groups {
+            if group_feasible(&g, model, param_count, stage, n_virtual) {
+                keep.push(g);
+            } else {
+                leftovers.extend(g);
+            }
+        }
+        groups = keep;
+        if groups.len() == before {
+            break;
+        }
+    }
+    leftovers.sort();
+    (groups, leftovers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::config::model::preset;
+
+    /// The fig_pipeline scenario: a long-context model whose per-sample
+    /// activations (~31 GB) exceed every non-A800 card's entire memory,
+    /// so ZeRO sharding alone can never admit those cards.
+    fn longctx() -> ModelSpec {
+        preset("longctx-0.4b").expect("preset must exist")
+    }
+
+    fn quad() -> Vec<String> {
+        ["T4", "T4", "T4", "V100S-32G"].iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn label_and_detection() {
+        let l = group_label(&quad());
+        assert_eq!(l, "pg(T4+T4+T4+V100S-32G)");
+        assert!(is_group_label(&l));
+        assert!(!is_group_label("T4"));
+        assert!(!is_group_label("A800-80G"));
+    }
+
+    #[test]
+    fn bubble_efficiency_shape() {
+        // one micro-batch over four stages: only 1 of 4 slots is useful
+        assert_eq!(bubble_efficiency(1, 4), 0.25);
+        // deep amortization approaches 1
+        assert!(bubble_efficiency(8, 4) > 0.7 && bubble_efficiency(8, 4) < 0.73);
+        // a single stage has no bubble at all
+        assert_eq!(bubble_efficiency(5, 1), 1.0);
+        // degenerate inputs are zero, not a division panic
+        assert_eq!(bubble_efficiency(0, 4), 0.0);
+        assert_eq!(bubble_efficiency(4, 0), 0.0);
+        // micro-batch counting rounds up
+        assert_eq!(micro_batches(8, 1), 8);
+        assert_eq!(micro_batches(5, 2), 3);
+    }
+
+    #[test]
+    fn partition_respects_bounds_and_sums_exactly() {
+        // the verified quad bounds at ZeRO-3, 2 virtual ranks
+        let ks = partition_layers(&[2, 3, 4, 18], 21).expect("feasible");
+        assert_eq!(ks, vec![1, 2, 3, 15]);
+        assert_eq!(ks.iter().sum::<u64>(), 21);
+        for (k, m) in ks.iter().zip([2u64, 3, 4, 18]) {
+            assert!(*k >= 1 && *k <= m);
+        }
+        // bounds summing below the layer count: no partition
+        assert!(partition_layers(&[2, 2, 2, 7], 21).is_none());
+        // a zero bound anywhere kills the group
+        assert!(partition_layers(&[0, 10, 20], 21).is_none());
+        // more members than layers cannot each hold one layer
+        assert!(partition_layers(&[3, 3, 3], 2).is_none());
+        // tiny model where the >=1 clamp overshoots still partitions
+        let small = partition_layers(&[4, 4, 4], 3).expect("one layer each");
+        assert_eq!(small, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn member_bound_tracks_memory_and_in_flight_depth() {
+        let m = longctx();
+        let psi = m.param_count();
+        let t4 = catalog::spec("T4").unwrap();
+        let v100s = catalog::spec("V100S-32G").unwrap();
+        // deeper in-flight windows shrink the bound
+        let shallow = member_max_layers(&t4, &m, psi, 3, 2, 1, 1);
+        let deep = member_max_layers(&t4, &m, psi, 3, 2, 1, 4);
+        assert!(shallow > deep, "{shallow} vs {deep}");
+        // a bigger card holds more layers at the same depth
+        assert!(
+            member_max_layers(&v100s, &m, psi, 3, 2, 1, 1)
+                > member_max_layers(&t4, &m, psi, 3, 2, 1, 1)
+        );
+        // the verified fig_pipeline operating point: quad member bounds
+        let quad_bounds: Vec<u64> = [(4, "T4"), (3, "T4"), (2, "T4"), (1, "V100S-32G")]
+            .iter()
+            .map(|&(depth, gpu)| {
+                member_max_layers(&catalog::spec(gpu).unwrap(), &m, psi, 3, 2, 1, depth)
+            })
+            .collect();
+        assert_eq!(quad_bounds, vec![2, 3, 4, 18]);
+    }
+
+    #[test]
+    fn plan_group_finds_the_verified_quad_partition() {
+        let m = longctx();
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let plan = plan_group(&quad(), &m, m.param_count(), 3, 2, &net).unwrap();
+        assert_eq!(plan.label, "pg(T4+T4+T4+V100S-32G)");
+        assert_eq!(plan.ks, vec![1, 2, 3, 15]);
+        assert_eq!(plan.ks.iter().sum::<u64>(), m.n_layers);
+        assert_eq!(plan.chunk, 1, "chunk 2 activations blow the T4 bound");
+        // the composed curve is a real, positive-rate curve the
+        // allocator can consume like any GPU's
+        assert_eq!(plan.curve.mbs(), MAX_MICRO_BATCHES);
+        let peak = plan.curve.peak_speed();
+        assert!(peak > 1.5 && peak < 3.0, "quad peak {peak:.3} sps");
+        // and deeper batches amortize the bubble: b=8 beats b=1
+        assert!(plan.curve.speed_at(8.0) > 2.0 * plan.curve.speed_at(1.0));
+    }
+
+    #[test]
+    fn infeasible_groups_are_typed_errors() {
+        let m = longctx();
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let psi = m.param_count();
+        // all-T4: bounds sum below the layer count at every chunk
+        let t4s: Vec<String> = vec!["T4".into(), "T4".into(), "T4".into(), "T4".into()];
+        assert!(matches!(
+            plan_group(&t4s, &m, psi, 3, 2, &net),
+            Err(PipelineError::Infeasible { .. })
+        ));
+        assert!(!group_feasible(&t4s, &m, psi, 3, 2));
+        // a singleton is not a group
+        assert!(matches!(
+            plan_group(&["T4".to_string()], &m, psi, 3, 2, &net),
+            Err(PipelineError::TooSmall(1))
+        ));
+        // unknown members are typed, not panics
+        assert!(matches!(
+            plan_group(
+                &["T4".to_string(), "H100".to_string()],
+                &m,
+                psi,
+                3,
+                2,
+                &net
+            ),
+            Err(PipelineError::UnknownGpu(_))
+        ));
+    }
+
+    #[test]
+    fn pack_groups_is_anchor_first() {
+        // the fig_pipeline bootstrap: 6x T4 + 2x V100S packs into two
+        // V100S-anchored quads (an all-T4 group can never be feasible,
+        // so prefix packing of the ascending order would deadlock)
+        let m = longctx();
+        let offers: Vec<String> = ["T4", "T4", "V100S-32G", "T4", "T4", "V100S-32G", "T4", "T4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (groups, leftovers) =
+            pack_groups(&offers, &m, m.param_count(), 3, DEFAULT_MAX_GROUP_SIZE);
+        assert_eq!(groups.len(), 2);
+        assert!(leftovers.is_empty());
+        for g in &groups {
+            assert_eq!(g.len(), 4);
+            assert_eq!(g.last().map(String::as_str), Some("V100S-32G"), "anchor last");
+            assert!(group_feasible(g, &m, m.param_count(), 3, groups.len()));
+        }
+        // an all-T4 pool has no feasible anchor: everything is returned
+        let t4s: Vec<String> = (0..6).map(|_| "T4".to_string()).collect();
+        let (groups, leftovers) =
+            pack_groups(&t4s, &m, m.param_count(), 3, DEFAULT_MAX_GROUP_SIZE);
+        assert!(groups.is_empty());
+        assert_eq!(leftovers.len(), 6);
+    }
+
+    #[test]
+    fn composed_curve_prices_the_straggler_stage() {
+        // an imbalanced partition must price at the overloaded member:
+        // shifting layers onto the V100S anchor slows the whole group
+        let m = longctx();
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        let specs: Vec<GpuSpec> = ["T4", "T4", "T4", "V100S-32G"]
+            .iter()
+            .map(|g| catalog::spec(g).unwrap())
+            .collect();
+        let balanced = compose_curve(&specs, &[1, 2, 3, 15], &m, 1, &net).unwrap();
+        let skewed = compose_curve(&specs, &[1, 1, 1, 18], &m, 1, &net).unwrap();
+        assert!(balanced.peak_speed() > skewed.peak_speed());
+        // mismatched shapes are typed errors
+        assert!(compose_curve(&specs, &[1, 2, 3], &m, 1, &net).is_err());
+        assert!(compose_curve(&specs[..1], &[21], &m, 1, &net).is_err());
+    }
+}

@@ -37,6 +37,14 @@
 //!   config-validated soft cap [`RoundOptions::max_offers_per_round`].
 //!   The equivalence suite pins the greedy result to the exhaustive
 //!   optimum on every batch small enough to enumerate.
+//! * the **pipeline grouping arm** (`[pipeline]` config /
+//!   `poplar elastic --allow-pipeline`): offers that no ZeRO stage can
+//!   host solo are hard declines for the subset search — the memory
+//!   bound fails everywhere. With [`RoundOptions::allow_pipeline`] the
+//!   round packs exactly those offers into candidate pipeline groups
+//!   ([`crate::pipeline::pack_groups`]), prices each composed virtual
+//!   DP rank through the same preview + kernel, and reports the winner
+//!   advisorily as [`RoundPlan::grouping`].
 //!
 //! `autoscale` and `elastic::stage` keep their public APIs as thin
 //! adapters over this kernel; `Leader::run_elastic_job` evaluates each
@@ -230,6 +238,16 @@ pub struct RoundOptions {
     /// Subset-search strategy ([`SearchMode::Auto`] unless a test pins
     /// one arm).
     pub search: SearchMode,
+    /// Consider pipeline-grouping offers that no ZeRO stage can host
+    /// solo into one virtual DP rank (`[pipeline]` config table /
+    /// `poplar elastic --allow-pipeline`). Off by default: the arm only
+    /// pays for itself when the fleet actually sees memory-starved
+    /// offers.
+    pub allow_pipeline: bool,
+    /// Largest pipeline group the round may propose (`[pipeline]
+    /// max_group_size`, at least [`crate::pipeline::MIN_GROUP_SIZE`]
+    /// whenever the arm is on).
+    pub max_group_size: usize,
 }
 
 impl Default for RoundOptions {
@@ -242,6 +260,8 @@ impl Default for RoundOptions {
             with_sequential: false,
             max_offers_per_round: DEFAULT_MAX_OFFERS_PER_ROUND,
             search: SearchMode::Auto,
+            allow_pipeline: false,
+            max_group_size: crate::pipeline::DEFAULT_MAX_GROUP_SIZE,
         }
     }
 }
@@ -337,6 +357,39 @@ pub struct SequentialOutcome {
     pub rel_gain: f64,
 }
 
+/// The round's pipeline-grouping verdict: offers that no ZeRO stage can
+/// host alone, combined into ONE virtual DP rank over a contiguous
+/// layer split (ROADMAP item 3's whimpy-GPU arm). Advisory like
+/// [`RoundPlan::stage`]: the round never mutates the planner, so a
+/// caller realizes the admission with
+/// [`crate::elastic::ElasticPlanner::add_group_slot`] — the simulated
+/// leader only reports it, since its worker substrate spawns one worker
+/// per physical replica.
+#[derive(Debug, Clone)]
+pub struct GroupAdmission {
+    /// Virtual-rank label (`pg(a+b+c)`); the slot `gpu` name on
+    /// admission.
+    pub label: String,
+    /// Physical members in pipeline-stage order.
+    pub members: Vec<String>,
+    /// Contiguous layers per member, `members` order.
+    pub ks: Vec<u64>,
+    /// Samples per pipeline micro-batch.
+    pub chunk: usize,
+    /// ZeRO stage the group was priced at (always the incumbent).
+    pub stage: u8,
+    /// Steady samples/s of the fleet with the group admitted.
+    pub rate: f64,
+    /// Kernel score of that configuration.
+    pub score: f64,
+    /// `score / pre_rate - 1`; at least `min_gain` whenever this fires.
+    pub rel_gain: f64,
+    /// The admission's one-shot stall: optimizer-shard reshard to the
+    /// widened membership. No Alg. 1 item — the composed curve prices
+    /// from member catalog curves.
+    pub ledger: StallLedger,
+}
+
 /// Everything one joint decision round concluded.
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
@@ -365,6 +418,12 @@ pub struct RoundPlan {
     pub admitted: Vec<String>,
     /// Scale-down decision, when one fired.
     pub release: Option<ReleaseDecision>,
+    /// Pipeline-grouping verdict for memory-starved offers, when
+    /// [`RoundOptions::allow_pipeline`] is set and a packed group
+    /// cleared the bar. Advisory: member offers stay `Decline` in
+    /// [`RoundPlan::offers`] — they join as one virtual rank, not as
+    /// solo ranks.
+    pub grouping: Option<GroupAdmission>,
     /// The sequential greedy replay, for comparison — present only
     /// when [`RoundOptions::with_sequential`] was set (and the replay
     /// itself succeeded; it can never veto the round).
@@ -450,6 +509,13 @@ fn validate(opts: &RoundOptions) -> Result<(), AutoscaleError> {
         return Err(AutoscaleError::BadOptions(
             "max_offers_per_round must be at least 1".to_string(),
         ));
+    }
+    if opts.allow_pipeline && opts.max_group_size < crate::pipeline::MIN_GROUP_SIZE {
+        return Err(AutoscaleError::BadOptions(format!(
+            "max_group_size must be at least {} when pipeline grouping is on, got {}",
+            crate::pipeline::MIN_GROUP_SIZE,
+            opts.max_group_size
+        )));
     }
     Ok(())
 }
@@ -825,6 +891,13 @@ pub fn decide_round(
         rel_gain = if pre_rate > 0.0 { best.score / pre_rate - 1.0 } else { 0.0 };
     }
 
+    // ---- pipeline grouping arm ----
+    // offers the subset search could never place (the memory bound
+    // fails at every ZeRO stage) get one more chance as a GROUP: one
+    // virtual DP rank over a contiguous layer split, priced through the
+    // same preview + kernel as everything else
+    let grouping = if opts.allow_pipeline { decide_grouping(&ctx, pre_rate) } else { None };
+
     // per-offer verdicts
     let mut verdicts: Vec<OfferVerdict> = Vec::with_capacity(k);
     let mut admitted: Vec<String> = Vec::new();
@@ -855,6 +928,17 @@ pub fn decide_round(
                         .to_string(),
                 )
             }
+        } else if let Some(gr) =
+            grouping.as_ref().filter(|gr| gr.members.iter().any(|m| m == gpu))
+        {
+            (
+                Action::Decline { gpu: gpu.clone() },
+                format!(
+                    "no ZeRO stage can host this card alone; proposed as a member of \
+                     pipeline group {} instead",
+                    gr.label
+                ),
+            )
         } else {
             (
                 Action::Decline { gpu: gpu.clone() },
@@ -931,11 +1015,89 @@ pub fn decide_round(
         offers: verdicts,
         admitted,
         release,
+        grouping,
         sequential,
         cost_per_ksample_before: cost_pre,
         cost_per_ksample_after: cost_post,
         actions,
     })
+}
+
+/// The pipeline-grouping arm of [`decide_round`]: collect the offers
+/// that are solo-infeasible at EVERY ZeRO stage, pack them anchor-first
+/// ([`crate::pipeline::pack_groups`]), and price each candidate group
+/// as one joining virtual rank at the incumbent stage. The first group
+/// to clear `min_gain` wins — packing emits strongest-anchored groups
+/// first. `None` when grouping cannot help (no model preset, fewer than
+/// [`crate::pipeline::MIN_GROUP_SIZE`] starved offers, or no group
+/// clears the bar).
+fn decide_grouping(ctx: &RoundCtx, pre_rate: f64) -> Option<GroupAdmission> {
+    let mspec = ctx.model_spec.as_ref()?;
+    // the group joins as ONE virtual rank: shards size at n_live + 1
+    let n_joined = ctx.n_live + 1;
+    let starved: Vec<String> = ctx
+        .offers
+        .iter()
+        .filter(|gpu| {
+            catalog::spec(gpu.as_str()).is_some_and(|spec| {
+                (0u8..=3).all(|stage| {
+                    crate::memmodel::true_mbs(mspec, ctx.psi, stage, n_joined, spec.mem_bytes())
+                        == 0
+                })
+            })
+        })
+        .cloned()
+        .collect();
+    if starved.len() < crate::pipeline::MIN_GROUP_SIZE {
+        return None;
+    }
+    let (groups, _leftovers) =
+        crate::pipeline::pack_groups(&starved, mspec, ctx.psi, ctx.stage0, ctx.opts.max_group_size);
+    for members in &groups {
+        let Ok(gp) =
+            crate::pipeline::plan_group(members, mspec, ctx.psi, ctx.stage0, n_joined, ctx.net)
+        else {
+            continue;
+        };
+        let labels = [gp.label.clone()];
+        let fallbacks = [Some(gp.curve.clone())];
+        let Ok(pv) = ctx.planner.preview_round_at(ctx.stage0, &labels, &fallbacks, ctx.net)
+        else {
+            continue;
+        };
+        let Ok(wall) = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, ctx.psi) else {
+            continue;
+        };
+        if !(wall.is_finite() && wall > 0.0) {
+            continue;
+        }
+        let rate = ctx.gbs / wall;
+        let migration = pv.migration_only_s.min(pv.reshard_penalty_s);
+        let ledger = StallLedger {
+            reshard_transfer_s: (pv.reshard_penalty_s - migration).max(0.0),
+            migration_transfer_s: migration,
+            // the composed curve prices from member catalog curves, not
+            // a fresh Alg. 1 run per member
+            profiling_est_s: 0.0,
+        };
+        let score = amortized_score(rate, ctx.opts.horizon_s, &ledger);
+        let rel_gain = if pre_rate > 0.0 { score / pre_rate - 1.0 } else { 0.0 };
+        if rel_gain < ctx.opts.min_gain {
+            continue;
+        }
+        return Some(GroupAdmission {
+            label: gp.label,
+            members: gp.members,
+            ks: gp.ks,
+            chunk: gp.chunk,
+            stage: gp.stage,
+            rate,
+            score,
+            rel_gain,
+            ledger,
+        });
+    }
+    None
 }
 
 /// The scale-down arm: release the live rank whose removal most
@@ -971,15 +1133,27 @@ fn decide_release(
                 .iter()
                 .filter(|s| s.alive && s.slot != sl.slot)
                 .all(|s| {
-                    catalog::spec(&s.gpu).is_some_and(|spec| {
-                        crate::memmodel::true_mbs(
+                    if s.members.is_empty() {
+                        catalog::spec(&s.gpu).is_some_and(|spec| {
+                            crate::memmodel::true_mbs(
+                                m,
+                                psi,
+                                planner.stage(),
+                                n_after,
+                                spec.mem_bytes(),
+                            ) >= 1
+                        })
+                    } else {
+                        // a pipeline-group survivor re-checks the
+                        // group-aware bound at the shrunken group size
+                        crate::pipeline::group_feasible(
+                            &s.members,
                             m,
                             psi,
                             planner.stage(),
                             n_after,
-                            spec.mem_bytes(),
-                        ) >= 1
-                    })
+                        )
+                    }
                 });
             if !survivors_fit {
                 continue;
@@ -1142,7 +1316,8 @@ pub const ROUND_COLUMNS: &[&str] = &[
 ];
 
 /// …and one row vector per line — baseline, one per offer, the chosen
-/// round, the sequential replay, and any release. Shared by
+/// round, any pipeline-group admission, the sequential replay, and any
+/// release. Shared by
 /// `poplar autoscale --joint` and `exp::fig_joint_admission` so the two
 /// can never drift apart.
 pub fn round_rows(rep: &RoundPlan) -> Vec<Vec<String>> {
@@ -1202,6 +1377,23 @@ pub fn round_rows(rep: &RoundPlan) -> Vec<Vec<String>> {
         format!("{:.4}", rep.cost_per_ksample_after),
         note,
     ]);
+    if let Some(gr) = &rep.grouping {
+        rows.push(vec![
+            gr.label.clone(),
+            "-".to_string(),
+            "group-admit".to_string(),
+            format!("{:.2}", gr.rate),
+            format!("{:+.1}", gr.rel_gain * 100.0),
+            format!("{:.3}", gr.ledger.total()),
+            "-".to_string(),
+            format!(
+                "one virtual DP rank at ZeRO-{}: layers [{}], chunk {}",
+                gr.stage,
+                gr.ks.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("+"),
+                gr.chunk
+            ),
+        ]);
+    }
     if let Some(seq) = &rep.sequential {
         rows.push(vec![
             "(sequential)".to_string(),
@@ -1402,6 +1594,77 @@ mod tests {
         assert_eq!(round.actions, vec![Action::Stay]);
     }
 
+    /// A fleet that hosts longctx-0.4b solo (2x A800-80G at ZeRO-3),
+    /// about to see offers that no ZeRO stage can host alone.
+    fn planner_longctx() -> (ElasticPlanner, NetSim) {
+        let m = preset("longctx-0.4b").unwrap();
+        let mut p = ElasticPlanner::new(3, 512, &m.name, m.param_count(), 32);
+        for gpu in ["A800-80G", "A800-80G"] {
+            let slot = p.add_slot(gpu);
+            if p.slots()[slot].curve.is_none() {
+                p.install_curve(slot, synthesize_curve(gpu, &m, 3, 2).unwrap(), false)
+                    .unwrap();
+            }
+        }
+        let net = NetSim::from_link(2, LinkKind::Ib);
+        p.replan(&net).unwrap();
+        (p, net)
+    }
+
+    #[test]
+    fn starved_offers_form_a_pipeline_group_when_allowed() {
+        let (p, net) = planner_longctx();
+        let m = preset("longctx-0.4b").unwrap();
+        let offers: Vec<String> =
+            ["T4", "T4", "T4", "V100S-32G"].iter().map(|s| s.to_string()).collect();
+        // arm off (the default): memory-starved cards are hard declines
+        let off = RoundOptions { min_gain: 0.001, ..Default::default() };
+        let round = decide_round(&p, &net, &m, &offers, &off).unwrap();
+        assert!(round.grouping.is_none());
+        assert!(round.admitted.is_empty(), "no stage hosts these cards solo");
+        // arm on: the round proposes ONE virtual DP rank over the quad
+        let on =
+            RoundOptions { min_gain: 0.001, allow_pipeline: true, ..Default::default() };
+        let round = decide_round(&p, &net, &m, &offers, &on).unwrap();
+        let gr = round.grouping.as_ref().expect("the starved quad must group");
+        assert!(crate::pipeline::is_group_label(&gr.label));
+        assert_eq!(gr.members.len(), 4);
+        assert_eq!(gr.stage, 3, "priced at the incumbent stage");
+        assert_eq!(gr.ks.iter().sum::<u64>(), m.n_layers);
+        assert!(gr.rate > 0.0);
+        assert!(gr.rel_gain >= on.min_gain);
+        assert!(gr.ledger.profiling_est_s == 0.0, "composed curves need no Alg. 1");
+        // advisory: member offers stay declined as solo ranks, but the
+        // reason points at the group they would join
+        assert!(round.admitted.is_empty());
+        for v in &round.offers {
+            assert!(matches!(v.action, Action::Decline { .. }));
+            assert!(v.reason.contains(&gr.label), "reason must name the group: {}", v.reason);
+        }
+        // rendering gains the grouping row
+        let rows = round_rows(&round);
+        assert!(rows.iter().any(|r| r[0] == gr.label && r[2] == "group-admit"));
+    }
+
+    #[test]
+    fn grouping_arm_is_inert_on_a_solo_feasible_fleet() {
+        // singleton identity: when every offer fits some stage alone,
+        // turning the pipeline arm on must not perturb the round at all
+        let (p, net) = planner_c();
+        let m = preset("llama-0.5b").unwrap();
+        let offers = vec!["A800-80G".to_string(), "T4".to_string()];
+        let off = RoundOptions { with_sequential: true, ..Default::default() };
+        let on = RoundOptions {
+            allow_pipeline: true,
+            with_sequential: true,
+            ..Default::default()
+        };
+        let r_off = decide_round(&p, &net, &m, &offers, &off).unwrap();
+        let r_on = decide_round(&p, &net, &m, &offers, &on).unwrap();
+        assert!(r_on.grouping.is_none(), "no starved offers, nothing to group");
+        assert_eq!(round_rows(&r_off), round_rows(&r_on));
+    }
+
     #[test]
     fn bad_options_and_unknown_types_are_typed_errors() {
         let (p, net) = planner_c();
@@ -1428,6 +1691,13 @@ mod tests {
         assert!(matches!(
             decide_round(&p, &net, &m, &["H100".to_string()], &RoundOptions::default()),
             Err(AutoscaleError::UnknownGpu(_))
+        ));
+        // a singleton "group" can never pipeline — reject the knob
+        let tiny =
+            RoundOptions { allow_pipeline: true, max_group_size: 1, ..Default::default() };
+        assert!(matches!(
+            decide_round(&p, &net, &m, &[], &tiny),
+            Err(AutoscaleError::BadOptions(_))
         ));
     }
 

@@ -85,3 +85,10 @@ fn golden_fig_bw_adaptation_decisions() {
         poplar::exp::fig_bw_adaptation::run().unwrap().to_markdown()
     });
 }
+
+#[test]
+fn golden_fig_pipeline_grouping() {
+    check_golden("fig_pipeline", || {
+        poplar::exp::fig_pipeline::run().unwrap().to_markdown()
+    });
+}

@@ -1,0 +1,144 @@
+//! Property tests for the virtual-rank pipeline layer: the per-member
+//! Alg. 1 memory bound must survive arbitrary membership events, the
+//! composed group curve must not punish adding an equal member, and the
+//! grouping arm must be a strict no-op on fleets where every card hosts
+//! the model solo (the pre-pipeline paths stay byte-identical).
+
+use poplar::autoscale::synthesize_curve;
+use poplar::cluster::{catalog, LinkKind};
+use poplar::config::model::preset;
+use poplar::elastic::ElasticPlanner;
+use poplar::exp::fig_pipeline;
+use poplar::netsim::NetSim;
+use poplar::pipeline;
+use poplar::policy::{self, RoundOptions};
+
+/// Deterministic degradation sequence over the longctx fleet: after
+/// every membership event each alive group slot still satisfies the
+/// group-aware memory bound at the current stage and fleet size, every
+/// re-planned layer partition respects each member's
+/// `member_max_layers` bound, and once the group falls below
+/// `MIN_GROUP_SIZE` the whole virtual rank dissolves as one unit.
+#[test]
+fn group_slots_keep_member_bounds_through_membership_events() {
+    let m = preset("longctx-0.4b").unwrap();
+    let psi = m.param_count();
+    let net = NetSim::from_link(2, LinkKind::Ib);
+    let plans = fig_pipeline::bootstrap_groups(&net).unwrap();
+    let gbs = poplar::exp::gbs_samples(&m);
+    let mut p = ElasticPlanner::new(3, gbs, &m.name, psi, 32);
+    for gp in &plans {
+        p.add_group_slot(gp);
+    }
+    p.replan(&net).unwrap();
+
+    let check_invariants = |p: &ElasticPlanner| {
+        let n_active = p.slots().iter().filter(|s| s.alive).count();
+        for s in p.slots().iter().filter(|s| s.alive && !s.members.is_empty()) {
+            assert!(
+                pipeline::group_feasible(&s.members, &m, psi, p.stage(), n_active),
+                "slot {} ({}) violates the group memory bound",
+                s.slot,
+                s.gpu
+            );
+        }
+    };
+    check_invariants(&p);
+
+    // slot 0 loses its weakest member twice (quad -> trio -> pair); the
+    // survivors are re-planned in place and the slot stays alive
+    for expect_members in [3usize, 2] {
+        let gp = p.lose_group_member(0, 0, &net).unwrap().expect("group must survive");
+        assert_eq!(gp.members.len(), expect_members);
+        assert_eq!(gp.ks.len(), expect_members);
+        assert_eq!(gp.ks.iter().sum::<u64>(), m.n_layers);
+        let gsize = gp.members.len();
+        for (i, (name, &k)) in gp.members.iter().zip(&gp.ks).enumerate() {
+            let spec = catalog::spec(name).unwrap();
+            let bound = pipeline::member_max_layers(
+                &spec,
+                &m,
+                psi,
+                gp.stage,
+                gp.n_virtual,
+                gp.chunk,
+                gsize - i,
+            );
+            assert!(k <= bound, "{name} holds {k} layers over its bound {bound}");
+        }
+        assert_eq!(p.slots()[0].members.len(), expect_members);
+        assert!(p.slots()[0].alive);
+        check_invariants(&p);
+        p.replan(&net).unwrap();
+    }
+
+    // a pair losing a member leaves one card — below MIN_GROUP_SIZE the
+    // virtual rank leaves the job whole, and the fleet replans around it
+    assert!(p.lose_group_member(0, 0, &net).unwrap().is_none());
+    assert!(!p.slots()[0].alive);
+    check_invariants(&p);
+    p.replan(&net).unwrap();
+    assert_eq!(p.plan().unwrap().ranks.len(), 1);
+}
+
+/// Adding an equal member to a balanced group must not reduce its
+/// speed: each member's layer share (and so the straggler slot time)
+/// shrinks faster than the fill/drain overhead grows.
+#[test]
+fn composed_curve_speed_is_monotone_in_member_count() {
+    let m = preset("llama-0.5b").unwrap();
+    let net = NetSim::from_link(2, LinkKind::Ib);
+    let mut last = 0.0f64;
+    for gsize in [2usize, 3, 4] {
+        let specs: Vec<_> = (0..gsize).map(|_| catalog::spec("T4").unwrap()).collect();
+        let ks: Vec<u64> = vec![m.n_layers / gsize as u64; gsize];
+        let curve = pipeline::compose_curve(&specs, &ks, &m, 1, &net).unwrap();
+        let speed = curve.speed_at(8.0);
+        assert!(speed > 0.0);
+        assert!(
+            speed >= last,
+            "adding an equal member must not slow the group: \
+             {gsize} members at {speed} vs {last}"
+        );
+        last = speed;
+    }
+}
+
+/// On a fleet where every offer hosts the model solo, arming
+/// `allow_pipeline` must change nothing: no grouping is proposed and
+/// the round report is byte-identical to the singleton path. Ordinary
+/// slots carry no members.
+#[test]
+fn allow_pipeline_is_identity_on_a_solo_feasible_fleet() {
+    let m = preset("llama-0.5b").unwrap();
+    let stage = 1u8;
+    let mut p = ElasticPlanner::new(stage, 16, &m.name, m.param_count(), 64);
+    for gpu in ["A800-80G", "V100S-32G"] {
+        let slot = p.add_slot(gpu);
+        assert!(p.slots()[slot].members.is_empty(), "single-GPU slots carry no members");
+        if p.slots()[slot].curve.is_none() {
+            let c = synthesize_curve(gpu, &m, stage, 2).unwrap();
+            p.install_curve(slot, c, false).unwrap();
+        }
+    }
+    for gpu in ["A800-80G", "V100S-32G", "T4"] {
+        let c = synthesize_curve(gpu, &m, stage, 2).unwrap();
+        p.install_stage_curve(gpu, stage, c).unwrap();
+    }
+    let net = NetSim::from_link(2, LinkKind::Ib);
+    p.replan(&net).unwrap();
+
+    let offers: Vec<String> = ["T4", "A800-80G"].iter().map(|s| s.to_string()).collect();
+    let off = policy::decide_round(&p, &net, &m, &offers, &RoundOptions::default()).unwrap();
+    let on = policy::decide_round(
+        &p,
+        &net,
+        &m,
+        &offers,
+        &RoundOptions { allow_pipeline: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(off.grouping.is_none(), "no grouping without the flag");
+    assert!(on.grouping.is_none(), "solo-feasible offers must never be grouped");
+    assert_eq!(policy::round_rows(&off), policy::round_rows(&on));
+}
