@@ -1,0 +1,113 @@
+//! Benchmarks for the coordinator's steady-state hot loop — the two
+//! per-iteration costs a long-running job pays at fleet scale:
+//!
+//! * `run_iteration`: one live BSP iteration end-to-end (command
+//!   fan-out, O(1) slot-indexed reply matching, single-pass timeline
+//!   reconstruction — no per-micro-step transposed allocation) at
+//!   ZeRO-2, where the step-max sweep dominates;
+//! * `replan`: the leader-side replan loop (`plan_from_profile`:
+//!   curve fitting + Algorithm 2) over the same fleet — the cost of
+//!   every membership/drift-triggered replan.
+//!
+//! Sizes follow the scalability grid of `benches/policy.rs`: 8 and 64
+//! ranks in the CI smoke subset, 1000 in the full run. Built with the
+//! in-crate harness (no criterion on this offline image); run with
+//! `cargo bench --bench leader`. Pass `--fast` / `--test` (or set
+//! `POPLAR_BENCH_FAST`) for the CI smoke subset.
+//!
+//! Results are written to `BENCH_leader.json` (package root, committed):
+//!
+//! ```json
+//! {
+//!   "format": "poplar-bench-leader/v1",
+//!   "mode": "full" | "fast",
+//!   "points": [
+//!     { "ranks": 8, "case": "run_iteration",
+//!       "mean_ms": 0.9, "p50_ms": 0.8, "p95_ms": 1.2, "samples": 240 }
+//!   ]
+//! }
+//! ```
+//!
+//! The committed seed may carry an empty `points` list (the build image
+//! has no local toolchain and CI regenerates the file on every run); the
+//! format line is the contract.
+
+use poplar::cluster::{ClusterSpec, LinkKind};
+use poplar::config::model::preset;
+use poplar::config::Strategy;
+use poplar::coordinator::Leader;
+use poplar::metrics::bench::{bench, section, BenchResult};
+
+/// A half-A800 / half-V100S fleet of `n` ranks on the cluster-C links —
+/// heterogeneous enough that the allocator's split is non-trivial, with
+/// noise off so every sample prices the same timeline.
+fn fleet(n: usize) -> ClusterSpec {
+    ClusterSpec::new(
+        "bench-fleet",
+        &[
+            ("A800-80G", n / 2, LinkKind::Pcie),
+            ("V100S-32G", n - n / 2, LinkKind::Pcie),
+        ],
+        LinkKind::Ib,
+    )
+}
+
+fn json_point(ranks: usize, case: &str, r: &BenchResult) -> String {
+    format!(
+        "    {{ \"ranks\": {ranks}, \"case\": \"{case}\", \
+         \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \"samples\": {} }}",
+        r.mean_ns / 1e6,
+        r.p50_ns / 1e6,
+        r.p95_ns / 1e6,
+        r.samples
+    )
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--test" || a == "--fast")
+        || std::env::var("POPLAR_BENCH_FAST").is_ok();
+    let mode = if fast { "fast" } else { "full" };
+    let (sizes, target_ms): (&[usize], u64) =
+        if fast { (&[8, 64], 30) } else { (&[8, 64, 1000], 200) };
+
+    let model = preset("llama-0.5b").unwrap();
+    let mut points = Vec::new();
+    for &n in sizes {
+        section(&format!("leader hot loop @ {n} ranks"));
+        let cluster = fleet(n);
+        let mut leader = Leader::new_simulated(&cluster, &model, 0.0, 7);
+        // ZeRO-2: the timeline reconstruction takes the step-max arm
+        // (grad bucketing => per-micro-step barrier), the heavier path
+        let profile = leader.profile(2).unwrap();
+        let gbs = 8 * n;
+
+        let name = format!("replan/{n}ranks");
+        let r = bench(&name, target_ms, || {
+            leader.plan_from_profile(&profile, Strategy::Poplar, gbs).unwrap()
+        });
+        println!("{}", r.line());
+        assert!(r.mean_ns > 0.0);
+        points.push(json_point(n, "replan", &r));
+
+        let plan = leader.plan_from_profile(&profile, Strategy::Poplar, gbs).unwrap();
+        let name = format!("run_iteration/{n}ranks");
+        let r = bench(&name, target_ms, || {
+            let it = leader.run_iteration(&plan).unwrap();
+            assert!(it.wall_s > 0.0);
+            it.wall_s
+        });
+        println!("{}", r.line());
+        assert!(r.mean_ns > 0.0);
+        points.push(json_point(n, "run_iteration", &r));
+
+        leader.shutdown();
+    }
+
+    let json = format!(
+        "{{\n  \"format\": \"poplar-bench-leader/v1\",\n  \"mode\": \"{mode}\",\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        points.join(",\n")
+    );
+    std::fs::write("BENCH_leader.json", &json).expect("write BENCH_leader.json");
+    println!("\nwrote BENCH_leader.json ({} points, {mode} mode)", points.len());
+}

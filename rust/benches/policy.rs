@@ -8,7 +8,10 @@
 //! pays it inline every iteration, so it must stay cheap at fleet scale.
 //! A second trailing case times the pipeline-grouping search
 //! (`policy::decide_round` with `allow_pipeline` over an all-starved
-//! offer pool) — the virtual-rank arm rides the same round call.
+//! offer pool) — the virtual-rank arm rides the same round call. A
+//! third (`round_extend_indexed`) isolates the greedy growth step:
+//! one `ElasticPlanner::round_index` build, then a chain of
+//! `preview_round_extend_with` delta pricings.
 //!
 //! Built with the in-crate harness (no criterion on this offline image);
 //! run with `cargo bench --bench policy`. Pass `--fast` / `--test` (or
@@ -136,6 +139,34 @@ fn main() {
         println!("{}", r.line());
         assert!(r.mean_ns > 0.0);
         points.push(json_point(n, 0, "bw-monitor", &r));
+    }
+
+    // the greedy growth step in isolation: one round-scoped index built
+    // up front, then a chain of `preview_round_extend_with` calls — the
+    // delta path every greedy admission pays per candidate. This is the
+    // number the round-index refactor moves: no per-candidate manifest
+    // re-validation, no per-candidate incumbent re-scan.
+    section("round extend (indexed delta path)");
+    {
+        let n = if fast { 64 } else { 1000 };
+        let (p, net) = fleet(n);
+        let tys: Vec<poplar::intern::TypeId> =
+            OFFER_POOL.iter().map(|g| poplar::intern::intern(g)).collect();
+        let k = tys.len();
+        let name = format!("round_extend_indexed/{n}ranks/{k}steps");
+        let r = bench(&name, target_ms, || {
+            let idx = p.round_index().unwrap();
+            let mut pv = p
+                .preview_round_at_with(&idx, 1, &tys[..1], &[None], &net)
+                .unwrap();
+            for &t in &tys[1..] {
+                pv = p.preview_round_extend_with(&idx, &pv, t, None, &net).unwrap();
+            }
+            pv.curves.len()
+        });
+        println!("{}", r.line());
+        assert!(r.mean_ns > 0.0);
+        points.push(json_point(n, k, "extend-indexed", &r));
     }
 
     // the virtual-rank arm: every offer is memory-starved at every ZeRO

@@ -110,7 +110,7 @@ impl ShardManifest {
             }
             shards.push(ShardEntry {
                 slot,
-                gpu: parts[1].to_string(),
+                gpu: crate::intern::intern(parts[1]),
                 range: ShardRange::new(lo, hi),
             });
         }

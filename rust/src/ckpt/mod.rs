@@ -34,6 +34,7 @@ pub mod format;
 
 use std::collections::BTreeMap;
 
+use crate::intern::TypeId;
 use crate::netsim::NetSim;
 use crate::zero::{optimizer_shard_ranges, OPTIMIZER_BYTES_PER_PARAM};
 
@@ -86,8 +87,9 @@ impl ShardRange {
 pub struct ShardEntry {
     /// Stable leader slot id (survives membership changes).
     pub slot: usize,
-    /// Catalog GPU name (diagnostics only — not part of the layout key).
-    pub gpu: String,
+    /// Interned catalog GPU name (diagnostics only — not part of the
+    /// layout key; resolve with `as_str()` at report boundaries).
+    pub gpu: TypeId,
     /// Owned parameter range.
     pub range: ShardRange,
 }
@@ -179,7 +181,7 @@ impl ShardManifest {
         stage: u8,
         param_count: u64,
         snapshot: usize,
-        slots: &[(usize, String)],
+        slots: &[(usize, TypeId)],
     ) -> Result<Self, CkptError> {
         if slots.is_empty() {
             return Err(CkptError::EmptyGroup);
@@ -189,9 +191,9 @@ impl ShardManifest {
         let shards = slots
             .iter()
             .zip(ranges)
-            .map(|((slot, gpu), (lo, hi))| ShardEntry {
-                slot: *slot,
-                gpu: gpu.clone(),
+            .map(|(&(slot, gpu), (lo, hi))| ShardEntry {
+                slot,
+                gpu,
                 range: ShardRange::new(lo, hi),
             })
             .collect();
@@ -301,8 +303,8 @@ impl ShardManifest {
     /// `snapshot + 1`) plus the [`ReshardPlan`] taking the optimizer
     /// state there. See [`migrate`] for the pricing rules.
     pub fn migrate(&self, new_stage: u8) -> Result<(ShardManifest, ReshardPlan), CkptError> {
-        let slots: Vec<(usize, String)> =
-            self.shards.iter().map(|e| (e.slot, e.gpu.clone())).collect();
+        let slots: Vec<(usize, TypeId)> =
+            self.shards.iter().map(|e| (e.slot, e.gpu)).collect();
         let new = ShardManifest::build(
             &self.model,
             new_stage,
@@ -493,6 +495,162 @@ pub fn reshard(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
 ///   from the other owners — a priced all-gather-shaped broadcast, the
 ///   one genuinely expensive direction.
 pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, CkptError> {
+    MigrationIndex::new(old)?.migrate_to(new)
+}
+
+/// A reusable pricing index over one *incumbent* manifest.
+///
+/// `decide_round` prices every `(offer subset, stage)` candidate
+/// against the SAME incumbent layout, and the plain [`migrate`] path
+/// re-validated it and re-ran linear `shard_of` scans on every call —
+/// O(candidates · n) redundant work per round. The index validates the
+/// incumbent ONCE and keeps a slot-sorted interval table, so each
+/// candidate pays only its own destination sweep: `shard_of` is a
+/// binary search, and destination membership (`new.has_slot`) is
+/// resolved through one sorted slot list per call instead of a linear
+/// scan per overlap piece. Output is byte-identical to
+/// [`migrate_reference`] (the property suite pins it).
+#[derive(Debug)]
+pub struct MigrationIndex<'a> {
+    old: &'a ShardManifest,
+    /// `(slot, index into old.shards)`, sorted by slot id.
+    by_slot: Vec<(usize, usize)>,
+}
+
+impl<'a> MigrationIndex<'a> {
+    /// Validate `old` once and build the slot index.
+    pub fn new(old: &'a ShardManifest) -> Result<Self, CkptError> {
+        old.validate()?;
+        let mut by_slot: Vec<(usize, usize)> =
+            old.shards.iter().enumerate().map(|(i, e)| (e.slot, i)).collect();
+        by_slot.sort_unstable();
+        Ok(MigrationIndex { old, by_slot })
+    }
+
+    /// The incumbent manifest the index was built over.
+    pub fn old(&self) -> &ShardManifest {
+        self.old
+    }
+
+    /// The incumbent range owned by `slot`, by binary search.
+    pub fn shard_of(&self, slot: usize) -> Option<ShardRange> {
+        self.by_slot
+            .binary_search_by_key(&slot, |&(s, _)| s)
+            .ok()
+            .map(|i| self.old.shards[self.by_slot[i].1].range)
+    }
+
+    /// [`Self::migrate_to`] plus the transfer wall time ([`EndpointLoads`]
+    /// pricing) in one call — what round previews actually consume.
+    pub fn migrate_to_priced(
+        &self,
+        new: &ShardManifest,
+        net: &NetSim,
+    ) -> Result<(ReshardPlan, f64), CkptError> {
+        let plan = self.migrate_to(new)?;
+        let time_s = plan.transfer_time_s(net);
+        Ok((plan, time_s))
+    }
+
+    /// Price the movement from the incumbent layout to `new` (stage
+    /// change allowed) — [`migrate`] with the incumbent-side work
+    /// amortized across calls. See [`migrate`] for the pricing rules.
+    pub fn migrate_to(&self, new: &ShardManifest) -> Result<ReshardPlan, CkptError> {
+        let old = self.old;
+        new.validate()?;
+        old.check_compatible(new)?;
+
+        // one sorted destination-slot list per call: has_slot becomes a
+        // binary search instead of a linear scan per overlap piece
+        let mut new_slots: Vec<usize> = new.shards.iter().map(|e| e.slot).collect();
+        new_slots.sort_unstable();
+        let in_new = |slot: usize| new_slots.binary_search(&slot).is_ok();
+
+        let mut moves = Vec::new();
+        let mut retained = Vec::new();
+
+        // when the old layout replicates (ZeRO-0), any gap has *every*
+        // surviving old slot as a possible source: round-robin the
+        // fetches over them so a multi-join batch does not serialize on
+        // one donor
+        let donors: Vec<usize> = if old.stage == 0 {
+            old.shards.iter().map(|e| e.slot).filter(|&s| in_new(s)).collect()
+        } else {
+            Vec::new()
+        };
+        let mut k = 0usize;
+
+        for e in &new.shards {
+            if e.range.is_empty() {
+                continue;
+            }
+            let kept = self.shard_of(e.slot).and_then(|o| o.intersect(&e.range));
+            if let Some(kr) = kept {
+                retained.push(RetainedShard { slot: e.slot, range: kr });
+            }
+            // the (up to two) gaps of e.range not covered by `kept`
+            let gaps: Vec<ShardRange> = match kept {
+                None => vec![e.range],
+                Some(kr) => {
+                    let mut g = Vec::new();
+                    if e.range.lo < kr.lo {
+                        g.push(ShardRange::new(e.range.lo, kr.lo));
+                    }
+                    if kr.hi < e.range.hi {
+                        g.push(ShardRange::new(kr.hi, e.range.hi));
+                    }
+                    g
+                }
+            };
+            for gap in gaps {
+                if old.stage == 0 {
+                    // replicated source: one donor serves the whole gap
+                    let from_slot = if donors.is_empty() {
+                        None
+                    } else {
+                        k += 1;
+                        Some(donors[(k - 1) % donors.len()])
+                    };
+                    moves.push(ShardMove { to_slot: e.slot, from_slot, range: gap });
+                } else {
+                    // partitioned source tiles [0, ψ) contiguously in
+                    // shard order (validate() enforced it), so
+                    // binary-search the first overlapping owner and sweep
+                    // linearly from there — emission order is identical
+                    // to the full scan
+                    let start = old.shards.partition_point(|o| o.range.hi <= gap.lo);
+                    for o in &old.shards[start..] {
+                        if o.range.lo >= gap.hi {
+                            break;
+                        }
+                        if let Some(piece) = o.range.intersect(&gap) {
+                            let from_slot =
+                                if in_new(o.slot) { Some(o.slot) } else { None };
+                            moves.push(ShardMove { to_slot: e.slot, from_slot, range: piece });
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(ReshardPlan {
+            stage: new.stage,
+            from_stage: old.stage,
+            param_count: old.param_count,
+            moves,
+            retained,
+        })
+    }
+}
+
+/// The pre-index reference implementation of [`migrate`], retained
+/// verbatim so the equivalence property suite can pin the indexed path
+/// byte-identical to it on random layout pairs. Not a hot path — do not
+/// call it outside tests/benches.
+pub fn migrate_reference(
+    old: &ShardManifest,
+    new: &ShardManifest,
+) -> Result<ReshardPlan, CkptError> {
     old.validate()?;
     new.validate()?;
     old.check_compatible(new)?;
@@ -500,9 +658,6 @@ pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
     let mut moves = Vec::new();
     let mut retained = Vec::new();
 
-    // when the old layout replicates (ZeRO-0), any gap has *every*
-    // surviving old slot as a possible source: round-robin the fetches
-    // over them so a multi-join batch does not serialize on one donor
     let donors: Vec<usize> = if old.stage == 0 {
         old.shards
             .iter()
@@ -522,7 +677,6 @@ pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
         if let Some(kr) = kept {
             retained.push(RetainedShard { slot: e.slot, range: kr });
         }
-        // the (up to two) gaps of e.range not covered by `kept`
         let gaps: Vec<ShardRange> = match kept {
             None => vec![e.range],
             Some(kr) => {
@@ -538,7 +692,6 @@ pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
         };
         for gap in gaps {
             if old.stage == 0 {
-                // replicated source: one donor serves the whole gap
                 let from_slot = if donors.is_empty() {
                     None
                 } else {
@@ -547,10 +700,6 @@ pub fn migrate(old: &ShardManifest, new: &ShardManifest) -> Result<ReshardPlan, 
                 };
                 moves.push(ShardMove { to_slot: e.slot, from_slot, range: gap });
             } else {
-                // partitioned source tiles [0, ψ) contiguously in shard
-                // order (validate() enforced it), so binary-search the
-                // first overlapping owner and sweep linearly from there —
-                // emission order is identical to the full scan
                 let start = old.shards.partition_point(|o| o.range.hi <= gap.lo);
                 for o in &old.shards[start..] {
                     if o.range.lo >= gap.hi {
@@ -583,8 +732,8 @@ mod tests {
     use super::*;
     use crate::cluster::LinkKind;
 
-    fn slots(ids: &[usize]) -> Vec<(usize, String)> {
-        ids.iter().map(|&i| (i, format!("G{i}"))).collect()
+    fn slots(ids: &[usize]) -> Vec<(usize, crate::intern::TypeId)> {
+        ids.iter().map(|&i| (i, crate::intern::intern(&format!("G{i}")))).collect()
     }
 
     fn manifest(stage: u8, psi: u64, ids: &[usize], snapshot: usize) -> ShardManifest {

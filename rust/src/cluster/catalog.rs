@@ -111,6 +111,13 @@ pub fn spec(name: &str) -> Option<GpuSpec> {
     Some(s)
 }
 
+/// Look up a catalog entry by interned handle — the zero-conversion
+/// twin of [`spec`] for the planner hot paths, where GPU types flow as
+/// [`crate::intern::TypeId`]s rather than display strings.
+pub fn spec_of(t: crate::intern::TypeId) -> Option<GpuSpec> {
+    spec(t.as_str())
+}
+
 /// Like [`spec`] but panics with a helpful message (config validation
 /// should have caught unknown names earlier).
 pub fn spec_or_panic(name: &str) -> GpuSpec {

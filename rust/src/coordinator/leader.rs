@@ -480,12 +480,20 @@ impl Leader {
                 .map_err(|_| anyhow!("worker died"))?;
         }
         let mut results: Vec<Option<ProfileResult>> = (0..slots.len()).map(|_| None).collect();
+        // slot -> request position, built once (every slot was validated
+        // against `workers` above): O(1) reply matching instead of a
+        // per-reply scan over the request list
+        let mut slot_pos: Vec<Option<usize>> = vec![None; self.workers.len()];
+        for (i, &slot) in slots.iter().enumerate() {
+            slot_pos[slot] = Some(i);
+        }
         for _ in 0..slots.len() {
             match self.recv_reply()? {
                 WorkerReply::Profiled { rank, result } => {
-                    let pos = slots
-                        .iter()
-                        .position(|&s| s == rank)
+                    let pos = slot_pos
+                        .get(rank)
+                        .copied()
+                        .flatten()
                         .ok_or_else(|| anyhow!("profile reply from unexpected slot {rank}"))?;
                     results[pos] = result.map(|r| *r);
                 }
@@ -548,6 +556,13 @@ impl Leader {
                 .map_err(|_| anyhow!("worker died"))?;
         }
         let n = active.len();
+        // slot -> compact rank index, built once: replies arrive in
+        // arbitrary order, and a per-reply `position()` scan is O(n^2)
+        // per iteration at the 1000-rank scale the leader bench drives
+        let mut rank_pos: Vec<Option<usize>> = vec![None; self.workers.len()];
+        for (i, &slot) in active.iter().enumerate() {
+            rank_pos[slot] = Some(i);
+        }
         let mut per_rank: Vec<Vec<f64>> = vec![Vec::new(); n];
         let mut samples = 0usize;
         for _ in 0..n {
@@ -556,9 +571,10 @@ impl Leader {
                     if let Some(b) = oom_at {
                         bail!("rank {rank} OOMed at batch {b} — planner bug");
                     }
-                    let idx = active
-                        .iter()
-                        .position(|&slot| slot == rank)
+                    let idx = rank_pos
+                        .get(rank)
+                        .copied()
+                        .flatten()
                         .ok_or_else(|| anyhow!("schedule reply from unknown slot {rank}"))?;
                     per_rank[idx] = step_times;
                     samples += s;
@@ -613,17 +629,26 @@ impl Leader {
                 let c_step_alpha = spec
                     .per_microstep_comm_time(plan.stage, 0)
                     .map_err(|e| anyhow!("{e}"))?;
-                for step in 0..gas {
-                    let times: Vec<f64> = per_rank
-                        .iter()
-                        .map(|ts| ts.get(step).copied().unwrap_or(0.0))
-                        .collect();
-                    let t_max = times.iter().cloned().fold(0.0, f64::max);
-                    for i in 0..n {
-                        busy[i] += times[i];
-                        idle[i] += t_max - times[i];
+                // no per-step transposed Vec: one rank-major max sweep
+                // (same rank-ascending max order as the old per-step
+                // fold), then per-rank accumulation in step order — the
+                // FP accumulation order, and hence every golden table,
+                // is bit-identical to the transposing loop it replaces
+                let mut step_max = vec![0.0f64; gas];
+                for ts in &per_rank {
+                    for (step, m) in step_max.iter_mut().enumerate() {
+                        *m = f64::max(*m, ts.get(step).copied().unwrap_or(0.0));
                     }
-                    wall += t_max + c_step;
+                }
+                for (i, ts) in per_rank.iter().enumerate() {
+                    for (step, &m) in step_max.iter().enumerate() {
+                        let t = ts.get(step).copied().unwrap_or(0.0);
+                        busy[i] += t;
+                        idle[i] += m - t;
+                    }
+                }
+                for &m in &step_max {
+                    wall += m + c_step;
                     comm += c_step;
                     comm_pred_spec += c_step_spec;
                     comm_alpha += c_step_alpha;
@@ -752,6 +777,16 @@ impl Leader {
         // scores a hit per duplicate GPU type, which is not a re-join
         let (hits0, misses0) = (planner.cache().hits(), planner.cache().misses());
 
+        // pre-index the schedule by firing iteration: the per-iteration
+        // due scan was O(iterations × |schedule|); events past the last
+        // iteration never fired before and still don't
+        let mut due_index: Vec<Vec<&ScheduledEvent>> = vec![Vec::new(); iterations];
+        for ev in schedule {
+            if ev.at_iter < iterations {
+                due_index[ev.at_iter].push(ev);
+            }
+        }
+
         let mut reports = Vec::with_capacity(iterations);
         for iter in 0..iterations {
             let mut events = Vec::new();
@@ -766,9 +801,8 @@ impl Leader {
             // earlier deferred (not yet profiled) joiner can neither
             // make its batch-mates unevaluable nor charge them a second
             // stall. Declining touches nothing.
-            let due: Vec<&ScheduledEvent> =
-                schedule.iter().filter(|e| e.at_iter == iter).collect();
-            for ev in &due {
+            let due = &due_index[iter];
+            for ev in due {
                 let outcome: Result<String, String> = match &ev.event {
                     ElasticEvent::RankJoined { .. } => continue, // second pass
                     ElasticEvent::RankLost { slot } => planner
@@ -1099,7 +1133,7 @@ impl Leader {
                             // never be fatal
                             Some(r) => match PerfCurve::fit(r.points.clone(), r.mbs) {
                                 Ok(curve) => {
-                                    let gpu = planner.slots()[slot].gpu.clone();
+                                    let gpu = planner.slots()[slot].gpu;
                                     planner
                                         .install_stage_curve(&gpu, cand_stage, curve)
                                         .map_err(|e| {

@@ -13,22 +13,30 @@
 use std::collections::HashMap;
 
 use crate::curves::PerfCurve;
+use crate::intern::{self, TypeId};
 
 /// Cache key: the triple that fully determines a performance curve.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// `Copy` — gpu and model are interned [`TypeId`]s, so keys move for
+/// free on the preview hot paths instead of cloning two `String`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CurveKey {
-    /// Catalog GPU name, e.g. `"A800-80G"`.
-    pub gpu: String,
-    /// Model preset name, e.g. `"llama-0.5b"`.
-    pub model: String,
+    /// Interned catalog GPU name, e.g. `"A800-80G"`.
+    pub gpu: TypeId,
+    /// Interned model preset name, e.g. `"llama-0.5b"`.
+    pub model: TypeId,
     /// ZeRO stage the curve was profiled under.
     pub stage: u8,
 }
 
 impl CurveKey {
-    /// Convenience constructor.
+    /// Convenience constructor from display names (interns both).
     pub fn new(gpu: &str, model: &str, stage: u8) -> Self {
-        CurveKey { gpu: gpu.to_string(), model: model.to_string(), stage }
+        CurveKey { gpu: intern::intern(gpu), model: intern::intern(model), stage }
+    }
+
+    /// Zero-intern constructor for hot paths that already hold handles.
+    pub fn of(gpu: TypeId, model: TypeId, stage: u8) -> Self {
+        CurveKey { gpu, model, stage }
     }
 }
 

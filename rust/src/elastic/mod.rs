@@ -45,9 +45,12 @@ pub use cache::{CurveCache, CurveKey};
 pub use events::{parse_schedule, seeded_schedule, ElasticEvent, ScheduledEvent, XorShift};
 pub use stage::{choose_stage, StageCandidate, StageChange, StagePolicy};
 
+use std::cell::Cell;
+
 use crate::allocator::{self, Plan, PlanError};
-use crate::ckpt::{self, ReshardPlan, ShardManifest};
+use crate::ckpt::{self, MigrationIndex, ReshardPlan, ShardManifest};
 use crate::curves::{PerfCurve, ProfiledPoint};
+use crate::intern::{self, TypeId};
 use crate::netsim::NetSim;
 use crate::policy::StallLedger;
 
@@ -129,8 +132,9 @@ impl std::error::Error for ElasticError {}
 pub struct SlotState {
     /// Leader slot id (stable across membership changes).
     pub slot: usize,
-    /// Catalog GPU name — or the group label for a pipeline group.
-    pub gpu: String,
+    /// Interned catalog GPU name — or the group label for a pipeline
+    /// group. Resolve with `as_str()` at report boundaries only.
+    pub gpu: TypeId,
     /// False once the slot left the job.
     pub alive: bool,
     /// Fitted performance curve, if known (the composed group curve for
@@ -140,11 +144,34 @@ pub struct SlotState {
     /// straggler's curve) rather than the healthy type-level curve — such
     /// curves are kept out of the shared cache.
     pub drifted: bool,
-    /// Physical members of a pipeline group, in pipeline-stage order
-    /// (ascending memory). Empty for an ordinary single-GPU slot. Plans
-    /// address the *slot*; membership events address these GPUs — losing
-    /// one degrades this group, not the fleet.
-    pub members: Vec<String>,
+    /// Physical members of a pipeline group (interned), in
+    /// pipeline-stage order (ascending memory). Empty for an ordinary
+    /// single-GPU slot. Plans address the *slot*; membership events
+    /// address these GPUs — losing one degrades this group, not the
+    /// fleet.
+    pub members: Vec<TypeId>,
+}
+
+/// Interior-mutability perf counters over the preview hot paths: the
+/// complexity tests pin *counts*, not timings (they run under tier-1
+/// with no profiler). `Cell` because previews take `&self`.
+#[derive(Debug, Clone, Default)]
+pub struct PerfCounters {
+    manifests_built: Cell<u64>,
+    previews_priced: Cell<u64>,
+}
+
+impl PerfCounters {
+    /// `ShardManifest::build` calls issued by replan/preview paths.
+    pub fn manifests_built(&self) -> u64 {
+        self.manifests_built.get()
+    }
+
+    /// Shard-movement pricings (`migrate`/index pricing) issued by
+    /// replan/preview paths.
+    pub fn previews_priced(&self) -> u64 {
+        self.previews_priced.get()
+    }
 }
 
 /// Membership/curve state machine behind the elastic runtime.
@@ -160,7 +187,7 @@ pub struct ElasticPlanner {
     /// migrate it.
     stage: u8,
     gbs: usize,
-    model: String,
+    model: TypeId,
     param_count: u64,
     slots: Vec<SlotState>,
     cache: CurveCache,
@@ -172,6 +199,7 @@ pub struct ElasticPlanner {
     last_reshard: Option<ReshardPlan>,
     policy: Option<StagePolicy>,
     last_stage_change: Option<StageChange>,
+    perf: PerfCounters,
 }
 
 impl ElasticPlanner {
@@ -181,7 +209,7 @@ impl ElasticPlanner {
         ElasticPlanner {
             stage,
             gbs,
-            model: model.to_string(),
+            model: intern::intern(model),
             param_count,
             slots: Vec::new(),
             cache: CurveCache::new(cache_cap),
@@ -193,7 +221,13 @@ impl ElasticPlanner {
             last_reshard: None,
             policy: None,
             last_stage_change: None,
+            perf: PerfCounters::default(),
         }
+    }
+
+    /// Preview/replan perf counters (complexity tests, diagnostics).
+    pub fn perf(&self) -> &PerfCounters {
+        &self.perf
     }
 
     /// ZeRO stage the job currently runs at (may move between replans
@@ -234,7 +268,7 @@ impl ElasticPlanner {
         }
         let live = self.live_keys();
         self.cache
-            .insert(CurveKey::new(gpu, &self.model, stage), curve, &live);
+            .insert(CurveKey::of(intern::intern(gpu), self.model, stage), curve, &live);
         Ok(())
     }
 
@@ -248,6 +282,12 @@ impl ElasticPlanner {
         &self.model
     }
 
+    /// Interned handle of the model preset name — the zero-alloc key
+    /// half for [`CurveKey::of`] on preview hot paths.
+    pub fn model_id(&self) -> TypeId {
+        self.model
+    }
+
     /// Total parameter count `ψ` of the model.
     pub fn param_count(&self) -> u64 {
         self.param_count
@@ -258,10 +298,11 @@ impl ElasticPlanner {
     /// rank needs no profiling.
     pub fn add_slot(&mut self, gpu: &str) -> usize {
         let slot = self.slots.len();
-        let curve = self.cache.get(&CurveKey::new(gpu, &self.model, self.stage));
+        let gpu = intern::intern(gpu);
+        let curve = self.cache.get(&CurveKey::of(gpu, self.model, self.stage));
         self.slots.push(SlotState {
             slot,
-            gpu: gpu.to_string(),
+            gpu,
             alive: true,
             curve,
             drifted: false,
@@ -281,11 +322,11 @@ impl ElasticPlanner {
         let slot = self.slots.len();
         self.slots.push(SlotState {
             slot,
-            gpu: plan.label.clone(),
+            gpu: intern::intern(&plan.label),
             alive: true,
             curve: Some(plan.curve.clone()),
             drifted: false,
-            members: plan.members.clone(),
+            members: plan.members.iter().map(|m| intern::intern(m)).collect(),
         });
         self.dirty = true;
         slot
@@ -338,8 +379,8 @@ impl ElasticPlanner {
         ) {
             Ok(plan) => {
                 let s = &mut self.slots[slot];
-                s.gpu = plan.label.clone();
-                s.members = plan.members.clone();
+                s.gpu = intern::intern(&plan.label);
+                s.members = plan.members.iter().map(|m| intern::intern(m)).collect();
                 s.curve = Some(plan.curve.clone());
                 s.drifted = false;
                 self.dirty = true;
@@ -420,7 +461,7 @@ impl ElasticPlanner {
         from_drift: bool,
     ) -> Result<(), ElasticError> {
         let live: Vec<CurveKey> = self.live_keys();
-        let model = self.model.clone();
+        let model = self.model;
         let stage = self.stage;
         let s = self.slots.get_mut(slot).ok_or(ElasticError::UnknownSlot(slot))?;
         if !s.alive {
@@ -428,7 +469,7 @@ impl ElasticPlanner {
         }
         if !from_drift {
             self.cache
-                .insert(CurveKey::new(&s.gpu, &model, stage), curve.clone(), &live);
+                .insert(CurveKey::of(s.gpu, model, stage), curve.clone(), &live);
         }
         s.curve = Some(curve);
         s.drifted = from_drift;
@@ -440,7 +481,7 @@ impl ElasticPlanner {
         self.slots
             .iter()
             .filter(|s| s.alive)
-            .map(|s| CurveKey::new(&s.gpu, &self.model, self.stage))
+            .map(|s| CurveKey::of(s.gpu, self.model, self.stage))
             .collect()
     }
 
@@ -465,18 +506,23 @@ impl ElasticPlanner {
     }
 
     /// Curves of the live slots in compact-rank order (requires all
-    /// profiles present).
+    /// profiles present). Single pass: collects curves until the first
+    /// gap, then keeps scanning only to report EVERY missing slot in the
+    /// typed error (same contract as [`ElasticPlanner::needs_profile`]).
     pub fn active_curves(&self) -> Result<Vec<PerfCurve>, ElasticError> {
-        let missing = self.needs_profile();
+        let mut curves = Vec::new();
+        let mut missing = Vec::new();
+        for s in self.slots.iter().filter(|s| s.alive) {
+            match &s.curve {
+                Some(c) if missing.is_empty() => curves.push(c.clone()),
+                Some(_) => {}
+                None => missing.push(s.slot),
+            }
+        }
         if !missing.is_empty() {
             return Err(ElasticError::MissingCurves(missing));
         }
-        Ok(self
-            .slots
-            .iter()
-            .filter(|s| s.alive)
-            .map(|s| s.curve.clone().expect("checked above"))
-            .collect())
+        Ok(curves)
     }
 
     /// True when membership or curves changed since the last replan.
@@ -522,7 +568,7 @@ impl ElasticPlanner {
                 let mut swapped: Vec<(usize, PerfCurve)> = Vec::new();
                 let mut complete = true;
                 for sl in self.slots.iter().filter(|s| s.alive) {
-                    match self.cache.peek(&CurveKey::new(&sl.gpu, &self.model, chosen)) {
+                    match self.cache.peek(&CurveKey::of(sl.gpu, self.model, chosen)) {
                         Some(c) => swapped.push((sl.slot, c.clone())),
                         None => {
                             complete = false;
@@ -530,11 +576,11 @@ impl ElasticPlanner {
                         }
                     }
                 }
-                if complete {
-                    let c = cands
-                        .iter()
-                        .find(|c| c.stage == chosen)
-                        .expect("chosen stage comes from the candidate set");
+                // `chosen` always comes from the candidate set, so the
+                // find can only miss on an internal invariant break — in
+                // which case the incumbent stage is simply kept
+                let chosen_cand = cands.iter().find(|c| c.stage == chosen);
+                if let (true, Some(c)) = (complete, chosen_cand) {
                     let from = self.stage;
                     self.stage = chosen;
                     for (slot, healthy_new) in swapped {
@@ -547,9 +593,8 @@ impl ElasticPlanner {
                         let factor = {
                             let sl = &self.slots[slot];
                             if sl.drifted {
-                                let healthy_old = self
-                                    .cache
-                                    .peek(&CurveKey::new(&sl.gpu, &self.model, from));
+                                let healthy_old =
+                                    self.cache.peek(&CurveKey::of(sl.gpu, self.model, from));
                                 match (&sl.curve, healthy_old) {
                                     (Some(d), Some(h))
                                         if d.peak_speed() > 0.0 && h.peak_speed() > 0.0 =>
@@ -604,15 +649,16 @@ impl ElasticPlanner {
         // the initial plan: the optimizer state is born sharded, nothing
         // moves). `migrate` handles same-stage reshards and cross-stage
         // re-layouts alike.
-        let live: Vec<(usize, String)> = self
+        let live: Vec<(usize, TypeId)> = self
             .slots
             .iter()
             .filter(|s| s.alive)
-            .map(|s| (s.slot, s.gpu.clone()))
+            .map(|s| (s.slot, s.gpu))
             .collect();
         let new_manifest =
             ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        self.perf.manifests_built.set(self.perf.manifests_built.get() + 1);
         self.last_reshard = match &self.manifest {
             Some(old) => Some(
                 ckpt::migrate(old, &new_manifest)
@@ -622,10 +668,9 @@ impl ElasticPlanner {
         };
         self.manifest = Some(new_manifest);
 
-        self.plan = Some(plan);
         self.dirty = false;
         self.replans += 1;
-        Ok(self.plan.as_ref().expect("just set"))
+        Ok(self.plan.insert(plan))
     }
 
     /// Would-be outcome of admitting one rank of `gpu`, computed WITHOUT
@@ -734,12 +779,18 @@ impl ElasticPlanner {
         fallback: Option<&PerfCurve>,
         net: &NetSim,
     ) -> Result<JoinPreview, ElasticError> {
-        let gpus = [gpu.to_string()];
+        let t = intern::intern(gpu);
         let fallbacks = [fallback.cloned()];
-        let rp = self.preview_round_at(stage, &gpus, &fallbacks, net)?;
-        let curve = rp.curves.last().cloned().expect("joiner curve appended");
+        let rp = self.preview_round_at(stage, &[t], &fallbacks, net)?;
+        // the batch primitive appended exactly one joiner curve, so the
+        // last entry always exists — but a typed error beats a panic path
+        let curve = rp
+            .curves
+            .last()
+            .cloned()
+            .ok_or_else(|| ElasticError::NoCurve(gpu.to_string()))?;
         Ok(JoinPreview {
-            gpu: gpu.to_string(),
+            gpu: t,
             stage,
             curve,
             curve_cached: rp.joiner_cached[0],
@@ -766,7 +817,51 @@ impl ElasticPlanner {
     pub fn preview_round_at(
         &self,
         stage: u8,
-        gpus: &[String],
+        gpus: &[TypeId],
+        fallbacks: &[Option<PerfCurve>],
+        net: &NetSim,
+    ) -> Result<RoundPreview, ElasticError> {
+        self.preview_round_at_with(&self.round_index()?, stage, gpus, fallbacks, net)
+    }
+
+    /// Build the round-scoped pricing index ONCE per decision round: the
+    /// incumbent manifest is validated and interval-indexed a single
+    /// time, and the live `(slot, gpu)` snapshot becomes the shared
+    /// scratch prefix every candidate layout copies from (a memcpy of
+    /// `Copy` pairs — no per-slot heap traffic). Hand the result to
+    /// [`ElasticPlanner::preview_round_at_with`] /
+    /// [`ElasticPlanner::preview_round_extend_with`] for every candidate
+    /// of the round; it goes stale on any planner mutation.
+    pub fn round_index(&self) -> Result<RoundIndex<'_>, ElasticError> {
+        let mig = match &self.manifest {
+            Some(m) => {
+                Some(MigrationIndex::new(m).map_err(|e| ElasticError::Ckpt(e.to_string()))?)
+            }
+            None => None,
+        };
+        Ok(RoundIndex {
+            mig,
+            live: self
+                .slots
+                .iter()
+                .filter(|s| s.alive)
+                .map(|s| (s.slot, s.gpu))
+                .collect(),
+            next_slot: self.slots.len(),
+            relayout: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    /// [`ElasticPlanner::preview_round_at`] against a prebuilt
+    /// [`RoundIndex`] — the round engine prices every candidate of one
+    /// round through the same index instead of re-validating and
+    /// re-scanning the incumbent manifest per preview. Byte-identical
+    /// results (the property suite pins it).
+    pub fn preview_round_at_with(
+        &self,
+        idx: &RoundIndex<'_>,
+        stage: u8,
+        gpus: &[TypeId],
         fallbacks: &[Option<PerfCurve>],
         net: &NetSim,
     ) -> Result<RoundPreview, ElasticError> {
@@ -787,15 +882,15 @@ impl ElasticPlanner {
                 .filter(|s| s.alive)
                 .map(|s| {
                     self.cache
-                        .peek(&CurveKey::new(&s.gpu, &self.model, stage))
+                        .peek(&CurveKey::of(s.gpu, self.model, stage))
                         .cloned()
-                        .ok_or_else(|| ElasticError::NoCurve(s.gpu.clone()))
+                        .ok_or_else(|| ElasticError::NoCurve(s.gpu.to_string()))
                 })
                 .collect::<Result<Vec<_>, _>>()?
         };
         let mut joiner_cached = Vec::with_capacity(gpus.len());
-        for (i, gpu) in gpus.iter().enumerate() {
-            let key = CurveKey::new(gpu, &self.model, stage);
+        for (i, &gpu) in gpus.iter().enumerate() {
+            let key = CurveKey::of(gpu, self.model, stage);
             let (curve, cached) = match self.cache.peek(&key) {
                 Some(c) => (c.clone(), true),
                 None => match fallbacks
@@ -821,42 +916,35 @@ impl ElasticPlanner {
         }
         .map_err(ElasticError::Plan)?;
 
-        // hypothetical shard layout: the live slots plus the joiners at
-        // the slot ids consecutive add_slot() calls would assign
-        let mut live: Vec<(usize, String)> = self
-            .slots
-            .iter()
-            .filter(|s| s.alive)
-            .map(|s| (s.slot, s.gpu.clone()))
-            .collect();
-        for (i, gpu) in gpus.iter().enumerate() {
-            live.push((self.slots.len() + i, gpu.clone()));
+        // hypothetical shard layout: the shared live snapshot plus the
+        // joiners at the slot ids consecutive add_slot() calls would
+        // assign
+        let mut live = idx.live.clone();
+        live.reserve(gpus.len());
+        for (i, &gpu) in gpus.iter().enumerate() {
+            live.push((idx.next_slot + i, gpu));
         }
         let manifest =
             ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
-        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &self.manifest {
-            Some(old) => {
-                // migrate: folds a cross-stage re-layout and the batch's
-                // membership movement into one priced set
-                let r = ckpt::migrate(old, &manifest)
+        self.perf.manifests_built.set(self.perf.manifests_built.get() + 1);
+        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &idx.mig {
+            Some(ix) => {
+                // indexed migrate: folds a cross-stage re-layout and the
+                // batch's membership movement into one priced set
+                let r = ix
+                    .migrate_to(&manifest)
                     .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
                 let total = r.transfer_time_s(&net_after);
                 // itemize the pure stage re-layout (same membership, new
                 // stage) so the stall ledger can say why the round stalls
-                let mig = if stage != old.stage {
-                    old.migrate(stage)
-                        .map(|(_, p)| p.transfer_time_s(&net_after))
-                        .unwrap_or(0.0)
-                        .min(total)
-                } else {
-                    0.0
-                };
+                let mig = idx.migration_only_s(stage, &net_after).min(total);
                 (total, r.bytes_moved(), mig)
             }
             // no plan yet: the state would be born sharded, nothing moves
             None => (0.0, 0, 0.0),
         };
+        self.perf.previews_priced.set(self.perf.previews_priced.get() + 1);
 
         Ok(RoundPreview {
             stage,
@@ -892,12 +980,26 @@ impl ElasticPlanner {
     pub fn preview_round_extend(
         &self,
         prev: &RoundPreview,
-        gpu: &str,
+        gpu: impl Into<TypeId>,
+        fallback: Option<&PerfCurve>,
+        net: &NetSim,
+    ) -> Result<RoundPreview, ElasticError> {
+        self.preview_round_extend_with(&self.round_index()?, prev, gpu.into(), fallback, net)
+    }
+
+    /// [`ElasticPlanner::preview_round_extend`] against a prebuilt
+    /// [`RoundIndex`] — the delta path the greedy round search actually
+    /// runs, one indexed pricing per growth step.
+    pub fn preview_round_extend_with(
+        &self,
+        idx: &RoundIndex<'_>,
+        prev: &RoundPreview,
+        gpu: TypeId,
         fallback: Option<&PerfCurve>,
         net: &NetSim,
     ) -> Result<RoundPreview, ElasticError> {
         let stage = prev.stage;
-        let key = CurveKey::new(gpu, &self.model, stage);
+        let key = CurveKey::of(gpu, self.model, stage);
         let (curve, cached) = match self.cache.peek(&key) {
             Some(c) => (c.clone(), true),
             None => match fallback.filter(|_| stage == self.stage) {
@@ -906,7 +1008,7 @@ impl ElasticPlanner {
             },
         };
         let mut gpus = prev.gpus.clone();
-        gpus.push(gpu.to_string());
+        gpus.push(gpu);
         let mut joiner_cached = prev.joiner_cached.clone();
         joiner_cached.push(cached);
         let mut curves = prev.curves.clone();
@@ -925,29 +1027,25 @@ impl ElasticPlanner {
         // the prior preview's manifest already lists live slots + prior
         // joiners in slot order; the new joiner takes the next id the
         // batch path would predict
-        let mut live: Vec<(usize, String)> =
-            prev.manifest.shards.iter().map(|e| (e.slot, e.gpu.clone())).collect();
-        live.push((self.slots.len() + prev.gpus.len(), gpu.to_string()));
+        let mut live: Vec<(usize, TypeId)> =
+            prev.manifest.shards.iter().map(|e| (e.slot, e.gpu)).collect();
+        live.push((idx.next_slot + prev.gpus.len(), gpu));
         let manifest =
             ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
-        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &self.manifest {
-            Some(old) => {
-                let r = ckpt::migrate(old, &manifest)
+        self.perf.manifests_built.set(self.perf.manifests_built.get() + 1);
+        let (reshard_penalty_s, reshard_bytes, migration_only_s) = match &idx.mig {
+            Some(ix) => {
+                let r = ix
+                    .migrate_to(&manifest)
                     .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
                 let total = r.transfer_time_s(&net_after);
-                let mig = if stage != old.stage {
-                    old.migrate(stage)
-                        .map(|(_, p)| p.transfer_time_s(&net_after))
-                        .unwrap_or(0.0)
-                        .min(total)
-                } else {
-                    0.0
-                };
+                let mig = idx.migration_only_s(stage, &net_after).min(total);
                 (total, r.bytes_moved(), mig)
             }
             None => (0.0, 0, 0.0),
         };
+        self.perf.previews_priced.set(self.perf.previews_priced.get() + 1);
 
         Ok(RoundPreview {
             stage,
@@ -977,15 +1075,15 @@ impl ElasticPlanner {
         if !s.alive {
             return Err(ElasticError::DeadSlot(slot));
         }
-        let gpu = s.gpu.clone();
+        let gpu = s.gpu;
         let mut curves = Vec::new();
-        let mut live: Vec<(usize, String)> = Vec::new();
+        let mut live: Vec<(usize, TypeId)> = Vec::new();
         for sl in self.slots.iter().filter(|x| x.alive && x.slot != slot) {
             match &sl.curve {
                 Some(c) => curves.push(c.clone()),
                 None => return Err(ElasticError::MissingCurves(vec![sl.slot])),
             }
-            live.push((sl.slot, sl.gpu.clone()));
+            live.push((sl.slot, sl.gpu));
         }
         if curves.is_empty() {
             return Err(ElasticError::LastRank);
@@ -1008,6 +1106,7 @@ impl ElasticPlanner {
         let manifest =
             ShardManifest::build(&self.model, self.stage, self.param_count, self.replans, &live)
                 .map_err(|e| ElasticError::Ckpt(e.to_string()))?;
+        self.perf.manifests_built.set(self.perf.manifests_built.get() + 1);
         let (reshard_penalty_s, reshard_bytes) = match &self.manifest {
             Some(old) => {
                 let r = ckpt::migrate(old, &manifest)
@@ -1016,6 +1115,7 @@ impl ElasticPlanner {
             }
             None => (0.0, 0),
         };
+        self.perf.previews_priced.set(self.perf.previews_priced.get() + 1);
         Ok(ReleasePreview {
             slot,
             gpu,
@@ -1093,12 +1193,57 @@ impl ElasticPlanner {
     }
 }
 
+/// Round-scoped pricing index: the incumbent-side state every preview
+/// of ONE decision round shares, built once by
+/// [`ElasticPlanner::round_index`]. Holds the validated interval index
+/// over the incumbent manifest, the live `(slot, gpu)` scratch prefix
+/// candidate layouts copy from, and a per-stage memo of the pure
+/// cross-stage re-layout plan (so `migration_only_s` itemization stops
+/// re-deriving a manifest per preview). Stale after any planner
+/// mutation — rebuild per round.
+#[derive(Debug)]
+pub struct RoundIndex<'a> {
+    mig: Option<MigrationIndex<'a>>,
+    /// Live `(slot, gpu)` pairs in slot order.
+    live: Vec<(usize, TypeId)>,
+    /// Slot id the next joiner would be assigned (slots are
+    /// append-only).
+    next_slot: usize,
+    /// Per-stage memo of the pure re-layout plan (≤ 4 entries, linear
+    /// scan; `None` payload = the re-layout itself failed, priced 0).
+    relayout: std::cell::RefCell<Vec<(u8, Option<ReshardPlan>)>>,
+}
+
+impl RoundIndex<'_> {
+    /// The pure cross-stage re-layout (same membership, new stage)
+    /// priced alone at `net_after` — 0 at the incumbent stage. The plan
+    /// is derived once per (round, stage) and memoized; only the
+    /// group-size-dependent transfer time is recomputed per preview.
+    fn migration_only_s(&self, stage: u8, net_after: &NetSim) -> f64 {
+        let Some(ix) = &self.mig else { return 0.0 };
+        let old = ix.old();
+        if stage == old.stage {
+            return 0.0;
+        }
+        let mut memo = self.relayout.borrow_mut();
+        if !memo.iter().any(|(s, _)| *s == stage) {
+            let plan = old.migrate(stage).map(|(_, p)| p).ok();
+            memo.push((stage, plan));
+        }
+        memo.iter()
+            .find(|(s, _)| *s == stage)
+            .and_then(|(_, p)| p.as_ref())
+            .map(|p| p.transfer_time_s(net_after))
+            .unwrap_or(0.0)
+    }
+}
+
 /// Everything [`ElasticPlanner::preview_join`] predicts about admitting
 /// one candidate rank — a pure what-if: nothing in the planner moved.
 #[derive(Debug, Clone)]
 pub struct JoinPreview {
-    /// Catalog GPU type of the candidate.
-    pub gpu: String,
+    /// Interned catalog GPU type of the candidate.
+    pub gpu: TypeId,
     /// ZeRO stage the preview is priced at — the planner's current stage
     /// unless a [`StagePolicy`] found a better one for the
     /// post-admission fleet.
@@ -1131,8 +1276,8 @@ pub struct JoinPreview {
 pub struct RoundPreview {
     /// ZeRO stage the preview is priced at.
     pub stage: u8,
-    /// Catalog GPU types of the batch, input order.
-    pub gpus: Vec<String>,
+    /// Interned catalog GPU types of the batch, input order.
+    pub gpus: Vec<TypeId>,
     /// Per-joiner: true when the curve came from the type-level cache
     /// (admissible with zero profiling calls), parallel to `gpus`.
     pub joiner_cached: Vec<bool>,
@@ -1166,8 +1311,8 @@ pub struct RoundPreview {
 pub struct ReleasePreview {
     /// Leader slot id of the released rank.
     pub slot: usize,
-    /// Catalog GPU type of the released rank.
-    pub gpu: String,
+    /// Interned catalog GPU type of the released rank.
+    pub gpu: TypeId,
     /// Survivor curves in plan-rank order.
     pub curves: Vec<PerfCurve>,
     /// The would-be Algorithm 2 plan over the survivors.

@@ -292,13 +292,13 @@ impl ElasticPlanner {
         let mut curves: Vec<PerfCurve> = Vec::new();
         let mut curves_cached = true;
         let mut profile_est_s = 0.0;
-        let mut estimated: Vec<String> = Vec::new();
+        let mut estimated: Vec<crate::intern::TypeId> = Vec::new();
         let mut plannable = true;
         for sl in self.slots.iter().filter(|s| s.alive) {
             let curve = if current {
                 sl.curve.clone()
             } else {
-                match self.cache.peek(&CurveKey::new(&sl.gpu, &self.model, stage)) {
+                match self.cache.peek(&CurveKey::of(sl.gpu, self.model, stage)) {
                     // a cached curve measured at a *different* group size
                     // counts as missing: its mbs is from another memory
                     // budget and must be re-measured (the leader's (2b)
@@ -313,7 +313,7 @@ impl ElasticPlanner {
                         if let Some(c) = &synth {
                             if !estimated.contains(&sl.gpu) {
                                 profile_est_s += profile_cost_estimate_s(c);
-                                estimated.push(sl.gpu.clone());
+                                estimated.push(sl.gpu);
                             }
                         }
                         synth
@@ -342,11 +342,11 @@ impl ElasticPlanner {
         // movement folded in; zero on the initial plan)
         let (migration_s, migration_bytes) = match &self.manifest {
             Some(old) => {
-                let live: Vec<(usize, String)> = self
+                let live: Vec<(usize, crate::intern::TypeId)> = self
                     .slots
                     .iter()
                     .filter(|s| s.alive)
-                    .map(|s| (s.slot, s.gpu.clone()))
+                    .map(|s| (s.slot, s.gpu))
                     .collect();
                 ShardManifest::build(&self.model, stage, self.param_count, self.replans, &live)
                     .and_then(|m| ckpt::migrate(old, &m))
@@ -613,7 +613,7 @@ mod tests {
         assert!(reqs.iter().all(|&(_, s)| s != 3), "z3 is already measured");
         let mut pairs: Vec<(String, u8)> = reqs
             .iter()
-            .map(|&(slot, s)| (cold.slots()[slot].gpu.clone(), s))
+            .map(|&(slot, s)| (cold.slots()[slot].gpu.to_string(), s))
             .collect();
         let before = pairs.len();
         pairs.sort();

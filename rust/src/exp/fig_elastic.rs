@@ -171,9 +171,12 @@ pub fn cells() -> Result<Vec<ElasticCell>> {
     // optimizer-state recovery cost after the loss: the measured minimal
     // shard movement (checkpointed shards, survivors keep their overlap)
     // vs the full-restore recompute a checkpoint-oblivious restart pays
-    let all_slots: Vec<(usize, String)> =
-        devices.iter().enumerate().map(|(i, (s, _))| (i, s.name.clone())).collect();
-    let surv_slots: Vec<(usize, String)> = all_slots
+    let all_slots: Vec<(usize, crate::intern::TypeId)> = devices
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| (i, crate::intern::intern(&s.name)))
+        .collect();
+    let surv_slots: Vec<(usize, crate::intern::TypeId)> = all_slots
         .iter()
         .filter(|(i, _)| *i != LOST_SLOT)
         .cloned()

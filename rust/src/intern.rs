@@ -1,0 +1,259 @@
+//! Crate-wide string interning for GPU/model type names.
+//!
+//! The planner hot paths (round previews, manifest builds, curve-cache
+//! lookups) used to shuttle GPU type names around as `String`s — ~90
+//! `clone()` sites across `elastic`/`ckpt`/`policy`, each a heap
+//! round-trip inside loops that run once per candidate per round. A
+//! [`TypeId`] is a `Copy` handle into a process-global append-only name
+//! table: comparisons are one `u32` compare, moves are free, and the
+//! display string is resolved only at report/CLI boundaries.
+//!
+//! Design rules:
+//!
+//! * **Identity**: `intern(name)` returns the same id for the same
+//!   string for the lifetime of the process; ids are dense and small.
+//! * **Ordering is lexicographic**, not insertion order — `TypeId`
+//!   sorts exactly like the `String` it replaced, so every sorted
+//!   report, BTreeMap key and tie-break stays byte-identical.
+//! * **`Debug` matches `String`'s** (quoted), so derived `Debug` output
+//!   of structs that swapped `String` → `TypeId` does not change.
+//! * The table only grows; leaked names are bounded by the set of
+//!   distinct GPU/model names ever seen (a handful in practice). The
+//!   running total is exposed as [`stats`]`().bytes_interned` so tests
+//!   can pin that hot paths stop re-interning.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Interned name handle: `Copy`, 4 bytes, O(1) equality. Obtain via
+/// [`intern`]; resolve via [`TypeId::as_str`] / `Display` / `Deref`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TypeId(u32);
+
+struct Interner {
+    /// id -> leaked name, append-only.
+    names: Vec<&'static str>,
+    /// name -> id reverse map.
+    ids: HashMap<&'static str, u32>,
+}
+
+fn table() -> &'static Mutex<Interner> {
+    static TABLE: OnceLock<Mutex<Interner>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Interner { names: Vec::new(), ids: HashMap::new() }))
+}
+
+/// Total bytes of distinct names leaked into the table so far (the
+/// `bytes_interned` perf counter: flat once the working set of type
+/// names has been seen — hot paths must not mint new strings).
+static BYTES_INTERNED: AtomicU64 = AtomicU64::new(0);
+
+/// Intern `name`, returning its stable process-wide [`TypeId`].
+pub fn intern(name: &str) -> TypeId {
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(&id) = t.ids.get(name) {
+        return TypeId(id);
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    let id = t.names.len() as u32;
+    t.names.push(leaked);
+    t.ids.insert(leaked, id);
+    BYTES_INTERNED.fetch_add(name.len() as u64, Ordering::Relaxed);
+    TypeId(id)
+}
+
+/// Intern-table statistics (perf counters for complexity tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InternStats {
+    /// Distinct names resident in the table.
+    pub types: usize,
+    /// Total bytes of distinct names interned since process start.
+    pub bytes_interned: u64,
+}
+
+/// Current table statistics. `bytes_interned` is monotone; a hot loop
+/// that keeps minting new names shows up as growth between snapshots.
+pub fn stats() -> InternStats {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    InternStats { types: t.names.len(), bytes_interned: BYTES_INTERNED.load(Ordering::Relaxed) }
+}
+
+impl TypeId {
+    /// Resolve the interned name. The returned `&'static str` outlives
+    /// every borrow, so callers can hold it across planner mutations.
+    pub fn as_str(self) -> &'static str {
+        let t = table().lock().unwrap_or_else(|e| e.into_inner());
+        t.names[self.0 as usize]
+    }
+
+    /// Raw table index (diagnostics only — dense, insertion-ordered).
+    pub fn index(self) -> u32 {
+        self.0
+    }
+}
+
+impl Deref for TypeId {
+    type Target = str;
+    fn deref(&self) -> &'static str {
+        self.as_str()
+    }
+}
+
+impl AsRef<str> for TypeId {
+    fn as_ref(&self) -> &str {
+        self.as_str()
+    }
+}
+
+impl fmt::Display for TypeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// `Debug` delegates to the *string's* Debug (quoted) so structs that
+// swapped a `String` field for `TypeId` keep byte-identical derived
+// Debug output.
+impl fmt::Debug for TypeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_str(), f)
+    }
+}
+
+// Lexicographic order — identical to the `String` ordering this type
+// replaces, so sorted tables and BTreeMap iteration stay byte-identical.
+impl Ord for TypeId {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        if self.0 == other.0 {
+            std::cmp::Ordering::Equal
+        } else {
+            self.as_str().cmp(other.as_str())
+        }
+    }
+}
+
+impl PartialOrd for TypeId {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl From<&str> for TypeId {
+    fn from(s: &str) -> Self {
+        intern(s)
+    }
+}
+
+impl From<&String> for TypeId {
+    fn from(s: &String) -> Self {
+        intern(s)
+    }
+}
+
+impl PartialEq<str> for TypeId {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for TypeId {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<String> for TypeId {
+    fn eq(&self, other: &String) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl PartialEq<TypeId> for str {
+    fn eq(&self, other: &TypeId) -> bool {
+        self == other.as_str()
+    }
+}
+
+impl PartialEq<TypeId> for &str {
+    fn eq(&self, other: &TypeId) -> bool {
+        *self == other.as_str()
+    }
+}
+
+impl PartialEq<TypeId> for String {
+    fn eq(&self, other: &TypeId) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_same_id_and_bytes_flat() {
+        let a = intern("intern-test-A800");
+        let b = intern("intern-test-A800");
+        assert_eq!(a, b);
+        assert_eq!(a.as_str(), "intern-test-A800");
+        let before = stats().bytes_interned;
+        // re-interning an existing name must not grow the table
+        for _ in 0..100 {
+            let _ = intern("intern-test-A800");
+        }
+        assert_eq!(stats().bytes_interned, before);
+    }
+
+    #[test]
+    fn distinct_names_distinct_ids() {
+        let a = intern("intern-test-x1");
+        let b = intern("intern-test-x2");
+        assert_ne!(a, b);
+        assert_ne!(a.as_str(), b.as_str());
+    }
+
+    #[test]
+    fn ordering_is_lexicographic_like_string() {
+        // interned in reverse lexicographic order on purpose: the Ord
+        // impl must still sort by name, not by table index
+        let z = intern("intern-test-zzz");
+        let a = intern("intern-test-aaa");
+        let mut v = vec![z, a];
+        v.sort();
+        assert_eq!(v, vec![a, z]);
+        assert!(a < z);
+        let mut s = vec!["intern-test-zzz".to_string(), "intern-test-aaa".to_string()];
+        s.sort();
+        assert_eq!(v.iter().map(|t| t.to_string()).collect::<Vec<_>>(), s);
+    }
+
+    #[test]
+    fn debug_matches_string_debug_and_display_is_bare() {
+        let t = intern("intern-test-T4");
+        assert_eq!(format!("{t:?}"), format!("{:?}", "intern-test-T4"));
+        assert_eq!(format!("{t}"), "intern-test-T4");
+    }
+
+    #[test]
+    fn cross_type_equality_both_ways() {
+        let t = intern("intern-test-V100");
+        assert_eq!(t, "intern-test-V100");
+        assert_eq!("intern-test-V100", t);
+        assert_eq!(t, "intern-test-V100".to_string());
+        assert_eq!("intern-test-V100".to_string(), t);
+        assert!(t != "intern-test-other");
+    }
+
+    #[test]
+    fn deref_and_as_ref_reach_str_methods() {
+        let t = intern("intern-test-RTX");
+        assert_eq!(t.len(), "intern-test-RTX".len());
+        fn takes_str(s: &str) -> usize {
+            s.len()
+        }
+        assert_eq!(takes_str(&t), t.len());
+        assert_eq!(t.as_ref() as &str, "intern-test-RTX");
+    }
+}

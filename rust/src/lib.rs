@@ -19,6 +19,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`spline`] | natural cubic spline (tridiagonal solve) |
+//! | [`intern`] | interned GPU/model type names: `Copy` `TypeId` handles into a process-global table (lexicographic `Ord`, `String`-identical `Debug`), resolved to strings only at report/CLI boundaries; `bytes_interned` counter pins that hot paths stop minting strings |
 //! | [`cluster`] | GPU catalog + calibrated device performance model |
 //! | [`netsim`] | link topology + ring collective cost models; `BwMonitor` — measured per-link bandwidth (EWMA estimator, Startup/Degrade/Steady/Probe state machine) from which every planner-facing `NetSim` snapshot derives |
 //! | [`memmodel`] | ZeRO per-stage memory accounting / mbs prediction |
@@ -27,8 +28,8 @@
 //! | [`profiler`] | Alg. 1: mbs search + stage-aware step timing |
 //! | [`allocator`] | Alg. 2: ZeRO-0/1 proportional, ZeRO-2/3 t-sweep + baselines; `replan`/`replan_with_stage` for elastic re-allocation, `predicted_wall_s` cross-stage rate model |
 //! | [`zero`] | ZeRO-0..3 BSP iteration engine (sim) + `DriftOracle` slowdown replay + optimizer shard-range layout |
-//! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` + cross-stage `migrate` (`partition_point` overlap sweep, per-endpoint `EndpointLoads` pricing; partition↔partition free, →replicate priced broadcast) |
-//! | [`elastic`] | elastic runtime: membership + bandwidth-drift events, stage-keyed curve cache, compute- and comm-drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`/`preview_round_at`/`preview_release` + the delta path `preview_round_extend` (one-joiner extension of a prior preview, bit-equal to the batch path), replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
+//! | [`ckpt`] | optimizer-shard checkpointing: `ShardManifest` layouts, versioned on-disk format (`artifacts/ckpt/`), minimal-movement `reshard` + cross-stage `migrate` (`partition_point` overlap sweep, per-endpoint `EndpointLoads` pricing; partition↔partition free, →replicate priced broadcast); `MigrationIndex` validates + slot-indexes the incumbent ONCE per round and prices every candidate against it (byte-equal to the retained `migrate_reference`, property-pinned) |
+//! | [`elastic`] | elastic runtime: membership + bandwidth-drift events, stage-keyed curve cache, compute- and comm-drift detection, re-planning, measured reshard penalty, non-mutating `preview_join`/`preview_round_at`/`preview_release` + the delta path `preview_round_extend` (one-joiner extension of a prior preview, bit-equal to the batch path), the round-scoped `RoundIndex` (one incumbent validation + live-slot snapshot + per-stage re-layout memo shared by every `*_with` preview of a decision round) with `PerfCounters` (`manifests_built`/`previews_priced`) pinning preview complexity, replan-time ZeRO-stage search (`StagePolicy`, `exp::fig_stage_migration`) |
 //! | [`policy`] | unified amortized-decision engine: THE scoring kernel (`amortized_score` over a typed `StallLedger`), the shared `Action` vocabulary, and `decide_round` — joint offer-subset × stage admission plus cost-adjusted scale-down (`Release`); exhaustive subset search ≤ 6 offers, marginal-contribution greedy above (any batch size, `max_offers_per_round` soft cap); every other module scores through it |
 //! | [`autoscale`] | cost-aware admission policy, a thin per-offer adapter over [`policy`]: predicts post-admission throughput (zero profiling on cache hits, catalog-FLOPs estimates otherwise), emits accept/defer/reject + the samples/s-vs-$/sample Pareto frontier; offers may re-stage under a `StagePolicy` |
 //! | [`coordinator`] | leader/worker orchestration (OS threads) + `run_elastic_job` (snapshots shard manifests each plan; `[autoscale]` routes each iteration's offer batch through `policy::decide_round`; `allow_stage_change` migrates the ZeRO stage at replan time) |
@@ -50,6 +51,7 @@ pub mod curves;
 pub mod data;
 pub mod elastic;
 pub mod exp;
+pub mod intern;
 pub mod lint;
 pub mod memmodel;
 pub mod metrics;

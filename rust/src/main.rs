@@ -603,12 +603,13 @@ fn print_autoscale_report(
     }
 }
 
-/// Slot list of a cluster spec: `(rank, gpu name)` in rank order.
-fn cluster_slots(cluster: &ClusterSpec) -> Vec<(usize, String)> {
+/// Slot list of a cluster spec: `(rank, interned gpu type)` in rank
+/// order — the shape [`poplar::ckpt::ShardManifest::build`] consumes.
+fn cluster_slots(cluster: &ClusterSpec) -> Vec<(usize, poplar::intern::TypeId)> {
     cluster
         .instances()
         .iter()
-        .map(|inst| (inst.rank, inst.spec.name.clone()))
+        .map(|inst| (inst.rank, poplar::intern::intern(&inst.spec.name)))
         .collect()
 }
 
@@ -621,7 +622,7 @@ fn print_manifest(m: &poplar::ckpt::ShardManifest) {
     for e in &m.shards {
         t.row(&[
             e.slot.to_string(),
-            e.gpu.clone(),
+            e.gpu.to_string(),
             e.range.lo.to_string(),
             e.range.hi.to_string(),
             e.range.len().to_string(),

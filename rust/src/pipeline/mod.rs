@@ -131,9 +131,11 @@ pub struct GroupPlan {
     pub curve: PerfCurve,
 }
 
-/// Display label of a member list: `pg(a+b+c)`.
-pub fn group_label(members: &[String]) -> String {
-    format!("pg({})", members.join("+"))
+/// Display label of a member list: `pg(a+b+c)`. Generic over the name
+/// representation so interned `TypeId` member lists work unconverted.
+pub fn group_label<S: AsRef<str>>(members: &[S]) -> String {
+    let names: Vec<&str> = members.iter().map(|m| m.as_ref()).collect();
+    format!("pg({})", names.join("+"))
 }
 
 /// True when a slot's `gpu` name denotes a pipeline group rather than a
@@ -162,10 +164,11 @@ pub fn micro_batches(batch: usize, chunk: usize) -> usize {
 /// Resolve and order a member list for pipeline staging: ascending
 /// device memory (ties broken by name for determinism), so the weakest
 /// card lands on the first stage and the largest anchors the last.
-fn sort_members(gpus: &[String]) -> Result<Vec<GpuSpec>, PipelineError> {
+fn sort_members<S: AsRef<str>>(gpus: &[S]) -> Result<Vec<GpuSpec>, PipelineError> {
     let mut specs = Vec::with_capacity(gpus.len());
     for g in gpus {
-        specs.push(catalog::spec(g).ok_or_else(|| PipelineError::UnknownGpu(g.clone()))?);
+        let g = g.as_ref();
+        specs.push(catalog::spec(g).ok_or_else(|| PipelineError::UnknownGpu(g.to_string()))?);
     }
     specs.sort_by(|a, b| (a.mem_bytes(), &a.name).cmp(&(b.mem_bytes(), &b.name)));
     Ok(specs)
@@ -307,8 +310,8 @@ pub fn compose_curve(
 /// the first chunk with a feasible layer partition, and compose the
 /// group curve. The largest feasible chunk wins — bigger micro-batches
 /// saturate each member's matmuls — and chunk 1 is the memory floor.
-pub fn plan_group(
-    gpus: &[String],
+pub fn plan_group<S: AsRef<str>>(
+    gpus: &[S],
     model: &ModelSpec,
     param_count: u64,
     stage: u8,
@@ -349,8 +352,8 @@ pub fn plan_group(
 /// chunk 1 (the most lenient chunk). This is the group-aware arm of the
 /// Alg. 1 memory bound — `ElasticPlanner::stage_feasible_with` and the
 /// release guard call it for slots that carry members.
-pub fn group_feasible(
-    gpus: &[String],
+pub fn group_feasible<S: AsRef<str>>(
+    gpus: &[S],
     model: &ModelSpec,
     param_count: u64,
     stage: u8,
@@ -379,8 +382,8 @@ pub fn group_feasible(
 /// resulting virtual group count are dissolved back into the leftover
 /// pool until a fixed point. Returns `(groups, leftovers)`; members
 /// inside each group are in pipeline-stage order.
-pub fn pack_groups(
-    offers: &[String],
+pub fn pack_groups<S: AsRef<str>>(
+    offers: &[S],
     model: &ModelSpec,
     param_count: u64,
     stage: u8,
@@ -388,7 +391,7 @@ pub fn pack_groups(
 ) -> (Vec<Vec<String>>, Vec<String>) {
     let cap = max_group_size.max(MIN_GROUP_SIZE);
     let Ok(specs) = sort_members(offers) else {
-        return (Vec::new(), offers.to_vec());
+        return (Vec::new(), offers.iter().map(|o| o.as_ref().to_string()).collect());
     };
     let mut pool: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
     let mut groups: Vec<Vec<String>> = Vec::new();

@@ -60,7 +60,8 @@ use crate::autoscale::{
 use crate::cluster::catalog;
 use crate::config::model::ModelSpec;
 use crate::curves::PerfCurve;
-use crate::elastic::{CurveKey, ElasticPlanner, RoundPreview};
+use crate::elastic::{CurveKey, ElasticPlanner, RoundIndex, RoundPreview};
+use crate::intern::{self, TypeId};
 use crate::netsim::NetSim;
 
 /// Batch size at or below which [`decide_round`] enumerates every offer
@@ -525,7 +526,12 @@ struct RoundCtx<'a> {
     planner: &'a ElasticPlanner,
     net: &'a NetSim,
     model: &'a ModelSpec,
-    offers: &'a [String],
+    /// Offer batch, interned once at round entry — subset previews copy
+    /// handles instead of cloning `String`s.
+    offers: Vec<TypeId>,
+    /// Round-scoped migration index over the incumbent manifest: built
+    /// once, priced against by every candidate preview of the round.
+    idx: RoundIndex<'a>,
     opts: &'a RoundOptions,
     /// The planner's model preset, when it names one (stage-feasibility
     /// checks need the memory model).
@@ -579,13 +585,13 @@ fn member_fallback(
     ctx: &RoundCtx,
     stage: u8,
     n_after: usize,
-    gpu: &str,
+    gpu: TypeId,
 ) -> Result<Option<PerfCurve>, ()> {
-    let key = CurveKey::new(gpu, ctx.planner.model(), stage);
+    let key = CurveKey::of(gpu, ctx.planner.model_id(), stage);
     if ctx.planner.cache().peek(&key).is_some() {
         Ok(None)
     } else if stage == ctx.stage0 {
-        synthesize_curve(gpu, ctx.model, stage, n_after).map(Some).map_err(|_| ())
+        synthesize_curve(&gpu, ctx.model, stage, n_after).map(Some).map_err(|_| ())
     } else {
         // unreachable given the measured() precheck
         Err(())
@@ -597,7 +603,7 @@ fn member_fallback(
 fn score_preview(
     ctx: &RoundCtx,
     pv: &RoundPreview,
-    subset: &[String],
+    subset: &[TypeId],
 ) -> Option<(f64, StallLedger, f64)> {
     let wall = predicted_wall_s(&pv.plan, &pv.curves, &pv.net, ctx.psi).ok()?;
     if !(wall.is_finite() && wall > 0.0) {
@@ -629,17 +635,18 @@ fn score_preview(
 /// the configuration is ineligible or unplannable — the search just
 /// skips it, exactly like the PR-5 mask loop's `continue`s.
 fn eval_subset(ctx: &RoundCtx, stage: u8, members: &[usize]) -> Option<SubsetEval> {
-    let subset: Vec<String> = members.iter().map(|&i| ctx.offers[i].clone()).collect();
-    let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
+    let subset: Vec<TypeId> = members.iter().map(|&i| ctx.offers[i]).collect();
+    let subset_refs: Vec<&str> = subset.iter().map(|t| t.as_str()).collect();
     let n_after = ctx.n_live + subset.len();
     if !stage_eligible(ctx, stage, n_after, &subset_refs) {
         return None;
     }
     let mut fallbacks: Vec<Option<PerfCurve>> = Vec::with_capacity(subset.len());
-    for gpu in &subset {
+    for &gpu in &subset {
         fallbacks.push(member_fallback(ctx, stage, n_after, gpu).ok()?);
     }
-    let pv = ctx.planner.preview_round_at(stage, &subset, &fallbacks, ctx.net).ok()?;
+    let pv =
+        ctx.planner.preview_round_at_with(&ctx.idx, stage, &subset, &fallbacks, ctx.net).ok()?;
     let (rate, ledger, score) = score_preview(ctx, &pv, &subset)?;
     Some(SubsetEval { rate, ledger, score, member_cached: pv.joiner_cached.clone(), preview: pv })
 }
@@ -662,17 +669,17 @@ fn eval_extend(
     if prev.member_cached.iter().any(|c| !c) {
         return eval_subset(ctx, stage, &members);
     }
-    let subset: Vec<String> = members.iter().map(|&i| ctx.offers[i].clone()).collect();
-    let subset_refs: Vec<&str> = subset.iter().map(String::as_str).collect();
+    let subset: Vec<TypeId> = members.iter().map(|&i| ctx.offers[i]).collect();
+    let subset_refs: Vec<&str> = subset.iter().map(|t| t.as_str()).collect();
     let n_after = ctx.n_live + subset.len();
     if !stage_eligible(ctx, stage, n_after, &subset_refs) {
         return None;
     }
-    let gpu = &ctx.offers[new_member];
+    let gpu = ctx.offers[new_member];
     let fallback = member_fallback(ctx, stage, n_after, gpu).ok()?;
     let pv = ctx
         .planner
-        .preview_round_extend(&prev.preview, gpu, fallback.as_ref(), ctx.net)
+        .preview_round_extend_with(&ctx.idx, &prev.preview, gpu, fallback.as_ref(), ctx.net)
         .ok()?;
     let (rate, ledger, score) = score_preview(ctx, &pv, &subset)?;
     Some(SubsetEval { rate, ledger, score, member_cached: pv.joiner_cached.clone(), preview: pv })
@@ -824,11 +831,17 @@ pub fn decide_round(
     let stage0 = planner.stage();
     let pre_rate = baseline_rate(planner, net)?;
     let pre_score = amortized_score(pre_rate, opts.horizon_s, &StallLedger::default());
+    // intern the batch once and index the incumbent manifest once: every
+    // subset × stage preview of this round prices against `idx` instead
+    // of re-validating + re-scanning the manifest per candidate
+    let offers_t: Vec<TypeId> = offers.iter().map(|g| intern::intern(g)).collect();
+    let idx = planner.round_index().map_err(AutoscaleError::Elastic)?;
     let ctx = RoundCtx {
         planner,
         net,
         model,
-        offers,
+        offers: offers_t,
+        idx,
         opts,
         model_spec: crate::config::model::preset(planner.model()),
         psi: planner.param_count(),
@@ -1035,7 +1048,7 @@ fn decide_grouping(ctx: &RoundCtx, pre_rate: f64) -> Option<GroupAdmission> {
     let mspec = ctx.model_spec.as_ref()?;
     // the group joins as ONE virtual rank: shards size at n_live + 1
     let n_joined = ctx.n_live + 1;
-    let starved: Vec<String> = ctx
+    let starved: Vec<TypeId> = ctx
         .offers
         .iter()
         .filter(|gpu| {
@@ -1046,7 +1059,7 @@ fn decide_grouping(ctx: &RoundCtx, pre_rate: f64) -> Option<GroupAdmission> {
                 })
             })
         })
-        .cloned()
+        .copied()
         .collect();
     if starved.len() < crate::pipeline::MIN_GROUP_SIZE {
         return None;
@@ -1059,9 +1072,10 @@ fn decide_grouping(ctx: &RoundCtx, pre_rate: f64) -> Option<GroupAdmission> {
         else {
             continue;
         };
-        let labels = [gp.label.clone()];
+        let labels = [intern::intern(&gp.label)];
         let fallbacks = [Some(gp.curve.clone())];
-        let Ok(pv) = ctx.planner.preview_round_at(ctx.stage0, &labels, &fallbacks, ctx.net)
+        let Ok(pv) =
+            ctx.planner.preview_round_at_with(&ctx.idx, ctx.stage0, &labels, &fallbacks, ctx.net)
         else {
             continue;
         };
@@ -1182,7 +1196,7 @@ fn decide_release(
         }
         best = Some(ReleaseDecision {
             slot: sl.slot,
-            gpu: sl.gpu.clone(),
+            gpu: sl.gpu.to_string(),
             rate_after,
             score_after,
             stall,

@@ -32,9 +32,9 @@ fn manifest(
     slots: &[usize],
     snap: usize,
 ) -> ShardManifest {
-    let with_gpus: Vec<(usize, String)> = slots
+    let with_gpus: Vec<(usize, poplar::intern::TypeId)> = slots
         .iter()
-        .map(|&s| (s, GPUS[(rng.next() as usize) % GPUS.len()].to_string()))
+        .map(|&s| (s, poplar::intern::intern(GPUS[(rng.next() as usize) % GPUS.len()])))
         .collect();
     ShardManifest::build("llama-0.5b", stage, psi, snap, &with_gpus).unwrap()
 }

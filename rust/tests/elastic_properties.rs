@@ -166,7 +166,7 @@ fn prop_rejoin_of_known_type_always_hits_cache() {
         let n = rng.range(2, 5) as usize;
         let mut p = random_planner(&mut rng, n, 2, 128);
         let seen: HashSet<String> =
-            p.slots().iter().map(|s| s.gpu.clone()).collect();
+            p.slots().iter().map(|s| s.gpu.to_string()).collect();
 
         for _ in 0..rng.range(1, 6) {
             // rejoin a type the planner has already profiled at this stage

@@ -40,7 +40,8 @@ fn lint_runs_clean_on_the_tree() {
 fn baseline_only_ever_shrinks() {
     // the ratchet pin: the frozen total may go DOWN over time, never up.
     // When you burn debt down, lower FROZEN_TOTAL in the same PR.
-    const FROZEN_TOTAL: usize = 4;
+    // Hit zero in PR 10 (elastic/mod.rs panic paths burned); it stays there.
+    const FROZEN_TOTAL: usize = 0;
     let baseline = lint::load_baseline(crate_root()).expect("baseline parses");
     let total: usize = baseline.values().sum();
     assert!(

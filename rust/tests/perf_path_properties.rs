@@ -1,0 +1,314 @@
+//! Equivalence + complexity pins for the planner hot-path overhaul
+//! (interned GPU types, the round-scoped migration index, counter-pinned
+//! preview complexity). Same discipline as `ckpt_properties.rs`:
+//! deterministic xorshift over many seeds, the seed printed on failure.
+//!
+//! 1. the indexed migrate (`MigrationIndex::migrate_to`) is BYTE-equal
+//!    to the retained reference scan (`ckpt::migrate_reference`) on
+//!    random membership×stage layout pairs — same moves, same retained
+//!    set, bit-identical transfer seconds;
+//! 2. round previews priced against one shared [`RoundIndex`] are
+//!    byte-equal to the per-call wrappers, and a greedy extend CHAIN is
+//!    byte-equal to the one-shot batch preview (reshard bytes equal,
+//!    penalty bit-identical and |Δ| < 1e-12, full Debug render equal);
+//! 3. complexity, pinned by the planner's perf counters: a k-offer
+//!    greedy `decide_round` prices O(stages × admitted × distinct_types)
+//!    previews — NOT O(k²) — and the count is flat in k for a fixed
+//!    type set; every preview builds exactly one candidate manifest;
+//! 4. the leader's O(1) slot-indexed reply matching routes scrambled
+//!    and non-contiguous (post-departure) slot ids correctly;
+//! 5. steady-state rounds intern ZERO new bytes
+//!    (`intern::stats().bytes_interned` is flat once the type names
+//!    have been seen).
+
+use poplar::autoscale::synthesize_curve;
+use poplar::ckpt::{self, migrate_reference, MigrationIndex, ShardManifest};
+use poplar::cluster::{self, catalog, LinkKind};
+use poplar::config::{model::preset, Strategy};
+use poplar::coordinator::Leader;
+use poplar::curves::PerfCurve;
+use poplar::elastic::{ElasticPlanner, XorShift};
+use poplar::intern::{self, TypeId};
+use poplar::netsim::NetSim;
+use poplar::policy::{self, RoundOptions};
+
+const GPUS: &[&str] = &["A800-80G", "V100S-32G", "T4", "RTX4090"];
+
+fn manifest(
+    rng: &mut XorShift,
+    stage: u8,
+    psi: u64,
+    slots: &[usize],
+    snap: usize,
+) -> ShardManifest {
+    let with_gpus: Vec<(usize, TypeId)> = slots
+        .iter()
+        .map(|&s| (s, intern::intern(GPUS[(rng.next() as usize) % GPUS.len()])))
+        .collect();
+    ShardManifest::build("llama-0.5b", stage, psi, snap, &with_gpus).unwrap()
+}
+
+/// A planned ZeRO-1 fleet with every pool type cached at the stage, so
+/// previews never need fallbacks and rounds never profile.
+fn fleet(n: usize) -> (ElasticPlanner, NetSim) {
+    let m = preset("llama-0.5b").unwrap();
+    let stage = 1u8;
+    let mut p = ElasticPlanner::new(stage, 256, &m.name, m.param_count(), 64);
+    for gpu in GPUS {
+        let c = synthesize_curve(gpu, &m, stage, n).unwrap();
+        p.install_stage_curve(gpu, stage, c).unwrap();
+    }
+    for i in 0..n {
+        let gpu = GPUS[i % GPUS.len()];
+        let slot = p.add_slot(gpu);
+        if p.slots()[slot].curve.is_none() {
+            let c = synthesize_curve(gpu, &m, stage, n).unwrap();
+            p.install_curve(slot, c, false).unwrap();
+        }
+    }
+    let net = NetSim::from_link(n, LinkKind::Ib);
+    p.replan(&net).unwrap();
+    (p, net)
+}
+
+#[test]
+fn prop_indexed_migrate_byte_equal_to_reference() {
+    for seed in 0..120u64 {
+        let mut rng = XorShift::new(seed + 42);
+        let psi = rng.range(100, 1_000_000_000);
+        let stage_a = (rng.next() % 4) as u8;
+        let stage_b = (rng.next() % 4) as u8;
+        let n0 = rng.range(1, 9) as usize;
+        let mut slots: Vec<usize> = (0..n0).collect();
+        let old = manifest(&mut rng, stage_a, psi, &slots, 0);
+        let mut next_slot = n0;
+        for _ in 0..rng.range(0, 4) {
+            if rng.uniform() < 0.5 && slots.len() > 1 {
+                let i = (rng.next() as usize) % slots.len();
+                slots.remove(i);
+            } else {
+                slots.push(next_slot);
+                next_slot += 1;
+            }
+        }
+        let new = manifest(&mut rng, stage_b, psi, &slots, 1);
+
+        let reference = migrate_reference(&old, &new)
+            .unwrap_or_else(|e| panic!("seed {seed}: reference: {e}"));
+        let idx = MigrationIndex::new(&old)
+            .unwrap_or_else(|e| panic!("seed {seed}: index build: {e}"));
+        let indexed =
+            idx.migrate_to(&new).unwrap_or_else(|e| panic!("seed {seed}: indexed: {e}"));
+        // ReshardPlan is PartialEq over every move and retained range:
+        // identical emission ORDER included, not just identical sets
+        assert_eq!(indexed, reference, "seed {seed}: indexed migrate drifted");
+
+        let net = NetSim::from_link(slots.len().max(1), LinkKind::Ib);
+        let (priced, time_s) = idx
+            .migrate_to_priced(&new, &net)
+            .unwrap_or_else(|e| panic!("seed {seed}: priced: {e}"));
+        assert_eq!(priced, reference, "seed {seed}");
+        assert_eq!(
+            time_s.to_bits(),
+            reference.transfer_time_s(&net).to_bits(),
+            "seed {seed}: transfer seconds drifted"
+        );
+
+        // the binary-search shard_of agrees with the linear scan on
+        // every slot id, present or absent
+        for s in 0..next_slot + 2 {
+            assert_eq!(idx.shard_of(s), old.shard_of(s), "seed {seed} slot {s}");
+        }
+        // and the public migrate() is a thin wrapper over the index
+        let wrapper =
+            ckpt::migrate(&old, &new).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(wrapper, reference, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_round_preview_extend_chain_byte_equal_to_batch() {
+    for seed in 0..40u64 {
+        let mut rng = XorShift::new(seed + 300);
+        let n0 = rng.range(2, 7) as usize;
+        let (mut p, _) = fleet(n0);
+
+        // random membership drift with replans between — the index must
+        // price correctly against whatever incumbent layout results
+        for _ in 0..rng.range(0, 3) {
+            let alive: Vec<usize> =
+                p.slots().iter().filter(|s| s.alive).map(|s| s.slot).collect();
+            if rng.uniform() < 0.4 && alive.len() > 2 {
+                let i = (rng.next() as usize) % alive.len();
+                p.lose_slot(alive[i]).unwrap();
+            } else {
+                let gpu = GPUS[(rng.next() as usize) % GPUS.len()];
+                p.add_slot(gpu);
+            }
+            let alive = p.slots().iter().filter(|s| s.alive).count();
+            let net = NetSim::from_link(alive, LinkKind::Ib);
+            p.replan(&net).unwrap_or_else(|e| panic!("seed {seed}: replan: {e}"));
+        }
+        let alive = p.slots().iter().filter(|s| s.alive).count();
+        let net = NetSim::from_link(alive, LinkKind::Ib);
+
+        let k = rng.range(1, 6) as usize;
+        let tys: Vec<TypeId> = (0..k)
+            .map(|_| intern::intern(GPUS[(rng.next() as usize) % GPUS.len()]))
+            .collect();
+        let fallbacks: Vec<Option<PerfCurve>> = vec![None; k];
+        let stage = 1u8;
+
+        let idx = p.round_index().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let batch = p
+            .preview_round_at_with(&idx, stage, &tys, &fallbacks, &net)
+            .unwrap_or_else(|e| panic!("seed {seed}: batch preview: {e}"));
+
+        // greedy-style growth: extend one joiner at a time off the SAME
+        // round index, exactly like search_greedy does
+        let mut chain = p
+            .preview_round_at_with(&idx, stage, &tys[..1], &fallbacks[..1], &net)
+            .unwrap_or_else(|e| panic!("seed {seed}: chain seed: {e}"));
+        for &t in &tys[1..] {
+            chain = p
+                .preview_round_extend_with(&idx, &chain, t, None, &net)
+                .unwrap_or_else(|e| panic!("seed {seed}: extend: {e}"));
+        }
+        assert_eq!(batch.manifest, chain.manifest, "seed {seed}: manifest drifted");
+        assert_eq!(batch.reshard_bytes, chain.reshard_bytes, "seed {seed}");
+        assert!(
+            (batch.reshard_penalty_s - chain.reshard_penalty_s).abs() < 1e-12,
+            "seed {seed}: penalty drifted by {}",
+            (batch.reshard_penalty_s - chain.reshard_penalty_s).abs()
+        );
+        assert_eq!(
+            batch.reshard_penalty_s.to_bits(),
+            chain.reshard_penalty_s.to_bits(),
+            "seed {seed}: penalty not bit-identical"
+        );
+        // the full render (plan, curves, net, ledger itemization —
+        // everything) must match byte for byte
+        assert_eq!(
+            format!("{batch:?}"),
+            format!("{chain:?}"),
+            "seed {seed}: extend chain is not byte-equal to the batch preview"
+        );
+
+        // and the wrapper (per-call index build) is byte-equal to the
+        // shared-index path
+        let wrapper = p
+            .preview_round_at(stage, &tys, &fallbacks, &net)
+            .unwrap_or_else(|e| panic!("seed {seed}: wrapper: {e}"));
+        assert_eq!(format!("{wrapper:?}"), format!("{batch:?}"), "seed {seed}");
+    }
+}
+
+#[test]
+fn greedy_round_preview_count_is_linear_not_quadratic() {
+    let m = preset("llama-0.5b").unwrap();
+    let opts = RoundOptions::default();
+    let distinct = GPUS.len();
+
+    let priced_for = |k: usize| -> (u64, u64) {
+        let (p, net) = fleet(8);
+        let offers: Vec<String> =
+            (0..k).map(|i| GPUS[i % distinct].to_string()).collect();
+        let before_p = p.perf().previews_priced();
+        let before_m = p.perf().manifests_built();
+        policy::decide_round(&p, &net, &m, &offers, &opts).unwrap();
+        (
+            p.perf().previews_priced() - before_p,
+            p.perf().manifests_built() - before_m,
+        )
+    };
+
+    // k > MAX_EXHAUSTIVE_OFFERS so Auto dispatches to the greedy search
+    let k = 32;
+    let (priced, manifests) = priced_for(k);
+    assert!(priced > 0, "greedy round priced nothing");
+    // every growth step prices at most one preview per distinct unused
+    // type, over 4 candidate stages and at most cap+1 steps (the last
+    // finds no improvement) — generous slack for the seed evaluations
+    let cap = k.min(64);
+    let bound = (4 * (cap + 2) * distinct) as u64;
+    assert!(
+        priced <= bound,
+        "k={k}: {priced} previews priced, bound {bound} — the round is re-pricing \
+         per offer instead of per distinct type"
+    );
+    assert!(
+        priced < (k * k) as u64,
+        "k={k}: {priced} previews priced — quadratic in the batch size"
+    );
+    // pure previews: each builds exactly one candidate manifest
+    assert_eq!(manifests, priced, "a preview must build exactly one manifest");
+
+    // the count is FLAT in k for a fixed type set: duplicates of an
+    // already-seen type are skipped, never re-priced
+    let (priced_2k, _) = priced_for(2 * k);
+    assert_eq!(
+        priced, priced_2k,
+        "doubling duplicate offers changed the preview count — \
+         the distinct-type skip regressed"
+    );
+}
+
+#[test]
+fn leader_reply_matching_routes_scrambled_and_sparse_slots() {
+    let cluster = cluster::cluster_c();
+    let model = preset("llama-0.5b").unwrap();
+    let mut l = Leader::new_simulated(&cluster, &model, 0.0, 3);
+
+    // scrambled, non-contiguous request order: replies arrive in any
+    // order, results must land at the REQUEST position of their slot
+    let subset = [5usize, 0, 7, 2];
+    let res = l.profile_slots(&subset, 1).unwrap();
+    assert_eq!(res.len(), subset.len());
+    for (i, r) in res.iter().enumerate() {
+        assert!(r.is_some(), "slot {} returned no profile", subset[i]);
+    }
+
+    // after a departure the slot space has a hole; both the profile and
+    // the iteration reply paths must still route by slot id
+    l.remove_rank(3).unwrap();
+    let prof = l.profile(1).unwrap();
+    assert_eq!(prof.ranks.len(), 7);
+    let plan = l.plan_from_profile(&prof, Strategy::Poplar, 256).unwrap();
+    let it = l.run_iteration(&plan).unwrap();
+    assert!(it.wall_s > 0.0);
+    assert_eq!(it.busy_s.len(), 7);
+    l.shutdown();
+}
+
+#[test]
+fn steady_state_rounds_intern_zero_new_bytes() {
+    // pre-intern every name this test binary can touch, so a parallel
+    // test interning the same working set cannot perturb the snapshot
+    for g in catalog::NAMES {
+        let _ = intern::intern(g);
+    }
+    let _ = intern::intern("llama-0.5b");
+
+    let m = preset("llama-0.5b").unwrap();
+    let (p, net) = fleet(6);
+    let opts = RoundOptions::default();
+    let offers: Vec<String> = (0..12).map(|i| GPUS[i % GPUS.len()].to_string()).collect();
+    // warm one full round, then snapshot: the steady state begins here
+    policy::decide_round(&p, &net, &m, &offers, &opts).unwrap();
+    let before = intern::stats().bytes_interned;
+
+    for _ in 0..5 {
+        policy::decide_round(&p, &net, &m, &offers, &opts).unwrap();
+        let idx = p.round_index().unwrap();
+        let tys: Vec<TypeId> = GPUS.iter().map(|g| intern::intern(g)).collect();
+        let fallbacks: Vec<Option<PerfCurve>> = vec![None; tys.len()];
+        let pv = p.preview_round_at_with(&idx, 1, &tys, &fallbacks, &net).unwrap();
+        let _ = p.preview_round_extend_with(&idx, &pv, tys[0], None, &net).unwrap();
+    }
+    assert_eq!(
+        intern::stats().bytes_interned,
+        before,
+        "steady-state rounds minted new interned strings — a hot path is \
+         interning per candidate instead of per round"
+    );
+}
